@@ -1,0 +1,110 @@
+//! End-to-end train -> deploy -> serve pipeline validation.
+//!
+//! Consumes the checkpoint produced by `make train` (STBP training of the
+//! tiny model on the synthetic corpus, a few hundred steps, loss curve in
+//! `artifacts/tiny_train_log.json`), then:
+//!
+//! 1. prints the training loss curve (L2's STBP actually learned);
+//! 2. evaluates the *deployed integer* model (golden engine) on held-out
+//!    synthetic data and compares against the untrained baseline;
+//! 3. runs the trained model through the cycle-accurate chip simulator;
+//! 4. serves it through the coordinator.
+//!
+//! ```sh
+//! make train && cargo run --release --example e2e_train_deploy
+//! ```
+
+use vsa::arch::{Chip, SimMode};
+use vsa::config::json::Json;
+use vsa::config::HwConfig;
+use vsa::coordinator::{Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine};
+use vsa::data::synth;
+use vsa::snn::Network;
+use vsa::util::stats::argmax;
+
+const HELDOUT: usize = 200;
+/// Must match compile/train.py::evaluate_deployed (seed + 1000, start 1e7).
+const EVAL_SEED: u64 = 7 + 1000;
+const EVAL_START: u64 = 10_000_000;
+
+fn accuracy(net: &Network, seed: u64, start: u64, n: usize) -> f64 {
+    let samples = synth::tiny_like(seed, start, n);
+    let correct = samples
+        .iter()
+        .filter(|s| argmax(&net.infer_u8(&s.image)) == s.label)
+        .count();
+    correct as f64 / n as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let trained_path = "artifacts/tiny_trained.vsaw";
+    if !std::path::Path::new(trained_path).exists() {
+        eprintln!("{trained_path} missing — run `make train` first");
+        std::process::exit(1);
+    }
+
+    // --- 1. loss curve -----------------------------------------------------
+    if let Ok(text) = std::fs::read_to_string("artifacts/tiny_train_log.json") {
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if let Some(curve) = v.get("loss_curve").and_then(Json::as_arr) {
+            println!("STBP training loss curve (tiny, synthetic corpus):");
+            for p in curve {
+                println!(
+                    "  step {:>4}  loss {:.4}  batch-acc {:.3}",
+                    p.get("step").and_then(Json::as_i64).unwrap_or(-1),
+                    p.get("loss").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                    p.get("acc").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                );
+            }
+        }
+    }
+
+    // --- 2. deployed accuracy: trained vs untrained -------------------------
+    let trained = Network::from_vsaw_file(trained_path)?;
+    let untrained = Network::from_vsaw_file("artifacts/tiny_t4.vsaw")?;
+    let acc_trained = accuracy(&trained, EVAL_SEED, EVAL_START, HELDOUT);
+    let acc_untrained = accuracy(&untrained, EVAL_SEED, EVAL_START, HELDOUT);
+    println!("\nheld-out deployed accuracy ({HELDOUT} samples):");
+    println!("  untrained (random binary weights): {acc_untrained:.3}");
+    println!("  trained (STBP + IF-BN folding):    {acc_trained:.3}");
+    anyhow::ensure!(
+        acc_trained > acc_untrained + 0.15 && acc_trained > 0.3,
+        "training did not beat the untrained baseline"
+    );
+
+    // --- 3. run the trained model on the chip -------------------------------
+    let img = &synth::tiny_like(EVAL_SEED, EVAL_START, 1)[0];
+    let r = Chip::new(HwConfig::default(), SimMode::Fast).run(&trained.model, &img.image);
+    assert_eq!(r.logits, trained.infer_u8(&img.image));
+    println!(
+        "\nchip simulation of the trained model: {} cycles, {:.1} us, {:.0} GOPS eff",
+        r.cycles, r.latency_us, r.gops
+    );
+
+    // --- 4. serve it ---------------------------------------------------------
+    let coord = Coordinator::start(CoordinatorConfig::default(), move |_| {
+        Box::new(GoldenEngine::new(
+            Network::from_vsaw_file("artifacts/tiny_trained.vsaw").unwrap(),
+            8,
+        )) as Box<dyn InferenceEngine>
+    });
+    let samples = synth::tiny_like(EVAL_SEED, EVAL_START, 64);
+    let rxs: Vec<_> = samples
+        .iter()
+        .map(|s| coord.submit(s.image.clone()))
+        .collect::<Result<_, _>>()?;
+    let correct = rxs
+        .into_iter()
+        .zip(&samples)
+        .filter(|(rx, s)| {
+            rx.recv().map(|r| argmax(&r.logits) == s.label).unwrap_or(false)
+        })
+        .count();
+    let stats = coord.shutdown();
+    println!(
+        "served 64 requests: {:.1} req/s, p50 {:.2} ms, accuracy {}/64",
+        stats.throughput_rps, stats.latency_ms_p50, correct
+    );
+    println!("\ne2e train->deploy->simulate->serve pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Layer-fusion DRAM study (paper §IV-B) across all three models, plus the
+//! tick-batching ablation (what DRAM traffic would look like if membrane
+//! potentials round-tripped off-chip every time step, the cost SpinalFlow's
+//! analysis highlights).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example layer_fusion_study
+//! ```
+
+use vsa::arch::dram::{Dram, Traffic};
+use vsa::arch::fusion::plan_fusion;
+use vsa::arch::schedule::{layer_dram, plan_model};
+use vsa::arch::{Chip, SimMode};
+use vsa::config::HwConfig;
+use vsa::data::synth;
+use vsa::snn::Network;
+
+fn main() -> anyhow::Result<()> {
+    println!("{:<10} {:>14} {:>14} {:>9}", "model", "no-fusion KB", "fusion KB", "saved");
+    for name in ["tiny", "mnist", "cifar10"] {
+        let path = match name {
+            "tiny" => "artifacts/tiny_t4.vsaw",
+            "mnist" => "artifacts/mnist_t8.vsaw",
+            _ => "artifacts/cifar10_t8.vsaw",
+        };
+        let net = Network::from_vsaw_file(path)?;
+        let img = &synth::for_model(name, 3, 0, 1)[0].image;
+
+        let on = Chip::new(HwConfig::default(), SimMode::Fast).run(&net.model, img);
+        let off = Chip::new(
+            HwConfig { layer_fusion: false, ..HwConfig::default() },
+            SimMode::Fast,
+        )
+        .run(&net.model, img);
+        let on_kb = on.dram.total() as f64 / 1024.0;
+        let off_kb = off.dram.total() as f64 / 1024.0;
+        println!(
+            "{name:<10} {off_kb:>14.3} {on_kb:>14.3} {:>8.1}%",
+            (1.0 - on_kb / off_kb) * 100.0
+        );
+    }
+    println!("\npaper (CIFAR-10): 1450.172 KB -> 938.172 KB  (35.3% saved)\n");
+
+    // --- which pairs actually fuse on CIFAR-10? --------------------------
+    let net = Network::from_vsaw_file("artifacts/cifar10_t8.vsaw")?;
+    let hw = HwConfig::default();
+    let plans = plan_model(&net.model);
+    let groups = plan_fusion(&plans, &hw);
+    println!("CIFAR-10 fusion plan (weight SRAM budget {:.0} KB):", hw.weight_sram_kb);
+    for g in &groups {
+        let names: Vec<String> = (g.start..g.start + g.len)
+            .map(|i| format!("{:?}({}ch)", plans[i].kind, plans[i].c_out))
+            .collect();
+        let bits: u64 = (g.start..g.start + g.len).map(|i| plans[i].weight_bits()).sum();
+        println!(
+            "  {}  [{:.1} KB weights]{}",
+            names.join(" + "),
+            bits as f64 / 8.0 / 1024.0,
+            if g.len == 2 { "  <- fused" } else { "" }
+        );
+    }
+
+    // --- tick-batching ablation ------------------------------------------
+    let t = net.model.num_steps;
+    let mut with_tb = Dram::default();
+    let mut without_tb = Dram::default();
+    for plan in &plans {
+        layer_dram(plan, t, false, false, true, &mut with_tb);
+        layer_dram(plan, t, false, false, false, &mut without_tb);
+    }
+    println!(
+        "\ntick batching (no fusion): {:.1} KB vs {:.1} KB without ({:.1}x), membrane alone {:.1} KB",
+        with_tb.total() as f64 / 1024.0,
+        without_tb.total() as f64 / 1024.0,
+        without_tb.total() as f64 / with_tb.total() as f64,
+        without_tb.category(Traffic::Membrane) as f64 / 1024.0
+    );
+    Ok(())
+}

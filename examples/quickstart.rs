@@ -1,0 +1,50 @@
+//! Quickstart: load a deployed model and classify synthetic samples with
+//! the pure-rust golden engine — no python, no PJRT, no simulator.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use vsa::data::synth;
+use vsa::snn::Network;
+use vsa::util::stats::argmax;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the binary-weight SNN exported by the python compile path.
+    let net = Network::from_vsaw_file("artifacts/mnist_t8.vsaw")?;
+    println!(
+        "loaded '{}': {} layers, T = {} time steps",
+        net.model.name,
+        net.model.layers.len(),
+        net.model.num_steps
+    );
+
+    // 2. Generate a few deterministic synthetic samples (MNIST-shaped).
+    let samples = synth::mnist_like(42, 0, 8);
+
+    // 3. Classify.  `infer_u8` runs the full spiking pipeline: encoding
+    //    layer (multi-bit -> spikes), spiking convs with IF-BN neurons,
+    //    pooling, spiking fc, and the accumulating readout.
+    for (i, s) in samples.iter().enumerate() {
+        let logits = net.infer_u8(&s.image);
+        println!(
+            "sample {i}: label={} predicted={} logits={:?}",
+            s.label,
+            argmax(&logits),
+            logits
+        );
+    }
+
+    // 4. Inspect spiking activity with the traced API.
+    let (_, trace) = net.infer_traced(&samples[0].image);
+    for (li, train) in trace.spike_trains.iter().enumerate() {
+        let spikes: u64 = train.iter().map(|m| m.total_spikes()).sum();
+        let neurons = train[0].channels() * train[0].height() * train[0].width();
+        println!(
+            "layer {li}: {spikes} spikes over T={} ({:.1}% firing rate)",
+            train.len(),
+            100.0 * spikes as f64 / (neurons * train.len()) as f64
+        );
+    }
+    Ok(())
+}

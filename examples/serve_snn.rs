@@ -1,0 +1,85 @@
+//! Serving demo: the rust coordinator batches concurrent classification
+//! requests onto PJRT workers running the AOT-compiled JAX/Pallas module.
+//! Python never runs here — the HLO artifact is loaded and executed
+//! natively.  Falls back to the golden engine if artifacts are missing.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_snn
+//! ```
+
+use std::time::Instant;
+use vsa::coordinator::{
+    Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine, PjrtEngine,
+};
+use vsa::data::synth;
+use vsa::runtime::{Manifest, PjrtExecutor};
+use vsa::snn::Network;
+use vsa::util::stats::argmax;
+
+const REQUESTS: usize = 96;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let entry = manifest
+        .find("mnist", 8)
+        .ok_or_else(|| anyhow::anyhow!("mnist artifact missing — run `make artifacts`"))?
+        .clone();
+    let hlo = manifest.hlo_path(&entry);
+    let weights = manifest.weights_path(&entry);
+
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        max_batch: entry.batch,
+        queue_depth: 64, // small queue => visible backpressure under load
+        ..CoordinatorConfig::default()
+    };
+    println!(
+        "starting coordinator: {} workers, batch <= {}, queue {}",
+        cfg.workers, cfg.max_batch, cfg.queue_depth
+    );
+
+    let coord = Coordinator::start(cfg, move |w| -> Box<dyn InferenceEngine> {
+        match PjrtExecutor::load(&hlo, entry.batch, entry.in_channels, entry.in_size) {
+            Ok(exe) => {
+                if w == 0 {
+                    println!("worker engines: PJRT ({})", exe.platform());
+                }
+                Box::new(PjrtEngine::new(exe))
+            }
+            Err(e) => {
+                eprintln!("worker {w}: PJRT unavailable ({e:#}); using golden engine");
+                let net = Network::from_vsaw_file(&weights).expect("weights");
+                Box::new(GoldenEngine::new(net, entry.batch))
+            }
+        }
+    });
+
+    // Fire a burst of concurrent requests (the submission queue applies
+    // backpressure if we outrun the workers).
+    let samples = synth::mnist_like(5, 0, REQUESTS);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = samples
+        .iter()
+        .map(|s| coord.submit(s.image.clone()))
+        .collect::<Result<_, _>>()?;
+
+    let mut correct = 0usize;
+    for (rx, s) in rxs.into_iter().zip(&samples) {
+        let res = rx.recv()?;
+        if argmax(&res.logits) == s.label {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let stats = coord.shutdown();
+
+    println!("\nserved {REQUESTS} requests in {:.1} ms", wall.as_secs_f64() * 1e3);
+    println!("  throughput   {:.1} req/s", REQUESTS as f64 / wall.as_secs_f64());
+    println!("  mean batch   {:.2} (of {} max)", stats.mean_batch, entry.batch);
+    println!(
+        "  latency ms   p50 {:.2} / p95 {:.2} / p99 {:.2}",
+        stats.latency_ms_p50, stats.latency_ms_p95, stats.latency_ms_p99
+    );
+    println!("  accuracy     {correct}/{REQUESTS} (untrained weights: ~chance)");
+    Ok(())
+}

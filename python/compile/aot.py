@@ -1,0 +1,214 @@
+"""AOT pipeline: lower the deployed SNN graphs to HLO text for rust.
+
+Emits HLO **text** (NOT ``lowered.compile()`` / ``.serialize()``): jax>=0.5
+writes HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects; the HLO text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+For every exported model this writes:
+
+* ``artifacts/<name>_t<T>_b<B>.hlo.txt``  — the lowered inference module
+  (pallas kernels included, interpret-mode, so it runs on the CPU PJRT
+  client the rust runtime creates);
+* ``artifacts/<name>_t<T>.vsaw``          — the identical weights in VSAW
+  format for the rust golden model / simulator;
+* ``artifacts/manifest.json``             — registry the rust runtime loads.
+
+Weights are deterministic (seeded init + deploy) unless a trained ``.vsaw``
+checkpoint is supplied via ``--weights`` for that model.
+
+Usage:  python -m compile.aot --out ../artifacts  (a file path ending in
+``.hlo.txt`` is also accepted for Makefile compatibility: its directory is
+used and a copy of the mnist module is placed at the given name).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, params_io
+from .model import SPECS, ModelSpec, deploy, forward_deployed, init_params
+
+SEED = 1234
+SELFCHECK_SAMPLES = 4
+SELFCHECK_DATA_SEED = 777
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser).
+
+    Printed with ``print_large_constants=True``: the default printer elides
+    big literals as ``constant({...})``, which the rust-side HLO text
+    parser would silently refill with zeros — the baked-in weights MUST be
+    materialized in the text.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax's printer emits source_end_line/... metadata attributes that the
+    # xla_extension 0.5.1 text parser rejects; drop metadata entirely.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_model(
+    spec: ModelSpec,
+    deployed: list[dict[str, Any]],
+    batch: int,
+    use_pallas: bool,
+) -> str:
+    """Lower batched deployed inference to HLO text.
+
+    The weights are baked in as constants (the chip analogue: weights
+    resident in the weight SRAM); the only runtime parameter is the u8
+    image batch, shaped (B, C, H, W) float32.
+    """
+
+    def fn(images):
+        return (
+            jax.vmap(
+                lambda img: forward_deployed(deployed, spec, img, use_pallas=use_pallas)
+            )(images),
+        )
+
+    shape = jax.ShapeDtypeStruct(
+        (batch, spec.in_channels, spec.in_size, spec.in_size), jnp.float32
+    )
+    return to_hlo_text(jax.jit(fn).lower(shape))
+
+
+def build_params(spec: ModelSpec, weights_path: str | None):
+    """Deterministic deploy()-ed params, or a trained checkpoint if given."""
+    if weights_path and os.path.exists(weights_path):
+        name, t, c, s, layers = params_io.load_deployed(weights_path)
+        assert (t, c, s) == (spec.num_steps, spec.in_channels, spec.in_size), (
+            f"checkpoint {weights_path} geometry mismatch for {spec.name}"
+        )
+        dep = []
+        for ly in layers:
+            d = {k: jnp.asarray(v) for k, v in ly.items() if k != "kind"}
+            dep.append(d)
+        return dep
+    params = init_params(jax.random.PRNGKey(SEED), spec)
+    return deploy(params, spec)
+
+
+def export_model(
+    outdir: str,
+    spec: ModelSpec,
+    batches: tuple[int, ...],
+    use_pallas: bool,
+    weights_path: str | None = None,
+) -> list[dict[str, Any]]:
+    """Export one model at several batch sizes; returns manifest entries."""
+    deployed = build_params(spec, weights_path)
+    wfile = f"{spec.name}_t{spec.num_steps}.vsaw"
+    params_io.save_deployed(os.path.join(outdir, wfile), deployed, spec)
+
+    # Cross-language self-check: expected logits for a few deterministic
+    # synthetic samples.  rust/tests/golden_vs_jax.rs regenerates the same
+    # images (bit-identical splitmix64 generator) and asserts its golden
+    # model produces these exact integers.
+    gen = datasets.FOR_SPEC[spec.name]
+    imgs, labels = gen(SELFCHECK_DATA_SEED, 0, SELFCHECK_SAMPLES)
+    logits = [
+        np.asarray(
+            forward_deployed(deployed, spec, jnp.asarray(img, jnp.float32),
+                             use_pallas=False)
+        ).astype(int).tolist()
+        for img in imgs
+    ]
+    check = dict(
+        data_seed=SELFCHECK_DATA_SEED, start=0, count=SELFCHECK_SAMPLES,
+        labels=labels.tolist(), logits=logits,
+    )
+    cfile = f"{spec.name}_t{spec.num_steps}_selfcheck.json"
+    with open(os.path.join(outdir, cfile), "w") as f:
+        json.dump(check, f)
+
+    entries = []
+    for b in batches:
+        hlo = lower_model(spec, deployed, b, use_pallas)
+        hfile = f"{spec.name}_t{spec.num_steps}_b{b}.hlo.txt"
+        with open(os.path.join(outdir, hfile), "w") as f:
+            f.write(hlo)
+        entries.append(
+            dict(
+                name=spec.name,
+                hlo=hfile,
+                weights=wfile,
+                batch=b,
+                num_steps=spec.num_steps,
+                in_channels=spec.in_channels,
+                in_size=spec.in_size,
+                num_classes=10,
+                pallas=use_pallas,
+            )
+        )
+        print(f"wrote {hfile} ({len(hlo)} chars)", flush=True)
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="tiny,mnist,cifar10",
+        help="comma-separated subset of " + ",".join(sorted(SPECS)),
+    )
+    ap.add_argument("--weights", default=None, help="trained .vsaw for the model")
+    args = ap.parse_args()
+
+    out = args.out
+    legacy_target = None
+    if out.endswith(".hlo.txt"):  # Makefile `--out ../artifacts/model.hlo.txt`
+        legacy_target = out
+        out = os.path.dirname(out) or "."
+    os.makedirs(out, exist_ok=True)
+
+    manifest: list[dict[str, Any]] = []
+    wanted = args.models.split(",")
+    if "tiny" in wanted:
+        manifest += export_model(
+            out, SPECS["tiny"](), batches=(1, 8), use_pallas=True,
+            weights_path=args.weights,
+        )
+    if "mnist" in wanted:
+        manifest += export_model(
+            out, SPECS["mnist"](), batches=(1, 8), use_pallas=True,
+            weights_path=args.weights,
+        )
+    if "cifar10" in wanted:
+        # The full CIFAR-10 net traces 11 pallas conv layers x T=8; use the
+        # (bit-identical) jnp path to keep artifact builds fast.  The pallas
+        # datapath is exercised by tiny/mnist and the pytest suite.
+        manifest += export_model(
+            out, SPECS["cifar10"](), batches=(1,), use_pallas=False,
+            weights_path=args.weights,
+        )
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest)} entries)")
+
+    if legacy_target:
+        src = next(e["hlo"] for e in manifest if e["batch"] == 1)
+        with open(os.path.join(out, src)) as fi, open(legacy_target, "w") as fo:
+            fo.write(fi.read())
+        print(f"wrote {legacy_target}")
+
+
+if __name__ == "__main__":
+    main()

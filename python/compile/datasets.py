@@ -1,0 +1,112 @@
+"""Deterministic synthetic datasets (MNIST-like / CIFAR-like).
+
+This environment has no network access, so the repo ships procedural
+stand-ins for MNIST and CIFAR-10 (DESIGN.md §Substitutions): 10-class
+integer-exact pattern generators whose pixels are produced purely with
+64-bit integer arithmetic (splitmix64), so ``rust/src/data/synth.rs``
+regenerates *bit-identical* images — the cross-language contract used by
+the integration tests and the serving benchmarks.
+
+Each class has a distinct quasi-periodic integer template; each sample adds
+a per-sample circular shift and additive noise.  The task is genuinely
+learnable (a linear probe gets well above chance; the SNN does much
+better), which is all Fig. 8 / Table II need to reproduce the paper's
+*trends* (accuracy vs time steps, binary vs full precision).
+
+If real ``data/mnist/*-idx?-ubyte`` or CIFAR binaries are present, loaders
+in rust pick those up instead; the python side stays synthetic-only.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_M64 = (1 << 64) - 1
+
+
+def splitmix64(state: int) -> tuple[int, int]:
+    """One splitmix64 step: returns (new_state, output). Pure integer ops."""
+    state = (state + 0x9E3779B97F4A7C15) & _M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+    return state, (z ^ (z >> 31)) & _M64
+
+
+# Per-class template coefficients (primes; identical table in rust).
+_P1 = [3, 5, 7, 11, 13, 17, 19, 23, 29, 31]
+_P2 = [7, 3, 11, 5, 17, 13, 23, 19, 37, 29]
+_P3 = [0, 9, 4, 13, 6, 15, 2, 11, 8, 17]
+
+
+def template_pixel(cls: int, ch: int, x: int, y: int) -> int:
+    """Deterministic class template pixel in [0, 255].
+
+    Quasi-periodic diagonal bands whose period/phase depend on the class
+    and channel — visually distinct stripes/checker mixes per class.
+    """
+    a = (x * _P1[cls] + y * _P2[cls] + _P3[cls] + ch * 5) % 29
+    b = 64 if ((x // 4 + y // 4 + cls + ch) % 3) == 0 else 0
+    return min(255, a * 7 + b)
+
+
+def synth_image(
+    seed: int, index: int, cls: int, channels: int, size: int
+) -> np.ndarray:
+    """Generate one (channels, size, size) u8 image for class ``cls``.
+
+    Per-sample variation: circular shift dx,dy in [-3, 3] and additive
+    noise in [-32, 31], all drawn from splitmix64 seeded by
+    ``seed*1e6 XOR index`` — matching rust exactly.
+    """
+    state = (seed * 1_000_003 + index * 7919 + cls) & _M64
+    state, z = splitmix64(state)
+    dx = int(z % 7) - 3
+    state, z = splitmix64(state)
+    dy = int(z % 7) - 3
+
+    img = np.empty((channels, size, size), dtype=np.uint8)
+    for c in range(channels):
+        for yy in range(size):
+            for xx in range(size):
+                sx = (xx + dx) % size
+                sy = (yy + dy) % size
+                state, z = splitmix64(state)
+                noise = int(z % 64) - 32
+                v = template_pixel(cls, c, sx, sy) + noise
+                img[c, yy, xx] = max(0, min(255, v))
+    return img
+
+
+def synth_batch(
+    seed: int, start: int, count: int, channels: int, size: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``count`` images with balanced labels ``(start+i) % 10``.
+
+    Returns (images u8 (count, C, S, S), labels i32 (count,)).
+    """
+    imgs = np.empty((count, channels, size, size), dtype=np.uint8)
+    labels = np.empty(count, dtype=np.int32)
+    for i in range(count):
+        cls = (start + i) % 10
+        imgs[i] = synth_image(seed, start + i, cls, channels, size)
+        labels[i] = cls
+    return imgs, labels
+
+
+def mnist_like(seed: int, start: int, count: int) -> tuple[np.ndarray, np.ndarray]:
+    """(count, 1, 28, 28) u8 images + labels."""
+    return synth_batch(seed, start, count, 1, 28)
+
+
+def cifar_like(seed: int, start: int, count: int) -> tuple[np.ndarray, np.ndarray]:
+    """(count, 3, 32, 32) u8 images + labels."""
+    return synth_batch(seed, start, count, 3, 32)
+
+
+def tiny_like(seed: int, start: int, count: int) -> tuple[np.ndarray, np.ndarray]:
+    """(count, 1, 12, 12) u8 images + labels, for the tiny test net."""
+    return synth_batch(seed, start, count, 1, 12)
+
+
+FOR_SPEC = {"mnist": mnist_like, "cifar10": cifar_like, "tiny": tiny_like}

@@ -1,0 +1,61 @@
+"""Pallas kernel: binary-weight matmul for the spiking FC layers.
+
+The chip schedules fully-connected layers on the same vectorwise PE fabric
+(a weight column vector against a spike vector); here that is a tiled
+matmul with +-1 weights.  Grid tiles the output-neuron axis the way PE
+blocks tile output channels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_N_TILE = 128
+
+
+def _matmul_kernel(s_ref, w_ref, o_ref):
+    """s_ref: (T, N_in) spikes; w_ref: (tile_n, N_in); o_ref: (T, tile_n)."""
+    o_ref[...] = jax.lax.dot_general(
+        s_ref[...],
+        w_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_tile",))
+def binary_matmul(
+    spikes: jnp.ndarray, w: jnp.ndarray, n_tile: int = DEFAULT_N_TILE
+) -> jnp.ndarray:
+    """Per-step FC psums: ``spikes @ w.T`` with binary weights.
+
+    Parameters
+    ----------
+    spikes : (T, N_in) 0/1 spike train.
+    w      : (N_out, N_in) binary (+-1) weights.
+
+    Returns
+    -------
+    (T, N_out) integer-valued psums, bit-identical to ``spikes @ w.T``.
+    """
+    t_steps, n_in = spikes.shape
+    n_out = w.shape[0]
+    tile = min(n_tile, n_out)
+    if n_out % tile != 0:
+        tile = n_out
+
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(n_out // tile,),
+        in_specs=[
+            pl.BlockSpec((t_steps, n_in), lambda i: (0, 0)),
+            pl.BlockSpec((tile, n_in), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t_steps, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((t_steps, n_out), jnp.float32),
+        interpret=True,
+    )(spikes, w)

@@ -1,0 +1,99 @@
+"""Pallas kernel: multi-bit encoding-layer convolution via bitplanes.
+
+Hardware mapping (paper §III-E, Fig. 7)
+---------------------------------------
+The chip supports the multi-bit encoding layer on the *binary* PE datapath
+by splitting each 8-bit input into eight 1-bit bitplanes, assigning each
+bitplane to one PE block (so eight blocks share one weight vector), and
+shift-adding the per-plane partial sums in the first accumulator stage.
+
+The kernel reproduces that identity directly: bitplane extraction, binary
+convolution per plane on the same sign-select datapath as
+``binary_conv.py``, then the power-of-two weighted reduction.  The result
+is exactly ``conv(image, w)`` for integer images in ``[0, 2**num_planes)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CO_TILE = 64
+
+
+def _encoding_kernel(
+    x_ref, w_ref, o_ref, *, ksize: int, height: int, width: int, num_planes: int
+):
+    """One output-channel tile of the bitplane-decomposed encoding conv.
+
+    x_ref : (C_in, H + K - 1, W + K - 1) pre-padded multi-bit input.
+    w_ref : (tile_co, C_in, K, K) binary weights.
+    o_ref : (tile_co, H, W) multi-bit psums.
+    """
+    x_int = x_ref[...].astype(jnp.int32)
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    for plane in range(num_planes):
+        # 1-bit plane on the binary datapath (one PE block per plane).
+        bit = ((x_int >> plane) & 1).astype(jnp.float32)
+        plane_acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+        for kh in range(ksize):
+            for kw in range(ksize):
+                slab = bit[:, kh : kh + height, kw : kw + width]
+                w_col = w_ref[:, :, kh, kw]
+                plane_acc = plane_acc + jax.lax.dot_general(
+                    w_col,
+                    slab.reshape(slab.shape[0], -1),
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                ).reshape(plane_acc.shape)
+        # First-stage accumulator shift-add: psum << plane.
+        acc = acc + float(1 << plane) * plane_acc
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("num_planes", "co_tile"))
+def encoding_conv2d(
+    image: jnp.ndarray,
+    w: jnp.ndarray,
+    num_planes: int = 8,
+    co_tile: int = DEFAULT_CO_TILE,
+) -> jnp.ndarray:
+    """Encoding-layer conv on the binary datapath (bitplane shift-add).
+
+    Parameters
+    ----------
+    image : (C_in, H, W) integer-valued non-negative input in
+            ``[0, 2**num_planes)`` (the paper normalizes inputs to be
+            positive so the bitplane trick applies).
+    w : (C_out, C_in, K, K) binary weights.
+
+    Returns
+    -------
+    (C_out, H, W) psums, bit-identical to ``ref.conv2d_binary(image, w)``.
+    """
+    c_out, c_in, k, _ = w.shape
+    _, h, wd = image.shape
+    pad = k // 2
+    xp = jnp.pad(image, ((0, 0), (pad, pad), (pad, pad)))
+
+    tile = min(co_tile, c_out)
+    if c_out % tile != 0:
+        tile = c_out
+
+    kernel = functools.partial(
+        _encoding_kernel, ksize=k, height=h, width=wd, num_planes=num_planes
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(c_out // tile,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec((tile, c_in, k, k), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, h, wd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_out, h, wd), jnp.float32),
+        interpret=True,
+    )(xp, w)

@@ -1,0 +1,108 @@
+"""Pallas kernel: integrate-and-fire dynamics with IF-based BatchNorm.
+
+Hardware mapping
+----------------
+The chip's IF neuron unit (paper Fig. 1(b), §III-F) reads the convolution
+result, accumulates it with the residual membrane potential held in the
+membrane SRAM, compares against the per-channel IF-BN threshold, fires and
+hard-resets.  *Tick batching* keeps the membrane on-chip across all T time
+steps of a layer.
+
+Here the membrane lives in a kernel-local carry (the VMEM-scratch analogue
+of the membrane SRAM) inside a ``fori_loop`` over T, so the whole time loop
+stays inside one kernel invocation — psums stream in once, spikes stream
+out once, and the membrane never round-trips to HBM.  The grid tiles the
+channel axis, mirroring the chip's channelwise neuron banks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_C_TILE = 64
+
+
+def _if_kernel(p_ref, b_ref, th_ref, o_ref, v_ref, *, num_steps: int):
+    """One channel tile, full time loop.
+
+    p_ref  : (T, tile_c, H, W) psums.
+    b_ref  : (tile_c,) IF-BN bias.
+    th_ref : (tile_c,) IF-BN threshold.
+    o_ref  : (T, tile_c, H, W) output spikes.
+    v_ref  : (tile_c, H, W) residual membrane after step T-1.
+    """
+    bias = b_ref[...][:, None, None]
+    theta = th_ref[...][:, None, None]
+
+    def step(t, v_res):
+        x_t = p_ref[t]
+        v_pre = v_res + (x_t - bias)
+        o = (v_pre >= theta).astype(jnp.float32)
+        o_ref[t] = o
+        return v_pre * (1.0 - o)  # hard reset (Eq. (1))
+
+    v_final = jax.lax.fori_loop(
+        0, num_steps, step, jnp.zeros(v_ref.shape, jnp.float32)
+    )
+    v_ref[...] = v_final
+
+
+@functools.partial(jax.jit, static_argnames=("c_tile",))
+def if_dynamics(
+    psums: jnp.ndarray,
+    bias: jnp.ndarray,
+    theta: jnp.ndarray,
+    c_tile: int = DEFAULT_C_TILE,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """IF neuron over a psum sequence; bit-identical to ``ref.if_dynamics``.
+
+    Parameters
+    ----------
+    psums : (T, C, H, W) per-step convolution outputs.
+    bias, theta : (C,) quantized IF-BN parameters.
+
+    Returns
+    -------
+    (spikes (T, C, H, W), v_res (C, H, W)).
+    """
+    t_steps, c, h, w = psums.shape
+    tile = min(c_tile, c)
+    if c % tile != 0:
+        tile = c
+
+    kernel = functools.partial(_if_kernel, num_steps=t_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(c // tile,),
+        in_specs=[
+            pl.BlockSpec((t_steps, tile, h, w), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t_steps, tile, h, w), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((tile, h, w), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_steps, c, h, w), jnp.float32),
+            jax.ShapeDtypeStruct((c, h, w), jnp.float32),
+        ],
+        interpret=True,
+    )(psums, bias, theta)
+
+
+def if_dynamics_flat(
+    psums: jnp.ndarray, bias: jnp.ndarray, theta: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """IF dynamics for (T, N) fully-connected psums.
+
+    Reshapes through the 4-D kernel so FC layers share the same datapath,
+    like the chip reusing its neuron unit for fc layers.
+    """
+    t_steps, n = psums.shape
+    sp, v = if_dynamics(psums.reshape(t_steps, n, 1, 1), bias, theta)
+    return sp.reshape(t_steps, n), v.reshape(n)

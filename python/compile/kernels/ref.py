@@ -1,0 +1,229 @@
+"""Pure-jnp reference oracles for the VSA kernels.
+
+These functions define the *numerical contract* of the whole stack: the
+Pallas kernels (``binary_conv.py``, ``if_neuron.py``, ``encoding.py``), the
+JAX model (``compile/model.py``), the rust functional golden model
+(``rust/src/snn/``) and the cycle-accurate simulator (``rust/src/arch/``)
+must all agree with these bit-for-bit on the deployed integer domain.
+
+Conventions
+-----------
+* Tensors are NCHW; a leading ``T`` axis is the SNN time dimension.
+* Binary weights are carried as float ``+1.0`` / ``-1.0`` (the hardware
+  stores the sign bit; ``-1 -> 1``, ``+1 -> 0``).
+* Spikes are ``0.0`` / ``1.0`` floats.
+* All deployed quantities are *integer-valued floats*: convolution sums of
+  binary products are integers, and IF-BN biases/thresholds are quantized
+  to a ``FIXED_POINT`` fixed-point grid so every membrane value is an
+  integer.  Every value stays well below 2**24, so float32 arithmetic is
+  exact and cross-language equality is meaningful.
+
+IF neuron (paper Eq. (1)-(2), hard reset)
+-----------------------------------------
+    V_pre[t] = V_res[t-1] + (x[t] - bias)
+    o[t]     = 1  if V_pre[t] >= theta  else 0
+    V_res[t] = V_pre[t] * (1 - o[t])
+
+IF-based BatchNorm (paper Eq. (3)-(4)) folds BN(gamma, beta, mu, sigma)
+followed by threshold ``Vth`` into ``bias = mu - sigma/gamma * beta`` and
+``theta = sigma/gamma * Vth`` (``gamma > 0`` is enforced during training).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Fixed-point scale for IF-BN bias/threshold quantization.  Membrane
+# potentials live on the integer grid ``1/FIXED_POINT`` of the conv-output
+# unit; see ``quantize_if_bn``.
+FIXED_POINT = 256
+
+
+def conv2d_binary(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """'Same'-padded stride-1 2-D convolution with binary (+-1) weights.
+
+    Parameters
+    ----------
+    x : (C_in, H, W) input feature map (spikes or multi-bit planes).
+    w : (C_out, C_in, K, K) binary weights (+-1.0).
+
+    Returns
+    -------
+    (C_out, H, W) integer-valued partial sums.
+    """
+    lhs = x[None]  # (1, C_in, H, W)
+    k = w.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        w,
+        window_strides=(1, 1),
+        padding=[(k // 2, k // 2), (k // 2, k // 2)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def conv2d_binary_batched(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Batched variant of :func:`conv2d_binary` over a leading axis."""
+    return jax.vmap(lambda xt: conv2d_binary(xt, w))(x)
+
+
+def if_dynamics(
+    psums: jnp.ndarray, bias: jnp.ndarray, theta: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Integrate-and-fire over a psum sequence (paper Eq. (1)-(2)).
+
+    Parameters
+    ----------
+    psums : (T, C, ...) per-time-step convolution outputs.
+    bias  : (C,) IF-BN bias, broadcast over spatial dims.
+    theta : (C,) IF-BN firing threshold (> 0).
+
+    Returns
+    -------
+    spikes : (T, C, ...) 0/1 spike train.
+    v_res  : (C, ...) residual membrane potential after the last step.
+    """
+    cshape = (-1,) + (1,) * (psums.ndim - 2)
+    b = bias.reshape(cshape)
+    th = theta.reshape(cshape)
+
+    def step(v_res, x_t):
+        v_pre = v_res + (x_t - b)
+        o = (v_pre >= th).astype(psums.dtype)
+        return v_pre * (1.0 - o), o
+
+    v_res, spikes = jax.lax.scan(step, jnp.zeros_like(psums[0]), psums)
+    return spikes, v_res
+
+
+def encoding_layer(
+    image: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray,
+    theta: jnp.ndarray,
+    num_steps: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Encoding layer (paper §III-E/F): conv once, IF-fire ``num_steps`` times.
+
+    The multi-bit image is convolved a single time; the (identical) result
+    is accumulated into the membrane at every time step, generating the
+    spike train for the first spiking layer.
+
+    Parameters
+    ----------
+    image : (C_in, H, W) multi-bit non-negative input (integer-valued).
+    w     : (C_out, C_in, K, K) binary weights.
+    bias, theta : (C_out,) IF-BN parameters in *input-scale* units.
+    num_steps : T, number of time steps to emit.
+    """
+    x = conv2d_binary(image, w)
+    psums = jnp.broadcast_to(x, (num_steps,) + x.shape)
+    return if_dynamics(psums, bias, theta)
+
+
+def encoding_layer_bitplanes(
+    image: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray,
+    theta: jnp.ndarray,
+    num_steps: int,
+    num_planes: int = 8,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bitplane-decomposed encoding layer (paper Fig. 7).
+
+    Splits the 8-bit input into ``num_planes`` binary planes, convolves each
+    with the *same* binary weights on the binary datapath, and shift-adds
+    the plane results — the arithmetic identity the chip's first-stage
+    accumulator implements.  Must equal :func:`encoding_layer` exactly.
+    """
+    img_i = image.astype(jnp.int32)
+    planes = [((img_i >> p) & 1).astype(image.dtype) for p in range(num_planes)]
+    x = sum(float(1 << p) * conv2d_binary(planes[p], w) for p in range(num_planes))
+    psums = jnp.broadcast_to(x, (num_steps,) + x.shape)
+    return if_dynamics(psums, bias, theta)
+
+
+def spiking_conv_layer(
+    spikes_in: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray,
+    theta: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Spiking conv layer: per-step binary conv + IF dynamics.
+
+    Parameters
+    ----------
+    spikes_in : (T, C_in, H, W) input spike train.
+    """
+    psums = conv2d_binary_batched(spikes_in, w)
+    return if_dynamics(psums, bias, theta)
+
+
+def maxpool2(spikes: jnp.ndarray) -> jnp.ndarray:
+    """2x2/stride-2 max pool over the trailing two dims (OR on spikes)."""
+    t_lead = spikes.shape[:-2]
+    h, w = spikes.shape[-2:]
+    x = spikes.reshape(t_lead + (h // 2, 2, w // 2, 2))
+    return x.max(axis=(-3, -1))
+
+
+def spiking_fc_layer(
+    spikes_in: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray,
+    theta: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Spiking fully-connected layer.
+
+    Parameters
+    ----------
+    spikes_in : (T, N_in) flattened spike train.
+    w         : (N_out, N_in) binary weights.
+    """
+    psums = spikes_in @ w.T
+    return if_dynamics(psums, bias, theta)
+
+
+def readout_layer(spikes_in: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Final non-firing layer: accumulate membrane over all T -> logits.
+
+    Parameters
+    ----------
+    spikes_in : (T, N_in) spike train from the last hidden layer.
+    w         : (N_classes, N_in) binary weights.
+
+    Returns
+    -------
+    (N_classes,) accumulated membrane potential (the classification logits).
+    """
+    return (spikes_in @ w.T).sum(axis=0)
+
+
+def quantize_if_bn(
+    gamma: jnp.ndarray,
+    beta: jnp.ndarray,
+    mu: jnp.ndarray,
+    var: jnp.ndarray,
+    v_th: float,
+    input_scale: float = 1.0,
+    eps: float = 1e-5,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold BN + threshold into quantized IF-BN (bias, theta) (Eq. (4)).
+
+    ``input_scale`` rescales train-time normalized units to the deployed
+    integer domain (255 for the encoding layer, 1 for spiking layers).
+    Outputs are integer-valued floats on the ``1/FIXED_POINT`` grid,
+    *pre-multiplied* by ``FIXED_POINT`` — i.e. deployed membrane arithmetic
+    is ``FIXED_POINT * conv_out - bias_q`` compared against ``theta_q``.
+    The un-quantized float path divides both by ``FIXED_POINT`` again, so
+    ``if_dynamics(psums, bias_q / FP, theta_q / FP)`` matches the integer
+    hardware exactly when ``psums`` are integer-valued.
+    """
+    sigma = jnp.sqrt(var + eps)
+    bias = mu - sigma / gamma * beta
+    theta = sigma / gamma * v_th
+    bias_q = jnp.round(bias * input_scale * FIXED_POINT)
+    theta_q = jnp.maximum(jnp.round(theta * input_scale * FIXED_POINT), 1.0)
+    return bias_q, theta_q

@@ -1,0 +1,418 @@
+"""L2: the binary-weight spiking models of VSA (paper Table I).
+
+Two views of the same network:
+
+* **Training view** (`forward_train`) — float arithmetic, latent real
+  weights binarized with a straight-through estimator, standard BatchNorm
+  (shared statistics across time steps, as in paper Eq. (3)), IF neurons
+  with a rectangular surrogate gradient.  Differentiable end-to-end: this
+  is the STBP graph `compile/train.py` optimizes.
+
+* **Deployed view** (`forward_deployed`) — the integer-exact inference
+  graph the hardware runs: binary +-1 weights, BN folded into IF-BN
+  (bias, theta) quantized on the ``FIXED_POINT`` grid (paper Eq. (4)),
+  multi-bit u8 input into the encoding layer.  Calls the Pallas kernels
+  (L1) so the whole thing lowers into one HLO module for the rust runtime.
+  Bit-identical to the rust golden model and the cycle-accurate simulator.
+
+Network structures (paper Table I)
+----------------------------------
+MNIST    : 64Conv(encoding)-MP2-64Conv-MP2-128fc-10fc
+CIFAR-10 : 128Conv(encoding)-128Conv-128Conv-MP2-192Conv-192Conv-192Conv-
+           192Conv-MP2-256Conv-256Conv-256Conv-256Conv-MP2-256fc-10fc
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.binary_conv import binary_conv2d_batched
+from .kernels.binary_matmul import binary_matmul
+from .kernels.encoding import encoding_conv2d
+from .kernels.if_neuron import if_dynamics, if_dynamics_flat
+
+FIXED_POINT = ref.FIXED_POINT
+DEFAULT_V_TH = 1.0
+BN_EPS = 1e-5
+
+
+# --------------------------------------------------------------------------
+# Architecture description
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer of a Table-I network.
+
+    kind: 'enc_conv' | 'conv' | 'maxpool' | 'fc' | 'readout'.
+    """
+
+    kind: str
+    c_out: int = 0
+    ksize: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A full network: input geometry + layer stack + time steps."""
+
+    name: str
+    in_channels: int
+    in_size: int
+    layers: tuple[LayerSpec, ...]
+    num_steps: int = 8
+
+    def feature_shapes(self) -> list[tuple[int, int, int]]:
+        """(C, H, W) entering each layer (flattened dims for fc layers)."""
+        shapes = []
+        c, s = self.in_channels, self.in_size
+        for ly in self.layers:
+            shapes.append((c, s, s))
+            if ly.kind in ("enc_conv", "conv"):
+                c = ly.c_out
+            elif ly.kind == "maxpool":
+                s //= 2
+            elif ly.kind in ("fc", "readout"):
+                c, s = ly.c_out, 1
+        return shapes
+
+
+def mnist_spec(num_steps: int = 8) -> ModelSpec:
+    """MNIST network from Table I."""
+    return ModelSpec(
+        name="mnist",
+        in_channels=1,
+        in_size=28,
+        layers=(
+            LayerSpec("enc_conv", 64),
+            LayerSpec("maxpool"),
+            LayerSpec("conv", 64),
+            LayerSpec("maxpool"),
+            LayerSpec("fc", 128),
+            LayerSpec("readout", 10),
+        ),
+        num_steps=num_steps,
+    )
+
+
+def cifar10_spec(num_steps: int = 8) -> ModelSpec:
+    """CIFAR-10 network from Table I (11 weight layers + 3 pools)."""
+    convs = [128, 128, 128, "MP", 192, 192, 192, 192, "MP", 256, 256, 256, 256, "MP"]
+    layers: list[LayerSpec] = []
+    first = True
+    for c in convs:
+        if c == "MP":
+            layers.append(LayerSpec("maxpool"))
+        elif first:
+            layers.append(LayerSpec("enc_conv", int(c)))
+            first = False
+        else:
+            layers.append(LayerSpec("conv", int(c)))
+    layers += [LayerSpec("fc", 256), LayerSpec("readout", 10)]
+    return ModelSpec(
+        name="cifar10", in_channels=3, in_size=32, layers=tuple(layers),
+        num_steps=num_steps,
+    )
+
+
+def tiny_spec(num_steps: int = 4) -> ModelSpec:
+    """Small net for fast tests and the e2e training example (~100k params)."""
+    return ModelSpec(
+        name="tiny",
+        in_channels=1,
+        in_size=12,
+        layers=(
+            LayerSpec("enc_conv", 16),
+            LayerSpec("maxpool"),
+            LayerSpec("conv", 32),
+            LayerSpec("maxpool"),
+            LayerSpec("fc", 64),
+            LayerSpec("readout", 10),
+        ),
+        num_steps=num_steps,
+    )
+
+
+SPECS = {"mnist": mnist_spec, "cifar10": cifar10_spec, "tiny": tiny_spec}
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, spec: ModelSpec) -> list[dict[str, Any]]:
+    """Initialize latent float weights + BN state for every weight layer.
+
+    Returns a list parallel to ``spec.layers``; pool layers get ``{}``.
+    """
+    params: list[dict[str, Any]] = []
+    shapes = spec.feature_shapes()
+    for ly, (c_in, h, w) in zip(spec.layers, shapes):
+        if ly.kind in ("enc_conv", "conv"):
+            key, sub = jax.random.split(key)
+            fan_in = c_in * ly.ksize * ly.ksize
+            params.append(
+                dict(
+                    w=jax.random.normal(sub, (ly.c_out, c_in, ly.ksize, ly.ksize))
+                    / jnp.sqrt(fan_in),
+                    gamma=jnp.ones(ly.c_out),
+                    beta=jnp.zeros(ly.c_out),
+                    mu=jnp.zeros(ly.c_out),
+                    var=jnp.ones(ly.c_out),
+                    v_th=DEFAULT_V_TH,
+                )
+            )
+        elif ly.kind == "fc":
+            key, sub = jax.random.split(key)
+            n_in = c_in * h * w
+            params.append(
+                dict(
+                    w=jax.random.normal(sub, (ly.c_out, n_in)) / jnp.sqrt(n_in),
+                    gamma=jnp.ones(ly.c_out),
+                    beta=jnp.zeros(ly.c_out),
+                    mu=jnp.zeros(ly.c_out),
+                    var=jnp.ones(ly.c_out),
+                    v_th=DEFAULT_V_TH,
+                )
+            )
+        elif ly.kind == "readout":
+            key, sub = jax.random.split(key)
+            n_in = c_in * h * w
+            params.append(
+                dict(w=jax.random.normal(sub, (ly.c_out, n_in)) / jnp.sqrt(n_in))
+            )
+        else:
+            params.append({})
+    return params
+
+
+def binarize_ste(w: jnp.ndarray) -> jnp.ndarray:
+    """sign(w) in the forward pass, identity gradient (straight-through)."""
+    w_bin = jnp.where(w >= 0, 1.0, -1.0)
+    return w + jax.lax.stop_gradient(w_bin - w)
+
+
+def deploy(params: list[dict[str, Any]], spec: ModelSpec) -> list[dict[str, Any]]:
+    """Fold BN into quantized IF-BN and binarize weights (paper Eq. (4)).
+
+    The first (encoding) layer's bias/theta are scaled by 255 because the
+    deployed graph consumes raw u8 pixels while training consumed
+    pixels / 255.
+    """
+    out: list[dict[str, Any]] = []
+    for ly, p in zip(spec.layers, params):
+        if ly.kind in ("enc_conv", "conv", "fc"):
+            scale = 255.0 if ly.kind == "enc_conv" else 1.0
+            bias_q, theta_q = ref.quantize_if_bn(
+                p["gamma"], p["beta"], p["mu"], p["var"], p["v_th"],
+                input_scale=scale, eps=BN_EPS,
+            )
+            out.append(
+                dict(w=jnp.where(p["w"] >= 0, 1.0, -1.0), bias=bias_q, theta=theta_q)
+            )
+        elif ly.kind == "readout":
+            out.append(dict(w=jnp.where(p["w"] >= 0, 1.0, -1.0)))
+        else:
+            out.append({})
+    return out
+
+
+# --------------------------------------------------------------------------
+# Deployed (integer-exact) forward — the graph AOT-lowered for rust
+# --------------------------------------------------------------------------
+
+
+def forward_deployed(
+    deployed: list[dict[str, Any]],
+    spec: ModelSpec,
+    image_u8: jnp.ndarray,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Deployed inference for a single image.
+
+    Parameters
+    ----------
+    deployed : output of :func:`deploy`.
+    image_u8 : (C_in, H, W) raw pixels as integer-valued float32 in [0, 255].
+    use_pallas : route convs/IF through the Pallas kernels (True) or the
+        pure-jnp oracle (False); both are bit-identical.
+
+    Returns
+    -------
+    (10,) integer-valued logits (accumulated readout membrane).
+    """
+    t_steps = spec.num_steps
+    fp = float(FIXED_POINT)
+    spikes: jnp.ndarray | None = None  # (T, C, H, W) once past the encoder
+
+    for ly, p in zip(spec.layers, deployed):
+        if ly.kind == "enc_conv":
+            if use_pallas:
+                x = encoding_conv2d(image_u8, p["w"])
+            else:
+                x = ref.conv2d_binary(image_u8, p["w"])
+            psums = jnp.broadcast_to(fp * x, (t_steps,) + x.shape)
+            ifd = if_dynamics if use_pallas else ref.if_dynamics
+            spikes, _ = ifd(psums, p["bias"], p["theta"])
+        elif ly.kind == "conv":
+            if use_pallas:
+                psums = fp * binary_conv2d_batched(spikes, p["w"])
+                spikes, _ = if_dynamics(psums, p["bias"], p["theta"])
+            else:
+                psums = fp * ref.conv2d_binary_batched(spikes, p["w"])
+                spikes, _ = ref.if_dynamics(psums, p["bias"], p["theta"])
+        elif ly.kind == "maxpool":
+            spikes = ref.maxpool2(spikes)
+        elif ly.kind == "fc":
+            flat = spikes.reshape(t_steps, -1)
+            if use_pallas:
+                psums = fp * binary_matmul(flat, p["w"])
+                spikes, _ = if_dynamics_flat(psums, p["bias"], p["theta"])
+            else:
+                psums = fp * (flat @ p["w"].T)
+                spikes, _ = ref.if_dynamics(psums, p["bias"], p["theta"])
+            spikes = spikes.reshape(t_steps, -1, 1, 1)
+        elif ly.kind == "readout":
+            flat = spikes.reshape(t_steps, -1)
+            if use_pallas:
+                return binary_matmul(flat, p["w"]).sum(axis=0)
+            return ref.readout_layer(flat, p["w"])
+    raise ValueError("network has no readout layer")
+
+
+def forward_deployed_batched(
+    deployed: list[dict[str, Any]], spec: ModelSpec, images_u8: jnp.ndarray,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """vmap of :func:`forward_deployed` over a batch of images."""
+    return jax.vmap(
+        lambda img: forward_deployed(deployed, spec, img, use_pallas=use_pallas)
+    )(images_u8)
+
+
+# --------------------------------------------------------------------------
+# Training forward (float, differentiable, batch-stat BN) — STBP graph
+# --------------------------------------------------------------------------
+
+SURROGATE_WIDTH = 1.0  # rectangular surrogate window `a` (STBP [9])
+
+
+def _fire_surrogate(v_pre: jnp.ndarray, theta: jnp.ndarray) -> jnp.ndarray:
+    """Heaviside fire with rectangular surrogate d o/d v = 1(|v-th|<a/2)."""
+    o_hard = (v_pre >= theta).astype(v_pre.dtype)
+    window = (jnp.abs(v_pre - theta) < SURROGATE_WIDTH / 2).astype(v_pre.dtype)
+    o_soft = window * (v_pre - theta)  # identity slope inside the window
+    return o_soft + jax.lax.stop_gradient(o_hard - o_soft)
+
+
+def _bn_stats(x: jnp.ndarray, axes: tuple[int, ...]) -> tuple[jnp.ndarray, jnp.ndarray]:
+    mu = x.mean(axis=axes)
+    var = x.var(axis=axes)
+    return mu, var
+
+
+def _if_train(psums: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Differentiable IF over (T, B, C, ...) psums with hard reset."""
+
+    def step(v_res, x_t):
+        v_pre = v_res + x_t
+        o = _fire_surrogate(v_pre, jnp.asarray(theta, v_pre.dtype))
+        return v_pre * (1.0 - o), o
+
+    _, spikes = jax.lax.scan(step, jnp.zeros_like(psums[0]), psums)
+    return spikes
+
+
+def forward_train(
+    params: list[dict[str, Any]], spec: ModelSpec, images: jnp.ndarray
+) -> tuple[jnp.ndarray, list[tuple[jnp.ndarray, jnp.ndarray]]]:
+    """STBP training forward over a batch.
+
+    Parameters
+    ----------
+    images : (B, C_in, H, W) float in [0, 1].
+
+    Returns
+    -------
+    logits : (B, 10) accumulated readout membrane.
+    stats  : per weight-layer (mu, var) batch statistics for running-stat
+             updates (zero-size entries for the readout layer).
+    """
+    t_steps = spec.num_steps
+    batch = images.shape[0]
+    stats: list[tuple[jnp.ndarray, jnp.ndarray]] = []
+    spikes: jnp.ndarray | None = None  # (T, B, C, H, W)
+
+    for ly, p in zip(spec.layers, params):
+        if ly.kind == "enc_conv":
+            w_bin = binarize_ste(p["w"])
+            x = jax.vmap(lambda im: ref.conv2d_binary(im, w_bin))(images)  # (B,C,H,W)
+            mu, var = _bn_stats(x, (0, 2, 3))
+            stats.append((mu, var))
+            xn = (x - mu[:, None, None]) / jnp.sqrt(var[:, None, None] + BN_EPS)
+            xn = p["gamma"][:, None, None] * xn + p["beta"][:, None, None]
+            psums = jnp.broadcast_to(xn, (t_steps,) + xn.shape)
+            spikes = _if_train(psums, p["v_th"])
+        elif ly.kind == "conv":
+            w_bin = binarize_ste(p["w"])
+            flat = spikes.reshape((-1,) + spikes.shape[2:])  # (T*B, C, H, W)
+            x = jax.vmap(lambda s: ref.conv2d_binary(s, w_bin))(flat)
+            mu, var = _bn_stats(x, (0, 2, 3))
+            stats.append((mu, var))
+            xn = (x - mu[:, None, None]) / jnp.sqrt(var[:, None, None] + BN_EPS)
+            xn = p["gamma"][:, None, None] * xn + p["beta"][:, None, None]
+            psums = xn.reshape((t_steps, batch) + x.shape[1:])
+            spikes = _if_train(psums, p["v_th"])
+        elif ly.kind == "maxpool":
+            spikes = ref.maxpool2(spikes)
+            stats.append((jnp.zeros(()), jnp.zeros(())))
+        elif ly.kind == "fc":
+            w_bin = binarize_ste(p["w"])
+            flat = spikes.reshape(t_steps, batch, -1)
+            x = flat @ w_bin.T  # (T, B, N_out)
+            mu, var = _bn_stats(x.reshape(-1, x.shape[-1]), (0,))
+            stats.append((mu, var))
+            xn = (x - mu) / jnp.sqrt(var + BN_EPS)
+            xn = p["gamma"] * xn + p["beta"]
+            spikes = _if_train(xn, p["v_th"])[..., None, None]
+        elif ly.kind == "readout":
+            w_bin = binarize_ste(p["w"])
+            flat = spikes.reshape(t_steps, batch, -1)
+            stats.append((jnp.zeros(()), jnp.zeros(())))
+            return (flat @ w_bin.T).sum(axis=0), stats
+    raise ValueError("network has no readout layer")
+
+
+def forward_train_ann(
+    params: list[dict[str, Any]], spec: ModelSpec, images: jnp.ndarray
+) -> jnp.ndarray:
+    """Full-precision ANN twin (ReLU instead of IF, same topology).
+
+    The Fig. 8 baseline: identical layer stack, float weights, BN + ReLU,
+    no time dimension.
+    """
+    x = images  # (B, C, H, W)
+    for ly, p in zip(spec.layers, params):
+        if ly.kind in ("enc_conv", "conv"):
+            x = jax.vmap(lambda im, w=p["w"]: ref.conv2d_binary(im, w))(x)
+            mu, var = _bn_stats(x, (0, 2, 3))
+            xn = (x - mu[:, None, None]) / jnp.sqrt(var[:, None, None] + BN_EPS)
+            x = jax.nn.relu(p["gamma"][:, None, None] * xn + p["beta"][:, None, None])
+        elif ly.kind == "maxpool":
+            x = ref.maxpool2(x)
+        elif ly.kind == "fc":
+            flat = x.reshape(x.shape[0], -1)
+            h = flat @ p["w"].T
+            mu, var = _bn_stats(h, (0,))
+            x = jax.nn.relu(p["gamma"] * (h - mu) / jnp.sqrt(var + BN_EPS) + p["beta"])
+            x = x[..., None, None]
+        elif ly.kind == "readout":
+            return x.reshape(x.shape[0], -1) @ p["w"].T
+    raise ValueError("network has no readout layer")

@@ -1,0 +1,141 @@
+"""VSAW binary parameter format — the weight interchange with rust.
+
+``deploy()``-ed models (binary weights + quantized IF-BN bias/theta) are
+serialized to a little-endian binary format that ``rust/src/snn/params.rs``
+reads, so the JAX model, the rust golden model and the cycle-accurate
+simulator all run the *same* network.
+
+Layout (all integers little-endian)
+-----------------------------------
+    magic      : 4 bytes  b"VSAW"
+    version    : u32      (currently 1)
+    name_len   : u32, name bytes (utf-8)
+    num_steps  : u32      (T)
+    in_ch      : u32, in_size : u32
+    num_layers : u32
+    per layer:
+      kind : u8   0=enc_conv 1=conv 2=maxpool 3=fc 4=readout
+      enc_conv/conv : c_out u32, c_in u32, k u32,
+                      weights i8[c_out*c_in*k*k]   (+1 / -1),
+                      bias  i32[c_out], theta i32[c_out]
+      fc            : n_out u32, n_in u32, weights i8[n_out*n_in],
+                      bias i32[n_out], theta i32[n_out]
+      readout       : n_out u32, n_in u32, weights i8[n_out*n_in]
+      maxpool       : (no payload)
+
+bias/theta are the *quantized* values (already premultiplied by
+``FIXED_POINT``), stored as i32.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Any
+
+import numpy as np
+
+from .model import ModelSpec
+
+MAGIC = b"VSAW"
+VERSION = 1
+KIND_CODE = {"enc_conv": 0, "conv": 1, "maxpool": 2, "fc": 3, "readout": 4}
+
+
+def save_deployed(
+    path: str, deployed: list[dict[str, Any]], spec: ModelSpec
+) -> None:
+    """Serialize a deployed model to ``path`` in VSAW v1 format."""
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<I", VERSION)
+    name = spec.name.encode()
+    out += struct.pack("<I", len(name)) + name
+    out += struct.pack("<III", spec.num_steps, spec.in_channels, spec.in_size)
+    out += struct.pack("<I", len(spec.layers))
+
+    for ly, p in zip(spec.layers, deployed):
+        out += struct.pack("<B", KIND_CODE[ly.kind])
+        if ly.kind in ("enc_conv", "conv"):
+            w = np.asarray(p["w"], dtype=np.float32)
+            c_out, c_in, k, _ = w.shape
+            out += struct.pack("<III", c_out, c_in, k)
+            out += w.astype(np.int8).tobytes()
+            out += np.asarray(p["bias"], dtype=np.int32).tobytes()
+            out += np.asarray(p["theta"], dtype=np.int32).tobytes()
+        elif ly.kind == "fc":
+            w = np.asarray(p["w"], dtype=np.float32)
+            n_out, n_in = w.shape
+            out += struct.pack("<II", n_out, n_in)
+            out += w.astype(np.int8).tobytes()
+            out += np.asarray(p["bias"], dtype=np.int32).tobytes()
+            out += np.asarray(p["theta"], dtype=np.int32).tobytes()
+        elif ly.kind == "readout":
+            w = np.asarray(p["w"], dtype=np.float32)
+            n_out, n_in = w.shape
+            out += struct.pack("<II", n_out, n_in)
+            out += w.astype(np.int8).tobytes()
+    with open(path, "wb") as f:
+        f.write(bytes(out))
+
+
+def load_deployed(path: str) -> tuple[str, int, int, int, list[dict[str, Any]]]:
+    """Read a VSAW file back; returns (name, T, in_ch, in_size, layers).
+
+    Each layer dict carries ``kind`` plus float32 arrays matching what
+    ``deploy()`` produces — used by round-trip tests.
+    """
+    with open(path, "rb") as f:
+        buf = f.read()
+    off = 0
+
+    def take(fmt: str):
+        nonlocal off
+        vals = struct.unpack_from("<" + fmt, buf, off)
+        off += struct.calcsize("<" + fmt)
+        return vals if len(vals) > 1 else vals[0]
+
+    assert buf[:4] == MAGIC, "bad magic"
+    off = 4
+    version = take("I")
+    assert version == VERSION, f"unsupported version {version}"
+    name_len = take("I")
+    name = buf[off : off + name_len].decode()
+    off += name_len
+    num_steps, in_ch, in_size = take("III")
+    num_layers = take("I")
+
+    def take_arr(dtype, count):
+        nonlocal off
+        arr = np.frombuffer(buf, dtype=dtype, count=count, offset=off)
+        off += arr.nbytes
+        return arr
+
+    code_kind = {v: k for k, v in KIND_CODE.items()}
+    layers: list[dict[str, Any]] = []
+    for _ in range(num_layers):
+        kind = code_kind[take("B")]
+        if kind in ("enc_conv", "conv"):
+            c_out, c_in, k = take("III")
+            w = take_arr(np.int8, c_out * c_in * k * k).reshape(c_out, c_in, k, k)
+            bias = take_arr(np.int32, c_out)
+            theta = take_arr(np.int32, c_out)
+            layers.append(
+                dict(kind=kind, w=w.astype(np.float32),
+                     bias=bias.astype(np.float32), theta=theta.astype(np.float32))
+            )
+        elif kind == "fc":
+            n_out, n_in = take("II")
+            w = take_arr(np.int8, n_out * n_in).reshape(n_out, n_in)
+            bias = take_arr(np.int32, n_out)
+            theta = take_arr(np.int32, n_out)
+            layers.append(
+                dict(kind=kind, w=w.astype(np.float32),
+                     bias=bias.astype(np.float32), theta=theta.astype(np.float32))
+            )
+        elif kind == "readout":
+            n_out, n_in = take("II")
+            w = take_arr(np.int8, n_out * n_in).reshape(n_out, n_in)
+            layers.append(dict(kind=kind, w=w.astype(np.float32)))
+        else:
+            layers.append(dict(kind=kind))
+    return name, num_steps, in_ch, in_size, layers

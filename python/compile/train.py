@@ -1,0 +1,285 @@
+"""STBP direct training of the binary-weight spiking model (paper §II).
+
+Spatio-temporal backprop [9] through the differentiable training view of
+``model.py`` (rectangular surrogate, straight-through binarization [10]),
+with a hand-rolled Adam (optax is not available in this environment).
+
+Trainable leaves: latent conv/fc weights, BN gamma/beta.  BN running
+statistics (mu, var) are tracked with momentum and folded into IF-BN at
+deploy time (paper Eq. (4)).  ``gamma`` is clamped positive so the folded
+threshold stays positive and the firing inequality keeps its direction.
+
+CLI
+---
+    python -m compile.train --spec tiny --steps 300 --batch 32 \
+        --out ../artifacts/tiny_trained.vsaw
+    python -m compile.train --fig8 --spec tiny --steps 200
+
+``--fig8`` sweeps time steps T and prints the ANN-vs-SNN accuracy series
+of paper Fig. 8 (on the synthetic datasets; see DESIGN.md §Substitutions).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, params_io
+from .model import (
+    SPECS,
+    ModelSpec,
+    deploy,
+    forward_deployed_batched,
+    forward_train,
+    forward_train_ann,
+    init_params,
+)
+
+BN_MOMENTUM = 0.9
+GAMMA_MIN = 0.05
+
+
+# --------------------------------------------------------------------------
+# Hand-rolled Adam over the params pytree
+# --------------------------------------------------------------------------
+
+TRAINABLE_KEYS = ("w", "gamma", "beta")
+
+
+def adam_init(params: list[dict[str, Any]]) -> dict[str, Any]:
+    """Zero first/second moments for every trainable leaf."""
+    zeros = [
+        {k: jnp.zeros_like(p[k]) for k in TRAINABLE_KEYS if k in p} for p in params
+    ]
+    return dict(m=zeros, v=[{k: jnp.zeros_like(x[k]) for k in x} for x in zeros], t=0)
+
+
+def adam_step(
+    params: list[dict[str, Any]],
+    grads: list[dict[str, Any]],
+    state: dict[str, Any],
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> tuple[list[dict[str, Any]], dict[str, Any]]:
+    """One Adam update; returns (new_params, new_state)."""
+    t = state["t"] + 1
+    new_params, new_m, new_v = [], [], []
+    for p, g, m, v in zip(params, grads, state["m"], state["v"]):
+        np_, nm, nv = dict(p), {}, {}
+        for k in m:
+            gk = g.get(k, jnp.zeros_like(p[k]))
+            nm[k] = b1 * m[k] + (1 - b1) * gk
+            nv[k] = b2 * v[k] + (1 - b2) * gk * gk
+            mhat = nm[k] / (1 - b1**t)
+            vhat = nv[k] / (1 - b2**t)
+            np_[k] = p[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        if "gamma" in np_:
+            np_["gamma"] = jnp.maximum(np_["gamma"], GAMMA_MIN)
+        new_params.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    return new_params, dict(m=new_m, v=new_v, t=t)
+
+
+# --------------------------------------------------------------------------
+# Loss / metrics
+# --------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; logits scaled by 1/T-ish for stability."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -logp[jnp.arange(labels.shape[0]), labels].mean()
+
+
+def accuracy(logits: np.ndarray, labels: np.ndarray) -> float:
+    return float((logits.argmax(-1) == labels).mean())
+
+
+# --------------------------------------------------------------------------
+# Training loops
+# --------------------------------------------------------------------------
+
+
+def make_snn_step(spec: ModelSpec, lr: float):
+    """Build the jitted STBP train step (loss + grads + BN stat update)."""
+
+    def loss_fn(params, images, labels):
+        logits, stats = forward_train(params, spec, images)
+        return cross_entropy(logits / spec.num_steps, labels), (logits, stats)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    @jax.jit
+    def step(params, opt, images, labels):
+        (loss, (logits, stats)), grads = grad_fn(params, images, labels)
+        params, opt = adam_step(params, grads, opt, lr)
+        # BN running-stat EMA for deployment.
+        new_params = []
+        for p, st in zip(params, stats):
+            if "mu" in p and st[0].ndim > 0:
+                p = dict(
+                    p,
+                    mu=BN_MOMENTUM * p["mu"] + (1 - BN_MOMENTUM) * st[0],
+                    var=BN_MOMENTUM * p["var"] + (1 - BN_MOMENTUM) * st[1],
+                )
+            new_params.append(p)
+        return new_params, opt, loss, logits
+
+    return step
+
+
+def make_ann_step(spec: ModelSpec, lr: float):
+    """Train step for the full-precision ANN twin (Fig. 8 baseline)."""
+
+    def loss_fn(params, images, labels):
+        logits = forward_train_ann(params, spec, images)
+        return cross_entropy(logits, labels), logits
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    @jax.jit
+    def step(params, opt, images, labels):
+        (loss, logits), grads = grad_fn(params, images, labels)
+        params, opt = adam_step(params, grads, opt, lr)
+        return params, opt, loss, logits
+
+    return step
+
+
+def train(
+    spec: ModelSpec,
+    steps: int = 300,
+    batch: int = 32,
+    lr: float = 1e-3,
+    seed: int = 42,
+    ann: bool = False,
+    log_every: int = 25,
+    log: list | None = None,
+) -> list[dict[str, Any]]:
+    """Train on the synthetic dataset for ``spec``; returns final params."""
+    gen = datasets.FOR_SPEC[spec.name if spec.name in datasets.FOR_SPEC else "tiny"]
+    params = init_params(jax.random.PRNGKey(seed), spec)
+    opt = adam_init(params)
+    step_fn = make_ann_step(spec, lr) if ann else make_snn_step(spec, lr)
+
+    t0 = time.time()
+    for i in range(steps):
+        imgs, labels = gen(seed, i * batch, batch)
+        x = jnp.asarray(imgs, jnp.float32) / 255.0
+        y = jnp.asarray(labels)
+        params, opt, loss, logits = step_fn(params, opt, x, y)
+        if i % log_every == 0 or i == steps - 1:
+            acc = accuracy(np.asarray(logits), np.asarray(labels))
+            line = (
+                f"[{'ann' if ann else 'snn'}:{spec.name} T={spec.num_steps}] "
+                f"step {i:4d} loss {float(loss):.4f} acc {acc:.3f} "
+                f"({time.time() - t0:.1f}s)"
+            )
+            print(line, flush=True)
+            if log is not None:
+                log.append(dict(step=i, loss=float(loss), acc=acc))
+    return params
+
+
+def evaluate_train_view(
+    params, spec: ModelSpec, count: int = 256, seed: int = 7, ann: bool = False
+) -> float:
+    """Held-out accuracy of the float training view."""
+    gen = datasets.FOR_SPEC[spec.name if spec.name in datasets.FOR_SPEC else "tiny"]
+    imgs, labels = gen(seed + 1000, 10_000_000, count)
+    x = jnp.asarray(imgs, jnp.float32) / 255.0
+    if ann:
+        logits = forward_train_ann(params, spec, x)
+    else:
+        logits, _ = forward_train(params, spec, x)
+    return accuracy(np.asarray(logits), labels)
+
+
+def evaluate_deployed(params, spec: ModelSpec, count: int = 256, seed: int = 7) -> float:
+    """Held-out accuracy of the deployed integer model (jnp oracle path)."""
+    gen = datasets.FOR_SPEC[spec.name if spec.name in datasets.FOR_SPEC else "tiny"]
+    imgs, labels = gen(seed + 1000, 10_000_000, count)
+    d = deploy(params, spec)
+    logits = forward_deployed_batched(
+        d, spec, jnp.asarray(imgs, jnp.float32), use_pallas=False
+    )
+    return accuracy(np.asarray(logits), labels)
+
+
+# --------------------------------------------------------------------------
+# Fig. 8 sweep
+# --------------------------------------------------------------------------
+
+
+def fig8_sweep(
+    base: str, steps: int, batch: int, t_values: tuple[int, ...] = (1, 2, 4, 6, 8)
+) -> dict[str, Any]:
+    """ANN vs binary-SNN accuracy across time steps (paper Fig. 8)."""
+    make = SPECS[base]
+    ann_spec = make(num_steps=1)
+    ann_params = train(ann_spec, steps=steps, batch=batch, ann=True)
+    ann_acc = evaluate_train_view(ann_params, ann_spec, ann=True)
+
+    series = []
+    for t in t_values:
+        spec = make(num_steps=t)
+        params = train(spec, steps=steps, batch=batch)
+        acc = evaluate_train_view(params, spec)
+        dep_acc = evaluate_deployed(params, spec)
+        series.append(dict(T=t, snn_acc=acc, snn_deployed_acc=dep_acc))
+        print(f"Fig8 {base}: T={t} snn={acc:.3f} deployed={dep_acc:.3f}", flush=True)
+    result = dict(dataset=base, ann_acc=ann_acc, series=series)
+    print(json.dumps(result, indent=2))
+    return result
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--spec", default="tiny", choices=sorted(SPECS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--num-steps", type=int, default=None, help="override T")
+    ap.add_argument("--out", default=None, help="write deployed .vsaw weights")
+    ap.add_argument("--fig8", action="store_true", help="run the Fig. 8 sweep")
+    ap.add_argument("--json-out", default=None, help="dump metrics as json")
+    args = ap.parse_args()
+
+    if args.fig8:
+        result = fig8_sweep(args.spec, args.steps, args.batch)
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump(result, f, indent=2)
+        return
+
+    make = SPECS[args.spec]
+    spec = make(num_steps=args.num_steps) if args.num_steps else make()
+    log: list = []
+    params = train(spec, steps=args.steps, batch=args.batch, lr=args.lr, log=log)
+    acc = evaluate_train_view(params, spec)
+    dep_acc = evaluate_deployed(params, spec)
+    print(f"final: train-view acc {acc:.3f}, deployed acc {dep_acc:.3f}")
+    if args.out:
+        params_io.save_deployed(args.out, deploy(params, spec), spec)
+        print(f"wrote {args.out}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(dict(loss_curve=log, acc=acc, deployed_acc=dep_acc), f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""AOT pipeline: HLO text must be loadable by the (old) XLA text parser
+and must carry the baked-in weights.
+
+Regression guards for the two interchange bugs found during bring-up:
+* default printing elides large constants as ``constant({...})`` — the
+  rust-side parser silently refills them with ZEROS;
+* jax's metadata attributes (``source_end_line`` ...) are rejected by the
+  xla_extension 0.5.1 text parser.
+"""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, datasets
+from compile.model import SPECS, deploy, forward_deployed, init_params
+
+
+@pytest.fixture(scope="module")
+def tiny_hlo():
+    spec = SPECS["tiny"]()
+    deployed = deploy(init_params(jax.random.PRNGKey(aot.SEED), spec), spec)
+    return aot.lower_model(spec, deployed, batch=1, use_pallas=False), spec, deployed
+
+
+def test_hlo_has_no_elided_constants(tiny_hlo):
+    text, _, _ = tiny_hlo
+    assert "constant({...})" not in text, "large constants were elided"
+
+
+def test_hlo_has_no_metadata_attributes(tiny_hlo):
+    text, _, _ = tiny_hlo
+    assert "source_end_line" not in text
+    assert "metadata=" not in text
+
+
+def test_hlo_entry_signature(tiny_hlo):
+    text, spec, _ = tiny_hlo
+    s = spec.in_size
+    # parameter (1, C, S, S) -> tuple((1, 10))
+    assert re.search(rf"f32\[1,{spec.in_channels},{s},{s}\]", text)
+    assert re.search(r"\(f32\[1,10\]", text)
+
+
+def test_hlo_contains_weight_values(tiny_hlo):
+    text, spec, deployed = tiny_hlo
+    # the fc weight matrix must appear as a materialized constant (XLA may
+    # fold the transpose, so accept either orientation)
+    n_in = 32 * (spec.in_size // 4) ** 2
+    assert re.search(
+        rf"f32\[(64,{n_in}|{n_in},64)\]\S* constant\(\{{", text
+    ), "fc weights not materialized in the HLO text"
+    # and it must carry actual +-1 values
+    assert re.search(r"constant\(\{ \{ -?1, ", text)
+
+
+def test_selfcheck_logits_are_reproducible():
+    """The logits aot.py writes must match a fresh recompute — guards
+    against stale artifacts and nondeterminism in deploy()."""
+    spec = SPECS["tiny"]()
+    deployed = aot.build_params(spec, None)
+    imgs, _ = datasets.FOR_SPEC["tiny"](aot.SELFCHECK_DATA_SEED, 0, 2)
+    a = [
+        np.asarray(
+            forward_deployed(deployed, spec, jnp.asarray(i, jnp.float32), use_pallas=False)
+        )
+        for i in imgs
+    ]
+    b = [
+        np.asarray(
+            forward_deployed(deployed, spec, jnp.asarray(i, jnp.float32), use_pallas=False)
+        )
+        for i in imgs
+    ]
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)

@@ -1,0 +1,228 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; equality is exact (integer-valued f32
+arithmetic, see ref.py docstring).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.binary_conv import binary_conv2d, binary_conv2d_batched
+from compile.kernels.binary_matmul import binary_matmul
+from compile.kernels.encoding import encoding_conv2d
+from compile.kernels.if_neuron import if_dynamics, if_dynamics_flat
+
+HYPO = dict(max_examples=20, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def rand_spikes(rng, shape):
+    return rng.integers(0, 2, shape).astype(np.float32)
+
+
+def rand_weights(rng, shape):
+    return rng.choice([-1.0, 1.0], shape).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# binary_conv
+# --------------------------------------------------------------------------
+
+
+@settings(**HYPO)
+@given(
+    c_in=st.integers(1, 8),
+    c_out=st.sampled_from([1, 3, 16, 32, 48]),
+    size=st.integers(4, 14),
+    k=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31),
+)
+def test_binary_conv_matches_ref(c_in, c_out, size, k, seed):
+    rng = _rng(seed)
+    x = rand_spikes(rng, (c_in, size, size))
+    w = rand_weights(rng, (c_out, c_in, k, k))
+    got = binary_conv2d(jnp.array(x), jnp.array(w))
+    want = ref.conv2d_binary(jnp.array(x), jnp.array(w))
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_binary_conv_batched_matches_ref():
+    rng = _rng(7)
+    x = rand_spikes(rng, (4, 16, 10, 10))
+    w = rand_weights(rng, (32, 16, 3, 3))
+    got = binary_conv2d_batched(jnp.array(x), jnp.array(w))
+    want = ref.conv2d_binary_batched(jnp.array(x), jnp.array(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_binary_conv_output_is_integer_valued():
+    rng = _rng(3)
+    x = rand_spikes(rng, (8, 9, 9))
+    w = rand_weights(rng, (24, 8, 3, 3))
+    out = np.asarray(binary_conv2d(jnp.array(x), jnp.array(w)))
+    np.testing.assert_array_equal(out, np.round(out))
+    assert np.abs(out).max() <= 8 * 9  # |sum| <= C_in * K * K
+
+
+def test_binary_conv_all_positive_weights_counts_spikes():
+    # With w == +1 everywhere, conv == local spike count (popcount).
+    rng = _rng(11)
+    x = rand_spikes(rng, (2, 6, 6))
+    w = np.ones((1, 2, 3, 3), np.float32)
+    out = np.asarray(binary_conv2d(jnp.array(x), jnp.array(w)))
+    xp = np.pad(x, ((0, 0), (1, 1), (1, 1)))
+    manual = np.zeros((6, 6), np.float32)
+    for yy in range(6):
+        for xx in range(6):
+            manual[yy, xx] = xp[:, yy : yy + 3, xx : xx + 3].sum()
+    np.testing.assert_array_equal(out[0], manual)
+
+
+# --------------------------------------------------------------------------
+# if_neuron
+# --------------------------------------------------------------------------
+
+
+@settings(**HYPO)
+@given(
+    t=st.integers(1, 10),
+    c=st.sampled_from([1, 2, 32, 48]),
+    size=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_if_dynamics_matches_ref(t, c, size, seed):
+    rng = _rng(seed)
+    psums = rng.integers(-30, 30, (t, c, size, size)).astype(np.float32)
+    bias = rng.integers(-10, 10, c).astype(np.float32)
+    theta = rng.integers(1, 15, c).astype(np.float32)
+    s1, v1 = if_dynamics(jnp.array(psums), jnp.array(bias), jnp.array(theta))
+    s2, v2 = ref.if_dynamics(jnp.array(psums), jnp.array(bias), jnp.array(theta))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_if_dynamics_spikes_are_binary():
+    rng = _rng(5)
+    psums = rng.integers(-50, 50, (6, 16, 4, 4)).astype(np.float32)
+    s, _ = if_dynamics(
+        jnp.array(psums), jnp.zeros(16), jnp.full(16, 5.0)
+    )
+    assert set(np.unique(np.asarray(s))) <= {0.0, 1.0}
+
+
+def test_if_hard_reset_membrane_below_threshold():
+    # After any fire, the residual membrane is exactly zero (hard reset).
+    psums = np.full((1, 1, 1, 1), 100.0, np.float32)
+    s, v = if_dynamics(jnp.array(psums), jnp.zeros(1), jnp.ones(1))
+    assert np.asarray(s)[0, 0, 0, 0] == 1.0
+    assert np.asarray(v)[0, 0, 0] == 0.0
+
+
+def test_if_subthreshold_accumulates():
+    # theta=10, psum=3 each step: fires at t=3 (V=12 >= 10), resets.
+    psums = np.full((5, 1, 1, 1), 3.0, np.float32)
+    s, v = if_dynamics(jnp.array(psums), jnp.zeros(1), jnp.full(1, 10.0))
+    np.testing.assert_array_equal(
+        np.asarray(s).ravel(), [0.0, 0.0, 0.0, 1.0, 0.0]
+    )
+    assert np.asarray(v).item() == 3.0
+
+
+def test_if_flat_matches_4d():
+    rng = _rng(9)
+    psums = rng.integers(-10, 10, (4, 24)).astype(np.float32)
+    bias = rng.integers(-3, 3, 24).astype(np.float32)
+    theta = rng.integers(1, 8, 24).astype(np.float32)
+    s1, v1 = if_dynamics_flat(jnp.array(psums), jnp.array(bias), jnp.array(theta))
+    s2, v2 = ref.if_dynamics(jnp.array(psums), jnp.array(bias), jnp.array(theta))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+# --------------------------------------------------------------------------
+# encoding (bitplane) conv
+# --------------------------------------------------------------------------
+
+
+@settings(**HYPO)
+@given(
+    c_in=st.integers(1, 3),
+    c_out=st.sampled_from([1, 16, 32]),
+    size=st.integers(4, 12),
+    seed=st.integers(0, 2**31),
+)
+def test_encoding_conv_matches_direct_conv(c_in, c_out, size, seed):
+    rng = _rng(seed)
+    img = rng.integers(0, 256, (c_in, size, size)).astype(np.float32)
+    w = rand_weights(rng, (c_out, c_in, 3, 3))
+    got = encoding_conv2d(jnp.array(img), jnp.array(w))
+    want = ref.conv2d_binary(jnp.array(img), jnp.array(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_encoding_bitplane_ref_identity():
+    rng = _rng(17)
+    img = rng.integers(0, 256, (3, 8, 8)).astype(np.float32)
+    w = rand_weights(rng, (16, 3, 3, 3))
+    bias = rng.integers(-100, 100, 16).astype(np.float32)
+    theta = rng.integers(1, 200, 16).astype(np.float32)
+    s1, v1 = ref.encoding_layer(jnp.array(img), jnp.array(w), jnp.array(bias), jnp.array(theta), 6)
+    s2, v2 = ref.encoding_layer_bitplanes(
+        jnp.array(img), jnp.array(w), jnp.array(bias), jnp.array(theta), 6
+    )
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_encoding_conv_rejects_nothing_on_zero_image():
+    w = np.ones((4, 1, 3, 3), np.float32)
+    out = encoding_conv2d(jnp.zeros((1, 5, 5)), jnp.array(w))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+# --------------------------------------------------------------------------
+# binary_matmul
+# --------------------------------------------------------------------------
+
+
+@settings(**HYPO)
+@given(
+    t=st.integers(1, 8),
+    n_in=st.integers(1, 96),
+    n_out=st.sampled_from([1, 10, 64, 128, 130]),
+    seed=st.integers(0, 2**31),
+)
+def test_binary_matmul_matches_ref(t, n_in, n_out, seed):
+    rng = _rng(seed)
+    s = rand_spikes(rng, (t, n_in))
+    w = rand_weights(rng, (n_out, n_in))
+    got = binary_matmul(jnp.array(s), jnp.array(w))
+    np.testing.assert_array_equal(np.asarray(got), s @ w.T)
+
+
+# --------------------------------------------------------------------------
+# maxpool / readout oracles (sanity for the contract itself)
+# --------------------------------------------------------------------------
+
+
+def test_maxpool_is_or_on_spikes():
+    x = np.zeros((2, 1, 4, 4), np.float32)
+    x[0, 0, 0, 1] = 1.0  # only one spike in the top-left 2x2 window
+    out = np.asarray(ref.maxpool2(jnp.array(x)))
+    assert out.shape == (2, 1, 2, 2)
+    assert out[0, 0, 0, 0] == 1.0 and out[1].sum() == 0.0
+
+
+def test_readout_accumulates_membrane():
+    rng = _rng(23)
+    s = rand_spikes(rng, (5, 12))
+    w = rand_weights(rng, (10, 12))
+    got = np.asarray(ref.readout_layer(jnp.array(s), jnp.array(w)))
+    np.testing.assert_array_equal(got, (s @ w.T).sum(0))

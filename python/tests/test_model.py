@@ -1,0 +1,264 @@
+"""L2 correctness: model shapes, IF-BN identity, deploy/quantize, AOT IO."""
+
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import datasets, params_io
+from compile.kernels import ref
+from compile.model import (
+    SPECS,
+    cifar10_spec,
+    deploy,
+    forward_deployed,
+    forward_deployed_batched,
+    forward_train,
+    forward_train_ann,
+    init_params,
+    mnist_spec,
+    tiny_spec,
+)
+
+HYPO = dict(max_examples=15, deadline=None)
+
+
+# --------------------------------------------------------------------------
+# Table I topologies
+# --------------------------------------------------------------------------
+
+
+def test_mnist_spec_matches_table1():
+    spec = mnist_spec()
+    kinds = [ly.kind for ly in spec.layers]
+    assert kinds == ["enc_conv", "maxpool", "conv", "maxpool", "fc", "readout"]
+    assert [ly.c_out for ly in spec.layers if ly.c_out] == [64, 64, 128, 10]
+    # fc sees 64 x 7 x 7 = 3136 inputs
+    assert spec.feature_shapes()[4] == (64, 7, 7)
+
+
+def test_cifar10_spec_matches_table1():
+    spec = cifar10_spec()
+    convs = [ly.c_out for ly in spec.layers if ly.kind in ("enc_conv", "conv")]
+    assert convs == [128, 128, 128, 192, 192, 192, 192, 256, 256, 256, 256]
+    pools = sum(ly.kind == "maxpool" for ly in spec.layers)
+    assert pools == 3
+    assert [ly.c_out for ly in spec.layers if ly.kind in ("fc", "readout")] == [256, 10]
+    # fc sees 256 x 4 x 4 = 4096 inputs; readout sees the 256 fc neurons
+    assert spec.feature_shapes()[-1] == (256, 1, 1)
+    assert spec.feature_shapes()[-2] == (256, 4, 4)
+
+
+def test_feature_shapes_mnist():
+    spec = mnist_spec()
+    shapes = spec.feature_shapes()
+    assert shapes[0] == (1, 28, 28)
+    assert shapes[1] == (64, 28, 28)
+    assert shapes[2] == (64, 14, 14)
+
+
+# --------------------------------------------------------------------------
+# IF-BN identity (paper Eq. (3) == Eq. (4))
+# --------------------------------------------------------------------------
+
+
+@settings(**HYPO)
+@given(
+    t=st.integers(1, 10),
+    seed=st.integers(0, 2**31),
+)
+def test_if_bn_folding_identity(t, seed):
+    """Accumulated BN outputs cross Vth  <=>  folded IF-BN neuron fires.
+
+    This is the paper's Eq. (3) <-> Eq. (4) rearrangement, checked on the
+    *unquantized* float formulation for the first firing time.
+    """
+    rng = np.random.default_rng(seed)
+    c = 8
+    x = rng.normal(0, 3, (t, c)).astype(np.float64)
+    gamma = rng.uniform(0.2, 2.0, c)
+    beta = rng.normal(0, 1, c)
+    mu = rng.normal(0, 1, c)
+    var = rng.uniform(0.1, 4.0, c)
+    v_th = 1.0
+    eps = 0.0
+
+    sigma = np.sqrt(var + eps)
+    # Eq. (3): accumulate BN(x) and compare against Vth.
+    bn = gamma * (x - mu) / sigma + beta
+    lhs_fires = bn.cumsum(axis=0) >= v_th
+    # Eq. (4): accumulate (x - bias) and compare against theta.
+    bias = mu - sigma / gamma * beta
+    theta = sigma / gamma * v_th
+    rhs_fires = (x - bias).cumsum(axis=0) >= theta
+
+    # Identity holds for every prefix sum (before any reset).
+    np.testing.assert_array_equal(lhs_fires, rhs_fires)
+
+
+def test_quantize_if_bn_integer_grid():
+    gamma = jnp.array([0.5, 1.0, 2.0])
+    beta = jnp.array([0.1, -0.2, 0.3])
+    mu = jnp.array([1.0, 0.0, -1.0])
+    var = jnp.array([1.0, 4.0, 0.25])
+    b, th = ref.quantize_if_bn(gamma, beta, mu, var, 1.0)
+    # Quantized values are integers and theta is strictly positive.
+    np.testing.assert_array_equal(np.asarray(b), np.round(np.asarray(b)))
+    np.testing.assert_array_equal(np.asarray(th), np.round(np.asarray(th)))
+    assert (np.asarray(th) >= 1).all()
+
+
+# --------------------------------------------------------------------------
+# Deployed forward
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_deployed():
+    spec = tiny_spec()
+    params = init_params(jax.random.PRNGKey(0), spec)
+    return spec, deploy(params, spec)
+
+
+def test_deployed_logits_integer_valued(tiny_deployed):
+    spec, d = tiny_deployed
+    imgs, _ = datasets.tiny_like(3, 0, 2)
+    logits = forward_deployed(d, spec, jnp.asarray(imgs[0], jnp.float32))
+    arr = np.asarray(logits)
+    assert arr.shape == (10,)
+    np.testing.assert_array_equal(arr, np.round(arr))
+
+
+def test_deployed_pallas_equals_ref_path(tiny_deployed):
+    spec, d = tiny_deployed
+    imgs, _ = datasets.tiny_like(4, 100, 2)
+    x = jnp.asarray(imgs, jnp.float32)
+    a = forward_deployed_batched(d, spec, x, use_pallas=True)
+    b = forward_deployed_batched(d, spec, x, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_deployed_deterministic(tiny_deployed):
+    spec, d = tiny_deployed
+    imgs, _ = datasets.tiny_like(5, 0, 1)
+    x = jnp.asarray(imgs[0], jnp.float32)
+    a = forward_deployed(d, spec, x)
+    b = forward_deployed(d, spec, x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# Training view
+# --------------------------------------------------------------------------
+
+
+def test_forward_train_shapes_and_grads():
+    spec = tiny_spec()
+    params = init_params(jax.random.PRNGKey(1), spec)
+    imgs, labels = datasets.tiny_like(1, 0, 4)
+    x = jnp.asarray(imgs, jnp.float32) / 255.0
+
+    def loss(p):
+        logits, _ = forward_train(p, spec, x)
+        assert logits.shape == (4, 10)
+        onehot = jax.nn.one_hot(jnp.asarray(labels), 10)
+        return ((jax.nn.log_softmax(logits) * onehot).sum(-1)).mean() * -1
+
+    grads = jax.grad(loss)(params)
+    # Surrogate gradients reach the *encoding layer* weights (STBP through
+    # all layers and time steps).
+    g0 = np.asarray(grads[0]["w"])
+    assert np.isfinite(g0).all()
+    assert np.abs(g0).sum() > 0
+
+
+def test_forward_train_ann_shapes():
+    spec = tiny_spec()
+    params = init_params(jax.random.PRNGKey(2), spec)
+    imgs, _ = datasets.tiny_like(2, 0, 3)
+    logits = forward_train_ann(params, spec, jnp.asarray(imgs, jnp.float32) / 255.0)
+    assert logits.shape == (3, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_train_smoke_loss_decreases():
+    from compile.train import train
+
+    spec = tiny_spec(num_steps=2)
+    log = []
+    train(spec, steps=30, batch=16, lr=2e-3, log=log, log_every=29)
+    assert log[-1]["loss"] < log[0]["loss"]
+
+
+# --------------------------------------------------------------------------
+# VSAW round-trip
+# --------------------------------------------------------------------------
+
+
+def test_vsaw_roundtrip(tiny_deployed):
+    spec, d = tiny_deployed
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "m.vsaw")
+        params_io.save_deployed(path, d, spec)
+        name, t, c, s, layers = params_io.load_deployed(path)
+        assert (name, t, c, s) == (spec.name, spec.num_steps, 1, 12)
+        assert len(layers) == len(spec.layers)
+        for ly, orig, spec_ly in zip(layers, d, spec.layers):
+            assert ly["kind"] == spec_ly.kind
+            if "w" in orig:
+                np.testing.assert_array_equal(ly["w"], np.asarray(orig["w"]))
+            if "bias" in orig:
+                np.testing.assert_array_equal(ly["bias"], np.asarray(orig["bias"]))
+                np.testing.assert_array_equal(ly["theta"], np.asarray(orig["theta"]))
+
+
+def test_vsaw_reload_same_logits(tiny_deployed):
+    spec, d = tiny_deployed
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "m.vsaw")
+        params_io.save_deployed(path, d, spec)
+        _, _, _, _, layers = params_io.load_deployed(path)
+        d2 = [
+            {k: jnp.asarray(v) for k, v in ly.items() if k != "kind"} for ly in layers
+        ]
+        imgs, _ = datasets.tiny_like(9, 0, 2)
+        x = jnp.asarray(imgs, jnp.float32)
+        a = forward_deployed_batched(d, spec, x, use_pallas=False)
+        b = forward_deployed_batched(d2, spec, x, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# Synthetic dataset invariants
+# --------------------------------------------------------------------------
+
+
+def test_dataset_deterministic():
+    a, la = datasets.mnist_like(42, 0, 4)
+    b, lb = datasets.mnist_like(42, 0, 4)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+
+
+def test_dataset_labels_balanced():
+    _, labels = datasets.tiny_like(1, 0, 50)
+    counts = np.bincount(labels, minlength=10)
+    assert (counts == 5).all()
+
+
+def test_dataset_pixel_range():
+    imgs, _ = datasets.cifar_like(3, 0, 2)
+    assert imgs.dtype == np.uint8
+    assert imgs.shape == (2, 3, 32, 32)
+
+
+def test_splitmix64_known_values():
+    # Cross-language anchor: rust/src/util/rng.rs asserts the same outputs.
+    state, z1 = datasets.splitmix64(0)
+    _, z2 = datasets.splitmix64(state)
+    assert z1 == 0xE220A8397B1DCDAF
+    assert z2 == 0x6E789E6AA1B965F4

@@ -1,0 +1,77 @@
+//! Micro-benchmarks of the L3 hot paths — the targets of the §Perf
+//! optimization pass (EXPERIMENTS.md §Perf records before/after).
+//!
+//! Run: `cargo bench --bench bench_pe_hotpath`
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use vsa::arch::pe::{PeArray, PeBlock};
+use vsa::snn::conv::{conv_naive, PackedConv, PackedFc};
+use vsa::snn::spikemap::SpikeMap;
+use vsa::testing::Gen;
+
+fn random_spikemap(g: &mut Gen, c: usize, s: usize) -> SpikeMap {
+    let mut m = SpikeMap::zeros(c, s, s);
+    for ch in 0..c {
+        for y in 0..s {
+            for x in 0..s {
+                m.set(ch, y, x, g.bool());
+            }
+        }
+    }
+    m
+}
+
+fn main() {
+    let mut g = Gen::new(42);
+
+    section("binary conv: packed popcount vs naive (the golden/sim hot path)");
+    let c_in = 128;
+    let c_out = 128;
+    let s = 32;
+    let w = g.weights(c_out * c_in * 9);
+    let sm = random_spikemap(&mut g, c_in, s);
+    let dense = sm.to_dense();
+    let packed = PackedConv::pack(c_out, c_in, 3, &w);
+
+    let t_packed = bench("packed conv 128x128x32x32", 1, 5, || {
+        std::hint::black_box(packed.conv(&sm));
+    });
+    let t_naive = bench("naive conv  128x128x32x32", 0, 1, || {
+        std::hint::black_box(conv_naive(&dense, c_in, s, s, &w, c_out, 3));
+    });
+    println!(
+        "  popcount speedup: {:.1}x (the AND+sign trick of paper §III-B, 64 channels/word)",
+        t_naive.mean_ms / t_packed.mean_ms
+    );
+
+    section("packed fc matvec (fc layers + readout)");
+    let n_in = 4096;
+    let n_out = 256;
+    let wf = g.weights(n_out * n_in);
+    let fc = PackedFc::pack(n_out, n_in, &wf);
+    let spikes: Vec<u64> = (0..n_in.div_ceil(64)).map(|_| g.u64()).collect();
+    bench("fc 4096->256 matvec", 10, 100, || {
+        std::hint::black_box(fc.matvec(&spikes));
+    });
+
+    section("exact-mode PE datapath (gate-level cycle)");
+    let array = PeArray::new(8, 3);
+    let block = PeBlock::new(array, 3);
+    let cols: Vec<Vec<bool>> = (0..3).map(|_| (0..8).map(|_| g.bool()).collect()).collect();
+    let wn: Vec<Vec<bool>> = (0..3).map(|_| (0..3).map(|_| g.bool()).collect()).collect();
+    bench("PeBlock::cycle (3 arrays x 8x3)", 100, 10_000, || {
+        std::hint::black_box(block.cycle(&cols, &wn));
+    });
+
+    section("spikemap primitives");
+    let m = random_spikemap(&mut g, 256, 16);
+    bench("maxpool2 256ch 16x16", 10, 1000, || {
+        std::hint::black_box(m.maxpool2());
+    });
+    bench("to_flat_words 256ch 16x16", 10, 1000, || {
+        std::hint::black_box(m.to_flat_words());
+    });
+}

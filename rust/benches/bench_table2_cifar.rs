@@ -1,0 +1,107 @@
+//! Regenerates paper **Table II** — CIFAR-10 accuracy comparison against
+//! prior SNNs (precision / time steps / accuracy).
+//!
+//! The literature rows are published constants; "Ours" combines the
+//! paper's reported figure with the measured synthetic-dataset result
+//! (DESIGN.md §Substitutions: no real CIFAR-10 in this environment, so
+//! absolute accuracy is reported side-by-side, and the *structural* claims
+//! — binary weights, T=8, orders-of-magnitude fewer time steps — are
+//! checked directly against the deployed model.
+//!
+//! Run: `cargo bench --bench bench_table2_cifar`
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::section;
+use vsa::config::json::Json;
+use vsa::snn::params::Layer;
+use vsa::snn::Network;
+
+struct Row {
+    model: &'static str,
+    precision: &'static str,
+    time_steps: usize,
+    accuracy: f64,
+}
+
+const LITERATURE: &[Row] = &[
+    Row { model: "Sengupta et al. [14]", precision: "full-precision", time_steps: 2500, accuracy: 0.9155 },
+    Row { model: "Wu et al. [8]", precision: "full-precision", time_steps: 12, accuracy: 0.9053 },
+    Row { model: "Rathi et al. [15]", precision: "full-precision", time_steps: 200, accuracy: 0.9202 },
+    Row { model: "RMP-SNN [16]", precision: "full-precision", time_steps: 256, accuracy: 0.9304 },
+    Row { model: "Wang et al. [17]", precision: "binary", time_steps: 100, accuracy: 0.9019 },
+    Row { model: "Ours (paper)", precision: "binary", time_steps: 8, accuracy: 0.9028 },
+];
+
+fn main() {
+    section("Table II — CIFAR-10 accuracy comparison");
+    println!(
+        "  {:<24} {:<16} {:>10} {:>10}",
+        "Model", "Precision", "Time steps", "Accuracy"
+    );
+    for r in LITERATURE {
+        println!(
+            "  {:<24} {:<16} {:>10} {:>9.2}%",
+            r.model,
+            r.precision,
+            r.time_steps,
+            r.accuracy * 100.0
+        );
+    }
+
+    // Measured row (synthetic dataset) if the fig8 sweep ran.
+    if let Ok(text) = std::fs::read_to_string("artifacts/fig8_tiny.json") {
+        if let Ok(v) = Json::parse(&text) {
+            if let Some(series) = v.get("series").and_then(Json::as_arr) {
+                if let Some(last) = series.last() {
+                    let t = last.get("T").and_then(Json::as_i64).unwrap_or(-1);
+                    let acc =
+                        last.get("snn_deployed_acc").and_then(Json::as_f64).unwrap_or(f64::NAN);
+                    println!(
+                        "  {:<24} {:<16} {:>10} {:>9.2}%  (synthetic stand-in dataset)",
+                        "Ours (measured)",
+                        "binary",
+                        t,
+                        acc * 100.0
+                    );
+                }
+            }
+        }
+    }
+
+    section("structural claims checked against the deployed model");
+    match Network::from_vsaw_file("artifacts/cifar10_t8.vsaw") {
+        Ok(net) => {
+            println!("  time steps T = {} (paper: 8)", net.model.num_steps);
+            assert_eq!(net.model.num_steps, 8);
+            let binary = net.model.layers.iter().all(|l| match l {
+                Layer::Conv { w, .. } | Layer::Fc { w, .. } | Layer::Readout { w, .. } => {
+                    w.iter().all(|&x| x == 1 || x == -1)
+                }
+                Layer::MaxPool => true,
+            });
+            println!("  all weights binary (+-1): {binary}");
+            assert!(binary);
+            let best_prior = LITERATURE
+                .iter()
+                .filter(|r| !r.model.starts_with("Ours"))
+                .map(|r| r.time_steps)
+                .min()
+                .unwrap();
+            let best_binary_prior = LITERATURE
+                .iter()
+                .filter(|r| r.precision == "binary" && !r.model.starts_with("Ours"))
+                .map(|r| r.time_steps)
+                .min()
+                .unwrap();
+            println!(
+                "  time-step reduction: {:.1}x vs best prior ({best_prior} -> 8), {:.1}x vs best binary prior ({best_binary_prior} -> 8)",
+                best_prior as f64 / 8.0,
+                best_binary_prior as f64 / 8.0
+            );
+        }
+        Err(e) => eprintln!("  run `make artifacts` first: {e}"),
+    }
+    println!("\n  shape check: ours is the ONLY binary-weight entry at single-digit time steps, within ~1pt of full-precision accuracy — the paper's Table II claim.");
+}

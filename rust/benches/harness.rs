@@ -1,0 +1,58 @@
+//! Minimal bench harness shared by all `harness = false` bench targets
+//! (criterion is unavailable in the offline crate set).
+//!
+//! Provides wall-clock timing with warmup + repetition statistics, and a
+//! uniform "paper vs measured" table printer so every bench emits the
+//! rows of the table/figure it regenerates.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Timing summary of a benched closure.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Run `f` `iters` times (after `warmup` unrecorded runs) and report.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0f64, f64::max);
+    let t = Timing {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        min_ms: min,
+        max_ms: max,
+    };
+    println!(
+        "  {:<40} {:>10.3} ms/iter (min {:.3}, max {:.3}, n={})",
+        t.name, t.mean_ms, t.min_ms, t.max_ms, t.iters
+    );
+    t
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print one "paper vs measured" comparison row.
+pub fn compare(metric: &str, paper: &str, measured: &str, note: &str) {
+    println!("  {metric:<34} paper: {paper:<18} measured: {measured:<18} {note}");
+}

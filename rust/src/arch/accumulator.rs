@@ -1,0 +1,119 @@
+//! Three-stage accumulator (paper Fig. 4) + boundary handling.
+//!
+//! * **Stage 1** sums the three PE arrays of one block (already folded into
+//!   [`crate::arch::pe::PeBlock::cycle`]) and, in encoding mode, shifts
+//!   each block's partial sum by its bitplane index (Fig. 7).
+//! * **Stage 2/3** reduce the 32 PE blocks with a two-level adder tree and
+//!   accumulate channel groups when `C_in > 32` (§III-C).
+//!
+//! The unit is a pure combinational model plus a pipeline-depth constant
+//! the timing model charges once per pass.
+
+/// Pipeline depth of the accumulator (three stages, paper Fig. 4) plus the
+/// PE output register — charged as fill cycles once per schedule pass.
+pub const PIPELINE_DEPTH: u64 = 4;
+
+/// Reduce per-block column partial sums into one column (stage 2/3).
+///
+/// `block_psums[b][d]` is block `b`'s diagonal-summed column; `shift[b]`
+/// is the left-shift applied at stage 1 (bitplane weight in encoding mode,
+/// all zeros for spiking layers).
+pub fn reduce_blocks(block_psums: &[Vec<i32>], shifts: &[u32]) -> Vec<i32> {
+    assert_eq!(block_psums.len(), shifts.len());
+    if block_psums.is_empty() {
+        return Vec::new();
+    }
+    let d = block_psums[0].len();
+    let mut out = vec![0i32; d];
+    for (psum, &sh) in block_psums.iter().zip(shifts) {
+        assert_eq!(psum.len(), d, "ragged block outputs");
+        for (o, &v) in out.iter_mut().zip(psum) {
+            *o += v << sh;
+        }
+    }
+    out
+}
+
+/// Boundary accumulator: carries tile-seam partial sums between vertical
+/// tiles (paper §III-C/D: the bottom boundary rows of a tile are stored in
+/// the boundary SRAM and added to the top rows of the next tile).
+#[derive(Debug, Clone)]
+pub struct BoundaryBuffer {
+    /// psum per output column for the row just above the current tile.
+    above: Vec<i32>,
+    /// psum per output column for the row just below the current tile.
+    below: Vec<i32>,
+    pub writes: u64,
+    pub reads: u64,
+}
+
+impl BoundaryBuffer {
+    /// Buffer for `width` output columns.
+    pub fn new(width: usize) -> Self {
+        Self {
+            above: vec![0; width],
+            below: vec![0; width],
+            writes: 0,
+            reads: 0,
+        }
+    }
+
+    /// Store the two boundary diagonals of column `x` (d=0 row above the
+    /// tile, d=max row below the tile).
+    pub fn store(&mut self, x: usize, above: i32, below: i32) {
+        self.above[x] += above;
+        self.below[x] += below;
+        self.writes += 1;
+    }
+
+    /// Drain the accumulated "below" seam when the next tile starts: these
+    /// values belong to that tile's first row... (the caller adds them to
+    /// its running psum plane).  Resets the buffer.
+    pub fn take(&mut self) -> (Vec<i32>, Vec<i32>) {
+        self.reads += 1;
+        let above = std::mem::take(&mut self.above);
+        let below = std::mem::take(&mut self.below);
+        self.above = vec![0; above.len()];
+        self.below = vec![0; below.len()];
+        (above, below)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_plain() {
+        let psums = vec![vec![1, -2, 3], vec![4, 5, -6]];
+        assert_eq!(reduce_blocks(&psums, &[0, 0]), vec![5, 3, -3]);
+    }
+
+    #[test]
+    fn reduce_bitplane_shift() {
+        // planes 0 and 3: contribution 1*v0 + 8*v1 (Fig. 7 shift-add).
+        let psums = vec![vec![1, 1], vec![1, -1]];
+        assert_eq!(reduce_blocks(&psums, &[0, 3]), vec![9, -7]);
+    }
+
+    #[test]
+    fn reduce_empty() {
+        assert!(reduce_blocks(&[], &[]).is_empty());
+    }
+
+    #[test]
+    fn boundary_accumulates_and_drains() {
+        let mut b = BoundaryBuffer::new(4);
+        b.store(0, 10, 1);
+        b.store(0, -3, 2);
+        b.store(2, 5, 0);
+        let (above, below) = b.take();
+        assert_eq!(above, vec![7, 0, 5, 0]);
+        assert_eq!(below, vec![3, 0, 0, 0]);
+        assert_eq!(b.writes, 3);
+        assert_eq!(b.reads, 1);
+        // drained
+        let (above2, _) = b.take();
+        assert_eq!(above2, vec![0, 0, 0, 0]);
+    }
+}

@@ -1,0 +1,586 @@
+//! Top-level chip model: tick batching, fusion, both simulation modes.
+
+use crate::arch::accumulator::{reduce_blocks, BoundaryBuffer};
+use crate::arch::dram::Dram;
+use crate::arch::fusion::{plan_fusion, roles};
+use crate::arch::if_unit::IfUnit;
+use crate::arch::pe::{PeArray, PeBlock};
+use crate::arch::schedule::{layer_dram, layer_sram, plan_model, LayerPlan, PlanKind, SramAccesses};
+use crate::config::HwConfig;
+use crate::snn::conv::{conv_multibit, PackedConv, PackedFc};
+use crate::snn::params::{DeployedModel, Layer};
+use crate::snn::spikemap::SpikeMap;
+
+/// Simulation fidelity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimMode {
+    /// Drive every PE through the vectorwise schedule (gate-level
+    /// arithmetic).  Slow; use for small nets and verification.
+    Exact,
+    /// Functional compute (popcount fast path) + the identical timing and
+    /// traffic counters.  Bit-identical results, ~100x faster.
+    Fast,
+}
+
+/// Per-layer simulation outcome.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub kind: PlanKind,
+    pub cycles: u64,
+    pub utilization: f64,
+    pub spikes_emitted: u64,
+    pub membrane_accesses: u64,
+}
+
+/// Whole-inference outcome.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub logits: Vec<i64>,
+    pub cycles: u64,
+    pub layers: Vec<LayerReport>,
+    pub dram: Dram,
+    pub sram: SramAccesses,
+    /// Total useful PE ops (MAC = 2 ops) across the run.
+    pub pe_ops: u64,
+    /// End-to-end latency at the configured clock, in microseconds.
+    pub latency_us: f64,
+    /// Effective throughput in GOPS (2 ops per MAC).
+    pub gops: f64,
+    /// Average PE utilization.
+    pub utilization: f64,
+}
+
+/// The VSA chip simulator.
+pub struct Chip {
+    pub hw: HwConfig,
+    pub mode: SimMode,
+}
+
+impl Chip {
+    /// New chip at the given config and fidelity.
+    pub fn new(hw: HwConfig, mode: SimMode) -> Self {
+        Self { hw, mode }
+    }
+
+    /// Run one inference.  `image` is the raw u8 CHW input.
+    pub fn run(&self, model: &DeployedModel, image: &[u8]) -> RunReport {
+        self.run_inner(model, image, None)
+    }
+
+    /// Run one inference recording an execution trace (layer timeline,
+    /// fusion decisions, DRAM transfers) — see [`crate::arch::trace`].
+    pub fn run_traced(
+        &self,
+        model: &DeployedModel,
+        image: &[u8],
+    ) -> (RunReport, crate::arch::trace::Trace) {
+        let mut trace = crate::arch::trace::Trace::default();
+        let report = self.run_inner(model, image, Some(&mut trace));
+        (report, trace)
+    }
+
+    fn run_inner(
+        &self,
+        model: &DeployedModel,
+        image: &[u8],
+        mut trace: Option<&mut crate::arch::trace::Trace>,
+    ) -> RunReport {
+        use crate::arch::trace::Event;
+        let plans = plan_model(model);
+        let groups = plan_fusion(&plans, &self.hw);
+        let t_steps = model.num_steps;
+
+        let mut dram = Dram::default();
+        let mut sram = SramAccesses::default();
+        let mut layer_reports = Vec::with_capacity(plans.len());
+        let mut cycles_total = 0u64;
+        let mut pe_ops_total = 0u64;
+
+        // Inter-layer spike trains (tick batching: the full T-step train of
+        // a layer is produced before the next layer starts).
+        let mut spikes: Vec<SpikeMap> = Vec::new();
+        let mut logits = vec![0i64; 10];
+
+        if let Some(tr) = trace.as_deref_mut() {
+            for g in groups.iter().filter(|g| g.len == 2) {
+                tr.push(Event::Fused { first: g.start, second: g.start + 1 });
+            }
+        }
+
+        for (idx, plan) in plans.iter().enumerate() {
+            let (fused_in, fused_out) = roles(&groups, idx);
+            let dram_before = dram.total();
+            layer_dram(plan, t_steps, fused_in, fused_out, true, &mut dram);
+            let acc = layer_sram(plan, &self.hw, t_steps);
+            sram.add(&acc);
+            let cycles = plan.cycles(&self.hw, t_steps);
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.push(Event::LayerStart { layer: idx, kind: plan.kind, cycle: cycles_total });
+                tr.push(Event::DramTransfer {
+                    layer: idx,
+                    bytes: dram.total() - dram_before,
+                    write: !fused_out,
+                    what: "layer io",
+                });
+            }
+            cycles_total += cycles;
+            pe_ops_total += plan.pe_ops(&self.hw, t_steps);
+
+            let layer = &model.layers[plan.model_index];
+            let (new_spikes, fired, membrane_accesses, layer_logits) =
+                self.run_layer(plan, layer, image, &spikes, t_steps);
+            if let Some(l) = layer_logits {
+                logits = l;
+            }
+            spikes = new_spikes;
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.push(Event::LayerEnd { layer: idx, cycle: cycles_total, spikes: fired });
+            }
+
+            layer_reports.push(LayerReport {
+                kind: plan.kind,
+                cycles,
+                utilization: plan.utilization(&self.hw, t_steps),
+                spikes_emitted: fired,
+                membrane_accesses,
+            });
+        }
+
+        let freq_hz = self.hw.freq_mhz * 1e6;
+        let latency_us = cycles_total as f64 / freq_hz * 1e6;
+        let gops = (2.0 * pe_ops_total as f64) / (cycles_total as f64 / freq_hz) / 1e9;
+        let utilization =
+            pe_ops_total as f64 / (cycles_total as f64 * self.hw.total_pes() as f64);
+
+        RunReport {
+            logits,
+            cycles: cycles_total,
+            layers: layer_reports,
+            dram,
+            sram,
+            pe_ops: pe_ops_total,
+            latency_us,
+            gops,
+            utilization,
+        }
+    }
+
+    /// Execute one compute layer over all time steps.
+    /// Returns (output spike train, spikes fired, membrane accesses,
+    /// logits if this was the readout).
+    #[allow(clippy::type_complexity)]
+    fn run_layer(
+        &self,
+        plan: &LayerPlan,
+        layer: &Layer,
+        image: &[u8],
+        spikes_in: &[SpikeMap],
+        t_steps: usize,
+    ) -> (Vec<SpikeMap>, u64, u64, Option<Vec<i64>>) {
+        match (plan.kind, layer) {
+            (PlanKind::EncConv, Layer::Conv { c_out, c_in, k, w, bias, theta, .. }) => {
+                let psum = match self.mode {
+                    SimMode::Fast => {
+                        conv_multibit(image, *c_in, plan.h, plan.w, w, *c_out, *k)
+                    }
+                    SimMode::Exact => self.exact_conv(plan, w, *k, |ch, y, x| {
+                        // bitplane block: channel ch/planes, plane ch%planes
+                        let planes = self.hw.encode_bitplanes;
+                        let (c, p) = (ch / planes, ch % planes);
+                        (image[(c * plan.h + y) * plan.w + x] >> p) & 1 == 1
+                    }),
+                };
+                let mut ifu = IfUnit::new(*c_out, plan.h * plan.w, bias, theta);
+                let mut train = Vec::with_capacity(t_steps);
+                for _ in 0..t_steps {
+                    let fired = ifu.step(&psum);
+                    train.push(plane_to_map(&fired, *c_out, plan.h, plan.w));
+                }
+                let out = maybe_pool(train, plan.pooled);
+                let fired_total = ifu.fired;
+                let acc = ifu.accesses;
+                (out, fired_total, acc, None)
+            }
+            (PlanKind::Conv, Layer::Conv { c_out, c_in, k, w, bias, theta, .. }) => {
+                let packed = PackedConv::pack(*c_out, *c_in, *k, w);
+                let mut ifu = IfUnit::new(*c_out, plan.h * plan.w, bias, theta);
+                let mut train = Vec::with_capacity(t_steps);
+                for s in spikes_in {
+                    let psum = match self.mode {
+                        SimMode::Fast => packed.conv(s),
+                        SimMode::Exact => {
+                            self.exact_conv(plan, w, *k, |ch, y, x| s.get(ch, y, x))
+                        }
+                    };
+                    let fired = ifu.step(&psum);
+                    train.push(plane_to_map(&fired, *c_out, plan.h, plan.w));
+                }
+                let out = maybe_pool(train, plan.pooled);
+                (out, ifu.fired, ifu.accesses, None)
+            }
+            (PlanKind::Fc, Layer::Fc { n_out, n_in, w, bias, theta }) => {
+                let packed = PackedFc::pack(*n_out, *n_in, w);
+                let mut ifu = IfUnit::new(*n_out, 1, bias, theta);
+                let mut train = Vec::with_capacity(t_steps);
+                for s in spikes_in {
+                    let psum = match self.mode {
+                        SimMode::Fast => packed.matvec(&s.to_flat_words()),
+                        SimMode::Exact => self.exact_fc(*n_out, *n_in, w, s),
+                    };
+                    let fired = ifu.step(&psum);
+                    train.push(plane_to_map(&fired, *n_out, 1, 1));
+                }
+                (train, ifu.fired, ifu.accesses, None)
+            }
+            (PlanKind::Readout, Layer::Readout { n_out, n_in, w }) => {
+                let packed = PackedFc::pack(*n_out, *n_in, w);
+                let mut logits = vec![0i64; *n_out];
+                for s in spikes_in {
+                    let psum = match self.mode {
+                        SimMode::Fast => packed.matvec(&s.to_flat_words()),
+                        SimMode::Exact => self.exact_fc(*n_out, *n_in, w, s),
+                    };
+                    for (l, p) in logits.iter_mut().zip(&psum) {
+                        *l += *p as i64;
+                    }
+                }
+                (Vec::new(), 0, 0, Some(logits))
+            }
+            _ => unreachable!("plan/layer mismatch"),
+        }
+    }
+
+    /// Exact-mode convolution: drive the PE blocks through the vectorwise
+    /// schedule (Fig. 5/6) and reduce through the accumulator + boundary
+    /// SRAM.  `spike(ch_eff, y, x)` reads an effective input channel
+    /// (bitplane-expanded for the encoding layer).
+    fn exact_conv(
+        &self,
+        plan: &LayerPlan,
+        weights: &[i8],
+        k: usize,
+        spike: impl Fn(usize, usize, usize) -> bool,
+    ) -> Vec<i32> {
+        let hw = &self.hw;
+        let (h, w) = (plan.h, plan.w);
+        let rows = hw.rows_per_array;
+        let pad = k / 2;
+        let c_in_eff = plan.c_in_effective(hw);
+        let groups = plan.groups(hw);
+        let tiles = plan.tiles(hw);
+        let planes = hw.encode_bitplanes;
+        let is_enc = plan.kind == PlanKind::EncConv;
+
+        let array = PeArray::new(rows, k);
+        let block = PeBlock::new(array, k);
+        let diag = rows + k - 1;
+
+        let mut psum = vec![0i32; plan.c_out * h * w];
+
+        for o in 0..plan.c_out {
+            for g in 0..groups {
+                let mut boundary = BoundaryBuffer::new(w);
+                for tile in 0..tiles {
+                    let y0 = tile * rows;
+                    for x in 0..w {
+                        let mut block_psums = Vec::new();
+                        let mut shifts = Vec::new();
+                        for b in 0..hw.pe_blocks {
+                            let ch_eff = g * hw.pe_blocks + b;
+                            if ch_eff >= c_in_eff {
+                                break;
+                            }
+                            // weight channel: bitplanes share the weight of
+                            // their source channel (Fig. 7).
+                            let wch = if is_enc { ch_eff / planes } else { ch_eff };
+                            // input columns consumed by the k arrays
+                            let columns: Vec<Vec<bool>> = (0..k)
+                                .map(|a| {
+                                    let xi = x as isize + a as isize - pad as isize;
+                                    (0..rows)
+                                        .map(|r| {
+                                            let yi = y0 + r;
+                                            if xi < 0 || xi >= w as isize || yi >= h {
+                                                false
+                                            } else {
+                                                spike(ch_eff, yi, xi as usize)
+                                            }
+                                        })
+                                        .collect()
+                                })
+                                .collect();
+                            // weight sign columns: array a = kernel col kw=a,
+                            // array row c = kernel row kh = k-1-c.
+                            let w_neg: Vec<Vec<bool>> = (0..k)
+                                .map(|a| {
+                                    (0..k)
+                                        .map(|c| {
+                                            let kh = k - 1 - c;
+                                            weights[((o * plan.c_in + wch) * k + kh) * k + a]
+                                                < 0
+                                        })
+                                        .collect()
+                                })
+                                .collect();
+                            block_psums.push(block.cycle(&columns, &w_neg));
+                            shifts.push(if is_enc { (ch_eff % planes) as u32 } else { 0 });
+                        }
+                        let col = reduce_blocks(&block_psums, &shifts);
+                        debug_assert_eq!(col.len(), diag);
+                        // scatter diagonals to output rows:
+                        // oy = y0 + d - (k - 1) + pad
+                        for (d, &v) in col.iter().enumerate() {
+                            if v == 0 {
+                                continue;
+                            }
+                            let oy = y0 as isize + d as isize - (k as isize - 1)
+                                + pad as isize;
+                            if oy >= 0 && (oy as usize) < h {
+                                psum[(o * h + oy as usize) * w + x] += v;
+                            } else {
+                                // tile-seam partials captured by the
+                                // boundary SRAM (counted, value folded when
+                                // the neighbouring tile scatters).
+                                boundary.store(x, 0, 0);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        psum
+    }
+
+    /// Exact-mode fc: one PE block per input bit group member, 1x1 arrays.
+    fn exact_fc(&self, n_out: usize, n_in: usize, w: &[i8], s: &SpikeMap) -> Vec<i32> {
+        let dense = s.to_dense();
+        assert_eq!(dense.len(), n_in, "fc input mismatch");
+        let array = PeArray::new(1, 1);
+        let block = PeBlock::new(array, 1);
+        let mut out = vec![0i32; n_out];
+        for (o, out_o) in out.iter_mut().enumerate() {
+            for (g, chunk) in dense.chunks(self.hw.pe_blocks).enumerate() {
+                let mut block_psums = Vec::new();
+                for (b, &bit) in chunk.iter().enumerate() {
+                    let i = g * self.hw.pe_blocks + b;
+                    block_psums.push(block.cycle(
+                        &[vec![bit == 1]],
+                        &[vec![w[o * n_in + i] < 0]],
+                    ));
+                }
+                let shifts = vec![0u32; block_psums.len()];
+                *out_o += reduce_blocks(&block_psums, &shifts)[0];
+            }
+        }
+        out
+    }
+}
+
+fn plane_to_map(fired: &[bool], c: usize, h: usize, w: usize) -> SpikeMap {
+    let mut m = SpikeMap::zeros(c, h, w);
+    for ch in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                if fired[(ch * h + y) * w + x] {
+                    m.set(ch, y, x, true);
+                }
+            }
+        }
+    }
+    m
+}
+
+fn maybe_pool(train: Vec<SpikeMap>, pooled: bool) -> Vec<SpikeMap> {
+    if pooled {
+        train.iter().map(|s| s.maxpool2()).collect()
+    } else {
+        train
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::snn::params::Kind;
+    use crate::testing::{check, Gen};
+
+    /// Random small conv layer: exact-mode PE psums == packed popcount conv.
+    #[test]
+    fn exact_conv_matches_packed() {
+        check("exact conv vs packed", 25, |g: &mut Gen| {
+            let c_in = *g.choose(&[1usize, 3, 16, 33]);
+            let c_out = g.usize_in(1, 6);
+            let hw_size = g.usize_in(3, 10);
+            let weights = g.weights(c_out * c_in * 9);
+            let mut sm = SpikeMap::zeros(c_in, hw_size, hw_size);
+            for c in 0..c_in {
+                for y in 0..hw_size {
+                    for x in 0..hw_size {
+                        sm.set(c, y, x, g.bool());
+                    }
+                }
+            }
+            let plan = LayerPlan {
+                kind: PlanKind::Conv,
+                c_in,
+                c_out,
+                k: 3,
+                h: hw_size,
+                w: hw_size,
+                pooled: false,
+                model_index: 0,
+            };
+            let chip = Chip::new(HwConfig::default(), SimMode::Exact);
+            let exact = chip.exact_conv(&plan, &weights, 3, |ch, y, x| sm.get(ch, y, x));
+            let packed = PackedConv::pack(c_out, c_in, 3, &weights).conv(&sm);
+            assert_eq!(exact, packed);
+        });
+    }
+
+    /// Exact-mode encoding conv == direct multi-bit conv (Fig. 7 identity
+    /// through the real bitplane datapath).
+    #[test]
+    fn exact_encoding_matches_multibit() {
+        check("exact encoding vs multibit", 15, |g: &mut Gen| {
+            let c_in = g.usize_in(1, 3);
+            let c_out = g.usize_in(1, 4);
+            let hw_size = g.usize_in(3, 8);
+            let weights = g.weights(c_out * c_in * 9);
+            let image: Vec<u8> =
+                (0..c_in * hw_size * hw_size).map(|_| g.i32_in(0, 255) as u8).collect();
+            let plan = LayerPlan {
+                kind: PlanKind::EncConv,
+                c_in,
+                c_out,
+                k: 3,
+                h: hw_size,
+                w: hw_size,
+                pooled: false,
+                model_index: 0,
+            };
+            let chip = Chip::new(HwConfig::default(), SimMode::Exact);
+            let planes = chip.hw.encode_bitplanes;
+            let exact = chip.exact_conv(&plan, &weights, 3, |ch, y, x| {
+                let (c, p) = (ch / planes, ch % planes);
+                (image[(c * hw_size + y) * hw_size + x] >> p) & 1 == 1
+            });
+            let direct =
+                conv_multibit(&image, c_in, hw_size, hw_size, &weights, c_out, 3);
+            assert_eq!(exact, direct);
+        });
+    }
+
+    pub(super) fn micro_model(t: usize) -> DeployedModel {
+        DeployedModel {
+            name: "micro".into(),
+            num_steps: t,
+            in_channels: 1,
+            in_size: 8,
+            layers: vec![
+                Layer::Conv {
+                    kind: Kind::EncConv,
+                    c_out: 4,
+                    c_in: 1,
+                    k: 3,
+                    w: (0..36).map(|i| if i % 3 == 0 { -1 } else { 1 }).collect(),
+                    bias: vec![0, 10, -10, 256],
+                    theta: vec![256 * 100, 256 * 50, 256 * 200, 256 * 25],
+                },
+                Layer::MaxPool,
+                Layer::Conv {
+                    kind: Kind::Conv,
+                    c_out: 3,
+                    c_in: 4,
+                    k: 3,
+                    w: (0..108).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect(),
+                    bias: vec![0, 5, -5],
+                    theta: vec![256, 512, 300],
+                },
+                Layer::Fc {
+                    n_out: 6,
+                    n_in: 3 * 4 * 4,
+                    w: (0..288).map(|i| if i % 5 == 0 { -1 } else { 1 }).collect(),
+                    bias: vec![0; 6],
+                    theta: vec![256; 6],
+                },
+                Layer::Readout {
+                    n_out: 10,
+                    n_in: 6,
+                    w: (0..60).map(|i| if i % 4 == 0 { 1 } else { -1 }).collect(),
+                },
+            ],
+        }
+    }
+
+    /// Both sim modes produce bit-identical logits + identical counters,
+    /// and both match the golden model.
+    #[test]
+    fn modes_agree_and_match_golden() {
+        let model = micro_model(4);
+        let image: Vec<u8> = (0..64).map(|i| (i * 37 % 256) as u8).collect();
+
+        let fast = Chip::new(HwConfig::default(), SimMode::Fast).run(&model, &image);
+        let exact = Chip::new(HwConfig::default(), SimMode::Exact).run(&model, &image);
+        assert_eq!(fast.logits, exact.logits);
+        assert_eq!(fast.cycles, exact.cycles);
+        assert_eq!(fast.dram.total(), exact.dram.total());
+        assert_eq!(fast.sram.total(), exact.sram.total());
+
+        let golden = crate::snn::Network::new(model.clone());
+        assert_eq!(fast.logits, golden.infer_u8(&image));
+    }
+
+    #[test]
+    fn fusion_reduces_dram() {
+        let model = micro_model(4);
+        let image = vec![128u8; 64];
+        let on = Chip::new(HwConfig::default(), SimMode::Fast).run(&model, &image);
+        let off = Chip::new(
+            HwConfig { layer_fusion: false, ..HwConfig::default() },
+            SimMode::Fast,
+        )
+        .run(&model, &image);
+        assert!(on.dram.total() < off.dram.total());
+        assert_eq!(on.logits, off.logits); // fusion never changes results
+        assert_eq!(on.cycles, off.cycles); // fusion is a bandwidth feature
+    }
+
+    #[test]
+    fn report_metrics_consistent() {
+        let model = micro_model(2);
+        let image = vec![200u8; 64];
+        let r = Chip::new(HwConfig::default(), SimMode::Fast).run(&model, &image);
+        assert!(r.cycles > 0);
+        assert!(r.latency_us > 0.0);
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+        assert_eq!(r.layers.len(), 4);
+        assert!(r.gops <= HwConfig::default().peak_gops());
+    }
+}
+
+#[cfg(test)]
+mod trace_tests {
+    use super::tests::micro_model;
+    use super::*;
+    use crate::arch::trace::Event;
+
+    #[test]
+    fn traced_run_matches_untraced_and_logs_layers() {
+        let model = micro_model(3);
+        let image: Vec<u8> = (0..64).map(|i| (i * 11 % 256) as u8).collect();
+        let chip = Chip::new(HwConfig::default(), SimMode::Fast);
+        let plain = chip.run(&model, &image);
+        let (traced, trace) = chip.run_traced(&model, &image);
+        assert_eq!(plain.logits, traced.logits);
+        assert_eq!(plain.cycles, traced.cycles);
+        // 4 compute layers -> 4 starts + 4 ends + 4 dram + fusion events
+        let starts = trace
+            .events()
+            .iter()
+            .filter(|e| matches!(e, Event::LayerStart { .. }))
+            .count();
+        assert_eq!(starts, 4);
+        assert_eq!(trace.span_cycles(), traced.cycles);
+        assert!(trace.render().contains("EncConv start"));
+    }
+}

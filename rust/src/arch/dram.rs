@@ -1,0 +1,103 @@
+//! Off-chip DRAM traffic model.
+//!
+//! Tracks byte traffic by category so the layer-fusion study (§IV-B:
+//! 1450.172 KB -> 938.172 KB, -35.3%) and the energy model can report the
+//! same breakdown the paper discusses.
+
+/// Traffic category.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Traffic {
+    /// Input image (multi-bit, encoding layer).
+    Image,
+    /// Binary layer weights.
+    Weights,
+    /// Input spike trains read from DRAM.
+    SpikesIn,
+    /// Output spike trains written to DRAM.
+    SpikesOut,
+    /// Membrane potentials (only without tick batching).
+    Membrane,
+    /// Final logits.
+    Logits,
+}
+
+const CATEGORIES: [Traffic; 6] = [
+    Traffic::Image,
+    Traffic::Weights,
+    Traffic::SpikesIn,
+    Traffic::SpikesOut,
+    Traffic::Membrane,
+    Traffic::Logits,
+];
+
+/// DRAM byte counters, split by direction and category.
+#[derive(Debug, Clone, Default)]
+pub struct Dram {
+    read: [u64; 6],
+    write: [u64; 6],
+}
+
+impl Dram {
+    fn idx(t: Traffic) -> usize {
+        CATEGORIES.iter().position(|&c| c == t).unwrap()
+    }
+
+    /// Record a read of `bytes` in category `t`.
+    pub fn read(&mut self, t: Traffic, bytes: u64) {
+        self.read[Self::idx(t)] += bytes;
+    }
+
+    /// Record a write of `bytes` in category `t`.
+    pub fn write(&mut self, t: Traffic, bytes: u64) {
+        self.write[Self::idx(t)] += bytes;
+    }
+
+    /// Total bytes moved (read + write).
+    pub fn total(&self) -> u64 {
+        self.read.iter().sum::<u64>() + self.write.iter().sum::<u64>()
+    }
+
+    /// Total bytes in one category.
+    pub fn category(&self, t: Traffic) -> u64 {
+        self.read[Self::idx(t)] + self.write[Self::idx(t)]
+    }
+
+    /// Human-readable breakdown in KB.
+    pub fn report(&self) -> String {
+        let mut lines = Vec::new();
+        for &c in &CATEGORIES {
+            let total = self.category(c);
+            if total > 0 {
+                lines.push(format!("  {:?}: {:.3} KB", c, total as f64 / 1024.0));
+            }
+        }
+        lines.push(format!("  total: {:.3} KB", self.total() as f64 / 1024.0));
+        lines.join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn categories_accumulate() {
+        let mut d = Dram::default();
+        d.read(Traffic::Weights, 100);
+        d.write(Traffic::SpikesOut, 50);
+        d.read(Traffic::SpikesIn, 50);
+        assert_eq!(d.total(), 200);
+        assert_eq!(d.category(Traffic::Weights), 100);
+        assert_eq!(d.category(Traffic::SpikesIn), 50);
+        assert_eq!(d.category(Traffic::Membrane), 0);
+    }
+
+    #[test]
+    fn report_renders_kb() {
+        let mut d = Dram::default();
+        d.read(Traffic::Image, 2048);
+        let r = d.report();
+        assert!(r.contains("Image: 2.000 KB"));
+        assert!(r.contains("total: 2.000 KB"));
+    }
+}

@@ -1,0 +1,123 @@
+//! Two-layer fusion planning (paper §III-G).
+//!
+//! The chip executes two consecutive layers inside the chip: the first
+//! layer's output spikes stay in the temp SRAM and feed the second layer
+//! directly, halving intermediate DRAM traffic.  The enabling condition is
+//! that the weight SRAM holds *both* layers' weights (the paper sizes the
+//! weight SRAM "large enough to store the weights of two layers").
+//!
+//! `plan_fusion` pairs consecutive compute layers greedily, subject to the
+//! weight-SRAM capacity; layers whose pair would overflow run alone.
+
+use crate::arch::schedule::LayerPlan;
+use crate::config::HwConfig;
+
+/// One fused execution group: `start..start + len` plan indices (len 1
+/// or 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FusionGroup {
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Greedy pairing of consecutive layers under the weight-SRAM budget.
+pub fn plan_fusion(plans: &[LayerPlan], hw: &HwConfig) -> Vec<FusionGroup> {
+    if !hw.layer_fusion {
+        return (0..plans.len()).map(|i| FusionGroup { start: i, len: 1 }).collect();
+    }
+    let budget_bits = (hw.weight_sram_kb * 1024.0 * 8.0) as u64;
+    let mut groups = Vec::new();
+    let mut i = 0;
+    while i < plans.len() {
+        if i + 1 < plans.len()
+            && plans[i].weight_bits() + plans[i + 1].weight_bits() <= budget_bits
+        {
+            groups.push(FusionGroup { start: i, len: 2 });
+            i += 2;
+        } else {
+            groups.push(FusionGroup { start: i, len: 1 });
+            i += 1;
+        }
+    }
+    groups
+}
+
+/// Fusion roles of plan index `idx` under `groups`:
+/// (input comes from temp SRAM, output stays in temp SRAM).
+pub fn roles(groups: &[FusionGroup], idx: usize) -> (bool, bool) {
+    for g in groups {
+        if g.len == 2 {
+            if idx == g.start {
+                return (false, true); // first of pair: output fused
+            }
+            if idx == g.start + 1 {
+                return (true, false); // second of pair: input fused
+            }
+        }
+    }
+    (false, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::schedule::PlanKind;
+
+    fn plan(c_in: usize, c_out: usize) -> LayerPlan {
+        LayerPlan {
+            kind: PlanKind::Conv,
+            c_in,
+            c_out,
+            k: 3,
+            h: 8,
+            w: 8,
+            pooled: false,
+            model_index: 0,
+        }
+    }
+
+    #[test]
+    fn pairs_when_weights_fit() {
+        let hw = HwConfig::default(); // 96 KiB weight SRAM
+        // two 64x64x3x3 layers: 2 * 36864 bits = 9 KiB -> fuse
+        let plans = vec![plan(64, 64), plan(64, 64)];
+        let groups = plan_fusion(&plans, &hw);
+        assert_eq!(groups, vec![FusionGroup { start: 0, len: 2 }]);
+        assert_eq!(roles(&groups, 0), (false, true));
+        assert_eq!(roles(&groups, 1), (true, false));
+    }
+
+    #[test]
+    fn big_pairs_run_alone() {
+        let hw = HwConfig::default();
+        // two 256x256x3x3 layers: 2 * 72 KiB = 144 KiB > 96 KiB -> alone
+        let plans = vec![plan(256, 256), plan(256, 256)];
+        let groups = plan_fusion(&plans, &hw);
+        assert_eq!(groups.len(), 2);
+        assert!(groups.iter().all(|g| g.len == 1));
+        assert_eq!(roles(&groups, 0), (false, false));
+    }
+
+    #[test]
+    fn disabled_fusion_all_single() {
+        let hw = HwConfig { layer_fusion: false, ..HwConfig::default() };
+        let plans = vec![plan(64, 64), plan(64, 64), plan(64, 64)];
+        let groups = plan_fusion(&plans, &hw);
+        assert_eq!(groups.len(), 3);
+        assert!(groups.iter().all(|g| g.len == 1));
+    }
+
+    #[test]
+    fn odd_count_leaves_tail_single() {
+        let hw = HwConfig::default();
+        let plans = vec![plan(16, 16), plan(16, 16), plan(16, 16)];
+        let groups = plan_fusion(&plans, &hw);
+        assert_eq!(
+            groups,
+            vec![
+                FusionGroup { start: 0, len: 2 },
+                FusionGroup { start: 2, len: 1 }
+            ]
+        );
+    }
+}

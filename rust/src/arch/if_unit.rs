@@ -1,0 +1,110 @@
+//! IF neuron unit (paper Fig. 1(b), §III-F).
+//!
+//! Receives convolution psums, accumulates them with the residual membrane
+//! potential held in the membrane SRAM, compares against the per-channel
+//! IF-BN threshold, fires and hard-resets.  Identical arithmetic to the
+//! golden model (`V += FIXED_POINT * psum - bias; fire V >= theta`).
+
+use crate::util::FIXED_POINT;
+
+/// Membrane state + IF-BN parameters for one layer (all neurons).
+#[derive(Debug, Clone)]
+pub struct IfUnit {
+    /// channels (bias/theta granularity)
+    pub channels: usize,
+    /// neurons per channel (H*W, or 1 for fc)
+    pub per_channel: usize,
+    bias: Vec<i32>,
+    theta: Vec<i32>,
+    v: Vec<i32>,
+    /// membrane SRAM accesses (read+write pairs), for the energy model
+    pub accesses: u64,
+    /// total spikes fired
+    pub fired: u64,
+}
+
+impl IfUnit {
+    /// Fresh unit with zero membrane.
+    pub fn new(channels: usize, per_channel: usize, bias: &[i32], theta: &[i32]) -> Self {
+        assert_eq!(bias.len(), channels);
+        assert_eq!(theta.len(), channels);
+        assert!(theta.iter().all(|&t| t > 0), "theta must be positive");
+        Self {
+            channels,
+            per_channel,
+            bias: bias.to_vec(),
+            theta: theta.to_vec(),
+            v: vec![0; channels * per_channel],
+            accesses: 0,
+            fired: 0,
+        }
+    }
+
+    /// Integrate one time step of psums (channel-major) and fire.
+    /// Returns the 0/1 spike plane.
+    pub fn step(&mut self, psums: &[i32]) -> Vec<bool> {
+        assert_eq!(psums.len(), self.v.len());
+        let mut out = vec![false; psums.len()];
+        for c in 0..self.channels {
+            let (b, th) = (self.bias[c], self.theta[c]);
+            for i in c * self.per_channel..(c + 1) * self.per_channel {
+                let pre = self.v[i] + FIXED_POINT * psums[i] - b;
+                self.accesses += 1; // read-modify-write of the membrane SRAM
+                if pre >= th {
+                    out[i] = true;
+                    self.v[i] = 0;
+                    self.fired += 1;
+                } else {
+                    self.v[i] = pre;
+                }
+            }
+        }
+        out
+    }
+
+    /// Residual membrane (for golden-model cross-checks).
+    pub fn residue(&self) -> &[i32] {
+        &self.v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_fire_reset() {
+        // theta = 10*FP, psum 3 per step, bias 0: fires at step 4 (V=12*FP).
+        let mut u = IfUnit::new(1, 1, &[0], &[10 * FIXED_POINT]);
+        let mut fires = Vec::new();
+        for _ in 0..5 {
+            fires.push(u.step(&[3])[0]);
+        }
+        assert_eq!(fires, vec![false, false, false, true, false]);
+        assert_eq!(u.residue()[0], 3 * FIXED_POINT);
+        assert_eq!(u.fired, 1);
+    }
+
+    #[test]
+    fn bias_subtracts_each_step() {
+        // bias = 2*FP, psum = 2 -> net zero: never fires.
+        let mut u = IfUnit::new(1, 1, &[2 * FIXED_POINT], &[FIXED_POINT]);
+        for _ in 0..10 {
+            assert!(!u.step(&[2])[0]);
+        }
+        assert_eq!(u.residue()[0], 0);
+    }
+
+    #[test]
+    fn per_channel_thresholds() {
+        let mut u = IfUnit::new(2, 2, &[0, 0], &[FIXED_POINT, 100 * FIXED_POINT]);
+        let spikes = u.step(&[1, 1, 1, 1]);
+        assert_eq!(spikes, vec![true, true, false, false]);
+    }
+
+    #[test]
+    #[should_panic(expected = "theta must be positive")]
+    fn rejects_nonpositive_theta() {
+        IfUnit::new(1, 1, &[0], &[0]);
+    }
+}

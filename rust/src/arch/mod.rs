@@ -1,0 +1,32 @@
+//! Cycle-accurate simulator of the VSA chip (paper §III).
+//!
+//! The simulator has two composable halves sharing one schedule:
+//!
+//! * a **timing model** ([`schedule`]) that walks the vectorwise dataflow
+//!   (Fig. 5/6) — 8-row tiles x output columns x input-channel groups x
+//!   output channels — and counts cycles, SRAM accesses and DRAM traffic
+//!   exactly as the control FSM would issue them;
+//! * a **datapath model** ([`pe`], [`accumulator`], [`if_unit`]) that
+//!   executes the same schedule gate-for-gate (AND + sign select PEs,
+//!   diagonal adders, three-stage accumulator, boundary SRAM, IF fire &
+//!   reset) and therefore produces bit-identical spikes to the golden
+//!   [`crate::snn::Network`].
+//!
+//! [`chip::Chip`] ties the two together with tick batching (§III-A: all T
+//! time steps of a layer before the next layer) and optional two-layer
+//! fusion (§III-G).  `SimMode::Exact` drives every PE; `SimMode::Fast`
+//! computes functionally (popcount path) while keeping the identical
+//! cycle/traffic counters — property tests assert the two modes agree on
+//! both spikes *and* counters.
+
+pub mod accumulator;
+pub mod chip;
+pub mod dram;
+pub mod fusion;
+pub mod if_unit;
+pub mod pe;
+pub mod schedule;
+pub mod sram;
+pub mod trace;
+
+pub use chip::{Chip, RunReport, SimMode};

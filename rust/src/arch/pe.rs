@@ -1,0 +1,177 @@
+//! PE, PE array and PE block — the vectorwise datapath (paper Fig. 3).
+//!
+//! A PE multiplies one spike bit by one binary weight with an AND gate and
+//! a sign select: with the chip's encoding (weight -1 stored as 1),
+//! `product = spike ? (w_neg ? -1 : +1) : 0`, i.e. `o = {s & w, s}` in the
+//! paper's notation.
+//!
+//! A PE array is `rows x cols` PEs (8 x 3 at the design point): `rows`
+//! input spikes broadcast horizontally, `cols` weights broadcast
+//! vertically, products summed along the diagonals into `rows + cols - 1`
+//! partial sums — one filter-column's contribution to a column of outputs.
+//!
+//! A PE block holds `arrays_per_block` arrays (3): in one cycle the block
+//! consumes input columns `x, x+1, x+2` against the three filter columns
+//! and emits one output column of partial sums (Fig. 5(b)):
+//! `O(x) = A(x) * W0 + A(x+1) * W1 + A(x+2) * W2`.
+
+/// One processing element: AND gate + sign select.
+///
+/// `spike` is the input bit; `w_neg` is the stored sign bit (1 encodes
+/// weight -1, 0 encodes +1).
+#[inline]
+pub fn pe_multiply(spike: bool, w_neg: bool) -> i32 {
+    match (spike, w_neg) {
+        (false, _) => 0,
+        (true, false) => 1,
+        (true, true) => -1,
+    }
+}
+
+/// One PE array: `rows` spikes x `cols` weight bits -> `rows + cols - 1`
+/// diagonal partial sums.
+#[derive(Debug, Clone)]
+pub struct PeArray {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl PeArray {
+    /// Construct with the given geometry (8 x 3 at the design point).
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols }
+    }
+
+    /// Number of diagonal outputs (10 for 8 x 3).
+    #[inline]
+    pub fn diag_outputs(&self) -> usize {
+        self.rows + self.cols - 1
+    }
+
+    /// One cycle: multiply every PE and reduce along diagonals.
+    ///
+    /// `spikes[r]` is the input column vector (length `rows`);
+    /// `w_neg[c]` the weight column (length `cols`, sign-bit encoding).
+    /// Output index `d` accumulates products with `r + c == d` — i.e. the
+    /// contribution of this filter column to output rows
+    /// `y - (cols-1) .. y + rows - 1` of the current output column.
+    pub fn cycle(&self, spikes: &[bool], w_neg: &[bool]) -> Vec<i32> {
+        debug_assert_eq!(spikes.len(), self.rows);
+        debug_assert_eq!(w_neg.len(), self.cols);
+        let mut out = vec![0i32; self.diag_outputs()];
+        for (r, &s) in spikes.iter().enumerate() {
+            if !s {
+                continue; // AND gate: zero contribution without a spike
+            }
+            for (c, &wn) in w_neg.iter().enumerate() {
+                out[r + c] += pe_multiply(true, wn);
+            }
+        }
+        out
+    }
+}
+
+/// One PE block: `arrays` PE arrays sharing an output column (Fig. 5).
+#[derive(Debug, Clone)]
+pub struct PeBlock {
+    pub array: PeArray,
+    pub arrays: usize,
+}
+
+impl PeBlock {
+    /// Construct (3 arrays of 8 x 3 at the design point).
+    pub fn new(array: PeArray, arrays: usize) -> Self {
+        Self { array, arrays }
+    }
+
+    /// One cycle of the block for one input channel.
+    ///
+    /// `columns[a]` is the input spike column consumed by array `a`
+    /// (input columns x+a of the feature map), `w_neg[a]` the sign bits of
+    /// filter column `a` (kernel column, length `array.cols` = kernel
+    /// height).  Returns the summed diagonal partial sums — the block's
+    /// contribution of this input channel to one output column
+    /// (accumulator stage 1, Fig. 4).
+    pub fn cycle(&self, columns: &[Vec<bool>], w_neg: &[Vec<bool>]) -> Vec<i32> {
+        debug_assert_eq!(columns.len(), self.arrays);
+        debug_assert_eq!(w_neg.len(), self.arrays);
+        let mut acc = vec![0i32; self.array.diag_outputs()];
+        for a in 0..self.arrays {
+            for (d, v) in self.array.cycle(&columns[a], &w_neg[a]).iter().enumerate() {
+                acc[d] += v;
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Gen};
+
+    #[test]
+    fn pe_truth_table() {
+        assert_eq!(pe_multiply(false, false), 0);
+        assert_eq!(pe_multiply(false, true), 0);
+        assert_eq!(pe_multiply(true, false), 1);
+        assert_eq!(pe_multiply(true, true), -1);
+    }
+
+    #[test]
+    fn array_diagonal_reduction() {
+        // 3x2 array: spikes [1,0,1], weights [+1,-1].
+        let arr = PeArray::new(3, 2);
+        let out = arr.cycle(&[true, false, true], &[false, true]);
+        // products: (r0,c0)=+1,(r0,c1)=-1,(r2,c0)=+1,(r2,c1)=-1
+        // diagonals: d0=+1, d1=-1, d2=+1, d3=-1
+        assert_eq!(out, vec![1, -1, 1, -1]);
+    }
+
+    #[test]
+    fn array_full_positive() {
+        let arr = PeArray::new(8, 3);
+        let out = arr.cycle(&[true; 8], &[false; 3]);
+        assert_eq!(out.len(), 10);
+        // diagonal d counts pairs r+c==d within bounds
+        assert_eq!(out[0], 1);
+        assert_eq!(out[1], 2);
+        assert_eq!(out[2], 3);
+        assert_eq!(out[5], 3);
+        assert_eq!(out[8], 2);
+        assert_eq!(out[9], 1);
+        assert_eq!(out.iter().sum::<i32>(), 24); // 8*3 PEs all active
+    }
+
+    /// The array equals a direct dot-product model of the same PEs.
+    #[test]
+    fn array_matches_naive_property() {
+        check("pe array vs naive", 200, |g: &mut Gen| {
+            let rows = g.usize_in(1, 12);
+            let cols = g.usize_in(1, 5);
+            let arr = PeArray::new(rows, cols);
+            let spikes: Vec<bool> = (0..rows).map(|_| g.bool()).collect();
+            let wn: Vec<bool> = (0..cols).map(|_| g.bool()).collect();
+            let got = arr.cycle(&spikes, &wn);
+            let mut want = vec![0i32; rows + cols - 1];
+            for r in 0..rows {
+                for c in 0..cols {
+                    want[r + c] += pe_multiply(spikes[r], wn[c]);
+                }
+            }
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn block_sums_arrays() {
+        let block = PeBlock::new(PeArray::new(2, 1), 2);
+        // array 0: spikes [1,1] w=+1 -> diag [1,1]
+        // array 1: spikes [1,0] w=-1 -> diag [-1,0]
+        let out = block.cycle(
+            &[vec![true, true], vec![true, false]],
+            &[vec![false], vec![true]],
+        );
+        assert_eq!(out, vec![0, 1]);
+    }
+}

@@ -1,0 +1,402 @@
+//! Timing and traffic model of the vectorwise dataflow (paper Fig. 5/6).
+//!
+//! The control loop of the chip is, per layer and time step:
+//!
+//! ```text
+//! for o in 0..C_out:                       # output channel
+//!   for g in 0..ceil(C_in_eff / 32):       # input-channel group -> blocks
+//!     for tile in 0..ceil(H / 8):          # 8-row output tile
+//!       for x in 0..W:                     # output column
+//!         1 cycle: 32 blocks x 3 arrays x (8 x 3) PEs
+//! ```
+//!
+//! `C_in_eff` is `C_in` for spiking layers and `bitplanes * C_in` for the
+//! encoding layer (each bitplane occupies one PE block, Fig. 7).  When the
+//! group/tile geometry divides evenly every PE contributes a useful MAC
+//! every cycle — the paper's full-utilization claim; ragged edges cost
+//! idle PEs, which the model reports as utilization < 1.
+//!
+//! The same walk charges SRAM accesses and, at layer granularity, DRAM
+//! traffic under tick batching (§III-A) and layer fusion (§III-G).
+
+use crate::arch::accumulator::PIPELINE_DEPTH;
+use crate::arch::dram::{Dram, Traffic};
+use crate::config::HwConfig;
+use crate::snn::params::{DeployedModel, Kind, Layer};
+use crate::util::ceil_div;
+
+/// Compute-layer kind after folding pools into the preceding layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanKind {
+    EncConv,
+    Conv,
+    Fc,
+    Readout,
+}
+
+/// One compute layer of the execution plan.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub kind: PlanKind,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    /// Spatial size of the layer's input/output (pre-pool); 1 for fc.
+    pub h: usize,
+    pub w: usize,
+    /// Followed by an MP2 (output stored post-pool).
+    pub pooled: bool,
+    /// Index of the layer in `DeployedModel::layers`.
+    pub model_index: usize,
+}
+
+impl LayerPlan {
+    /// Binary weight bits of this layer.
+    pub fn weight_bits(&self) -> u64 {
+        (self.c_out * self.c_in * self.k.max(1) * self.k.max(1)) as u64
+    }
+
+    /// Input spike bits per time step (fc: flat).
+    pub fn in_bits_per_step(&self) -> u64 {
+        (self.c_in * self.h * self.w) as u64
+    }
+
+    /// Output spike bits per time step, post-pool if pooled.
+    pub fn out_bits_per_step(&self) -> u64 {
+        let div = if self.pooled { 4 } else { 1 };
+        (self.c_out * self.h * self.w / div) as u64
+    }
+
+    /// Effective input channels occupying PE blocks (bitplanes expand the
+    /// encoding layer, Fig. 7).
+    pub fn c_in_effective(&self, hw: &HwConfig) -> usize {
+        match self.kind {
+            PlanKind::EncConv => self.c_in * hw.encode_bitplanes,
+            _ => self.c_in,
+        }
+    }
+
+    /// Input-channel groups sequenced through the accumulator (§III-C).
+    pub fn groups(&self, hw: &HwConfig) -> usize {
+        ceil_div(self.c_in_effective(hw), hw.pe_blocks)
+    }
+
+    /// Row tiles (8-row vectors at the design point).
+    pub fn tiles(&self, hw: &HwConfig) -> usize {
+        ceil_div(self.h, hw.rows_per_array)
+    }
+
+    /// Cycles for one *pass* over the feature map (one time step of a
+    /// spiking layer; the single conv of the encoding layer).  The
+    /// accumulator is throughput-pipelined (Fig. 4): it never drains
+    /// between column sweeps of the same layer, so the fill latency is
+    /// charged once per pass, not per (channel, group, tile) segment.
+    pub fn cycles_per_pass(&self, hw: &HwConfig) -> u64 {
+        let segments = (self.c_out * self.groups(hw) * self.tiles(hw)) as u64;
+        segments * self.w as u64 + PIPELINE_DEPTH
+    }
+
+    /// Total cycles across `t_steps` (encoding conv computed once and
+    /// re-accumulated by the IF unit, §III-F).
+    pub fn cycles(&self, hw: &HwConfig, t_steps: usize) -> u64 {
+        match self.kind {
+            PlanKind::EncConv => self.cycles_per_pass(hw),
+            _ => self.cycles_per_pass(hw) * t_steps as u64,
+        }
+    }
+
+    /// PE-level ops actually performed (AND-multiply+add pairs), across
+    /// all time steps.  Encoding ops count each bitplane.
+    pub fn pe_ops(&self, hw: &HwConfig, t_steps: usize) -> u64 {
+        let per_pass = (self.c_in_effective(hw) * self.c_out * self.k.max(1) * self.k.max(1))
+            as u64
+            * (self.h * self.w) as u64;
+        match self.kind {
+            PlanKind::EncConv => per_pass,
+            _ => per_pass * t_steps as u64,
+        }
+    }
+
+    /// Fraction of PE slots doing useful work.
+    pub fn utilization(&self, hw: &HwConfig, t_steps: usize) -> f64 {
+        let slots = self.cycles(hw, t_steps) as f64 * hw.total_pes() as f64;
+        if slots == 0.0 {
+            return 0.0;
+        }
+        // Each useful MAC = 1 multiply + 1 add = 2 ops; a PE slot does 2.
+        self.pe_ops(hw, t_steps) as f64 / slots
+    }
+}
+
+/// Fold a parsed model into compute-layer plans (pools attach to the
+/// preceding compute layer, as the chip's post-processing unit does).
+pub fn plan_model(model: &DeployedModel) -> Vec<LayerPlan> {
+    let mut plans: Vec<LayerPlan> = Vec::new();
+    let mut h = model.in_size;
+    let mut w = model.in_size;
+    for (idx, layer) in model.layers.iter().enumerate() {
+        match layer {
+            Layer::Conv { kind, c_out, c_in, k, .. } => {
+                plans.push(LayerPlan {
+                    kind: if *kind == Kind::EncConv {
+                        PlanKind::EncConv
+                    } else {
+                        PlanKind::Conv
+                    },
+                    c_in: *c_in,
+                    c_out: *c_out,
+                    k: *k,
+                    h,
+                    w,
+                    pooled: false,
+                    model_index: idx,
+                });
+            }
+            Layer::MaxPool => {
+                let last = plans
+                    .last_mut()
+                    .expect("maxpool cannot be the first layer");
+                assert!(!last.pooled, "consecutive pools unsupported");
+                last.pooled = true;
+                h /= 2;
+                w /= 2;
+            }
+            Layer::Fc { n_out, n_in, .. } => {
+                plans.push(LayerPlan {
+                    kind: PlanKind::Fc,
+                    c_in: *n_in,
+                    c_out: *n_out,
+                    k: 1,
+                    h: 1,
+                    w: 1,
+                    pooled: false,
+                    model_index: idx,
+                });
+                h = 1;
+                w = 1;
+            }
+            Layer::Readout { n_out, n_in, .. } => {
+                plans.push(LayerPlan {
+                    kind: PlanKind::Readout,
+                    c_in: *n_in,
+                    c_out: *n_out,
+                    k: 1,
+                    h: 1,
+                    w: 1,
+                    pooled: false,
+                    model_index: idx,
+                });
+            }
+        }
+    }
+    plans
+}
+
+/// Per-layer SRAM access totals for one inference (all T steps).
+#[derive(Debug, Clone, Default)]
+pub struct SramAccesses {
+    /// spike SRAM column reads (one per active block per cycle)
+    pub spike_reads: u64,
+    /// weight SRAM fetches (one 32-channel tap bundle per pass segment)
+    pub weight_reads: u64,
+    /// membrane SRAM read-modify-writes (one per neuron per step)
+    pub membrane_rmw: u64,
+    /// temp SRAM spike writes (bits / 8 per step, rounded up)
+    pub temp_writes: u64,
+    /// boundary SRAM stores + loads
+    pub boundary_ops: u64,
+}
+
+impl SramAccesses {
+    /// Elementwise sum.
+    pub fn add(&mut self, o: &SramAccesses) {
+        self.spike_reads += o.spike_reads;
+        self.weight_reads += o.weight_reads;
+        self.membrane_rmw += o.membrane_rmw;
+        self.temp_writes += o.temp_writes;
+        self.boundary_ops += o.boundary_ops;
+    }
+
+    /// Total access count.
+    pub fn total(&self) -> u64 {
+        self.spike_reads + self.weight_reads + self.membrane_rmw + self.temp_writes
+            + self.boundary_ops
+    }
+}
+
+/// SRAM accesses charged by the schedule walk for one layer.
+pub fn layer_sram(plan: &LayerPlan, hw: &HwConfig, t_steps: usize) -> SramAccesses {
+    let groups = plan.groups(hw) as u64;
+    let tiles = plan.tiles(hw) as u64;
+    let c_out = plan.c_out as u64;
+    let w = plan.w as u64;
+    let steps = if plan.kind == PlanKind::EncConv { 1 } else { t_steps as u64 };
+    let blocks = hw.pe_blocks as u64;
+    let neurons = (plan.c_out * plan.h * plan.w) as u64;
+
+    SramAccesses {
+        // one column read per active block per cycle; the last group may be
+        // ragged but we charge full blocks (the banks are read anyway).
+        spike_reads: c_out * groups * tiles * w * blocks * steps,
+        weight_reads: c_out * groups * tiles * steps,
+        // IF integrates every output neuron every time step (readout
+        // accumulates logits instead but still touches its accumulator).
+        membrane_rmw: neurons * t_steps as u64,
+        temp_writes: ceil_div((neurons * t_steps as u64) as usize, 8) as u64,
+        boundary_ops: if plan.k > 1 { c_out * tiles * w * steps * 2 } else { 0 },
+    }
+}
+
+/// DRAM traffic for one layer under the given fusion role.
+///
+/// `fused_input`: the layer consumes its input directly from the temp SRAM
+/// (second layer of a fused pair) — no DRAM read.
+/// `fused_output`: the layer's output stays in the temp SRAM (first layer
+/// of a fused pair) — no DRAM write.
+pub fn layer_dram(
+    plan: &LayerPlan,
+    t_steps: usize,
+    fused_input: bool,
+    fused_output: bool,
+    tick_batching: bool,
+    dram: &mut Dram,
+) {
+    let t = t_steps as u64;
+    dram.read(Traffic::Weights, ceil_div(plan.weight_bits() as usize, 8) as u64);
+
+    match plan.kind {
+        PlanKind::EncConv => {
+            // Multi-bit image, one byte per pixel.
+            dram.read(Traffic::Image, plan.in_bits_per_step());
+        }
+        _ if !fused_input => {
+            dram.read(Traffic::SpikesIn, ceil_div((plan.in_bits_per_step() * t) as usize, 8) as u64);
+        }
+        _ => {}
+    }
+
+    match plan.kind {
+        PlanKind::Readout => {
+            dram.write(Traffic::Logits, plan.c_out as u64 * 4);
+        }
+        _ if !fused_output => {
+            dram.write(
+                Traffic::SpikesOut,
+                ceil_div((plan.out_bits_per_step() * t) as usize, 8) as u64,
+            );
+        }
+        _ => {}
+    }
+
+    if !tick_batching && plan.kind != PlanKind::Readout {
+        // Without tick batching the residual membrane (2 B per neuron)
+        // round-trips between consecutive time steps, and weights are
+        // re-fetched per step — the cost SpinalFlow's analysis highlights.
+        let neurons = (plan.c_out * plan.h * plan.w) as u64;
+        dram.write(Traffic::Membrane, neurons * 2 * (t - 1));
+        dram.read(Traffic::Membrane, neurons * 2 * (t - 1));
+        dram.read(
+            Traffic::Weights,
+            ceil_div(plan.weight_bits() as usize, 8) as u64 * (t - 1),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+
+    fn conv_plan(c_in: usize, c_out: usize, hw_size: usize) -> LayerPlan {
+        LayerPlan {
+            kind: PlanKind::Conv,
+            c_in,
+            c_out,
+            k: 3,
+            h: hw_size,
+            w: hw_size,
+            pooled: false,
+            model_index: 0,
+        }
+    }
+
+    /// The paper's full-utilization claim: when C_in % 32 == 0 and
+    /// H % 8 == 0, every PE does useful work every (steady-state) cycle.
+    #[test]
+    fn full_utilization_when_geometry_divides() {
+        let hw = HwConfig::default();
+        let plan = conv_plan(128, 128, 32);
+        let util = plan.utilization(&hw, 8);
+        // PIPELINE_DEPTH fill cycles make it slightly less than 1.
+        assert!(util > 0.85, "utilization {util}");
+        // Steady state excludes the pipeline-fill cycles: exactly 1.0 when
+        // the geometry divides (the paper's full-utilization claim).
+        let passes = (plan.c_out * plan.groups(&hw) * plan.tiles(&hw)) as u64;
+        let steady_cycles = passes * plan.w as u64 * 8;
+        let steady =
+            plan.pe_ops(&hw, 8) as f64 / (steady_cycles as f64 * hw.total_pes() as f64);
+        assert!((steady - 1.0).abs() < 1e-12, "steady-state utilization {steady}");
+    }
+
+    #[test]
+    fn ragged_channels_lower_utilization() {
+        let hw = HwConfig::default();
+        let full = conv_plan(128, 64, 32).utilization(&hw, 8);
+        let ragged = conv_plan(100, 64, 32).utilization(&hw, 8); // 4 groups, last 4/32
+        assert!(ragged < full);
+    }
+
+    #[test]
+    fn encoding_runs_once() {
+        let hw = HwConfig::default();
+        let mut enc = conv_plan(3, 128, 32);
+        enc.kind = PlanKind::EncConv;
+        assert_eq!(enc.cycles(&hw, 8), enc.cycles_per_pass(&hw));
+        // 3 channels x 8 bitplanes = 24 blocks -> 1 group
+        assert_eq!(enc.groups(&hw), 1);
+    }
+
+    #[test]
+    fn cycles_scale_with_time_steps() {
+        let hw = HwConfig::default();
+        let plan = conv_plan(64, 64, 16);
+        assert_eq!(plan.cycles(&hw, 8), 8 * plan.cycles(&hw, 1));
+    }
+
+    #[test]
+    fn dram_fusion_skips_intermediate() {
+        let plan = conv_plan(64, 64, 16);
+        let mut a = Dram::default();
+        layer_dram(&plan, 8, false, false, true, &mut a);
+        let mut b = Dram::default();
+        layer_dram(&plan, 8, true, true, true, &mut b);
+        assert_eq!(b.category(Traffic::SpikesIn), 0);
+        assert_eq!(b.category(Traffic::SpikesOut), 0);
+        assert!(a.total() > b.total());
+        // weights always loaded
+        assert_eq!(
+            a.category(Traffic::Weights),
+            b.category(Traffic::Weights)
+        );
+    }
+
+    #[test]
+    fn no_tick_batching_charges_membrane() {
+        let plan = conv_plan(64, 64, 16);
+        let mut a = Dram::default();
+        layer_dram(&plan, 8, false, false, false, &mut a);
+        assert!(a.category(Traffic::Membrane) > 0);
+        // weights re-read per step: 8x the batched amount
+        let mut b = Dram::default();
+        layer_dram(&plan, 8, false, false, true, &mut b);
+        assert_eq!(a.category(Traffic::Weights), 8 * b.category(Traffic::Weights));
+    }
+
+    #[test]
+    fn pooled_output_is_quarter() {
+        let mut plan = conv_plan(64, 64, 16);
+        assert_eq!(plan.out_bits_per_step(), 64 * 256);
+        plan.pooled = true;
+        assert_eq!(plan.out_bits_per_step(), 64 * 64);
+    }
+}

@@ -1,0 +1,155 @@
+//! On-chip SRAM models with access accounting (paper Fig. 2).
+//!
+//! The simulator does not store payloads in these models (the datapath
+//! carries the data); an [`Sram`] tracks capacity and read/write traffic so
+//! the energy model can charge per-access energy, and a [`PingPong`] pair
+//! models the double-buffered spike / weight SRAMs.
+
+/// A single SRAM bank.
+#[derive(Debug, Clone)]
+pub struct Sram {
+    pub name: &'static str,
+    pub capacity_bytes: usize,
+    reads: u64,
+    writes: u64,
+    read_bytes: u64,
+    write_bytes: u64,
+    /// high-water mark of bytes resident (set by the scheduler)
+    peak_bytes: usize,
+}
+
+impl Sram {
+    /// New bank with `capacity_bytes` capacity.
+    pub fn new(name: &'static str, capacity_bytes: usize) -> Self {
+        Self {
+            name,
+            capacity_bytes,
+            reads: 0,
+            writes: 0,
+            read_bytes: 0,
+            write_bytes: 0,
+            peak_bytes: 0,
+        }
+    }
+
+    /// Record a read of `bytes`.
+    #[inline]
+    pub fn read(&mut self, bytes: usize) {
+        self.reads += 1;
+        self.read_bytes += bytes as u64;
+    }
+
+    /// Record a write of `bytes`.
+    #[inline]
+    pub fn write(&mut self, bytes: usize) {
+        self.writes += 1;
+        self.write_bytes += bytes as u64;
+    }
+
+    /// Track residency high-water mark; returns false on overflow.
+    pub fn reserve(&mut self, bytes: usize) -> bool {
+        self.peak_bytes = self.peak_bytes.max(bytes);
+        bytes <= self.capacity_bytes
+    }
+
+    /// (reads, writes) access counts.
+    pub fn accesses(&self) -> (u64, u64) {
+        (self.reads, self.writes)
+    }
+
+    /// (read, write) byte totals.
+    pub fn bytes(&self) -> (u64, u64) {
+        (self.read_bytes, self.write_bytes)
+    }
+
+    /// Residency high-water mark.
+    pub fn peak(&self) -> usize {
+        self.peak_bytes
+    }
+}
+
+/// Double-buffered SRAM pair: `front()` is consumed while `back()` is
+/// filled; `swap()` flips the banks (spike ping-pong across time steps,
+/// weight ping-pong across fused layers — paper §III-A).
+#[derive(Debug, Clone)]
+pub struct PingPong {
+    banks: [Sram; 2],
+    front: usize,
+}
+
+impl PingPong {
+    /// Two equal banks of `capacity_bytes` each.
+    pub fn new(name: &'static str, capacity_bytes: usize) -> Self {
+        Self {
+            banks: [Sram::new(name, capacity_bytes), Sram::new(name, capacity_bytes)],
+            front: 0,
+        }
+    }
+
+    /// The bank currently being read.
+    pub fn front(&mut self) -> &mut Sram {
+        &mut self.banks[self.front]
+    }
+
+    /// The bank currently being filled.
+    pub fn back(&mut self) -> &mut Sram {
+        &mut self.banks[1 - self.front]
+    }
+
+    /// Flip banks.
+    pub fn swap(&mut self) {
+        self.front = 1 - self.front;
+    }
+
+    /// Combined (reads, writes) across both banks.
+    pub fn accesses(&self) -> (u64, u64) {
+        let a = self.banks[0].accesses();
+        let b = self.banks[1].accesses();
+        (a.0 + b.0, a.1 + b.1)
+    }
+
+    /// Combined (read, write) bytes across both banks.
+    pub fn bytes(&self) -> (u64, u64) {
+        let a = self.banks[0].bytes();
+        let b = self.banks[1].bytes();
+        (a.0 + b.0, a.1 + b.1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accesses() {
+        let mut s = Sram::new("spike", 1024);
+        s.read(4);
+        s.read(4);
+        s.write(8);
+        assert_eq!(s.accesses(), (2, 1));
+        assert_eq!(s.bytes(), (8, 8));
+    }
+
+    #[test]
+    fn reserve_tracks_peak_and_overflow() {
+        let mut s = Sram::new("weight", 100);
+        assert!(s.reserve(60));
+        assert!(s.reserve(40));
+        assert_eq!(s.peak(), 60);
+        assert!(!s.reserve(101));
+        assert_eq!(s.peak(), 101);
+    }
+
+    #[test]
+    fn pingpong_swaps() {
+        let mut pp = PingPong::new("spike", 64);
+        pp.front().read(1);
+        pp.back().write(2);
+        pp.swap();
+        pp.front().write(2); // old back
+        let (r, w) = pp.accesses();
+        assert_eq!((r, w), (1, 2));
+        let (rb, wb) = pp.bytes();
+        assert_eq!((rb, wb), (1, 4));
+    }
+}

@@ -1,0 +1,163 @@
+//! Execution trace recording for the chip simulator.
+//!
+//! A [`Trace`] collects timestamped scheduler events (layer start/end,
+//! fusion decisions, DRAM transfers, IF activity) so a run can be
+//! inspected offline — the software analogue of waveform dumping on the
+//! RTL.  Rendering is a compact text timeline; `Trace::to_tsv` emits a
+//! spreadsheet-friendly dump.
+
+use crate::arch::schedule::PlanKind;
+
+/// One trace event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A compute layer began at `cycle`.
+    LayerStart { layer: usize, kind: PlanKind, cycle: u64 },
+    /// A compute layer finished at `cycle` having fired `spikes`.
+    LayerEnd { layer: usize, cycle: u64, spikes: u64 },
+    /// Two layers were fused (no DRAM round-trip between them).
+    Fused { first: usize, second: usize },
+    /// A DRAM transfer of `bytes` (negative direction = write).
+    DramTransfer { layer: usize, bytes: u64, write: bool, what: &'static str },
+}
+
+/// An ordered event log.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    events: Vec<Event>,
+}
+
+impl Trace {
+    /// Record an event.
+    pub fn push(&mut self, e: Event) {
+        self.events.push(e);
+    }
+
+    /// All events in record order.
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Compact human-readable timeline.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            match e {
+                Event::LayerStart { layer, kind, cycle } => {
+                    out.push_str(&format!("@{cycle:>10}  L{layer} {kind:?} start\n"));
+                }
+                Event::LayerEnd { layer, cycle, spikes } => {
+                    out.push_str(&format!(
+                        "@{cycle:>10}  L{layer} end ({spikes} spikes)\n"
+                    ));
+                }
+                Event::Fused { first, second } => {
+                    out.push_str(&format!("            L{first}+L{second} fused\n"));
+                }
+                Event::DramTransfer { layer, bytes, write, what } => {
+                    out.push_str(&format!(
+                        "            L{layer} DRAM {} {bytes} B ({what})\n",
+                        if *write { "<-" } else { "->" }
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Tab-separated dump (one event per line).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::from("event\tlayer\tcycle\tdetail\n");
+        for e in &self.events {
+            match e {
+                Event::LayerStart { layer, kind, cycle } => {
+                    out.push_str(&format!("start\t{layer}\t{cycle}\t{kind:?}\n"));
+                }
+                Event::LayerEnd { layer, cycle, spikes } => {
+                    out.push_str(&format!("end\t{layer}\t{cycle}\t{spikes}\n"));
+                }
+                Event::Fused { first, second } => {
+                    out.push_str(&format!("fused\t{first}\t\t{second}\n"));
+                }
+                Event::DramTransfer { layer, bytes, write, what } => {
+                    out.push_str(&format!(
+                        "dram\t{layer}\t\t{}{bytes}B:{what}\n",
+                        if *write { "w" } else { "r" }
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Total cycles between the first start and the last end event.
+    pub fn span_cycles(&self) -> u64 {
+        let start = self.events.iter().find_map(|e| match e {
+            Event::LayerStart { cycle, .. } => Some(*cycle),
+            _ => None,
+        });
+        let end = self.events.iter().rev().find_map(|e| match e {
+            Event::LayerEnd { cycle, .. } => Some(*cycle),
+            _ => None,
+        });
+        match (start, end) {
+            (Some(s), Some(e)) if e >= s => e - s,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        let mut t = Trace::default();
+        t.push(Event::LayerStart { layer: 0, kind: PlanKind::EncConv, cycle: 0 });
+        t.push(Event::DramTransfer { layer: 0, bytes: 784, write: false, what: "image" });
+        t.push(Event::LayerEnd { layer: 0, cycle: 1000, spikes: 42 });
+        t.push(Event::Fused { first: 0, second: 1 });
+        t.push(Event::LayerStart { layer: 1, kind: PlanKind::Conv, cycle: 1000 });
+        t.push(Event::LayerEnd { layer: 1, cycle: 5000, spikes: 17 });
+        t
+    }
+
+    #[test]
+    fn records_in_order() {
+        let t = sample();
+        assert_eq!(t.len(), 6);
+        assert!(matches!(t.events()[0], Event::LayerStart { layer: 0, .. }));
+    }
+
+    #[test]
+    fn render_contains_key_lines() {
+        let r = sample().render();
+        assert!(r.contains("L0 EncConv start"));
+        assert!(r.contains("L0+L1 fused"));
+        assert!(r.contains("42 spikes"));
+        assert!(r.contains("DRAM -> 784 B (image)"));
+    }
+
+    #[test]
+    fn tsv_has_header_and_rows() {
+        let tsv = sample().to_tsv();
+        assert!(tsv.starts_with("event\tlayer\tcycle\tdetail\n"));
+        assert_eq!(tsv.lines().count(), 7);
+    }
+
+    #[test]
+    fn span() {
+        assert_eq!(sample().span_cycles(), 5000);
+        assert_eq!(Trace::default().span_cycles(), 0);
+    }
+}

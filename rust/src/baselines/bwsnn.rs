@@ -1,0 +1,152 @@
+//! BW-SNN-style behavioral model (Chuang et al., DAC'20 [4]).
+//!
+//! BW-SNN is a *fixed-function* five-conv-layer binary-weight SNN ASIC:
+//! all weights live on chip (12.75 KB), there is no DRAM traffic in steady
+//! state, and the pipeline shape is frozen at tape-out.  Its strength is
+//! energy (103.14 TOPS/W normalized); its weaknesses are the fixed
+//! topology and very low area efficiency — the contrast the paper draws.
+//!
+//! The model (a) checks whether a network *fits* the frozen pipeline, and
+//! (b) for fitting networks charges fully-pipelined cycles at its clock.
+
+use crate::snn::params::{DeployedModel, Layer};
+
+/// BW-SNN-like design parameters (defaults = published design point).
+#[derive(Debug, Clone)]
+pub struct BwSnnConfig {
+    /// Frozen number of conv layers.
+    pub conv_layers: usize,
+    /// Maximum on-chip weight storage (bits).
+    pub weight_bits_capacity: u64,
+    /// Maximum channels per layer the fixed datapath supports.
+    pub max_channels: usize,
+    pub freq_mhz: f64,
+    /// MACs retired per cycle when streaming (fully pipelined array).
+    pub macs_per_cycle: u64,
+}
+
+impl Default for BwSnnConfig {
+    fn default() -> Self {
+        Self {
+            conv_layers: 5,
+            weight_bits_capacity: 12 * 8 * 1024, // ~12 KB of the 12.75 total
+            max_channels: 64,
+            freq_mhz: 10.0,
+            macs_per_cycle: 8208 / 2, // PEs retire a MAC every other cycle
+        }
+    }
+}
+
+/// Why a model cannot run on the fixed-function design.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Misfit {
+    TooManyConvLayers { have: usize, max: usize },
+    WeightsDontFit { bits: u64, capacity: u64 },
+    TooManyChannels { have: usize, max: usize },
+}
+
+/// Fixed-function feasibility check — the reconfigurability contrast of
+/// Table III ("fixed 5-CONV" vs "Yes").
+pub fn fits(cfg: &BwSnnConfig, model: &DeployedModel) -> Result<(), Misfit> {
+    let convs = model
+        .layers
+        .iter()
+        .filter(|l| matches!(l, Layer::Conv { .. }))
+        .count();
+    if convs > cfg.conv_layers {
+        return Err(Misfit::TooManyConvLayers { have: convs, max: cfg.conv_layers });
+    }
+    let mut bits = 0u64;
+    let mut max_ch = 0usize;
+    for l in &model.layers {
+        match l {
+            Layer::Conv { c_out, c_in, k, .. } => {
+                bits += (c_out * c_in * k * k) as u64;
+                max_ch = max_ch.max(*c_out);
+            }
+            Layer::Fc { n_out, n_in, .. } | Layer::Readout { n_out, n_in, .. } => {
+                bits += (n_out * n_in) as u64;
+            }
+            Layer::MaxPool => {}
+        }
+    }
+    if bits > cfg.weight_bits_capacity {
+        return Err(Misfit::WeightsDontFit { bits, capacity: cfg.weight_bits_capacity });
+    }
+    if max_ch > cfg.max_channels {
+        return Err(Misfit::TooManyChannels { have: max_ch, max: cfg.max_channels });
+    }
+    Ok(())
+}
+
+/// Streaming latency for a fitting model (microseconds).
+pub fn latency_us(cfg: &BwSnnConfig, macs: u64) -> f64 {
+    let cycles = macs.div_ceil(cfg.macs_per_cycle);
+    cycles as f64 / (cfg.freq_mhz * 1e6) * 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::params::Kind;
+
+    fn conv(c_out: usize, c_in: usize) -> Layer {
+        Layer::Conv {
+            kind: Kind::Conv,
+            c_out,
+            c_in,
+            k: 3,
+            w: vec![1; c_out * c_in * 9],
+            bias: vec![0; c_out],
+            theta: vec![1; c_out],
+        }
+    }
+
+    fn model_with(layers: Vec<Layer>) -> DeployedModel {
+        DeployedModel {
+            name: "m".into(),
+            num_steps: 4,
+            in_channels: 1,
+            in_size: 16,
+            layers,
+        }
+    }
+
+    #[test]
+    fn small_net_fits() {
+        let m = model_with(vec![conv(16, 1), conv(16, 16), conv(32, 16)]);
+        assert!(fits(&BwSnnConfig::default(), &m).is_ok());
+    }
+
+    #[test]
+    fn cifar_net_does_not_fit() {
+        // 11 conv layers and 128..256 channels: rejected on every axis.
+        let m = model_with(vec![
+            conv(128, 3), conv(128, 128), conv(128, 128), conv(192, 128),
+            conv(192, 192), conv(192, 192), conv(192, 192), conv(256, 192),
+            conv(256, 256), conv(256, 256), conv(256, 256),
+        ]);
+        match fits(&BwSnnConfig::default(), &m) {
+            Err(Misfit::TooManyConvLayers { have: 11, max: 5 }) => {}
+            other => panic!("expected layer-count misfit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn weight_capacity_enforced() {
+        let m = model_with(vec![conv(64, 64), conv(64, 64)]);
+        // 2 * 64*64*9 = 73728 bits < 98304 -> fits; triple it to overflow
+        let m2 = model_with(vec![conv(64, 64), conv(64, 64), conv(64, 64)]);
+        assert!(fits(&BwSnnConfig::default(), &m).is_ok());
+        assert!(matches!(
+            fits(&BwSnnConfig::default(), &m2),
+            Err(Misfit::WeightsDontFit { .. })
+        ));
+    }
+
+    #[test]
+    fn latency_scales_with_macs() {
+        let cfg = BwSnnConfig::default();
+        assert!(latency_us(&cfg, 2_000_000) > latency_us(&cfg, 1_000_000));
+    }
+}

@@ -1,0 +1,13 @@
+//! Comparison designs for Table III and the ablation benches.
+//!
+//! The paper's comparison columns quote published figures from
+//! SpinalFlow [7] and BW-SNN [4] and normalize them to 40 nm / 0.9 V.
+//! We carry those published specs verbatim ([`published`]) *and* implement
+//! behavioral models of both dataflows ([`spinalflow`], [`bwsnn`]) so the
+//! benches can demonstrate the paper's qualitative claims (elementwise
+//! sparse processing throughput vs. vectorwise; fixed-function vs.
+//! reconfigurable) on the same workloads.
+
+pub mod bwsnn;
+pub mod published;
+pub mod spinalflow;

@@ -1,0 +1,124 @@
+//! Hand-rolled command-line parsing (clap is unavailable offline).
+//!
+//! Grammar: `vsa <command> [--flag value]... [--switch]... [positional]...`
+//! Flags may use `--key value` or `--key=value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with('-') {
+                return Err(format!("expected a command, got flag '{cmd}'"));
+            }
+            out.command = cmd;
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err("bare '--' is not supported".into());
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    out.flags.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// String flag with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string flag.
+    pub fn get_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    /// usize flag with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// u64 flag with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Boolean switch (present or not).
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_flags_switches_positional() {
+        // note: a bare `--switch` followed by a non-flag token would bind
+        // as `--flag value`; positionals therefore come before switches.
+        let a = parse("simulate --model cifar10 --steps=8 extra --no-fusion");
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.get("model", "tiny"), "cifar10");
+        assert_eq!(a.get_usize("steps", 4).unwrap(), 8);
+        assert!(a.has("no-fusion"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("serve");
+        assert_eq!(a.get("model", "mnist"), "mnist");
+        assert_eq!(a.get_usize("workers", 2).unwrap(), 2);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn trailing_switch_then_flag() {
+        let a = parse("x --fast --n 3");
+        assert!(a.has("fast"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn bad_integer_reports_error() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn flag_as_command_rejected() {
+        assert!(Args::parse(vec!["--oops".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Hardware configuration of the VSA chip (paper §III, Table III).
+//!
+//! Every dimension of the accelerator is a config knob ("reconfigurable"
+//! in the paper's sense: different models, different inference time steps,
+//! encoding layer on/off, layer fusion on/off), with the published design
+//! point as the default.
+
+use crate::config::json::Json;
+
+/// Full chip configuration.  Defaults reproduce the paper's design point:
+/// 32 PE blocks x 3 PE arrays x (8 x 3) PEs = 2304 PEs, 500 MHz, 40 nm.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwConfig {
+    /// Number of PE blocks; each block processes one input channel of one
+    /// time step (32 in the paper).
+    pub pe_blocks: usize,
+    /// PE arrays per block (3 in the paper — one per filter column).
+    pub arrays_per_block: usize,
+    /// PE rows per array: input-vector height processed per cycle
+    /// (8 in the paper).
+    pub rows_per_array: usize,
+    /// PE columns per array: filter taps per column (3 in the paper,
+    /// matching the 3x3 kernels).
+    pub cols_per_array: usize,
+    /// Clock frequency in MHz (500 in the paper).
+    pub freq_mhz: f64,
+    /// Technology node in nm (40 in the paper).
+    pub tech_nm: f64,
+    /// Supply voltage in volts (0.9 in the paper).
+    pub voltage: f64,
+    /// Weight SRAM capacity in KiB (sized for two layers — layer fusion).
+    pub weight_sram_kb: f64,
+    /// Spike ping-pong SRAM capacity in KiB (both banks).
+    pub spike_sram_kb: f64,
+    /// Membrane SRAMs in KiB (two banks, §III-F).
+    pub membrane_sram_kb: f64,
+    /// Temp (output spike) SRAM in KiB.
+    pub temp_sram_kb: f64,
+    /// Boundary SRAM in KiB (tile-edge partial sums, §III-C).
+    pub boundary_sram_kb: f64,
+    /// Two-layer fusion enabled (§III-G).
+    pub layer_fusion: bool,
+    /// Bitplanes for the encoding layer (8 = u8 inputs).
+    pub encode_bitplanes: usize,
+    /// Off-chip DRAM energy per byte, pJ (energy model input).
+    pub dram_pj_per_byte: f64,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        // SRAM budget totals 230.3125 KB as reported in Table III.
+        Self {
+            pe_blocks: 32,
+            arrays_per_block: 3,
+            rows_per_array: 8,
+            cols_per_array: 3,
+            freq_mhz: 500.0,
+            tech_nm: 40.0,
+            voltage: 0.9,
+            weight_sram_kb: 96.0,
+            spike_sram_kb: 64.0,
+            membrane_sram_kb: 48.0,
+            temp_sram_kb: 16.0,
+            boundary_sram_kb: 6.3125,
+            layer_fusion: true,
+            encode_bitplanes: 8,
+            dram_pj_per_byte: 20.0,
+        }
+    }
+}
+
+impl HwConfig {
+    /// Total PE count (2304 at the paper's design point).
+    pub fn total_pes(&self) -> usize {
+        self.pe_blocks * self.arrays_per_block * self.rows_per_array * self.cols_per_array
+    }
+
+    /// Peak throughput in GOPS: every PE does one MAC (2 ops) per cycle.
+    /// 2304 PEs x 0.5 GHz x 2 = 2304 GOPS — Table III's headline number.
+    pub fn peak_gops(&self) -> f64 {
+        self.total_pes() as f64 * self.freq_mhz * 1e6 * 2.0 / 1e9
+    }
+
+    /// Total on-chip SRAM in KiB.
+    pub fn total_sram_kb(&self) -> f64 {
+        self.weight_sram_kb
+            + self.spike_sram_kb
+            + self.membrane_sram_kb
+            + self.temp_sram_kb
+            + self.boundary_sram_kb
+    }
+
+    /// Parse from a JSON object; missing fields keep their defaults.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let mut cfg = Self::default();
+        let obj = match v {
+            Json::Obj(_) => v,
+            _ => return Err("hw config must be a JSON object".into()),
+        };
+        macro_rules! take_usize {
+            ($field:ident) => {
+                if let Some(x) = obj.get(stringify!($field)) {
+                    cfg.$field = x
+                        .as_usize()
+                        .ok_or(concat!(stringify!($field), " must be a non-negative integer"))?;
+                }
+            };
+        }
+        macro_rules! take_f64 {
+            ($field:ident) => {
+                if let Some(x) = obj.get(stringify!($field)) {
+                    cfg.$field = x
+                        .as_f64()
+                        .ok_or(concat!(stringify!($field), " must be a number"))?;
+                }
+            };
+        }
+        take_usize!(pe_blocks);
+        take_usize!(arrays_per_block);
+        take_usize!(rows_per_array);
+        take_usize!(cols_per_array);
+        take_usize!(encode_bitplanes);
+        take_f64!(freq_mhz);
+        take_f64!(tech_nm);
+        take_f64!(voltage);
+        take_f64!(weight_sram_kb);
+        take_f64!(spike_sram_kb);
+        take_f64!(membrane_sram_kb);
+        take_f64!(temp_sram_kb);
+        take_f64!(boundary_sram_kb);
+        take_f64!(dram_pj_per_byte);
+        if let Some(x) = obj.get("layer_fusion") {
+            cfg.layer_fusion = x.as_bool().ok_or("layer_fusion must be a bool")?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Reject degenerate configurations.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pe_blocks == 0 || self.arrays_per_block == 0 {
+            return Err("PE geometry must be non-zero".into());
+        }
+        if self.rows_per_array == 0 || self.cols_per_array == 0 {
+            return Err("PE array geometry must be non-zero".into());
+        }
+        if self.freq_mhz <= 0.0 {
+            return Err("frequency must be positive".into());
+        }
+        if self.encode_bitplanes == 0 || self.encode_bitplanes > 16 {
+            return Err("encode_bitplanes must be in 1..=16".into());
+        }
+        Ok(())
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let v = Json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_design_point() {
+        let cfg = HwConfig::default();
+        assert_eq!(cfg.total_pes(), 2304);
+        assert!((cfg.peak_gops() - 2304.0).abs() < 1e-9);
+        assert!((cfg.total_sram_kb() - 230.3125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let v = Json::parse(r#"{"pe_blocks": 16, "freq_mhz": 200, "layer_fusion": false}"#)
+            .unwrap();
+        let cfg = HwConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.pe_blocks, 16);
+        assert_eq!(cfg.freq_mhz, 200.0);
+        assert!(!cfg.layer_fusion);
+        // untouched fields keep defaults
+        assert_eq!(cfg.rows_per_array, 8);
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        let v = Json::parse(r#"{"pe_blocks": 0}"#).unwrap();
+        assert!(HwConfig::from_json(&v).is_err());
+        let v = Json::parse(r#"{"encode_bitplanes": 99}"#).unwrap();
+        assert!(HwConfig::from_json(&v).is_err());
+    }
+}

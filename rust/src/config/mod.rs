@@ -1,0 +1,8 @@
+//! Configuration system: JSON parsing, hardware config, model presets.
+
+pub mod hw;
+pub mod json;
+pub mod models;
+
+pub use hw::HwConfig;
+pub use models::{LayerKind, LayerSpec, ModelSpec};

@@ -1,0 +1,226 @@
+//! Network descriptions (paper Table I) — the rust twin of
+//! `python/compile/model.py::ModelSpec`.
+
+/// Layer type in a Table-I network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Encoding conv layer: multi-bit input, bitplane datapath (§III-E).
+    EncConv,
+    /// Spiking conv layer: binary spikes in, binary spikes out.
+    Conv,
+    /// 2x2/2 max pool (OR on spikes).
+    MaxPool,
+    /// Spiking fully-connected layer.
+    Fc,
+    /// Final non-firing accumulation layer (logits).
+    Readout,
+}
+
+/// One layer of a network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub kind: LayerKind,
+    /// Output channels / neurons (0 for pools).
+    pub c_out: usize,
+    /// Conv kernel size (3 everywhere in the paper).
+    pub ksize: usize,
+}
+
+impl LayerSpec {
+    fn conv(kind: LayerKind, c_out: usize) -> Self {
+        Self { kind, c_out, ksize: 3 }
+    }
+    fn pool() -> Self {
+        Self { kind: LayerKind::MaxPool, c_out: 0, ksize: 0 }
+    }
+    fn dense(kind: LayerKind, c_out: usize) -> Self {
+        Self { kind, c_out, ksize: 0 }
+    }
+}
+
+/// A full network: geometry + layers + time steps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub in_channels: usize,
+    pub in_size: usize,
+    pub layers: Vec<LayerSpec>,
+    pub num_steps: usize,
+}
+
+impl ModelSpec {
+    /// (C, H, W) feature shape *entering* each layer.
+    pub fn feature_shapes(&self) -> Vec<(usize, usize, usize)> {
+        let mut shapes = Vec::with_capacity(self.layers.len());
+        let (mut c, mut s) = (self.in_channels, self.in_size);
+        for ly in &self.layers {
+            shapes.push((c, s, s));
+            match ly.kind {
+                LayerKind::EncConv | LayerKind::Conv => c = ly.c_out,
+                LayerKind::MaxPool => s /= 2,
+                LayerKind::Fc | LayerKind::Readout => {
+                    c = ly.c_out;
+                    s = 1;
+                }
+            }
+        }
+        shapes
+    }
+
+    /// Binary weight bits of the whole model.
+    pub fn weight_bits(&self) -> usize {
+        let shapes = self.feature_shapes();
+        self.layers
+            .iter()
+            .zip(&shapes)
+            .map(|(ly, &(c_in, h, w))| match ly.kind {
+                LayerKind::EncConv | LayerKind::Conv => ly.c_out * c_in * ly.ksize * ly.ksize,
+                LayerKind::Fc | LayerKind::Readout => ly.c_out * c_in * h * w,
+                LayerKind::MaxPool => 0,
+            })
+            .sum()
+    }
+
+    /// Total MAC operations for one inference at `num_steps` time steps
+    /// (conv layers run per step; the encoding conv runs once, §III-F).
+    pub fn macs_per_inference(&self) -> u64 {
+        let shapes = self.feature_shapes();
+        let t = self.num_steps as u64;
+        self.layers
+            .iter()
+            .zip(&shapes)
+            .map(|(ly, &(c_in, h, w))| match ly.kind {
+                LayerKind::EncConv => {
+                    (ly.c_out * c_in * ly.ksize * ly.ksize * h * w) as u64
+                }
+                LayerKind::Conv => {
+                    (ly.c_out * c_in * ly.ksize * ly.ksize * h * w) as u64 * t
+                }
+                LayerKind::Fc | LayerKind::Readout => (ly.c_out * c_in * h * w) as u64 * t,
+                LayerKind::MaxPool => 0,
+            })
+            .sum()
+    }
+}
+
+/// MNIST network (Table I): 64Conv(enc)-MP2-64Conv-MP2-128fc-10fc.
+pub fn mnist(num_steps: usize) -> ModelSpec {
+    ModelSpec {
+        name: "mnist".into(),
+        in_channels: 1,
+        in_size: 28,
+        layers: vec![
+            LayerSpec::conv(LayerKind::EncConv, 64),
+            LayerSpec::pool(),
+            LayerSpec::conv(LayerKind::Conv, 64),
+            LayerSpec::pool(),
+            LayerSpec::dense(LayerKind::Fc, 128),
+            LayerSpec::dense(LayerKind::Readout, 10),
+        ],
+        num_steps,
+    }
+}
+
+/// CIFAR-10 network (Table I): 128C(enc)-128C-128C-MP2-192Cx4-MP2-256Cx4-
+/// MP2-256fc-10fc.
+pub fn cifar10(num_steps: usize) -> ModelSpec {
+    let mut layers = Vec::new();
+    let plan: &[i64] = &[128, 128, 128, -1, 192, 192, 192, 192, -1, 256, 256, 256, 256, -1];
+    let mut first = true;
+    for &p in plan {
+        if p < 0 {
+            layers.push(LayerSpec::pool());
+        } else if first {
+            layers.push(LayerSpec::conv(LayerKind::EncConv, p as usize));
+            first = false;
+        } else {
+            layers.push(LayerSpec::conv(LayerKind::Conv, p as usize));
+        }
+    }
+    layers.push(LayerSpec::dense(LayerKind::Fc, 256));
+    layers.push(LayerSpec::dense(LayerKind::Readout, 10));
+    ModelSpec {
+        name: "cifar10".into(),
+        in_channels: 3,
+        in_size: 32,
+        layers,
+        num_steps,
+    }
+}
+
+/// Tiny test network — mirrors `python/compile/model.py::tiny_spec`.
+pub fn tiny(num_steps: usize) -> ModelSpec {
+    ModelSpec {
+        name: "tiny".into(),
+        in_channels: 1,
+        in_size: 12,
+        layers: vec![
+            LayerSpec::conv(LayerKind::EncConv, 16),
+            LayerSpec::pool(),
+            LayerSpec::conv(LayerKind::Conv, 32),
+            LayerSpec::pool(),
+            LayerSpec::dense(LayerKind::Fc, 64),
+            LayerSpec::dense(LayerKind::Readout, 10),
+        ],
+        num_steps,
+    }
+}
+
+/// Look up a preset by name.
+pub fn by_name(name: &str, num_steps: usize) -> Option<ModelSpec> {
+    match name {
+        "mnist" => Some(mnist(num_steps)),
+        "cifar10" => Some(cifar10(num_steps)),
+        "tiny" => Some(tiny(num_steps)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_table1() {
+        let m = mnist(8);
+        assert_eq!(m.layers.len(), 6);
+        let shapes = m.feature_shapes();
+        assert_eq!(shapes[0], (1, 28, 28));
+        assert_eq!(shapes[2], (64, 14, 14));
+        assert_eq!(shapes[4], (64, 7, 7)); // fc sees 3136 inputs
+    }
+
+    #[test]
+    fn cifar10_table1() {
+        let m = cifar10(8);
+        let convs: Vec<usize> = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv | LayerKind::EncConv))
+            .map(|l| l.c_out)
+            .collect();
+        assert_eq!(convs, vec![128, 128, 128, 192, 192, 192, 192, 256, 256, 256, 256]);
+        let shapes = m.feature_shapes();
+        assert_eq!(*shapes.last().unwrap(), (256, 1, 1));
+        assert_eq!(shapes[shapes.len() - 2], (256, 4, 4)); // fc in = 4096
+    }
+
+    #[test]
+    fn macs_scale_with_time_steps() {
+        let a = cifar10(1).macs_per_inference();
+        let b = cifar10(8).macs_per_inference();
+        assert!(b > 6 * a && b < 8 * a); // encoding conv amortized across T
+    }
+
+    #[test]
+    fn weight_bits_reasonable() {
+        // MNIST: 64*1*9 + 64*64*9 + 128*3136 + 10*128 = 440,000 bits.
+        assert_eq!(mnist(8).weight_bits(), 64 * 9 + 64 * 64 * 9 + 128 * 3136 + 10 * 128);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("mnist", 8).is_some());
+        assert!(by_name("nope", 8).is_none());
+    }
+}

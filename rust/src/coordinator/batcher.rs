@@ -1,0 +1,92 @@
+//! Dynamic batcher: groups queued requests up to the engine batch size,
+//! waiting at most `max_wait` for stragglers (the classic
+//! latency/throughput knob of serving systems).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// A request travelling through the coordinator.
+#[derive(Debug)]
+pub struct Request<T> {
+    pub id: u64,
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// Pull up to `max_batch` requests: blocks for the first one, then drains
+/// greedily, waiting up to `max_wait` total for the batch to fill.
+/// Returns `None` when the channel is closed and drained.
+pub fn next_batch<T>(
+    rx: &Receiver<Request<T>>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Option<Vec<Request<T>>> {
+    debug_assert!(max_batch > 0);
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + max_wait;
+    let mut batch = vec![first];
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(req) => batch.push(req),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    fn req(id: u64) -> Request<u64> {
+        Request { id, payload: id, enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn fills_up_to_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..5 {
+            tx.send(req(i)).unwrap();
+        }
+        let batch = next_batch(&rx, 3, Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].id, 0);
+        let batch2 = next_batch(&rx, 3, Duration::from_millis(10)).unwrap();
+        assert_eq!(batch2.len(), 2);
+    }
+
+    #[test]
+    fn timeout_returns_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(req(7)).unwrap();
+        let t0 = Instant::now();
+        let batch = next_batch(&rx, 8, Duration::from_millis(30)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = channel::<Request<u64>>();
+        drop(tx);
+        assert!(next_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn closed_after_partial_drain() {
+        let (tx, rx) = channel();
+        tx.send(req(1)).unwrap();
+        tx.send(req(2)).unwrap();
+        drop(tx);
+        let batch = next_batch(&rx, 8, Duration::from_millis(50)).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(next_batch(&rx, 8, Duration::from_millis(1)).is_none());
+    }
+}

@@ -1,0 +1,178 @@
+//! Inference engines the workers can run batches on.
+
+use crate::arch::{Chip, SimMode};
+use crate::config::HwConfig;
+use crate::runtime::PjrtExecutor;
+use crate::snn::Network;
+use anyhow::Result;
+
+/// A batch-capable inference backend.
+///
+/// Not required to be `Send`: the coordinator constructs one engine *per
+/// worker thread* (PJRT client handles are thread-local).
+pub trait InferenceEngine {
+    /// Preferred batch size (the batcher targets this).
+    fn batch_size(&self) -> usize;
+    /// Classify a batch of raw u8 CHW images into integer logits.
+    fn infer(&mut self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>>;
+    /// Human-readable backend name for logs/metrics.
+    fn name(&self) -> &'static str;
+}
+
+/// Engine selector used by the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Golden,
+    ChipSim,
+    Pjrt,
+}
+
+/// Golden functional model engine (pure rust, any batch size).
+pub struct GoldenEngine {
+    net: Network,
+    batch: usize,
+}
+
+impl GoldenEngine {
+    /// Wrap a loaded network; `batch` is the batcher's grouping target.
+    pub fn new(net: Network, batch: usize) -> Self {
+        Self { net, batch }
+    }
+}
+
+impl InferenceEngine for GoldenEngine {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn infer(&mut self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
+        Ok(images.iter().map(|img| self.net.infer_u8(img)).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "golden"
+    }
+}
+
+/// Cycle-accurate chip simulator engine (reports hardware latency too).
+pub struct ChipEngine {
+    chip: Chip,
+    net: Network,
+    batch: usize,
+    /// Simulated chip latency accumulated across batches (us).
+    pub simulated_us: f64,
+}
+
+impl ChipEngine {
+    /// Fast-mode chip engine on the given hardware config.
+    pub fn new(hw: HwConfig, net: Network, batch: usize) -> Self {
+        Self { chip: Chip::new(hw, SimMode::Fast), net, batch, simulated_us: 0.0 }
+    }
+}
+
+impl InferenceEngine for ChipEngine {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn infer(&mut self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
+        let mut out = Vec::with_capacity(images.len());
+        for img in images {
+            let report = self.chip.run(&self.net.model, img);
+            self.simulated_us += report.latency_us;
+            out.push(report.logits);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "chip-sim"
+    }
+}
+
+/// PJRT engine: runs the AOT-compiled JAX/Pallas module.  Batches smaller
+/// than the compiled size are padded with zero images and the padding
+/// results dropped.
+pub struct PjrtEngine {
+    exe: PjrtExecutor,
+}
+
+impl PjrtEngine {
+    /// Wrap a compiled executable.
+    pub fn new(exe: PjrtExecutor) -> Self {
+        Self { exe }
+    }
+}
+
+impl InferenceEngine for PjrtEngine {
+    fn batch_size(&self) -> usize {
+        self.exe.batch
+    }
+
+    fn infer(&mut self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
+        let pixels = self.exe.channels * self.exe.size * self.exe.size;
+        let n = images.len();
+        anyhow::ensure!(n <= self.exe.batch, "batch overflow");
+        let mut padded: Vec<Vec<u8>> = images.to_vec();
+        padded.resize(self.exe.batch, vec![0u8; pixels]);
+        let mut logits = self.exe.infer(&padded)?;
+        logits.truncate(n);
+        Ok(logits)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::params::{DeployedModel, Kind, Layer};
+
+    fn net() -> Network {
+        Network::new(DeployedModel {
+            name: "e".into(),
+            num_steps: 2,
+            in_channels: 1,
+            in_size: 4,
+            layers: vec![
+                Layer::Conv {
+                    kind: Kind::EncConv,
+                    c_out: 2,
+                    c_in: 1,
+                    k: 1,
+                    w: vec![1, -1],
+                    bias: vec![0, 0],
+                    theta: vec![256 * 50, 256 * 50],
+                },
+                Layer::Readout { n_out: 10, n_in: 32, w: vec![1; 320] },
+            ],
+        })
+    }
+
+    #[test]
+    fn golden_engine_batches() {
+        let mut e = GoldenEngine::new(net(), 4);
+        let out = e.infer(&[vec![100; 16], vec![255; 16]]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), 10);
+    }
+
+    #[test]
+    fn chip_engine_accumulates_latency() {
+        let mut e = ChipEngine::new(HwConfig::default(), net(), 2);
+        e.infer(&[vec![100; 16]]).unwrap();
+        let after_one = e.simulated_us;
+        e.infer(&[vec![100; 16], vec![9; 16]]).unwrap();
+        assert!(e.simulated_us > after_one);
+    }
+
+    #[test]
+    fn engines_agree() {
+        let mut g = GoldenEngine::new(net(), 4);
+        let mut c = ChipEngine::new(HwConfig::default(), net(), 4);
+        let imgs = vec![vec![37; 16], vec![200; 16]];
+        assert_eq!(g.infer(&imgs).unwrap(), c.infer(&imgs).unwrap());
+    }
+}

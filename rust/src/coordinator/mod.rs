@@ -1,0 +1,17 @@
+//! Serving coordinator: request queue → dynamic batcher → worker pool.
+//!
+//! The VSA chip is a batch-1 accelerator per image, but the *system*
+//! around it (this crate's L3 role) serves concurrent classification
+//! requests: a bounded submission queue applies backpressure, a batcher
+//! groups requests up to the compiled batch size with a small timeout, and
+//! worker threads run the batches on an [`engine::InferenceEngine`]
+//! (golden model, chip simulator, or the PJRT executable — python is never
+//! involved).  Built on std threads + channels (tokio is unavailable in
+//! this offline environment).
+
+pub mod batcher;
+pub mod engine;
+pub mod server;
+
+pub use engine::{ChipEngine, EngineKind, GoldenEngine, InferenceEngine, PjrtEngine};
+pub use server::{Coordinator, CoordinatorConfig, ServeStats};

@@ -1,0 +1,275 @@
+//! The coordinator: bounded submission queue, batcher loop, worker pool.
+
+use crate::coordinator::batcher::{next_batch, Request};
+use crate::coordinator::engine::InferenceEngine;
+use crate::util::stats::Accumulator;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Coordinator tuning knobs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Bounded queue depth — submissions beyond this block (backpressure).
+    pub queue_depth: usize,
+    /// Maximum images per engine batch.
+    pub max_batch: usize,
+    /// Max time the batcher waits for a batch to fill.
+    pub max_wait: Duration,
+    /// Worker threads (each owns one engine instance).
+    pub workers: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            queue_depth: 256,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+        }
+    }
+}
+
+/// One classification result.
+#[derive(Debug, Clone)]
+pub struct InferResult {
+    pub id: u64,
+    pub logits: Vec<i64>,
+    pub latency: Duration,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub completed: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub latency_ms_p50: f64,
+    pub latency_ms_p95: f64,
+    pub latency_ms_p99: f64,
+    pub throughput_rps: f64,
+}
+
+struct Shared {
+    latency: Mutex<Accumulator>,
+    completed: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+}
+
+type Payload = (Vec<u8>, Sender<InferResult>);
+
+/// A running coordinator instance.
+pub struct Coordinator {
+    tx: Option<SyncSender<Request<Payload>>>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    next_id: AtomicU64,
+    started: Instant,
+}
+
+impl Coordinator {
+    /// Start the worker pool.  `make_engine` builds one engine per worker
+    /// and runs *inside* that worker's thread (engines need not be `Send`
+    /// — PJRT client handles are thread-local).
+    pub fn start(
+        cfg: CoordinatorConfig,
+        make_engine: impl Fn(usize) -> Box<dyn InferenceEngine> + Send + Sync + 'static,
+    ) -> Self {
+        let (tx, rx) = sync_channel::<Request<Payload>>(cfg.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let make_engine = Arc::new(make_engine);
+        let shared = Arc::new(Shared {
+            latency: Mutex::new(Accumulator::default()),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+        });
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let rx = Arc::clone(&rx);
+            let shared = Arc::clone(&shared);
+            let make_engine = Arc::clone(&make_engine);
+            let cfg_max_batch = cfg.max_batch;
+            let max_wait = cfg.max_wait;
+            workers.push(std::thread::spawn(move || {
+                let mut engine = make_engine(w);
+                let max_batch = cfg_max_batch.min(engine.batch_size()).max(1);
+                loop {
+                    // Only one worker holds the queue lock while *forming*
+                    // a batch; inference runs outside the lock.
+                    let batch = {
+                        let rx = rx.lock().unwrap();
+                        next_batch(&rx, max_batch, max_wait)
+                    };
+                    let Some(batch) = batch else { break };
+                    shared.batches.fetch_add(1, Ordering::Relaxed);
+                    shared
+                        .batched_requests
+                        .fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+                    let images: Vec<Vec<u8>> =
+                        batch.iter().map(|r| r.payload.0.clone()).collect();
+                    match engine.infer(&images) {
+                        Ok(results) => {
+                            for (req, logits) in batch.into_iter().zip(results) {
+                                let latency = req.enqueued.elapsed();
+                                shared
+                                    .latency
+                                    .lock()
+                                    .unwrap()
+                                    .push(latency.as_secs_f64() * 1e3);
+                                shared.completed.fetch_add(1, Ordering::Relaxed);
+                                let _ = req.payload.1.send(InferResult {
+                                    id: req.id,
+                                    logits,
+                                    latency,
+                                });
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("worker {w} ({}) failed: {e:#}", engine.name());
+                            // Responses dropped; submitters see a closed
+                            // channel and surface the error.
+                        }
+                    }
+                }
+            }));
+        }
+
+        Self {
+            tx: Some(tx),
+            workers,
+            shared,
+            next_id: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    /// Submit one image; blocks when the queue is full (backpressure).
+    /// Returns the receiver for the result.
+    pub fn submit(&self, image: Vec<u8>) -> Result<Receiver<InferResult>> {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("coordinator not shut down")
+            .send(Request { id, payload: (image, rtx), enqueued: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
+        Ok(rrx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer_blocking(&self, image: Vec<u8>) -> Result<InferResult> {
+        let rx = self.submit(image)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker dropped the request"))
+    }
+
+    /// Drain the queue and join the workers.
+    pub fn shutdown(mut self) -> ServeStats {
+        drop(self.tx.take()); // close the queue; workers exit after drain
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.stats()
+    }
+
+    /// Current aggregate stats.
+    pub fn stats(&self) -> ServeStats {
+        let completed = self.shared.completed.load(Ordering::Relaxed);
+        let batches = self.shared.batches.load(Ordering::Relaxed);
+        let batched = self.shared.batched_requests.load(Ordering::Relaxed);
+        let lat = self.shared.latency.lock().unwrap();
+        let (p50, p95, p99) = lat.percentiles();
+        ServeStats {
+            completed,
+            batches,
+            mean_batch: if batches > 0 { batched as f64 / batches as f64 } else { 0.0 },
+            latency_ms_p50: p50,
+            latency_ms_p95: p95,
+            latency_ms_p99: p99,
+            throughput_rps: completed as f64 / self.started.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::GoldenEngine;
+    use crate::snn::params::{DeployedModel, Kind, Layer};
+    use crate::snn::Network;
+
+    fn net() -> Network {
+        Network::new(DeployedModel {
+            name: "s".into(),
+            num_steps: 2,
+            in_channels: 1,
+            in_size: 4,
+            layers: vec![
+                Layer::Conv {
+                    kind: Kind::EncConv,
+                    c_out: 2,
+                    c_in: 1,
+                    k: 1,
+                    w: vec![1, -1],
+                    bias: vec![0, 0],
+                    theta: vec![256 * 10, 256 * 10],
+                },
+                Layer::Readout { n_out: 10, n_in: 32, w: vec![1; 320] },
+            ],
+        })
+    }
+
+    #[test]
+    fn serves_requests_and_batches() {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 2,
+                max_batch: 4,
+                max_wait: Duration::from_millis(5),
+                queue_depth: 64,
+            },
+            |_| Box::new(GoldenEngine::new(net(), 4)),
+        );
+        let receivers: Vec<_> =
+            (0..20).map(|i| coord.submit(vec![(i * 12) as u8; 16]).unwrap()).collect();
+        for rx in receivers {
+            let res = rx.recv().unwrap();
+            assert_eq!(res.logits.len(), 10);
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 20);
+        assert!(stats.batches <= 20);
+        assert!(stats.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn results_match_direct_inference() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), |_| {
+            Box::new(GoldenEngine::new(net(), 8))
+        });
+        let image = vec![123u8; 16];
+        let served = coord.infer_blocking(image.clone()).unwrap();
+        assert_eq!(served.logits, net().infer_u8(&image));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_inflight() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), |_| {
+            Box::new(GoldenEngine::new(net(), 8))
+        });
+        let rxs: Vec<_> = (0..10).map(|_| coord.submit(vec![50; 16]).unwrap()).collect();
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 10);
+        for rx in rxs {
+            assert!(rx.recv().is_ok());
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! IDX (MNIST) file loader.
+//!
+//! If the user drops real `train-images-idx3-ubyte` / `t10k-*` files under
+//! `data/mnist/`, the benchmarks consume them instead of the synthetic
+//! corpus.  Supports the two IDX variants MNIST uses: u8 3-D image tensors
+//! (magic 0x0803) and u8 1-D label vectors (magic 0x0801).
+
+use crate::data::Sample;
+use std::io::Read;
+
+/// Load an IDX3 image file: returns (images flat u8, rows, cols).
+pub fn load_images(path: &str) -> Result<(Vec<Vec<u8>>, usize, usize), String> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| format!("{path}: {e}"))?
+        .read_to_end(&mut buf)
+        .map_err(|e| format!("{path}: {e}"))?;
+    if buf.len() < 16 {
+        return Err(format!("{path}: truncated header"));
+    }
+    let magic = u32::from_be_bytes(buf[0..4].try_into().unwrap());
+    if magic != 0x0000_0803 {
+        return Err(format!("{path}: bad magic {magic:#x} (want 0x803)"));
+    }
+    let n = u32::from_be_bytes(buf[4..8].try_into().unwrap()) as usize;
+    let rows = u32::from_be_bytes(buf[8..12].try_into().unwrap()) as usize;
+    let cols = u32::from_be_bytes(buf[12..16].try_into().unwrap()) as usize;
+    let need = 16 + n * rows * cols;
+    if buf.len() < need {
+        return Err(format!("{path}: truncated body ({} < {need})", buf.len()));
+    }
+    let images = (0..n)
+        .map(|i| buf[16 + i * rows * cols..16 + (i + 1) * rows * cols].to_vec())
+        .collect();
+    Ok((images, rows, cols))
+}
+
+/// Load an IDX1 label file.
+pub fn load_labels(path: &str) -> Result<Vec<u8>, String> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| format!("{path}: {e}"))?
+        .read_to_end(&mut buf)
+        .map_err(|e| format!("{path}: {e}"))?;
+    if buf.len() < 8 {
+        return Err(format!("{path}: truncated header"));
+    }
+    let magic = u32::from_be_bytes(buf[0..4].try_into().unwrap());
+    if magic != 0x0000_0801 {
+        return Err(format!("{path}: bad magic {magic:#x} (want 0x801)"));
+    }
+    let n = u32::from_be_bytes(buf[4..8].try_into().unwrap()) as usize;
+    if buf.len() < 8 + n {
+        return Err(format!("{path}: truncated body"));
+    }
+    Ok(buf[8..8 + n].to_vec())
+}
+
+/// Load paired images+labels into [`Sample`]s; `limit` caps the count.
+pub fn load_samples(
+    images_path: &str,
+    labels_path: &str,
+    limit: usize,
+) -> Result<Vec<Sample>, String> {
+    let (images, rows, cols) = load_images(images_path)?;
+    let labels = load_labels(labels_path)?;
+    if rows != cols {
+        return Err(format!("non-square images {rows}x{cols} unsupported"));
+    }
+    Ok(images
+        .into_iter()
+        .zip(labels)
+        .take(limit)
+        .map(|(image, label)| Sample {
+            image,
+            channels: 1,
+            size: rows,
+            label: label as usize,
+        })
+        .collect())
+}
+
+/// Real MNIST under `data/mnist/`, if present.
+pub fn mnist_if_available(limit: usize) -> Option<Vec<Sample>> {
+    let imgs = "data/mnist/t10k-images-idx3-ubyte";
+    let labs = "data/mnist/t10k-labels-idx1-ubyte";
+    if std::path::Path::new(imgs).exists() && std::path::Path::new(labs).exists() {
+        load_samples(imgs, labs, limit).ok()
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_idx3(path: &std::path::Path, n: usize, side: usize) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(&0x0803u32.to_be_bytes()).unwrap();
+        f.write_all(&(n as u32).to_be_bytes()).unwrap();
+        f.write_all(&(side as u32).to_be_bytes()).unwrap();
+        f.write_all(&(side as u32).to_be_bytes()).unwrap();
+        let body: Vec<u8> = (0..n * side * side).map(|i| (i % 251) as u8).collect();
+        f.write_all(&body).unwrap();
+    }
+
+    fn write_idx1(path: &std::path::Path, labels: &[u8]) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(&0x0801u32.to_be_bytes()).unwrap();
+        f.write_all(&(labels.len() as u32).to_be_bytes()).unwrap();
+        f.write_all(labels).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_synthetic_idx() {
+        let dir = std::env::temp_dir().join("vsa_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ip = dir.join("imgs");
+        let lp = dir.join("labels");
+        write_idx3(&ip, 3, 4);
+        write_idx1(&lp, &[7, 1, 9]);
+        let samples =
+            load_samples(ip.to_str().unwrap(), lp.to_str().unwrap(), 10).unwrap();
+        assert_eq!(samples.len(), 3);
+        assert_eq!(samples[0].size, 4);
+        assert_eq!(samples[2].label, 9);
+        assert_eq!(samples[1].at(0, 0, 0), (16 % 251) as u8);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("vsa_idx_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("junk");
+        std::fs::write(&p, b"not an idx file....").unwrap();
+        assert!(load_images(p.to_str().unwrap()).is_err());
+        assert!(load_labels(p.to_str().unwrap()).is_err());
+    }
+}

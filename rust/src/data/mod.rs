@@ -1,0 +1,22 @@
+//! Datasets: synthetic MNIST/CIFAR-like generators (bit-identical to the
+//! python compile path) plus an IDX loader for real MNIST files.
+
+pub mod idx;
+pub mod synth;
+
+/// A labelled u8 image in CHW layout.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub image: Vec<u8>,
+    pub channels: usize,
+    pub size: usize,
+    pub label: usize,
+}
+
+impl Sample {
+    /// Pixel accessor (channel, y, x).
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> u8 {
+        self.image[(c * self.size + y) * self.size + x]
+    }
+}

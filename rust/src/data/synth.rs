@@ -1,0 +1,139 @@
+//! Synthetic dataset generator — bit-identical twin of
+//! `python/compile/datasets.py`.
+//!
+//! Every draw order and integer operation matches the python source so the
+//! two languages generate the same u8 pixels; integration tests rely on
+//! this to compare JAX logits against the rust golden model sample by
+//! sample (see DESIGN.md §Substitutions for why the data is synthetic).
+
+use crate::data::Sample;
+use crate::util::rng::SplitMix64;
+
+/// Per-class template coefficients — identical table in datasets.py.
+const P1: [i64; 10] = [3, 5, 7, 11, 13, 17, 19, 23, 29, 31];
+const P2: [i64; 10] = [7, 3, 11, 5, 17, 13, 23, 19, 37, 29];
+const P3: [i64; 10] = [0, 9, 4, 13, 6, 15, 2, 11, 8, 17];
+
+/// Deterministic class template pixel in [0, 255].
+#[inline]
+pub fn template_pixel(cls: usize, ch: usize, x: i64, y: i64) -> i64 {
+    let a = (x * P1[cls] + y * P2[cls] + P3[cls] + ch as i64 * 5).rem_euclid(29);
+    let b = if (x / 4 + y / 4 + cls as i64 + ch as i64).rem_euclid(3) == 0 {
+        64
+    } else {
+        0
+    };
+    (a * 7 + b).min(255)
+}
+
+/// Generate one (channels, size, size) u8 image for class `cls`.
+///
+/// Matches `datasets.synth_image(seed, index, cls, channels, size)`.
+pub fn image(seed: u64, index: u64, cls: usize, channels: usize, size: usize) -> Sample {
+    let state = seed
+        .wrapping_mul(1_000_003)
+        .wrapping_add(index.wrapping_mul(7919))
+        .wrapping_add(cls as u64);
+    let mut rng = SplitMix64::new(state);
+    let dx = (rng.next_below(7) as i64) - 3;
+    let dy = (rng.next_below(7) as i64) - 3;
+
+    let mut img = vec![0u8; channels * size * size];
+    let s = size as i64;
+    for c in 0..channels {
+        for yy in 0..s {
+            for xx in 0..s {
+                let sx = (xx + dx).rem_euclid(s);
+                let sy = (yy + dy).rem_euclid(s);
+                let noise = (rng.next_below(64) as i64) - 32;
+                let v = (template_pixel(cls, c, sx, sy) + noise).clamp(0, 255);
+                img[(c * size + yy as usize) * size + xx as usize] = v as u8;
+            }
+        }
+    }
+    Sample {
+        image: img,
+        channels,
+        size,
+        label: cls,
+    }
+}
+
+/// Generate `count` samples with balanced labels `(start + i) % 10`.
+pub fn batch(seed: u64, start: u64, count: usize, channels: usize, size: usize) -> Vec<Sample> {
+    (0..count)
+        .map(|i| {
+            let cls = ((start + i as u64) % 10) as usize;
+            image(seed, start + i as u64, cls, channels, size)
+        })
+        .collect()
+}
+
+/// (1, 28, 28) MNIST-like samples.
+pub fn mnist_like(seed: u64, start: u64, count: usize) -> Vec<Sample> {
+    batch(seed, start, count, 1, 28)
+}
+
+/// (3, 32, 32) CIFAR-like samples.
+pub fn cifar_like(seed: u64, start: u64, count: usize) -> Vec<Sample> {
+    batch(seed, start, count, 3, 32)
+}
+
+/// (1, 12, 12) tiny samples for the test network.
+pub fn tiny_like(seed: u64, start: u64, count: usize) -> Vec<Sample> {
+    batch(seed, start, count, 1, 12)
+}
+
+/// Samples matching a model preset's input geometry.
+pub fn for_model(name: &str, seed: u64, start: u64, count: usize) -> Vec<Sample> {
+    match name {
+        "mnist" => mnist_like(seed, start, count),
+        "cifar10" => cifar_like(seed, start, count),
+        _ => tiny_like(seed, start, count),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = image(42, 0, 3, 1, 12);
+        let b = image(42, 0, 3, 1, 12);
+        assert_eq!(a.image, b.image);
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let samples = batch(1, 0, 50, 1, 12);
+        let mut counts = [0usize; 10];
+        for s in &samples {
+            counts[s.label] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 5));
+    }
+
+    #[test]
+    fn distinct_classes_differ() {
+        let a = image(7, 0, 0, 1, 16);
+        let b = image(7, 0, 1, 1, 16);
+        assert_ne!(a.image, b.image);
+    }
+
+    /// Cross-language anchor: pixel values must match the python
+    /// generator.  Regenerate with:
+    /// `python -c "from compile.datasets import synth_image;
+    ///  print(synth_image(42, 7, 3, 1, 12)[0, :2, :4])"`
+    #[test]
+    fn cross_language_anchor() {
+        let s = image(42, 7, 3, 1, 12);
+        // Values checked against the python implementation in CI (the
+        // integration test test_cross_language.py writes a fresh dump);
+        // here we pin basic invariants the formula guarantees.
+        assert_eq!(s.channels, 1);
+        assert_eq!(s.size, 12);
+        assert_eq!(s.label, 3);
+        assert!(s.image.iter().any(|&p| p > 0));
+    }
+}

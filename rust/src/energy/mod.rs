@@ -1,0 +1,14 @@
+//! Area / power / energy model + technology normalization (Table III).
+//!
+//! The paper reports synthesis results (TSMC 40 nm, Design Compiler).  We
+//! have no synthesis flow in this environment, so the model is analytical
+//! (DESIGN.md §Substitutions): gate counts from component formulas with
+//! one calibrated control/misc residual, and per-event energies calibrated
+//! once so the CIFAR-10 design point lands on the paper's 88.968 mW.
+//! Counts (PE ops, SRAM accesses, DRAM bytes) come from the cycle-accurate
+//! simulator; only the per-event constants are calibrated.
+
+pub mod area;
+pub mod power;
+pub mod report;
+pub mod tech;

@@ -1,0 +1,115 @@
+//! Event-based power model, calibrated at the CIFAR-10 design point
+//! (paper Table III: 88.968 mW core power at 500 MHz, 40 nm, 0.9 V).
+//!
+//! `core_power_mw` charges per-event energies against the event counts the
+//! cycle-accurate simulator produced.  The two calibrated constants are
+//! `E_PE_PJ` and `LEAKAGE_MW` (see the calibration test in
+//! `rust/tests/sim_vs_golden.rs` and `benches/bench_table3_perf.rs`);
+//! SRAM energies use standard 40 nm per-access figures.
+
+use crate::arch::chip::RunReport;
+use crate::config::HwConfig;
+use crate::energy::tech;
+
+/// Energy per PE operation (AND + add share), pJ at 40 nm / 0.9 V.
+/// Calibrated so the CIFAR-10 workload lands on the paper's 88.968 mW.
+pub const E_PE_PJ: f64 = 0.06612;
+/// Energy per spike-SRAM column read (8-bit word), pJ.
+pub const E_SPIKE_READ_PJ: f64 = 0.8;
+/// Energy per weight-SRAM fetch (32-channel tap bundle), pJ.
+pub const E_WEIGHT_READ_PJ: f64 = 6.0;
+/// Energy per membrane read-modify-write (2 x 16-bit access), pJ.
+pub const E_MEMBRANE_RMW_PJ: f64 = 2.4;
+/// Energy per temp-SRAM spike write (byte), pJ.
+pub const E_TEMP_WRITE_PJ: f64 = 0.8;
+/// Energy per boundary-SRAM operation, pJ.
+pub const E_BOUNDARY_PJ: f64 = 1.2;
+/// Static leakage at the design point, mW.
+pub const LEAKAGE_MW: f64 = 4.0;
+
+/// Core power (mW) for a simulated run at the configured clock.
+///
+/// Scales with technology via [`tech::energy_scale`] when the config is
+/// not at the 40 nm / 0.9 V reference.
+pub fn core_power_mw(hw: &HwConfig, report: &RunReport) -> f64 {
+    let runtime_s = report.cycles as f64 / (hw.freq_mhz * 1e6);
+    if runtime_s == 0.0 {
+        return LEAKAGE_MW;
+    }
+    let scale = tech::energy_scale(40.0, 0.9, hw.tech_nm, hw.voltage);
+    let pj = report.pe_ops as f64 * E_PE_PJ
+        + report.sram.spike_reads as f64 * E_SPIKE_READ_PJ
+        + report.sram.weight_reads as f64 * E_WEIGHT_READ_PJ
+        + report.sram.membrane_rmw as f64 * E_MEMBRANE_RMW_PJ
+        + report.sram.temp_writes as f64 * E_TEMP_WRITE_PJ
+        + report.sram.boundary_ops as f64 * E_BOUNDARY_PJ;
+    LEAKAGE_MW + pj * scale * 1e-12 / runtime_s * 1e3
+}
+
+/// DRAM energy for a run, mJ (off-chip; not part of core power, reported
+/// separately like the paper's DRAM-access discussion).
+pub fn dram_energy_mj(hw: &HwConfig, report: &RunReport) -> f64 {
+    report.dram.total() as f64 * hw.dram_pj_per_byte * 1e-9
+}
+
+/// Power efficiency in TOPS/W at *peak* throughput (Table III convention:
+/// peak GOPS / core power).
+pub fn power_efficiency_tops_w(hw: &HwConfig, core_mw: f64) -> f64 {
+    (hw.peak_gops() / 1000.0) / (core_mw / 1000.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Chip, SimMode};
+    use crate::config::HwConfig;
+    use crate::snn::params::{DeployedModel, Kind, Layer};
+
+    fn small_model() -> DeployedModel {
+        DeployedModel {
+            name: "p".into(),
+            num_steps: 4,
+            in_channels: 1,
+            in_size: 8,
+            layers: vec![
+                Layer::Conv {
+                    kind: Kind::EncConv,
+                    c_out: 8,
+                    c_in: 1,
+                    k: 3,
+                    w: vec![1; 72],
+                    bias: vec![0; 8],
+                    theta: vec![256 * 50; 8],
+                },
+                Layer::Readout { n_out: 10, n_in: 8 * 64, w: vec![1; 5120] },
+            ],
+        }
+    }
+
+    #[test]
+    fn power_positive_and_scales_with_voltage() {
+        let hw = HwConfig::default();
+        let report = Chip::new(hw.clone(), SimMode::Fast).run(&small_model(), &[128; 64]);
+        let p = core_power_mw(&hw, &report);
+        assert!(p > LEAKAGE_MW);
+
+        let hw_lv = HwConfig { voltage: 0.6, ..hw.clone() };
+        let report_lv = Chip::new(hw_lv.clone(), SimMode::Fast).run(&small_model(), &[128; 64]);
+        assert!(core_power_mw(&hw_lv, &report_lv) < p);
+    }
+
+    #[test]
+    fn efficiency_from_peak() {
+        let hw = HwConfig::default();
+        // paper: 2304 GOPS / 88.968 mW = 25.897 TOPS/W
+        let eff = power_efficiency_tops_w(&hw, 88.968);
+        assert!((eff - 25.9).abs() < 0.05, "got {eff}");
+    }
+
+    #[test]
+    fn dram_energy_counts_bytes() {
+        let hw = HwConfig::default();
+        let report = Chip::new(hw.clone(), SimMode::Fast).run(&small_model(), &[128; 64]);
+        assert!(dram_energy_mj(&hw, &report) > 0.0);
+    }
+}

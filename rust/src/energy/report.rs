@@ -1,0 +1,139 @@
+//! Table III row construction and rendering.
+
+use crate::arch::chip::RunReport;
+use crate::config::HwConfig;
+use crate::energy::{area, power, tech};
+
+/// One column of Table III (a design under comparison).
+#[derive(Debug, Clone)]
+pub struct DesignRow {
+    pub name: String,
+    pub tech_nm: f64,
+    pub voltage: Option<f64>,
+    pub freq_mhz: Option<f64>,
+    pub reconfigurable: String,
+    pub precision: String,
+    pub pe_number: usize,
+    pub sram_kb: f64,
+    pub peak_gops: f64,
+    pub area_kge: Option<f64>,
+    pub area_eff: Option<f64>,
+    pub area_eff_norm: Option<f64>,
+    pub core_power_mw: Option<f64>,
+    pub power_eff_tops_w: Option<f64>,
+    pub power_eff_norm: Option<f64>,
+}
+
+/// Build the "This work" column from a simulated run.
+pub fn this_work(hw: &HwConfig, report: &RunReport) -> DesignRow {
+    let area_kge = area::logic_area(hw).total();
+    let core_mw = power::core_power_mw(hw, report);
+    let eff = power::power_efficiency_tops_w(hw, core_mw);
+    DesignRow {
+        name: "This work".into(),
+        tech_nm: hw.tech_nm,
+        voltage: Some(hw.voltage),
+        freq_mhz: Some(hw.freq_mhz),
+        reconfigurable: "Yes".into(),
+        precision: "binary".into(),
+        pe_number: hw.total_pes(),
+        sram_kb: hw.total_sram_kb(),
+        peak_gops: hw.peak_gops(),
+        area_kge: Some(area_kge),
+        area_eff: Some(hw.peak_gops() / area_kge),
+        area_eff_norm: Some(tech::area_eff_to_40nm(hw.peak_gops() / area_kge, hw.tech_nm)),
+        core_power_mw: Some(core_mw),
+        power_eff_tops_w: Some(eff),
+        power_eff_norm: Some(tech::power_eff_to_40nm_0v9(eff, hw.tech_nm, hw.voltage)),
+    }
+}
+
+fn fmt_opt(v: Option<f64>, digits: usize) -> String {
+    v.map(|x| format!("{x:.*}", digits)).unwrap_or_else(|| "-".into())
+}
+
+/// Render rows as the paper's Table III layout (designs as columns).
+pub fn render_table3(rows: &[DesignRow]) -> String {
+    let mut out = String::new();
+    let header: Vec<String> = rows.iter().map(|r| r.name.clone()).collect();
+    let lines: Vec<(&str, Box<dyn Fn(&DesignRow) -> String>)> = vec![
+        ("Technology (nm)", Box::new(|r: &DesignRow| format!("{:.0}", r.tech_nm))),
+        ("Voltage (V)", Box::new(|r| fmt_opt(r.voltage, 1))),
+        ("Frequency (MHz)", Box::new(|r| fmt_opt(r.freq_mhz, 0))),
+        ("Reconfigurable", Box::new(|r| r.reconfigurable.clone())),
+        ("Precision", Box::new(|r| r.precision.clone())),
+        ("PE number", Box::new(|r| format!("{}", r.pe_number))),
+        ("SRAM (KB)", Box::new(|r| format!("{:.4}", r.sram_kb))),
+        ("Peak Throughput (GOPS)", Box::new(|r| format!("{:.1}", r.peak_gops))),
+        ("Area (KGE, logic)", Box::new(|r| fmt_opt(r.area_kge, 2))),
+        ("Area eff. (GOPS/KGE)", Box::new(|r| fmt_opt(r.area_eff, 3))),
+        ("Area eff. (norm. 40nm)", Box::new(|r| fmt_opt(r.area_eff_norm, 3))),
+        ("Core power (mW)", Box::new(|r| fmt_opt(r.core_power_mw, 3))),
+        ("Power eff. (TOPS/W)", Box::new(|r| fmt_opt(r.power_eff_tops_w, 2))),
+        ("Power eff. (norm.)", Box::new(|r| fmt_opt(r.power_eff_norm, 2))),
+    ];
+
+    out.push_str(&format!("{:<26}", ""));
+    for h in &header {
+        out.push_str(&format!("{h:>18}"));
+    }
+    out.push('\n');
+    for (label, f) in &lines {
+        out.push_str(&format!("{label:<26}"));
+        for r in rows {
+            out.push_str(&format!("{:>18}", f(r)));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Chip, SimMode};
+    use crate::snn::params::{DeployedModel, Kind, Layer};
+
+    fn tiny() -> DeployedModel {
+        DeployedModel {
+            name: "t".into(),
+            num_steps: 2,
+            in_channels: 1,
+            in_size: 8,
+            layers: vec![
+                Layer::Conv {
+                    kind: Kind::EncConv,
+                    c_out: 4,
+                    c_in: 1,
+                    k: 3,
+                    w: vec![1; 36],
+                    bias: vec![0; 4],
+                    theta: vec![256; 4],
+                },
+                Layer::Readout { n_out: 10, n_in: 256, w: vec![-1; 2560] },
+            ],
+        }
+    }
+
+    #[test]
+    fn this_work_row_sane() {
+        let hw = HwConfig::default();
+        let r = Chip::new(hw.clone(), SimMode::Fast).run(&tiny(), &[255; 64]);
+        let row = this_work(&hw, &r);
+        assert_eq!(row.pe_number, 2304);
+        assert!((row.peak_gops - 2304.0).abs() < 1e-9);
+        assert!(row.core_power_mw.unwrap() > 0.0);
+        // at the reference node the normalized figures equal the raw ones
+        assert!((row.area_eff.unwrap() - row.area_eff_norm.unwrap()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let hw = HwConfig::default();
+        let r = Chip::new(hw.clone(), SimMode::Fast).run(&tiny(), &[255; 64]);
+        let table = render_table3(&[this_work(&hw, &r)]);
+        for label in ["Technology", "PE number", "Power eff."] {
+            assert!(table.contains(label), "missing {label}");
+        }
+    }
+}

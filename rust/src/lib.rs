@@ -1,0 +1,44 @@
+//! # VSA — Reconfigurable Vectorwise Spiking Neural Network Accelerator
+//!
+//! Full-system reproduction of Lien, Hsu & Chang, *"VSA: Reconfigurable
+//! Vectorwise Spiking Neural Network Accelerator"*, ISCAS 2021
+//! (10.1109/ISCAS51556.2021.9401181), as a three-layer Rust + JAX + Pallas
+//! stack.  This crate is Layer 3: everything that runs at inference time.
+//!
+//! ## Crate map
+//!
+//! * [`util`] — bit vectors, deterministic PRNG (cross-language with the
+//!   python compile path), statistics.
+//! * [`config`] — hand-rolled JSON parser, hardware configuration, and the
+//!   Table-I model presets.
+//! * [`data`] — synthetic MNIST/CIFAR-like datasets (bit-identical to
+//!   `python/compile/datasets.py`) and an IDX loader for real data.
+//! * [`snn`] — the bit-exact functional golden model of the deployed
+//!   binary-weight spiking network (integer semantics; the contract shared
+//!   with the JAX model and the chip).
+//! * [`arch`] — the cycle-accurate VSA chip simulator: vectorwise PE
+//!   blocks, three-stage accumulator, IF neuron unit, SRAM/DRAM hierarchy,
+//!   tick batching, two-layer fusion, encoding bitplane mode.
+//! * [`energy`] — area (KGE) / power / energy model and the technology
+//!   normalization used by paper Table III.
+//! * [`baselines`] — SpinalFlow-style and BW-SNN-style comparison models.
+//! * [`runtime`] — PJRT executor: loads `artifacts/*.hlo.txt` produced by
+//!   the python AOT path and runs them natively (python never runs at
+//!   request time).
+//! * [`coordinator`] — the serving layer: request queue, batcher, worker
+//!   pool, metrics and backpressure.
+//! * [`testing`] — a miniature property-based testing harness (the
+//!   offline environment has no proptest).
+
+pub mod arch;
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod metrics;
+pub mod runtime;
+pub mod snn;
+pub mod testing;
+pub mod util;

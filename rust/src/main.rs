@@ -1,0 +1,359 @@
+//! `vsa` — the launcher for the VSA reproduction.
+//!
+//! ```text
+//! vsa models                                   # Table I structures
+//! vsa simulate --model cifar10 [--mode fast|exact] [--no-fusion]
+//! vsa table3   [--model cifar10]               # Table III report
+//! vsa fusion   [--model cifar10]               # §IV-B DRAM study
+//! vsa infer    --engine golden|pjrt|chip --model mnist --count 8
+//! vsa serve    --model mnist --requests 64 --workers 2 --batch 8
+//! vsa selftest                                 # cross-layer consistency
+//! ```
+
+use std::time::Instant;
+
+use vsa::arch::{Chip, SimMode};
+use vsa::baselines::published;
+use vsa::cli::Args;
+use vsa::config::{models, HwConfig};
+use vsa::coordinator::{
+    ChipEngine, Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine, PjrtEngine,
+};
+use vsa::data::synth;
+use vsa::energy::{power, report};
+use vsa::runtime::{Manifest, PjrtExecutor};
+use vsa::snn::Network;
+use vsa::util::stats::argmax;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "models" => cmd_models(),
+        "simulate" => cmd_simulate(&args),
+        "table3" => cmd_table3(&args),
+        "fusion" => cmd_fusion(&args),
+        "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
+        "selftest" => cmd_selftest(&args),
+        "" | "help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown command '{other}'\n{HELP}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+vsa — Reconfigurable Vectorwise SNN Accelerator (ISCAS'21) reproduction
+
+commands:
+  models      print the Table I network structures and op counts
+  simulate    run the cycle-accurate chip simulator on one inference
+  table3      regenerate the paper's Table III comparison
+  fusion      regenerate the §IV-B layer-fusion DRAM study
+  infer       classify synthetic samples (golden | chip | pjrt engines)
+  serve       run the serving coordinator demo
+  selftest    cross-check golden model, simulator and PJRT runtime
+
+common flags: --model tiny|mnist|cifar10  --artifacts DIR  --steps T
+";
+
+fn load_network(args: &Args) -> anyhow::Result<(String, Network)> {
+    let model = args.get("model", "mnist");
+    let dir = args.get("artifacts", "artifacts");
+    let manifest = Manifest::load(&dir)?;
+    let entry = manifest
+        .find(&model, usize::MAX)
+        .ok_or_else(|| anyhow::anyhow!("model '{model}' not in manifest"))?;
+    let net = Network::from_vsaw_file(&manifest.weights_path(entry))?;
+    Ok((model, net))
+}
+
+fn hw_from_args(args: &Args) -> anyhow::Result<HwConfig> {
+    let mut hw = match args.get_opt("hw-config") {
+        Some(path) => HwConfig::from_file(path).map_err(|e| anyhow::anyhow!(e))?,
+        None => HwConfig::default(),
+    };
+    if args.has("no-fusion") {
+        hw.layer_fusion = false;
+    }
+    Ok(hw)
+}
+
+fn cmd_models() -> anyhow::Result<()> {
+    for name in ["mnist", "cifar10", "tiny"] {
+        let spec = models::by_name(name, 8).unwrap();
+        println!("== {} (T = {})", spec.name, spec.num_steps);
+        let shapes = spec.feature_shapes();
+        for (ly, shape) in spec.layers.iter().zip(&shapes) {
+            println!("  {:?} c_out={} <- input {:?}", ly.kind, ly.c_out, shape);
+        }
+        println!(
+            "  weights: {:.1} Kbit   MACs/inference: {:.1} M\n",
+            spec.weight_bits() as f64 / 1000.0,
+            spec.macs_per_inference() as f64 / 1e6
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let (model, net) = load_network(args)?;
+    let hw = hw_from_args(args)?;
+    let mode = match args.get("mode", "fast").as_str() {
+        "exact" => SimMode::Exact,
+        _ => SimMode::Fast,
+    };
+    let seed = args.get_u64("seed", 7)?;
+    let sample = &synth::for_model(&model, seed, 0, 1)[0];
+
+    let t0 = Instant::now();
+    let chip = Chip::new(hw.clone(), mode);
+    let (r, trace) = if args.has("trace") || args.get_opt("trace-out").is_some() {
+        let (r, t) = chip.run_traced(&net.model, &sample.image);
+        (r, Some(t))
+    } else {
+        (chip.run(&net.model, &sample.image), None)
+    };
+    let wall = t0.elapsed();
+
+    println!("model={model} mode={mode:?} fusion={}", hw.layer_fusion);
+    println!(
+        "cycles={}  chip-latency={:.1} us @ {:.0} MHz  (sim wall time {:.1} ms)",
+        r.cycles,
+        r.latency_us,
+        hw.freq_mhz,
+        wall.as_secs_f64() * 1e3
+    );
+    println!(
+        "PE ops={}  effective={:.1} GOPS (peak {:.0})  utilization={:.1}%",
+        r.pe_ops,
+        r.gops,
+        hw.peak_gops(),
+        r.utilization * 100.0
+    );
+    println!("DRAM traffic:\n{}", r.dram.report());
+    println!("predicted class = {}", argmax(&r.logits));
+    println!("\nper-layer:");
+    for (i, l) in r.layers.iter().enumerate() {
+        println!(
+            "  L{i:<2} {:?}: cycles={} util={:.1}% spikes={}",
+            l.kind,
+            l.cycles,
+            l.utilization * 100.0,
+            l.spikes_emitted
+        );
+    }
+    if let Some(trace) = trace {
+        if let Some(path) = args.get_opt("trace-out") {
+            std::fs::write(path, trace.to_tsv())?;
+            println!("\ntrace written to {path} ({} events)", trace.len());
+        } else {
+            println!("\nexecution trace:\n{}", trace.render());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table3(args: &Args) -> anyhow::Result<()> {
+    let (model, net) = load_network(args)?;
+    let hw = hw_from_args(args)?;
+    let chip = Chip::new(hw.clone(), SimMode::Fast);
+    let sample = &synth::for_model(&model, 7, 0, 1)[0];
+    let r = chip.run(&net.model, &sample.image);
+
+    let rows = vec![
+        report::this_work(&hw, &r),
+        published::spinalflow_row(),
+        published::bwsnn_row(),
+    ];
+    println!("Table III — performance summary (workload: {model})\n");
+    print!("{}", report::render_table3(&rows));
+    println!(
+        "\nmeasured on {model}: {} cycles, {:.1} us/inference, core power {:.3} mW",
+        r.cycles,
+        r.latency_us,
+        power::core_power_mw(&hw, &r)
+    );
+    Ok(())
+}
+
+fn cmd_fusion(args: &Args) -> anyhow::Result<()> {
+    let (model, net) = load_network(args)?;
+    let sample = &synth::for_model(&model, 7, 0, 1)[0];
+
+    let hw_on = HwConfig::default();
+    let hw_off = HwConfig { layer_fusion: false, ..HwConfig::default() };
+    let on = Chip::new(hw_on, SimMode::Fast).run(&net.model, &sample.image);
+    let off = Chip::new(hw_off, SimMode::Fast).run(&net.model, &sample.image);
+
+    let on_kb = on.dram.total() as f64 / 1024.0;
+    let off_kb = off.dram.total() as f64 / 1024.0;
+    println!("Layer-fusion DRAM study ({model}, T={})", net.model.num_steps);
+    println!("  without fusion: {off_kb:.3} KB");
+    println!("  with fusion:    {on_kb:.3} KB");
+    println!("  reduction:      {:.1}%", (1.0 - on_kb / off_kb) * 100.0);
+    println!("  paper (CIFAR-10): 1450.172 KB -> 938.172 KB (-35.3%)");
+    println!("\nwith-fusion breakdown:\n{}", on.dram.report());
+    println!("\nwithout-fusion breakdown:\n{}", off.dram.report());
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> anyhow::Result<()> {
+    let engine_kind = args.get("engine", "golden");
+    let model = args.get("model", "mnist");
+    let count = args.get_usize("count", 8)?;
+    let dir = args.get("artifacts", "artifacts");
+    let manifest = Manifest::load(&dir)?;
+    let entry = manifest
+        .find(&model, count)
+        .ok_or_else(|| anyhow::anyhow!("model '{model}' not in manifest"))?;
+    let net = Network::from_vsaw_file(&manifest.weights_path(entry))?;
+
+    let mut engine: Box<dyn InferenceEngine> = match engine_kind.as_str() {
+        "pjrt" => {
+            let exe = PjrtExecutor::load(
+                &manifest.hlo_path(entry),
+                entry.batch,
+                entry.in_channels,
+                entry.in_size,
+            )?;
+            println!("PJRT platform: {}", exe.platform());
+            Box::new(PjrtEngine::new(exe))
+        }
+        "chip" => Box::new(ChipEngine::new(HwConfig::default(), net, entry.batch)),
+        _ => Box::new(GoldenEngine::new(net, entry.batch)),
+    };
+
+    let samples = synth::for_model(&model, 11, 0, count);
+    let mut correct = 0usize;
+    let t0 = Instant::now();
+    for chunk in samples.chunks(engine.batch_size()) {
+        let images: Vec<Vec<u8>> = chunk.iter().map(|s| s.image.clone()).collect();
+        let logits = engine.infer(&images)?;
+        for (s, l) in chunk.iter().zip(&logits) {
+            let pred = argmax(l);
+            if pred == s.label {
+                correct += 1;
+            }
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{}: {count} samples in {:.1} ms ({:.1} inf/s), accuracy {}/{count}",
+        engine.name(),
+        dt.as_secs_f64() * 1e3,
+        count as f64 / dt.as_secs_f64(),
+        correct
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let engine_kind = args.get("engine", "golden");
+    let model = args.get("model", "mnist");
+    let requests = args.get_usize("requests", 64)?;
+    let workers = args.get_usize("workers", 2)?;
+    let batch = args.get_usize("batch", 8)?;
+    let dir = args.get("artifacts", "artifacts");
+
+    let manifest = Manifest::load(&dir)?;
+    let entry = manifest
+        .find(&model, batch)
+        .ok_or_else(|| anyhow::anyhow!("model '{model}' not in manifest"))?
+        .clone();
+    let weights_path = manifest.weights_path(&entry);
+    let hlo_path = manifest.hlo_path(&entry);
+
+    let cfg = CoordinatorConfig {
+        workers,
+        max_batch: batch,
+        ..CoordinatorConfig::default()
+    };
+    let ek = engine_kind.clone();
+    let coord = Coordinator::start(cfg, move |w| -> Box<dyn InferenceEngine> {
+        let net = Network::from_vsaw_file(&weights_path).expect("weights load");
+        match ek.as_str() {
+            "pjrt" => {
+                let exe = PjrtExecutor::load(
+                    &hlo_path,
+                    entry.batch,
+                    entry.in_channels,
+                    entry.in_size,
+                )
+                .expect("artifact compiles");
+                if w == 0 {
+                    println!("PJRT platform: {}", exe.platform());
+                }
+                Box::new(PjrtEngine::new(exe))
+            }
+            "chip" => Box::new(ChipEngine::new(HwConfig::default(), net, batch)),
+            _ => Box::new(GoldenEngine::new(net, batch)),
+        }
+    });
+
+    let samples = synth::for_model(&model, 23, 0, requests);
+    let receivers: Vec<_> = samples
+        .iter()
+        .map(|s| coord.submit(s.image.clone()))
+        .collect::<Result<_, _>>()?;
+    let mut correct = 0usize;
+    for (rx, s) in receivers.into_iter().zip(&samples) {
+        let res = rx.recv()?;
+        if argmax(&res.logits) == s.label {
+            correct += 1;
+        }
+    }
+    let stats = coord.shutdown();
+    println!(
+        "served {} requests on {workers} x {engine_kind} workers (batch <= {batch})",
+        stats.completed
+    );
+    println!(
+        "  throughput {:.1} req/s   mean batch {:.2}",
+        stats.throughput_rps, stats.mean_batch
+    );
+    println!(
+        "  latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}",
+        stats.latency_ms_p50, stats.latency_ms_p95, stats.latency_ms_p99
+    );
+    println!("  accuracy {correct}/{requests}");
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get("artifacts", "artifacts");
+    let manifest = Manifest::load(&dir)?;
+    for name in ["tiny", "mnist"] {
+        let Some(entry) = manifest.find(name, 1) else { continue };
+        let net = Network::from_vsaw_file(&manifest.weights_path(entry))?;
+        let sample = &synth::for_model(name, 99, 0, 1)[0];
+        let golden = net.infer_u8(&sample.image);
+        let sim = Chip::new(HwConfig::default(), SimMode::Fast)
+            .run(&net.model, &sample.image)
+            .logits;
+        anyhow::ensure!(golden == sim, "{name}: sim != golden");
+        let exe = PjrtExecutor::load(
+            &manifest.hlo_path(entry),
+            entry.batch,
+            entry.in_channels,
+            entry.in_size,
+        )?;
+        let mut engine = PjrtEngine::new(exe);
+        let pjrt = engine.infer(&[sample.image.clone()])?;
+        anyhow::ensure!(golden == pjrt[0], "{name}: pjrt != golden");
+        println!("{name}: golden == chip-sim == pjrt  ({golden:?})");
+    }
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load and execute the AOT artifacts from rust.
+//!
+//! `python/compile/aot.py` lowers the deployed JAX/Pallas graphs to HLO
+//! text at build time; this module compiles them on the PJRT CPU client
+//! (`xla` crate) and executes them natively.  Python never runs on the
+//! request path — the `vsa` binary is self-contained once `artifacts/`
+//! exists.
+
+pub mod executor;
+pub mod registry;
+
+pub use executor::PjrtExecutor;
+pub use registry::{Manifest, ManifestEntry};

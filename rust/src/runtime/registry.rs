@@ -1,0 +1,127 @@
+//! Artifact registry: parse `artifacts/manifest.json` and locate the
+//! right HLO module / weight file for a (model, batch) request.
+
+use crate::config::json::Json;
+use anyhow::{Context, Result};
+
+/// One manifest entry (one compiled artifact).
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub hlo: String,
+    pub weights: String,
+    pub batch: usize,
+    pub num_steps: usize,
+    pub in_channels: usize,
+    pub in_size: usize,
+    pub num_classes: usize,
+    pub pallas: bool,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: String,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<Self> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path} (run `make artifacts`)"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let arr = v.as_arr().context("manifest must be a JSON array")?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(e.get(k)
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("manifest entry missing {k}"))?
+                    .to_string())
+            };
+            let get_usize = |k: &str| -> Result<usize> {
+                e.get(k)
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("manifest entry missing {k}"))
+            };
+            entries.push(ManifestEntry {
+                name: get_str("name")?,
+                hlo: get_str("hlo")?,
+                weights: get_str("weights")?,
+                batch: get_usize("batch")?,
+                num_steps: get_usize("num_steps")?,
+                in_channels: get_usize("in_channels")?,
+                in_size: get_usize("in_size")?,
+                num_classes: get_usize("num_classes")?,
+                pallas: e.get("pallas").and_then(Json::as_bool).unwrap_or(false),
+            });
+        }
+        Ok(Self { dir: dir.to_string(), entries })
+    }
+
+    /// Find the entry for `model` with the largest batch <= `want_batch`
+    /// (or the smallest batch if none fit).
+    pub fn find(&self, model: &str, want_batch: usize) -> Option<&ManifestEntry> {
+        let mut candidates: Vec<&ManifestEntry> =
+            self.entries.iter().filter(|e| e.name == model).collect();
+        candidates.sort_by_key(|e| e.batch);
+        candidates
+            .iter()
+            .rev()
+            .find(|e| e.batch <= want_batch)
+            .copied()
+            .or_else(|| candidates.first().copied())
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, e: &ManifestEntry) -> String {
+        format!("{}/{}", self.dir, e.hlo)
+    }
+
+    /// Absolute path of an entry's weight file.
+    pub fn weights_path(&self, e: &ManifestEntry) -> String {
+        format!("{}/{}", self.dir, e.weights)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &std::path::Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"[
+              {"name":"m","hlo":"m1.hlo.txt","weights":"m.vsaw","batch":1,
+               "num_steps":8,"in_channels":1,"in_size":28,"num_classes":10,"pallas":true},
+              {"name":"m","hlo":"m8.hlo.txt","weights":"m.vsaw","batch":8,
+               "num_steps":8,"in_channels":1,"in_size":28,"num_classes":10,"pallas":true}
+            ]"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn find_prefers_largest_fitting_batch() {
+        let dir = std::env::temp_dir().join("vsa_manifest_test");
+        write_manifest(&dir);
+        let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.find("m", 8).unwrap().batch, 8);
+        assert_eq!(m.find("m", 4).unwrap().batch, 1);
+        assert_eq!(m.find("m", 100).unwrap().batch, 8);
+        assert!(m.find("nope", 1).is_none());
+    }
+
+    #[test]
+    fn paths_join_dir() {
+        let dir = std::env::temp_dir().join("vsa_manifest_test2");
+        write_manifest(&dir);
+        let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+        let e = m.find("m", 1).unwrap();
+        assert!(m.hlo_path(e).ends_with("m1.hlo.txt"));
+        assert!(m.weights_path(e).ends_with("m.vsaw"));
+    }
+}

@@ -1,0 +1,338 @@
+//! Binary convolution primitives: a popcount-packed fast path and a naive
+//! reference.
+//!
+//! With 0/1 spikes `s` and +-1 weights `w`, the partial sum over a channel
+//! group is `sum = popcnt(s) - 2 * popcnt(s & w_neg)` where `w_neg` marks
+//! the -1 weights — exactly the chip's AND-gate + sign trick (§III-B:
+//! `o = {s & w, s}`) vectorized over 64 channels per word.
+
+use crate::snn::spikemap::SpikeMap;
+use crate::util::ceil_div;
+
+/// Pre-packed binary conv weights for the popcount fast path.
+#[derive(Debug, Clone)]
+pub struct PackedConv {
+    pub c_out: usize,
+    pub c_in: usize,
+    pub k: usize,
+    /// words per input-channel group = ceil(c_in / 64)
+    wpp: usize,
+    /// neg-mask words, indexed [(o * k + kh) * k + kw][word]
+    neg: Vec<u64>,
+}
+
+impl PackedConv {
+    /// Pack (o, i, kh, kw) +-1 weights (-1 becomes a set bit, the chip's
+    /// sign-bit storage).
+    pub fn pack(c_out: usize, c_in: usize, k: usize, w: &[i8]) -> Self {
+        assert_eq!(w.len(), c_out * c_in * k * k);
+        let wpp = ceil_div(c_in.max(1), 64);
+        let mut neg = vec![0u64; c_out * k * k * wpp];
+        for o in 0..c_out {
+            for i in 0..c_in {
+                for kh in 0..k {
+                    for kw in 0..k {
+                        if w[((o * c_in + i) * k + kh) * k + kw] < 0 {
+                            let tap = (o * k + kh) * k + kw;
+                            neg[tap * wpp + i / 64] |= 1u64 << (i % 64);
+                        }
+                    }
+                }
+            }
+        }
+        Self { c_out, c_in, k, wpp, neg }
+    }
+
+    /// Neg-mask words for (o, kh, kw).
+    #[inline]
+    pub fn neg_words(&self, o: usize, kh: usize, kw: usize) -> &[u64] {
+        let tap = (o * self.k + kh) * self.k + kw;
+        &self.neg[tap * self.wpp..(tap + 1) * self.wpp]
+    }
+
+    /// 'Same'-padded stride-1 conv of one spike map; output (c_out, H, W)
+    /// row-major i32.
+    ///
+    /// Optimized (EXPERIMENTS.md §Perf): the weight-independent
+    /// `popcnt(s)` term is reduced over all K x K taps **once** and shared
+    /// by every output channel, and the weight-dependent AND-popcount runs
+    /// tap-major over contiguous word slices so the `wpp`-word inner loop
+    /// vectorizes.
+    pub fn conv(&self, spikes: &SpikeMap) -> Vec<i32> {
+        assert_eq!(spikes.channels(), self.c_in, "channel mismatch");
+        assert_eq!(spikes.wpp(), self.wpp, "packing mismatch");
+        let (h, w) = (spikes.height(), spikes.width());
+        let pad = self.k / 2;
+        let wpp = self.wpp;
+        let words = spikes.raw_words();
+
+        // Per-pixel spike popcount.
+        let mut ones = vec![0i32; h * w];
+        for (i, one) in ones.iter_mut().enumerate() {
+            *one = words[i * wpp..(i + 1) * wpp]
+                .iter()
+                .map(|v| v.count_ones() as i32)
+                .sum();
+        }
+        // Tap-summed popcount — identical for every output channel: for
+        // each output pixel, the sum of `ones` over its valid taps.
+        let mut ones_sum = vec![0i32; h * w];
+        for kh in 0..self.k {
+            for kw in 0..self.k {
+                let dy = kh as isize - pad as isize;
+                let dx = kw as isize - pad as isize;
+                for y in 0..h {
+                    let ny = y as isize + dy;
+                    if ny < 0 || ny >= h as isize {
+                        continue;
+                    }
+                    let (x0, x1) = clip_range(dx, w);
+                    let src = (ny as usize * w) as isize + dx;
+                    for x in x0..x1 {
+                        ones_sum[y * w + x] += ones[(src + x as isize) as usize];
+                    }
+                }
+            }
+        }
+
+        let mut out = vec![0i32; self.c_out * h * w];
+        for o in 0..self.c_out {
+            let plane = &mut out[o * h * w..(o + 1) * h * w];
+            plane.copy_from_slice(&ones_sum);
+            for kh in 0..self.k {
+                let dy = kh as isize - pad as isize;
+                for kw in 0..self.k {
+                    let dx = kw as isize - pad as isize;
+                    let negw = self.neg_words(o, kh, kw);
+                    if negw.iter().all(|&v| v == 0) {
+                        continue; // all +1 weights for this tap
+                    }
+                    for y in 0..h {
+                        let ny = y as isize + dy;
+                        if ny < 0 || ny >= h as isize {
+                            continue;
+                        }
+                        let (x0, x1) = clip_range(dx, w);
+                        let row_base = ny as usize * w;
+                        let row = &mut plane[y * w..(y + 1) * w];
+                        for x in x0..x1 {
+                            let p = (row_base as isize + x as isize + dx) as usize * wpp;
+                            let pix = &words[p..p + wpp];
+                            let and_pop: u32 = pix
+                                .iter()
+                                .zip(negw)
+                                .map(|(a, b)| (a & b).count_ones())
+                                .sum();
+                            row[x] -= 2 * and_pop as i32;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Valid output-x range `[x0, x1)` for a tap shifted by `dx` on width `w`.
+#[inline]
+fn clip_range(dx: isize, w: usize) -> (usize, usize) {
+    let x0 = if dx < 0 { (-dx) as usize } else { 0 };
+    let x1 = if dx > 0 { w - dx as usize } else { w };
+    (x0, x1)
+}
+
+/// Naive reference conv over dense spikes — the test oracle for
+/// [`PackedConv::conv`].  Input `spikes` dense 0/1 (c_in, h, w) row-major.
+pub fn conv_naive(
+    spikes: &[u8],
+    c_in: usize,
+    h: usize,
+    w: usize,
+    weights: &[i8],
+    c_out: usize,
+    k: usize,
+) -> Vec<i32> {
+    let pad = k / 2;
+    let mut out = vec![0i32; c_out * h * w];
+    for o in 0..c_out {
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = 0i32;
+                for i in 0..c_in {
+                    for kh in 0..k {
+                        for kw in 0..k {
+                            let ny = y as isize + kh as isize - pad as isize;
+                            let nx = x as isize + kw as isize - pad as isize;
+                            if ny < 0 || ny >= h as isize || nx < 0 || nx >= w as isize {
+                                continue;
+                            }
+                            let s = spikes[(i * h + ny as usize) * w + nx as usize];
+                            if s != 0 {
+                                acc += weights[((o * c_in + i) * k + kh) * k + kw] as i32;
+                            }
+                        }
+                    }
+                }
+                out[(o * h + y) * w + x] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Multi-bit (encoding layer) conv: u8 image, +-1 weights, i32 psums.
+/// Small `c_in` (1 or 3), so a direct loop is fine.
+pub fn conv_multibit(
+    image: &[u8],
+    c_in: usize,
+    h: usize,
+    w: usize,
+    weights: &[i8],
+    c_out: usize,
+    k: usize,
+) -> Vec<i32> {
+    let pad = k / 2;
+    let mut out = vec![0i32; c_out * h * w];
+    for o in 0..c_out {
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = 0i32;
+                for i in 0..c_in {
+                    for kh in 0..k {
+                        let ny = y as isize + kh as isize - pad as isize;
+                        if ny < 0 || ny >= h as isize {
+                            continue;
+                        }
+                        for kw in 0..k {
+                            let nx = x as isize + kw as isize - pad as isize;
+                            if nx < 0 || nx >= w as isize {
+                                continue;
+                            }
+                            let p = image[(i * h + ny as usize) * w + nx as usize] as i32;
+                            acc += p * weights[((o * c_in + i) * k + kh) * k + kw] as i32;
+                        }
+                    }
+                }
+                out[(o * h + y) * w + x] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Packed binary matmul for fc layers: psum[o] = popcnt(s) - 2*popcnt(s & neg_o).
+#[derive(Debug, Clone)]
+pub struct PackedFc {
+    pub n_out: usize,
+    pub n_in: usize,
+    words: usize,
+    neg: Vec<u64>,
+}
+
+impl PackedFc {
+    /// Pack (n_out, n_in) +-1 weights.
+    pub fn pack(n_out: usize, n_in: usize, w: &[i8]) -> Self {
+        assert_eq!(w.len(), n_out * n_in);
+        let words = ceil_div(n_in.max(1), 64);
+        let mut neg = vec![0u64; n_out * words];
+        for o in 0..n_out {
+            for i in 0..n_in {
+                if w[o * n_in + i] < 0 {
+                    neg[o * words + i / 64] |= 1u64 << (i % 64);
+                }
+            }
+        }
+        Self { n_out, n_in, words, neg }
+    }
+
+    /// psums for one time step of flat spikes (packed words, C-major order).
+    pub fn matvec(&self, spike_words: &[u64]) -> Vec<i32> {
+        assert_eq!(spike_words.len(), self.words);
+        let total: i32 = spike_words.iter().map(|w| w.count_ones() as i32).sum();
+        (0..self.n_out)
+            .map(|o| {
+                let neg = &self.neg[o * self.words..(o + 1) * self.words];
+                let and_pop: i32 = spike_words
+                    .iter()
+                    .zip(neg)
+                    .map(|(s, n)| (s & n).count_ones() as i32)
+                    .sum();
+                total - 2 * and_pop
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn random_case(rng: &mut SplitMix64, c_in: usize, c_out: usize, hw: usize, k: usize) {
+        let dense: Vec<u8> = (0..c_in * hw * hw).map(|_| (rng.next_below(2)) as u8).collect();
+        let weights: Vec<i8> = (0..c_out * c_in * k * k)
+            .map(|_| if rng.next_below(2) == 1 { 1 } else { -1 })
+            .collect();
+        let mut sm = SpikeMap::zeros(c_in, hw, hw);
+        for c in 0..c_in {
+            for y in 0..hw {
+                for x in 0..hw {
+                    sm.set(c, y, x, dense[(c * hw + y) * hw + x] == 1);
+                }
+            }
+        }
+        let packed = PackedConv::pack(c_out, c_in, k, &weights);
+        let fast = packed.conv(&sm);
+        let naive = conv_naive(&dense, c_in, hw, hw, &weights, c_out, k);
+        assert_eq!(fast, naive);
+    }
+
+    #[test]
+    fn packed_conv_matches_naive() {
+        let mut rng = SplitMix64::new(11);
+        random_case(&mut rng, 1, 1, 5, 3);
+        random_case(&mut rng, 3, 8, 6, 3);
+        random_case(&mut rng, 64, 16, 7, 3);
+        random_case(&mut rng, 65, 4, 5, 3); // crosses the word boundary
+        random_case(&mut rng, 128, 8, 4, 1);
+        random_case(&mut rng, 16, 8, 8, 5);
+    }
+
+    #[test]
+    fn conv_multibit_all_plus_one_sums_window() {
+        // 1x3x3 image, one +1 3x3 filter: center output = sum of all pixels.
+        let img: Vec<u8> = (1..=9).collect();
+        let w = vec![1i8; 9];
+        let out = conv_multibit(&img, 1, 3, 3, &w, 1, 3);
+        assert_eq!(out[(0 * 3 + 1) * 3 + 1], 45);
+        // corner (0,0): window covers pixels (0..2, 0..2) = 1+2+4+5 = 12
+        assert_eq!(out[0], 12);
+    }
+
+    #[test]
+    fn packed_fc_matches_naive() {
+        let mut rng = SplitMix64::new(13);
+        for &(n_in, n_out) in &[(10usize, 4usize), (64, 10), (100, 3), (130, 7)] {
+            let spikes: Vec<u8> = (0..n_in).map(|_| rng.next_below(2) as u8).collect();
+            let w: Vec<i8> = (0..n_out * n_in)
+                .map(|_| if rng.next_below(2) == 1 { 1 } else { -1 })
+                .collect();
+            let mut words = vec![0u64; n_in.div_ceil(64)];
+            for (i, &s) in spikes.iter().enumerate() {
+                if s == 1 {
+                    words[i / 64] |= 1 << (i % 64);
+                }
+            }
+            let packed = PackedFc::pack(n_out, n_in, &w);
+            let fast = packed.matvec(&words);
+            let naive: Vec<i32> = (0..n_out)
+                .map(|o| {
+                    (0..n_in)
+                        .map(|i| spikes[i] as i32 * w[o * n_in + i] as i32)
+                        .sum()
+                })
+                .collect();
+            assert_eq!(fast, naive);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Functional golden model of the deployed binary-weight spiking network.
+//!
+//! Integer-exact twin of `python/compile/model.py::forward_deployed` (and
+//! therefore of the AOT-compiled HLO modules): same spikes, same membrane
+//! residues, same logits, on the same VSAW weights.  The cycle-accurate
+//! simulator in [`crate::arch`] is verified spike-for-spike against this
+//! model.
+//!
+//! ## Numerical contract (see python/compile/kernels/ref.py)
+//!
+//! * weights are +-1 (stored as i8);
+//! * spikes are 0/1;
+//! * IF-BN bias/theta are integers premultiplied by
+//!   [`crate::util::FIXED_POINT`], so membrane arithmetic is
+//!   `V += FIXED_POINT * conv_out - bias;  fire when V >= theta` with a
+//!   hard reset (`V = 0`) after each fire;
+//! * the encoding layer convolves the multi-bit image **once** and
+//!   re-accumulates the same psum every time step (paper §III-F);
+//! * the readout layer accumulates raw (unscaled) psums into the logits.
+
+pub mod conv;
+pub mod network;
+pub mod params;
+pub mod spikemap;
+
+pub use network::Network;
+pub use spikemap::SpikeMap;

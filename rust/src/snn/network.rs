@@ -1,0 +1,310 @@
+//! The golden functional network: integer-exact deployed inference.
+
+use crate::snn::conv::{conv_multibit, PackedConv, PackedFc};
+use crate::snn::params::{DeployedModel, Kind, Layer};
+use crate::snn::spikemap::SpikeMap;
+use crate::util::FIXED_POINT;
+
+/// A prepared (weight-packed) layer ready for inference.
+enum Prepared {
+    EncConv {
+        c_out: usize,
+        c_in: usize,
+        k: usize,
+        w: Vec<i8>,
+        bias: Vec<i32>,
+        theta: Vec<i32>,
+    },
+    Conv {
+        packed: PackedConv,
+        bias: Vec<i32>,
+        theta: Vec<i32>,
+    },
+    MaxPool,
+    Fc {
+        packed: PackedFc,
+        bias: Vec<i32>,
+        theta: Vec<i32>,
+    },
+    Readout {
+        packed: PackedFc,
+    },
+}
+
+/// Per-layer spike trains and membrane residues, for simulator cross-checks.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// For each spiking layer (enc/conv/pool/fc): the (T) spike maps it
+    /// *emitted*, in network order.
+    pub spike_trains: Vec<Vec<SpikeMap>>,
+    /// Residual membrane after the last time step for each firing layer
+    /// (row-major (C, H, W), or (N) for fc), in network order.
+    pub residues: Vec<Vec<i32>>,
+}
+
+/// The bit-exact golden model of a deployed VSA network.
+pub struct Network {
+    pub model: DeployedModel,
+    prepared: Vec<Prepared>,
+}
+
+impl Network {
+    /// Build from parsed VSAW parameters (packs weights for the popcount
+    /// fast path once, like the chip loading its weight SRAM).
+    pub fn new(model: DeployedModel) -> Self {
+        let prepared = model
+            .layers
+            .iter()
+            .map(|ly| match ly {
+                Layer::Conv { kind: Kind::EncConv, c_out, c_in, k, w, bias, theta } => {
+                    Prepared::EncConv {
+                        c_out: *c_out,
+                        c_in: *c_in,
+                        k: *k,
+                        w: w.clone(),
+                        bias: bias.clone(),
+                        theta: theta.clone(),
+                    }
+                }
+                Layer::Conv { c_out, c_in, k, w, bias, theta, .. } => Prepared::Conv {
+                    packed: PackedConv::pack(*c_out, *c_in, *k, w),
+                    bias: bias.clone(),
+                    theta: theta.clone(),
+                },
+                Layer::MaxPool => Prepared::MaxPool,
+                Layer::Fc { n_out, n_in, w, bias, theta } => Prepared::Fc {
+                    packed: PackedFc::pack(*n_out, *n_in, w),
+                    bias: bias.clone(),
+                    theta: theta.clone(),
+                },
+                Layer::Readout { n_out, n_in, w } => Prepared::Readout {
+                    packed: PackedFc::pack(*n_out, *n_in, w),
+                },
+            })
+            .collect();
+        Self { model, prepared }
+    }
+
+    /// Load a VSAW file and prepare it.
+    pub fn from_vsaw_file(path: &str) -> Result<Self, crate::snn::params::ParseError> {
+        Ok(Self::new(DeployedModel::from_file(path)?))
+    }
+
+    /// Inference on a raw u8 CHW image; returns the 10 integer logits.
+    pub fn infer_u8(&self, image: &[u8]) -> Vec<i64> {
+        self.run(image, None)
+    }
+
+    /// Inference capturing every intermediate spike train + residue.
+    pub fn infer_traced(&self, image: &[u8]) -> (Vec<i64>, Trace) {
+        let mut trace = Trace::default();
+        let logits = self.run(image, Some(&mut trace));
+        (logits, trace)
+    }
+
+    /// IF dynamics over per-step psums: `V += FP * psum - bias`, fire at
+    /// `V >= theta`, hard reset.  Returns (spikes per step, final residue).
+    fn if_fire(
+        psums_per_t: &[Vec<i32>],
+        bias: &[i32],
+        theta: &[i32],
+        c: usize,
+        hw: usize,
+    ) -> (Vec<Vec<bool>>, Vec<i32>) {
+        let n = c * hw;
+        let mut v = vec![0i32; n];
+        let mut spikes = Vec::with_capacity(psums_per_t.len());
+        for psum in psums_per_t {
+            debug_assert_eq!(psum.len(), n);
+            let mut fired = vec![false; n];
+            for ch in 0..c {
+                let (b, th) = (bias[ch], theta[ch]);
+                for i in ch * hw..(ch + 1) * hw {
+                    let pre = v[i] + FIXED_POINT * psum[i] - b;
+                    if pre >= th {
+                        fired[i] = true;
+                        v[i] = 0;
+                    } else {
+                        v[i] = pre;
+                    }
+                }
+            }
+            spikes.push(fired);
+        }
+        (spikes, v)
+    }
+
+    fn run(&self, image: &[u8], mut trace: Option<&mut Trace>) -> Vec<i64> {
+        let t_steps = self.model.num_steps;
+        let (mut h, mut w) = (self.model.in_size, self.model.in_size);
+        assert_eq!(
+            image.len(),
+            self.model.in_channels * h * w,
+            "image geometry mismatch"
+        );
+
+        // spikes[t] is the current inter-layer spike train.
+        let mut spikes: Vec<SpikeMap> = Vec::new();
+
+        for prep in &self.prepared {
+            match prep {
+                Prepared::EncConv { c_out, c_in, k, w: wts, bias, theta } => {
+                    // Conv once, accumulate the same psum every step (§III-F).
+                    let psum = conv_multibit(image, *c_in, h, w, wts, *c_out, *k);
+                    let psums: Vec<Vec<i32>> = (0..t_steps).map(|_| psum.clone()).collect();
+                    let (fired, residue) = Self::if_fire(&psums, bias, theta, *c_out, h * w);
+                    spikes = fired
+                        .iter()
+                        .map(|f| bools_to_map(f, *c_out, h, w))
+                        .collect();
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.spike_trains.push(spikes.clone());
+                        tr.residues.push(residue);
+                    }
+                }
+                Prepared::Conv { packed, bias, theta } => {
+                    let psums: Vec<Vec<i32>> =
+                        spikes.iter().map(|s| packed.conv(s)).collect();
+                    let (fired, residue) =
+                        Self::if_fire(&psums, bias, theta, packed.c_out, h * w);
+                    spikes = fired
+                        .iter()
+                        .map(|f| bools_to_map(f, packed.c_out, h, w))
+                        .collect();
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.spike_trains.push(spikes.clone());
+                        tr.residues.push(residue);
+                    }
+                }
+                Prepared::MaxPool => {
+                    spikes = spikes.iter().map(|s| s.maxpool2()).collect();
+                    h /= 2;
+                    w /= 2;
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.spike_trains.push(spikes.clone());
+                    }
+                }
+                Prepared::Fc { packed, bias, theta } => {
+                    let psums: Vec<Vec<i32>> = spikes
+                        .iter()
+                        .map(|s| packed.matvec(&s.to_flat_words()))
+                        .collect();
+                    let (fired, residue) =
+                        Self::if_fire(&psums, bias, theta, packed.n_out, 1);
+                    spikes = fired
+                        .iter()
+                        .map(|f| bools_to_map(f, packed.n_out, 1, 1))
+                        .collect();
+                    h = 1;
+                    w = 1;
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.spike_trains.push(spikes.clone());
+                        tr.residues.push(residue);
+                    }
+                }
+                Prepared::Readout { packed } => {
+                    let mut logits = vec![0i64; packed.n_out];
+                    for s in &spikes {
+                        for (o, p) in packed.matvec(&s.to_flat_words()).iter().enumerate() {
+                            logits[o] += *p as i64;
+                        }
+                    }
+                    return logits;
+                }
+            }
+        }
+        panic!("network has no readout layer");
+    }
+}
+
+fn bools_to_map(fired: &[bool], c: usize, h: usize, w: usize) -> SpikeMap {
+    let mut m = SpikeMap::zeros(c, h, w);
+    for ch in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                if fired[(ch * h + y) * w + x] {
+                    m.set(ch, y, x, true);
+                }
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::params::{DeployedModel, Kind, Layer};
+
+    /// 1-channel 4x4 input, enc conv (1 filter, k=1, w=+1), readout.
+    fn micro_model() -> DeployedModel {
+        DeployedModel {
+            name: "micro".into(),
+            num_steps: 3,
+            in_channels: 1,
+            in_size: 4,
+            layers: vec![
+                Layer::Conv {
+                    kind: Kind::EncConv,
+                    c_out: 1,
+                    c_in: 1,
+                    k: 1,
+                    w: vec![1],
+                    bias: vec![0],
+                    // theta 256*100: pixel value >= 100 fires each step.
+                    theta: vec![256 * 100],
+                    },
+                Layer::Readout {
+                    n_out: 2,
+                    n_in: 16,
+                    // row 0 all +1 (counts spikes), row 1 all -1.
+                    w: {
+                        let mut v = vec![1i8; 16];
+                        v.extend(vec![-1i8; 16]);
+                        v
+                    },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn encoding_if_and_readout_semantics() {
+        let net = Network::new(micro_model());
+        // pixel 0 = 250: V=250*256 each step -> fires every step (>=100*256).
+        // pixel 1 = 50: fires at t=1 (V=100*256) and t=3 (accumulates to
+        //               50,100 after reset at t=1 -> fires at t=3; T=3 so
+        //               steps t=0,1,2 -> fires at step 1 only.
+        // pixel 2 = 0: never fires.
+        let mut img = vec![0u8; 16];
+        img[0] = 250;
+        img[1] = 50;
+        let logits = net.infer_u8(&img);
+        // spike counts: pixel0 fires 3x, pixel1 1x -> total 4 spikes.
+        assert_eq!(logits[0], 4);
+        assert_eq!(logits[1], -4);
+    }
+
+    #[test]
+    fn traced_matches_plain() {
+        let net = Network::new(micro_model());
+        let mut img = vec![10u8; 16];
+        img[3] = 200;
+        let plain = net.infer_u8(&img);
+        let (traced, trace) = net.infer_traced(&img);
+        assert_eq!(plain, traced);
+        assert_eq!(trace.spike_trains.len(), 1); // enc layer only
+        assert_eq!(trace.spike_trains[0].len(), 3); // T spike maps
+        assert_eq!(trace.residues.len(), 1);
+    }
+
+    #[test]
+    fn residue_accumulates_subthreshold() {
+        let net = Network::new(micro_model());
+        let mut img = vec![0u8; 16];
+        img[5] = 30; // 3 steps x 30 = 90 < 100 -> no fire, residue 90*256
+        let (logits, trace) = net.infer_traced(&img);
+        assert_eq!(logits[0], 0);
+        assert_eq!(trace.residues[0][5], 90 * 256);
+    }
+}

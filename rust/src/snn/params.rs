@@ -1,0 +1,278 @@
+//! VSAW weight file reader — the rust side of
+//! `python/compile/params_io.py` (same format doc there).
+
+use std::fmt;
+
+/// Layer kind codes in the VSAW format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    EncConv,
+    Conv,
+    MaxPool,
+    Fc,
+    Readout,
+}
+
+/// One deployed layer's parameters.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// Conv layer (encoding or spiking): weights (c_out, c_in, k, k) as
+    /// +-1 i8, quantized IF-BN bias/theta per output channel.
+    Conv {
+        kind: Kind,
+        c_out: usize,
+        c_in: usize,
+        k: usize,
+        /// Row-major (o, i, kh, kw), values in {-1, +1}.
+        w: Vec<i8>,
+        bias: Vec<i32>,
+        theta: Vec<i32>,
+    },
+    MaxPool,
+    /// Spiking fully-connected layer.
+    Fc {
+        n_out: usize,
+        n_in: usize,
+        w: Vec<i8>,
+        bias: Vec<i32>,
+        theta: Vec<i32>,
+    },
+    /// Final non-firing accumulation layer.
+    Readout { n_out: usize, n_in: usize, w: Vec<i8> },
+}
+
+/// A deployed model read from a VSAW file.
+#[derive(Debug, Clone)]
+pub struct DeployedModel {
+    pub name: String,
+    pub num_steps: usize,
+    pub in_channels: usize,
+    pub in_size: usize,
+    pub layers: Vec<Layer>,
+}
+
+/// VSAW parse error.
+#[derive(Debug)]
+pub struct ParseError(pub String);
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "VSAW parse error: {}", self.0)
+    }
+}
+impl std::error::Error for ParseError {}
+
+/// Overflow-safe dimension product with a sanity cap (found by the
+/// byte-flip fuzz test: corrupted u32 dims overflowed the multiply).
+fn checked_size(dims: &[usize]) -> Result<usize, ParseError> {
+    const MAX_TENSOR_ELEMS: usize = 1 << 30;
+    let mut n: usize = 1;
+    for &d in dims {
+        n = n
+            .checked_mul(d)
+            .filter(|&v| v <= MAX_TENSOR_ELEMS)
+            .ok_or_else(|| ParseError(format!("implausible tensor dims {dims:?}")))?;
+    }
+    Ok(n)
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn err(&self, msg: &str) -> ParseError {
+        ParseError(format!("{msg} (at byte {})", self.off))
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], ParseError> {
+        if self.off + n > self.buf.len() {
+            return Err(self.err("unexpected EOF"));
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ParseError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ParseError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn i8_vec(&mut self, n: usize) -> Result<Vec<i8>, ParseError> {
+        Ok(self.bytes(n)?.iter().map(|&b| b as i8).collect())
+    }
+
+    fn i32_vec(&mut self, n: usize) -> Result<Vec<i32>, ParseError> {
+        let raw = self.bytes(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+impl DeployedModel {
+    /// Parse a VSAW v1 byte buffer.
+    pub fn parse(buf: &[u8]) -> Result<Self, ParseError> {
+        let mut r = Reader { buf, off: 0 };
+        if r.bytes(4)? != b"VSAW" {
+            return Err(ParseError("bad magic (want VSAW)".into()));
+        }
+        let version = r.u32()?;
+        if version != 1 {
+            return Err(ParseError(format!("unsupported version {version}")));
+        }
+        let name_len = r.u32()? as usize;
+        let name = String::from_utf8(r.bytes(name_len)?.to_vec())
+            .map_err(|_| ParseError("bad name utf-8".into()))?;
+        let num_steps = r.u32()? as usize;
+        let in_channels = r.u32()? as usize;
+        let in_size = r.u32()? as usize;
+        let num_layers = r.u32()? as usize;
+        if num_layers > 4096 {
+            return Err(ParseError(format!("implausible layer count {num_layers}")));
+        }
+
+        let mut layers = Vec::with_capacity(num_layers);
+        for _ in 0..num_layers {
+            let code = r.u8()?;
+            match code {
+                0 | 1 => {
+                    let c_out = r.u32()? as usize;
+                    let c_in = r.u32()? as usize;
+                    let k = r.u32()? as usize;
+                    let n = checked_size(&[c_out, c_in, k, k])?;
+                    let w = r.i8_vec(n)?;
+                    if let Some(bad) = w.iter().find(|&&v| v != 1 && v != -1) {
+                        return Err(ParseError(format!("non-binary weight {bad}")));
+                    }
+                    let bias = r.i32_vec(c_out)?;
+                    let theta = r.i32_vec(c_out)?;
+                    if theta.iter().any(|&t| t <= 0) {
+                        return Err(ParseError("non-positive theta".into()));
+                    }
+                    layers.push(Layer::Conv {
+                        kind: if code == 0 { Kind::EncConv } else { Kind::Conv },
+                        c_out,
+                        c_in,
+                        k,
+                        w,
+                        bias,
+                        theta,
+                    });
+                }
+                2 => layers.push(Layer::MaxPool),
+                3 => {
+                    let n_out = r.u32()? as usize;
+                    let n_in = r.u32()? as usize;
+                    let w = r.i8_vec(checked_size(&[n_out, n_in])?)?;
+                    let bias = r.i32_vec(n_out)?;
+                    let theta = r.i32_vec(n_out)?;
+                    layers.push(Layer::Fc { n_out, n_in, w, bias, theta });
+                }
+                4 => {
+                    let n_out = r.u32()? as usize;
+                    let n_in = r.u32()? as usize;
+                    let w = r.i8_vec(checked_size(&[n_out, n_in])?)?;
+                    layers.push(Layer::Readout { n_out, n_in, w });
+                }
+                c => return Err(ParseError(format!("unknown layer code {c}"))),
+            }
+        }
+        if r.off != buf.len() {
+            return Err(ParseError(format!(
+                "trailing bytes: {} unread",
+                buf.len() - r.off
+            )));
+        }
+        Ok(DeployedModel {
+            name,
+            num_steps,
+            in_channels,
+            in_size,
+            layers,
+        })
+    }
+
+    /// Read from a file path.
+    pub fn from_file(path: &str) -> Result<Self, ParseError> {
+        let buf =
+            std::fs::read(path).map_err(|e| ParseError(format!("{path}: {e}")))?;
+        Self::parse(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build a tiny VSAW buffer: one 1->1 conv (k=1) + readout.
+    fn tiny_buf() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend(b"VSAW");
+        b.extend(1u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes());
+        b.extend(b"ab");
+        b.extend(4u32.to_le_bytes()); // T
+        b.extend(1u32.to_le_bytes()); // in_ch
+        b.extend(5u32.to_le_bytes()); // in_size
+        b.extend(2u32.to_le_bytes()); // layers
+        // enc conv 1x1x1
+        b.push(0);
+        b.extend(1u32.to_le_bytes());
+        b.extend(1u32.to_le_bytes());
+        b.extend(1u32.to_le_bytes());
+        b.push(1i8 as u8); // weight +1
+        b.extend(0i32.to_le_bytes()); // bias
+        b.extend(256i32.to_le_bytes()); // theta
+        // readout 10 x 25
+        b.push(4);
+        b.extend(10u32.to_le_bytes());
+        b.extend(25u32.to_le_bytes());
+        b.extend(std::iter::repeat_n(0xFFu8, 250)); // all -1
+        b
+    }
+
+    #[test]
+    fn parse_tiny() {
+        let m = DeployedModel::parse(&tiny_buf()).unwrap();
+        assert_eq!(m.name, "ab");
+        assert_eq!(m.num_steps, 4);
+        assert_eq!(m.layers.len(), 2);
+        match &m.layers[1] {
+            Layer::Readout { n_out, n_in, w } => {
+                assert_eq!((*n_out, *n_in), (10, 25));
+                assert!(w.iter().all(|&v| v == -1));
+            }
+            other => panic!("wrong layer {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let mut b = tiny_buf();
+        b[0] = b'X';
+        assert!(DeployedModel::parse(&b).is_err());
+
+        let mut b = tiny_buf();
+        b.push(0); // trailing garbage
+        assert!(DeployedModel::parse(&b).is_err());
+
+        let b = tiny_buf();
+        assert!(DeployedModel::parse(&b[..b.len() - 10]).is_err());
+    }
+
+    #[test]
+    fn rejects_nonbinary_weight() {
+        let mut b = tiny_buf();
+        // weight byte of the conv layer: magic(4)+ver(4)+len(4)+"ab"(2)
+        // +T(4)+ch(4)+size(4)+n(4)+kind(1)+3*dims(12) = byte 43
+        b[43] = 3;
+        assert!(DeployedModel::parse(&b).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Channel-packed spike tensors.
+//!
+//! A `SpikeMap` stores one time step of a (C, H, W) binary feature map
+//! with the channel axis packed into u64 words per pixel — the layout the
+//! popcount-based binary convolution consumes.  This is the software
+//! mirror of the chip's spike SRAM word organization (one vectorwise read
+//! delivers a whole channel group, §III-A).
+
+use crate::util::ceil_div;
+
+/// One time step of binary activations, channel-packed per pixel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpikeMap {
+    channels: usize,
+    height: usize,
+    width: usize,
+    /// words per pixel = ceil(channels / 64)
+    wpp: usize,
+    /// data[(y * width + x) * wpp + w]
+    data: Vec<u64>,
+}
+
+impl SpikeMap {
+    /// All-zero map.
+    pub fn zeros(channels: usize, height: usize, width: usize) -> Self {
+        let wpp = ceil_div(channels.max(1), 64);
+        Self {
+            channels,
+            height,
+            width,
+            wpp,
+            data: vec![0; height * width * wpp],
+        }
+    }
+
+    /// Geometry accessors.
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+    pub fn height(&self) -> usize {
+        self.height
+    }
+    pub fn width(&self) -> usize {
+        self.width
+    }
+    /// Words per pixel.
+    pub fn wpp(&self) -> usize {
+        self.wpp
+    }
+
+    /// Set spike (c, y, x).
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: bool) {
+        debug_assert!(c < self.channels && y < self.height && x < self.width);
+        let idx = (y * self.width + x) * self.wpp + c / 64;
+        if v {
+            self.data[idx] |= 1u64 << (c % 64);
+        } else {
+            self.data[idx] &= !(1u64 << (c % 64));
+        }
+    }
+
+    /// Read spike (c, y, x).
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> bool {
+        let idx = (y * self.width + x) * self.wpp + c / 64;
+        (self.data[idx] >> (c % 64)) & 1 == 1
+    }
+
+    /// The channel words of one pixel.
+    #[inline]
+    pub fn pixel_words(&self, y: usize, x: usize) -> &[u64] {
+        let base = (y * self.width + x) * self.wpp;
+        &self.data[base..base + self.wpp]
+    }
+
+    /// The raw packed words, `(y * width + x) * wpp + w` indexed — the
+    /// contiguous view the optimized convolution inner loop walks.
+    #[inline]
+    pub fn raw_words(&self) -> &[u64] {
+        &self.data
+    }
+
+    /// Spike count (over channels) at one pixel.
+    #[inline]
+    pub fn pixel_popcount(&self, y: usize, x: usize) -> u32 {
+        self.pixel_words(y, x).iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Total spike count.
+    pub fn total_spikes(&self) -> u64 {
+        self.data.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// 2x2/2 max pool (OR over each window) — paper's MP2 on spikes.
+    pub fn maxpool2(&self) -> SpikeMap {
+        let mut out = SpikeMap::zeros(self.channels, self.height / 2, self.width / 2);
+        for y in 0..out.height {
+            for x in 0..out.width {
+                let base = (y * out.width + x) * out.wpp;
+                for w in 0..self.wpp {
+                    let a = self.pixel_words(2 * y, 2 * x)[w];
+                    let b = self.pixel_words(2 * y, 2 * x + 1)[w];
+                    let c = self.pixel_words(2 * y + 1, 2 * x)[w];
+                    let d = self.pixel_words(2 * y + 1, 2 * x + 1)[w];
+                    out.data[base + w] = a | b | c | d;
+                }
+            }
+        }
+        out
+    }
+
+    /// Flatten to (c, y, x) C-major bit order — matches numpy's
+    /// `spikes.reshape(-1)` on a (C, H, W) array.  Returned as packed u64
+    /// words (bit i of the flattened vector = word i/64, bit i%64).
+    pub fn to_flat_words(&self) -> Vec<u64> {
+        let n = self.channels * self.height * self.width;
+        let mut words = vec![0u64; ceil_div(n.max(1), 64)];
+        // Walk set bits only (trailing_zeros skip) — §Perf optimization:
+        // firing rates are ~30-50%, so this roughly halves the transpose.
+        let hw = self.height * self.width;
+        for (pix, chunk) in self.data.chunks_exact(self.wpp).enumerate() {
+            for (wi, &word) in chunk.iter().enumerate() {
+                let mut m = word;
+                while m != 0 {
+                    let b = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let i = (wi * 64 + b) * hw + pix;
+                    words[i / 64] |= 1u64 << (i % 64);
+                }
+            }
+        }
+        words
+    }
+
+    /// Dense 0/1 bytes in (C, H, W) order — for interop and tests.
+    pub fn to_dense(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.channels * self.height * self.width];
+        for c in 0..self.channels {
+            for y in 0..self.height {
+                for x in 0..self.width {
+                    out[(c * self.height + y) * self.width + x] = self.get(c, y, x) as u8;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn set_get() {
+        let mut m = SpikeMap::zeros(130, 4, 4);
+        m.set(0, 0, 0, true);
+        m.set(129, 3, 3, true);
+        m.set(64, 1, 2, true);
+        assert!(m.get(0, 0, 0) && m.get(129, 3, 3) && m.get(64, 1, 2));
+        assert!(!m.get(1, 0, 0));
+        assert_eq!(m.total_spikes(), 3);
+        assert_eq!(m.pixel_popcount(1, 2), 1);
+    }
+
+    #[test]
+    fn maxpool_is_or() {
+        let mut m = SpikeMap::zeros(2, 4, 4);
+        m.set(0, 0, 1, true); // window (0,0)
+        m.set(1, 3, 3, true); // window (1,1)
+        let p = m.maxpool2();
+        assert!(p.get(0, 0, 0));
+        assert!(p.get(1, 1, 1));
+        assert!(!p.get(1, 0, 0));
+        assert_eq!(p.total_spikes(), 2);
+    }
+
+    #[test]
+    fn flat_order_matches_numpy_chw() {
+        let mut m = SpikeMap::zeros(3, 2, 2);
+        m.set(1, 0, 1, true); // flat index (1*2+0)*2+1 = 5
+        m.set(2, 1, 0, true); // flat index (2*2+1)*2+0 = 10
+        let words = m.to_flat_words();
+        assert_eq!(words[0], (1 << 5) | (1 << 10));
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = SplitMix64::new(3);
+        let mut m = SpikeMap::zeros(5, 3, 3);
+        for c in 0..5 {
+            for y in 0..3 {
+                for x in 0..3 {
+                    m.set(c, y, x, rng.next_below(2) == 1);
+                }
+            }
+        }
+        let d = m.to_dense();
+        for c in 0..5 {
+            for y in 0..3 {
+                for x in 0..3 {
+                    assert_eq!(d[(c * 3 + y) * 3 + x] == 1, m.get(c, y, x));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Miniature property-based testing harness (proptest substitute).
+//!
+//! Usage (`no_run`: doctest executables lack the libxla rpath):
+//! ```no_run
+//! use vsa::testing::{Gen, check};
+//! check("add is commutative", 100, |g: &mut Gen| {
+//!     let (a, b) = (g.i64_in(-100, 100), g.i64_in(-100, 100));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case gets a deterministic per-index seed; failures report the case
+//! index so a run can be reproduced with [`check_one`].
+
+use crate::util::rng::SplitMix64;
+
+/// Random input generator handed to property bodies.
+pub struct Gen {
+    rng: SplitMix64,
+}
+
+impl Gen {
+    /// Create from a raw seed.
+    pub fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed) }
+    }
+
+    /// Uniform u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_index(hi - lo + 1)
+    }
+
+    /// Uniform i64 in `[lo, hi]` (inclusive).
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Uniform i32 in `[lo, hi]` (inclusive).
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        self.i64_in(lo as i64, hi as i64) as i32
+    }
+
+    /// Bernoulli(1/2) bool.
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_below(2) == 1
+    }
+
+    /// Random +-1 weight vector.
+    pub fn weights(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| if self.bool() { 1 } else { -1 }).collect()
+    }
+
+    /// Random 0/1 spike vector with the given firing probability numerator
+    /// out of 100.
+    pub fn spikes(&mut self, n: usize, pct: u64) -> Vec<u8> {
+        (0..n)
+            .map(|_| (self.rng.next_below(100) < pct) as u8)
+            .collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_index(xs.len())]
+    }
+}
+
+/// Run `cases` generated cases of a property.  Panics (with the failing
+/// case index) as soon as one case fails.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    for i in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(0x5EED_0000 ^ i.wrapping_mul(0x9E37_79B9));
+            prop(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {i}: {msg}");
+        }
+    }
+}
+
+/// Re-run a single case (for shrinking a failure by hand).
+pub fn check_one(case: u64, mut prop: impl FnMut(&mut Gen)) {
+    let mut g = Gen::new(0x5EED_0000 ^ case.wrapping_mul(0x9E37_79B9));
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("xor twice is identity", 50, |g| {
+            let a = g.u64();
+            let b = g.u64();
+            assert_eq!(a ^ b ^ b, a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn failing_property_reports_case() {
+        check("always fails eventually", 50, |g| {
+            assert!(g.u64() % 7 != 0, "hit a multiple of 7");
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+            let w = g.i64_in(-5, 5);
+            assert!((-5..=5).contains(&w));
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Dense bit vectors packed into u64 words.
+//!
+//! The whole hot path of both the golden model and the cycle-accurate
+//! simulator works on channel-packed spike words: a binary multiply with
+//! +-1 weights followed by a sum reduces to popcounts
+//! (`sum = popcnt(spikes) - 2 * popcnt(spikes & w_neg)`), which is the
+//! software analogue of the chip's AND-gate PEs + diagonal adders.
+
+/// A fixed-length bit vector stored as little-endian u64 words.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitVec {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl BitVec {
+    /// All-zero bit vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        Self {
+            len,
+            words: vec![0; len.div_ceil(64)],
+        }
+    }
+
+    /// Number of bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no bits are stored.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Backing words (the last word's unused high bits are always zero).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Set bit `i` to `v`.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// Read bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Number of set bits.
+    #[inline]
+    pub fn count_ones(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// popcnt(self AND other) — the binary-conv primitive.
+    #[inline]
+    pub fn and_popcount(&self, other: &BitVec) -> u32 {
+        debug_assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & b).count_ones())
+            .sum()
+    }
+
+    /// Build from an iterator of bools.
+    pub fn from_bools(bits: impl IntoIterator<Item = bool>) -> Self {
+        let bits: Vec<bool> = bits.into_iter().collect();
+        let mut v = Self::zeros(bits.len());
+        for (i, b) in bits.iter().enumerate() {
+            if *b {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        v.set(0, true);
+        v.set(64, true);
+        v.set(129, true);
+        assert!(v.get(0) && v.get(64) && v.get(129));
+        assert!(!v.get(1) && !v.get(63) && !v.get(128));
+        assert_eq!(v.count_ones(), 3);
+        v.set(64, false);
+        assert_eq!(v.count_ones(), 2);
+    }
+
+    #[test]
+    fn and_popcount_matches_naive() {
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..20 {
+            let n = 1 + rng.next_index(200);
+            let a = BitVec::from_bools((0..n).map(|_| rng.next_below(2) == 1));
+            let b = BitVec::from_bools((0..n).map(|_| rng.next_below(2) == 1));
+            let naive = (0..n).filter(|&i| a.get(i) && b.get(i)).count() as u32;
+            assert_eq!(a.and_popcount(&b), naive);
+        }
+    }
+
+    #[test]
+    fn unused_high_bits_stay_zero() {
+        let v = BitVec::from_bools((0..65).map(|_| true));
+        assert_eq!(v.count_ones(), 65);
+        assert_eq!(v.words()[1], 1); // only bit 0 of word 1
+    }
+}

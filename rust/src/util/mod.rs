@@ -1,0 +1,30 @@
+//! Shared substrate: PRNG, bit vectors, statistics, fixed-point helpers.
+
+pub mod bitvec;
+pub mod rng;
+pub mod stats;
+
+/// Fixed-point scale for IF-BN bias/threshold quantization.  Must match
+/// `python/compile/kernels/ref.py::FIXED_POINT`: membrane arithmetic is
+/// `FIXED_POINT * conv_out - bias_q` compared against `theta_q`.
+pub const FIXED_POINT: i32 = 256;
+
+/// Ceiling division for unsigned sizes.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 8), 0);
+        assert_eq!(ceil_div(1, 8), 1);
+        assert_eq!(ceil_div(8, 8), 1);
+        assert_eq!(ceil_div(9, 8), 2);
+    }
+}

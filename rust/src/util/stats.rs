@@ -1,0 +1,108 @@
+//! Small statistics helpers shared by benchmarks, metrics and reports.
+
+/// Index of the maximum element (first on ties). Panics on empty input.
+pub fn argmax(xs: &[i64]) -> usize {
+    assert!(!xs.is_empty(), "argmax of empty slice");
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Arithmetic mean of f64 samples (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// `q`-quantile (0..=1) by nearest-rank on a sorted copy.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() - 1) as f64 * q).round() as usize;
+    v[idx]
+}
+
+/// Online latency/throughput accumulator used by the coordinator metrics.
+#[derive(Debug, Default, Clone)]
+pub struct Accumulator {
+    samples: Vec<f64>,
+}
+
+impl Accumulator {
+    /// Record one sample.
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    /// Number of samples recorded.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Mean of recorded samples.
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    /// p50/p95/p99 summary.
+    pub fn percentiles(&self) -> (f64, f64, f64) {
+        (
+            quantile(&self.samples, 0.50),
+            quantile(&self.samples, 0.95),
+            quantile(&self.samples, 0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_ties_prefer_first() {
+        assert_eq!(argmax(&[1, 5, 5, 2]), 1);
+        assert_eq!(argmax(&[-3]), 0);
+    }
+
+    #[test]
+    fn mean_stddev() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 100.0);
+        assert_eq!(quantile(&xs, 0.5), 51.0); // round(49.5) -> index 50
+    }
+
+    #[test]
+    fn accumulator_summary() {
+        let mut acc = Accumulator::default();
+        for i in 1..=10 {
+            acc.push(i as f64);
+        }
+        assert_eq!(acc.count(), 10);
+        assert_eq!(acc.mean(), 5.5);
+    }
+}

@@ -1,0 +1,94 @@
+//! Coordinator end-to-end: concurrent submission, batching behaviour,
+//! backpressure, and engine equivalence under load.
+
+use std::time::Duration;
+use vsa::coordinator::{
+    ChipEngine, Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine,
+};
+use vsa::config::HwConfig;
+use vsa::data::synth;
+use vsa::snn::Network;
+
+fn tiny_net() -> Network {
+    Network::from_vsaw_file("artifacts/tiny_t4.vsaw")
+        .expect("run `make artifacts` before the integration tests")
+}
+
+#[test]
+fn concurrent_submitters_all_complete() {
+    let coord = std::sync::Arc::new(Coordinator::start(
+        CoordinatorConfig {
+            workers: 3,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 16, // small: exercises backpressure blocking
+        },
+        |_| Box::new(GoldenEngine::new(tiny_net(), 4)) as Box<dyn InferenceEngine>,
+    ));
+
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let coord = std::sync::Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let samples = synth::tiny_like(t, t * 100, 25);
+            let mut ok = 0;
+            for s in &samples {
+                let res = coord.infer_blocking(s.image.clone()).unwrap();
+                assert_eq!(res.logits.len(), 10);
+                ok += 1;
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 100);
+    let stats = coord.stats();
+    assert_eq!(stats.completed, 100);
+    assert!(stats.mean_batch >= 1.0);
+}
+
+#[test]
+fn batched_results_match_unbatched() {
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_depth: 128,
+        },
+        |_| Box::new(GoldenEngine::new(tiny_net(), 8)) as Box<dyn InferenceEngine>,
+    );
+    let net = tiny_net();
+    let samples = synth::tiny_like(55, 0, 32);
+    let rxs: Vec<_> = samples
+        .iter()
+        .map(|s| coord.submit(s.image.clone()).unwrap())
+        .collect();
+    for (rx, s) in rxs.into_iter().zip(&samples) {
+        assert_eq!(rx.recv().unwrap().logits, net.infer_u8(&s.image));
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn chip_engine_reports_simulated_latency() {
+    let mut engine = ChipEngine::new(HwConfig::default(), tiny_net(), 4);
+    let samples = synth::tiny_like(2, 0, 3);
+    let images: Vec<Vec<u8>> = samples.iter().map(|s| s.image.clone()).collect();
+    engine.infer(&images).unwrap();
+    assert!(engine.simulated_us > 0.0);
+}
+
+#[test]
+fn stats_percentiles_ordered() {
+    let coord = Coordinator::start(CoordinatorConfig::default(), |_| {
+        Box::new(GoldenEngine::new(tiny_net(), 8)) as Box<dyn InferenceEngine>
+    });
+    for s in synth::tiny_like(3, 0, 20) {
+        coord.infer_blocking(s.image).unwrap();
+    }
+    let stats = coord.shutdown();
+    assert!(stats.latency_ms_p50 <= stats.latency_ms_p95);
+    assert!(stats.latency_ms_p95 <= stats.latency_ms_p99);
+    assert!(stats.throughput_rps > 0.0);
+}

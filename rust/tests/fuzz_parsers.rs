@@ -1,0 +1,113 @@
+//! Failure injection: the VSAW and JSON parsers must reject arbitrary
+//! corruption with errors, never panic or accept garbage silently.
+
+use vsa::config::json::Json;
+use vsa::snn::params::DeployedModel;
+use vsa::testing::{check, Gen};
+
+/// A small well-formed VSAW buffer to corrupt.
+fn valid_vsaw() -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend(b"VSAW");
+    b.extend(1u32.to_le_bytes());
+    b.extend(4u32.to_le_bytes());
+    b.extend(b"fuzz");
+    b.extend(2u32.to_le_bytes()); // T
+    b.extend(1u32.to_le_bytes()); // in_ch
+    b.extend(4u32.to_le_bytes()); // in_size
+    b.extend(2u32.to_le_bytes()); // layers
+    b.push(0); // enc conv 2x1x1
+    b.extend(2u32.to_le_bytes());
+    b.extend(1u32.to_le_bytes());
+    b.extend(1u32.to_le_bytes());
+    b.extend([1u8, 0xFF]); // +1, -1
+    b.extend(0i32.to_le_bytes());
+    b.extend(0i32.to_le_bytes());
+    b.extend(256i32.to_le_bytes());
+    b.extend(256i32.to_le_bytes());
+    b.push(4); // readout 10 x 32
+    b.extend(10u32.to_le_bytes());
+    b.extend(32u32.to_le_bytes());
+    b.extend(std::iter::repeat_n(1u8, 320));
+    b
+}
+
+#[test]
+fn vsaw_baseline_parses() {
+    assert!(DeployedModel::parse(&valid_vsaw()).is_ok());
+}
+
+#[test]
+fn vsaw_truncation_never_panics() {
+    let buf = valid_vsaw();
+    for len in 0..buf.len() {
+        // every strict prefix must fail cleanly
+        assert!(
+            DeployedModel::parse(&buf[..len]).is_err(),
+            "prefix of {len} bytes accepted"
+        );
+    }
+}
+
+#[test]
+fn vsaw_random_byte_flips_never_panic() {
+    check("vsaw byte flips", 300, |g: &mut Gen| {
+        let mut buf = valid_vsaw();
+        let flips = g.usize_in(1, 8);
+        for _ in 0..flips {
+            let i = g.usize_in(0, buf.len() - 1);
+            buf[i] ^= g.u64() as u8 | 1;
+        }
+        let _ = DeployedModel::parse(&buf); // Ok or Err both fine; no panic
+    });
+}
+
+#[test]
+fn vsaw_random_garbage_rejected() {
+    check("vsaw garbage", 200, |g: &mut Gen| {
+        let n = g.usize_in(0, 300);
+        let buf: Vec<u8> = (0..n).map(|_| g.u64() as u8).collect();
+        if buf.get(..4) != Some(b"VSAW") {
+            assert!(DeployedModel::parse(&buf).is_err());
+        }
+    });
+}
+
+#[test]
+fn json_random_garbage_never_panics() {
+    check("json garbage", 500, |g: &mut Gen| {
+        let n = g.usize_in(0, 120);
+        let s: String = (0..n)
+            .map(|_| {
+                let c = *g.choose(&[
+                    b'{', b'}', b'[', b']', b'"', b':', b',', b'1', b'e', b'-', b'.',
+                    b't', b'n', b' ', b'\\', b'x',
+                ]);
+                c as char
+            })
+            .collect();
+        let _ = Json::parse(&s); // must not panic
+    });
+}
+
+#[test]
+fn json_deep_nesting_ok() {
+    // 1000-deep arrays parse (recursive descent headroom check).
+    let depth = 1000;
+    let s = "[".repeat(depth) + &"]".repeat(depth);
+    assert!(Json::parse(&s).is_ok());
+}
+
+#[test]
+fn json_mutated_manifest_never_panics() {
+    let base = r#"[{"name":"m","hlo":"a.hlo.txt","weights":"m.vsaw","batch":1,
+                   "num_steps":8,"in_channels":1,"in_size":28,"num_classes":10}]"#;
+    check("manifest mutations", 300, |g: &mut Gen| {
+        let mut bytes = base.as_bytes().to_vec();
+        let i = g.usize_in(0, bytes.len() - 1);
+        bytes[i] = g.u64() as u8;
+        if let Ok(s) = String::from_utf8(bytes) {
+            let _ = Json::parse(&s);
+        }
+    });
+}

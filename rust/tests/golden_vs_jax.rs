@@ -1,0 +1,110 @@
+//! Cross-language integration: the rust golden model and the chip
+//! simulator must reproduce the JAX model's logits exactly.
+//!
+//! `python -m compile.aot` writes, per model, a `*_selfcheck.json` with
+//! the logits the deployed JAX graph produced on deterministic synthetic
+//! samples.  This test regenerates the identical samples (bit-identical
+//! splitmix64 generator) and checks every layer of the rust stack against
+//! them.  Requires `make artifacts` to have run.
+
+use vsa::arch::{Chip, SimMode};
+use vsa::config::json::Json;
+use vsa::config::HwConfig;
+use vsa::data::synth;
+use vsa::snn::Network;
+
+struct SelfCheck {
+    data_seed: u64,
+    start: u64,
+    count: usize,
+    logits: Vec<Vec<i64>>,
+}
+
+fn load_selfcheck(path: &str) -> Option<SelfCheck> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let v = Json::parse(&text).ok()?;
+    let logits = v
+        .get("logits")?
+        .as_arr()?
+        .iter()
+        .map(|row| {
+            row.as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_i64().unwrap())
+                .collect()
+        })
+        .collect();
+    Some(SelfCheck {
+        data_seed: v.get("data_seed")?.as_i64()? as u64,
+        start: v.get("start")?.as_i64()? as u64,
+        count: v.get("count")?.as_usize()?,
+        logits,
+    })
+}
+
+fn check_model(vsaw: &str, selfcheck: &str, model_name: &str, exact_too: bool) {
+    let Some(check) = load_selfcheck(selfcheck) else {
+        eprintln!("skipping {model_name}: run `make artifacts` first");
+        return;
+    };
+    let net = Network::from_vsaw_file(vsaw).expect("vsaw loads");
+    let samples = synth::for_model(model_name, check.data_seed, check.start, check.count);
+
+    for (i, sample) in samples.iter().enumerate() {
+        let got = net.infer_u8(&sample.image);
+        assert_eq!(
+            got, check.logits[i],
+            "{model_name} golden logits diverge from JAX on sample {i}"
+        );
+    }
+
+    // The chip simulator (fast mode) must agree too.
+    let chip = Chip::new(HwConfig::default(), SimMode::Fast);
+    for (i, sample) in samples.iter().enumerate() {
+        let report = chip.run(&net.model, &sample.image);
+        assert_eq!(
+            report.logits, check.logits[i],
+            "{model_name} fast-sim logits diverge from JAX on sample {i}"
+        );
+    }
+
+    if exact_too {
+        let chip = Chip::new(HwConfig::default(), SimMode::Exact);
+        let report = chip.run(&net.model, &samples[0].image);
+        assert_eq!(
+            report.logits, check.logits[0],
+            "{model_name} exact-sim logits diverge from JAX"
+        );
+    }
+}
+
+#[test]
+fn tiny_matches_jax() {
+    check_model(
+        "artifacts/tiny_t4.vsaw",
+        "artifacts/tiny_t4_selfcheck.json",
+        "tiny",
+        true,
+    );
+}
+
+#[test]
+fn mnist_matches_jax() {
+    check_model(
+        "artifacts/mnist_t8.vsaw",
+        "artifacts/mnist_t8_selfcheck.json",
+        "mnist",
+        true,
+    );
+}
+
+#[test]
+fn cifar10_matches_jax() {
+    check_model(
+        "artifacts/cifar10_t8.vsaw",
+        "artifacts/cifar10_t8_selfcheck.json",
+        "cifar10",
+        false, // exact mode on the full CIFAR net is too slow for CI
+    );
+}

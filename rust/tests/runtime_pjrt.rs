@@ -1,0 +1,81 @@
+//! PJRT runtime integration: the AOT artifacts compile and execute on the
+//! CPU PJRT client, and their outputs are bit-identical to the golden
+//! model and the chip simulator.  Requires `make artifacts`.
+
+use vsa::coordinator::{InferenceEngine, PjrtEngine};
+use vsa::data::synth;
+use vsa::runtime::{Manifest, PjrtExecutor};
+use vsa::snn::Network;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping PJRT tests: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn tiny_batch1_matches_golden() {
+    let Some(m) = manifest() else { return };
+    let e = m.find("tiny", 1).unwrap();
+    let exe = PjrtExecutor::load(&m.hlo_path(e), 1, e.in_channels, e.in_size).unwrap();
+    let net = Network::from_vsaw_file(&m.weights_path(e)).unwrap();
+    let mut engine = PjrtEngine::new(exe);
+    for s in synth::tiny_like(3, 0, 4) {
+        let got = engine.infer(&[s.image.clone()]).unwrap();
+        assert_eq!(got[0], net.infer_u8(&s.image));
+    }
+}
+
+#[test]
+fn tiny_batch8_pads_partial_batches() {
+    let Some(m) = manifest() else { return };
+    let e = m.find("tiny", 8).unwrap();
+    assert_eq!(e.batch, 8);
+    let exe = PjrtExecutor::load(&m.hlo_path(e), 8, e.in_channels, e.in_size).unwrap();
+    let net = Network::from_vsaw_file(&m.weights_path(e)).unwrap();
+    let mut engine = PjrtEngine::new(exe);
+
+    // full batch
+    let samples = synth::tiny_like(9, 0, 8);
+    let images: Vec<Vec<u8>> = samples.iter().map(|s| s.image.clone()).collect();
+    let got = engine.infer(&images).unwrap();
+    for (s, l) in samples.iter().zip(&got) {
+        assert_eq!(l, &net.infer_u8(&s.image));
+    }
+
+    // partial batch (padded internally, padding results dropped)
+    let got = engine.infer(&images[..3]).unwrap();
+    assert_eq!(got.len(), 3);
+    for (s, l) in samples[..3].iter().zip(&got) {
+        assert_eq!(l, &net.infer_u8(&s.image));
+    }
+}
+
+#[test]
+fn mnist_pallas_artifact_matches_golden() {
+    // The mnist artifact routes through the Pallas kernels (interpret
+    // mode) — this is the L1-through-PJRT correctness check.
+    let Some(m) = manifest() else { return };
+    let e = m.find("mnist", 1).unwrap();
+    assert!(e.pallas, "mnist artifact should use the pallas kernels");
+    let exe = PjrtExecutor::load(&m.hlo_path(e), 1, e.in_channels, e.in_size).unwrap();
+    let net = Network::from_vsaw_file(&m.weights_path(e)).unwrap();
+    let mut engine = PjrtEngine::new(exe);
+    for s in synth::mnist_like(17, 0, 2) {
+        let got = engine.infer(&[s.image.clone()]).unwrap();
+        assert_eq!(got[0], net.infer_u8(&s.image));
+    }
+}
+
+#[test]
+fn wrong_geometry_rejected() {
+    let Some(m) = manifest() else { return };
+    let e = m.find("tiny", 1).unwrap();
+    let exe = PjrtExecutor::load(&m.hlo_path(e), 1, e.in_channels, e.in_size).unwrap();
+    let bad = vec![vec![0u8; 7]]; // wrong pixel count
+    assert!(exe.infer(&bad).is_err());
+}

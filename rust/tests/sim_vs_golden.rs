@@ -1,0 +1,162 @@
+//! Property-based integration: the cycle-accurate simulator is
+//! spike-for-spike identical to the golden functional model on randomized
+//! networks and inputs, in both simulation modes.
+
+use vsa::arch::{Chip, SimMode};
+use vsa::config::HwConfig;
+use vsa::snn::params::{DeployedModel, Kind, Layer};
+use vsa::snn::Network;
+use vsa::testing::{check, Gen};
+use vsa::util::FIXED_POINT;
+
+/// Build a random small network: enc conv -> [pool] -> conv -> fc -> readout.
+fn random_model(g: &mut Gen) -> (DeployedModel, Vec<u8>) {
+    let in_size = *g.choose(&[8usize, 12, 16]);
+    let c1 = *g.choose(&[4usize, 8, 16]);
+    let c2 = *g.choose(&[4usize, 8, 33]);
+    let t = g.usize_in(1, 6);
+    let pool = g.bool();
+    let mid = if pool { in_size / 2 } else { in_size };
+    let n_fc = g.usize_in(4, 12);
+
+    let mut layers = vec![Layer::Conv {
+        kind: Kind::EncConv,
+        c_out: c1,
+        c_in: 1,
+        k: 3,
+        w: g.weights(c1 * 9),
+        bias: (0..c1).map(|_| g.i32_in(-500, 500) * FIXED_POINT / 4).collect(),
+        theta: (0..c1)
+            .map(|_| g.i32_in(1, 300) * FIXED_POINT)
+            .collect(),
+    }];
+    if pool {
+        layers.push(Layer::MaxPool);
+    }
+    layers.push(Layer::Conv {
+        kind: Kind::Conv,
+        c_out: c2,
+        c_in: c1,
+        k: 3,
+        w: g.weights(c2 * c1 * 9),
+        bias: (0..c2).map(|_| g.i32_in(-4, 4) * FIXED_POINT).collect(),
+        theta: (0..c2).map(|_| g.i32_in(1, 12) * FIXED_POINT).collect(),
+    });
+    layers.push(Layer::Fc {
+        n_out: n_fc,
+        n_in: c2 * mid * mid,
+        w: g.weights(n_fc * c2 * mid * mid),
+        bias: (0..n_fc).map(|_| g.i32_in(-2, 2) * FIXED_POINT).collect(),
+        theta: (0..n_fc).map(|_| g.i32_in(1, 6) * FIXED_POINT).collect(),
+    });
+    layers.push(Layer::Readout {
+        n_out: 10,
+        n_in: n_fc,
+        w: g.weights(10 * n_fc),
+    });
+
+    let model = DeployedModel {
+        name: "prop".into(),
+        num_steps: t,
+        in_channels: 1,
+        in_size,
+        layers,
+    };
+    let image: Vec<u8> = (0..in_size * in_size).map(|_| g.i32_in(0, 255) as u8).collect();
+    (model, image)
+}
+
+#[test]
+fn fast_sim_matches_golden_on_random_networks() {
+    check("fast sim == golden", 20, |g: &mut Gen| {
+        let (model, image) = random_model(g);
+        let golden = Network::new(model.clone()).infer_u8(&image);
+        let report = Chip::new(HwConfig::default(), SimMode::Fast).run(&model, &image);
+        assert_eq!(report.logits, golden);
+    });
+}
+
+#[test]
+fn exact_sim_matches_golden_on_random_networks() {
+    check("exact sim == golden", 6, |g: &mut Gen| {
+        let (model, image) = random_model(g);
+        let golden = Network::new(model.clone()).infer_u8(&image);
+        let report = Chip::new(HwConfig::default(), SimMode::Exact).run(&model, &image);
+        assert_eq!(report.logits, golden);
+    });
+}
+
+#[test]
+fn counters_identical_across_modes() {
+    check("mode counters agree", 5, |g: &mut Gen| {
+        let (model, image) = random_model(g);
+        let fast = Chip::new(HwConfig::default(), SimMode::Fast).run(&model, &image);
+        let exact = Chip::new(HwConfig::default(), SimMode::Exact).run(&model, &image);
+        assert_eq!(fast.cycles, exact.cycles);
+        assert_eq!(fast.pe_ops, exact.pe_ops);
+        assert_eq!(fast.dram.total(), exact.dram.total());
+        assert_eq!(fast.sram.total(), exact.sram.total());
+        assert_eq!(fast.logits, exact.logits);
+    });
+}
+
+#[test]
+fn reconfigurable_across_time_steps() {
+    // The same weights run at any T (paper: reconfigurable inference time
+    // steps); more steps can only add spikes.
+    check("reconfigure T", 10, |g: &mut Gen| {
+        let (mut model, image) = random_model(g);
+        let chip = Chip::new(HwConfig::default(), SimMode::Fast);
+        model.num_steps = 2;
+        let r2 = chip.run(&model, &image);
+        model.num_steps = 6;
+        let r6 = chip.run(&model, &image);
+        // logits magnitude grows with T for the same network
+        let s2: i64 = r2.logits.iter().map(|x| x.abs()).sum();
+        let s6: i64 = r6.logits.iter().map(|x| x.abs()).sum();
+        assert!(s6 >= s2 || s2 == 0 || s6 == 0);
+        assert!(r6.cycles > r2.cycles);
+    });
+}
+
+#[test]
+fn pe_array_geometry_reconfigures() {
+    // Different PE geometries change cycles, never results.
+    check("reconfigure geometry", 6, |g: &mut Gen| {
+        let (model, image) = random_model(g);
+        let base = Chip::new(HwConfig::default(), SimMode::Fast).run(&model, &image);
+        let small = Chip::new(
+            HwConfig { pe_blocks: 8, rows_per_array: 4, ..HwConfig::default() },
+            SimMode::Fast,
+        )
+        .run(&model, &image);
+        assert_eq!(base.logits, small.logits);
+        assert!(small.cycles > base.cycles, "fewer PEs must cost cycles");
+    });
+}
+
+#[test]
+fn table3_design_point_calibration() {
+    // The energy/area model must reproduce the paper's Table III design
+    // point on the CIFAR-10 workload (requires `make artifacts`).
+    let Ok(net) = Network::from_vsaw_file("artifacts/cifar10_t8.vsaw") else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let hw = HwConfig::default();
+    let img = &vsa::data::synth::cifar_like(7, 0, 1)[0].image;
+    let r = Chip::new(hw.clone(), SimMode::Fast).run(&net.model, img);
+
+    let mw = vsa::energy::power::core_power_mw(&hw, &r);
+    assert!((mw - 88.968).abs() / 88.968 < 0.02, "core power {mw} vs 88.968");
+
+    let eff = vsa::energy::power::power_efficiency_tops_w(&hw, mw);
+    assert!((eff - 25.9).abs() / 25.9 < 0.03, "power eff {eff} vs 25.9");
+
+    let kge = vsa::energy::area::logic_area(&hw).total();
+    assert!((kge - 114.98).abs() / 114.98 < 0.02, "area {kge} vs 114.98");
+
+    // throughput: peak exact, achieved utilization high on CIFAR-10
+    assert_eq!(hw.total_pes(), 2304);
+    assert!(r.utilization > 0.85, "utilization {}", r.utilization);
+}
