@@ -6,10 +6,11 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{bench, section};
+use harness::{bench, quick_mode, section};
 use vsa::arch::pe::{PeArray, PeBlock};
 use vsa::snn::conv::{conv_naive, PackedConv, PackedFc};
 use vsa::snn::spikemap::SpikeMap;
+use vsa::snn::Scratch;
 use vsa::testing::Gen;
 
 fn random_spikemap(g: &mut Gen, c: usize, s: usize) -> SpikeMap {
@@ -26,6 +27,7 @@ fn random_spikemap(g: &mut Gen, c: usize, s: usize) -> SpikeMap {
 
 fn main() {
     let mut g = Gen::new(42);
+    let quick = quick_mode();
 
     section("binary conv: packed popcount vs naive (the golden/sim hot path)");
     let c_in = 128;
@@ -36,15 +38,39 @@ fn main() {
     let dense = sm.to_dense();
     let packed = PackedConv::pack(c_out, c_in, 3, &w);
 
-    let t_packed = bench("packed conv 128x128x32x32", 1, 5, || {
+    let conv_iters = if quick { 2 } else { 5 };
+    let t_packed = bench("packed conv 128x128x32x32", 1, conv_iters, || {
         std::hint::black_box(packed.conv(&sm));
     });
-    let t_naive = bench("naive conv  128x128x32x32", 0, 1, || {
-        std::hint::black_box(conv_naive(&dense, c_in, s, s, &w, c_out, 3));
+    if !quick {
+        let t_naive = bench("naive conv  128x128x32x32", 0, 1, || {
+            std::hint::black_box(conv_naive(&dense, c_in, s, s, &w, c_out, 3));
+        });
+        println!(
+            "  popcount speedup: {:.1}x (the AND+sign trick of paper §III-B, 64 channels/word)",
+            t_naive.mean_ms / t_packed.mean_ms
+        );
+    }
+
+    section("temporal batching: conv_t over T steps vs T per-step convs");
+    let t_steps = 8;
+    let train: Vec<SpikeMap> = (0..t_steps).map(|_| random_spikemap(&mut g, c_in, s)).collect();
+    let mut scratch = Scratch::new();
+    // warm the arena so the timed region is allocation-free
+    packed.conv_t(&train, &mut scratch);
+    let t_iters = if quick { 2 } else { 5 };
+    let t_batched = bench("conv_t 128x128x32x32 T=8 (tap-major)", 1, t_iters, || {
+        packed.conv_t(&train, &mut scratch);
+        std::hint::black_box(scratch.psums().len());
+    });
+    let t_per_step = bench("8 x conv   128x128x32x32 (per step)", 1, t_iters, || {
+        for sm in &train {
+            std::hint::black_box(packed.conv(sm));
+        }
     });
     println!(
-        "  popcount speedup: {:.1}x (the AND+sign trick of paper §III-B, 64 channels/word)",
-        t_naive.mean_ms / t_packed.mean_ms
+        "  temporal amortization: {:.2}x per train (weight vectors loaded once for all T — §III-A/§III-B)",
+        t_per_step.mean_ms / t_batched.mean_ms
     );
 
     section("packed fc matvec (fc layers + readout)");
@@ -53,9 +79,20 @@ fn main() {
     let wf = g.weights(n_out * n_in);
     let fc = PackedFc::pack(n_out, n_in, &wf);
     let spikes: Vec<u64> = (0..n_in.div_ceil(64)).map(|_| g.u64()).collect();
-    bench("fc 4096->256 matvec", 10, 100, || {
+    let fc_iters = if quick { 20 } else { 100 };
+    let t_fc = bench("fc 4096->256 matvec", 10, fc_iters, || {
         std::hint::black_box(fc.matvec(&spikes));
     });
+    let flat_t: Vec<u64> = (0..t_steps * n_in.div_ceil(64)).map(|_| g.u64()).collect();
+    let mut fc_out = vec![0i32; t_steps * n_out];
+    let t_fc_t = bench("fc 4096->256 matvec_t T=8", 10, fc_iters, || {
+        fc.matvec_t(&flat_t, t_steps, &mut fc_out);
+        std::hint::black_box(fc_out[0]);
+    });
+    println!(
+        "  fc temporal amortization: {:.2}x per train",
+        t_fc.mean_ms * t_steps as f64 / t_fc_t.mean_ms
+    );
 
     section("exact-mode PE datapath (gate-level cycle)");
     let array = PeArray::new(8, 3);

@@ -3,20 +3,31 @@
 //! elementwise (SpinalFlow-style) comparison and a serving throughput
 //! sweep through the coordinator.
 //!
-//! Run: `cargo bench --bench bench_throughput`
+//! The headline section measures the **golden-engine hot path before and
+//! after the time-batched refactor in the same run** — the per-step
+//! engine is frozen in `baselines::golden_stepwise` — and records
+//! images/sec for the golden and chip-sim engines in `BENCH_PR1.json`.
+//!
+//! Run: `cargo bench --bench bench_throughput` (add `-- --quick` for the
+//! CI smoke subset).
 
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{bench, section};
+use harness::{bench, quick_mode, section, JsonReport};
+
+/// Repo-root report path (cargo runs benches with CWD = the package dir).
+const REPORT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR1.json");
 use std::time::Duration;
 use vsa::arch::schedule::{LayerPlan, PlanKind};
 use vsa::arch::{Chip, SimMode};
+use vsa::baselines::golden_stepwise::StepwiseGolden;
 use vsa::baselines::spinalflow::{self, SpinalFlowConfig};
-use vsa::config::HwConfig;
+use vsa::config::{models, HwConfig};
 use vsa::coordinator::{Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine};
 use vsa::data::synth;
-use vsa::snn::Network;
+use vsa::snn::params::DeployedModel;
+use vsa::snn::{Network, Scratch};
 
 fn conv_plan(c_in: usize, c_out: usize, hw_size: usize) -> LayerPlan {
     LayerPlan {
@@ -31,8 +42,97 @@ fn conv_plan(c_in: usize, c_out: usize, hw_size: usize) -> LayerPlan {
     }
 }
 
+/// Golden hot path before vs after, measured in the same run on
+/// synthesized Table-I models (no artifacts needed).
+fn golden_before_after(report: &mut JsonReport, quick: bool) {
+    section("golden engine: time-batched vs per-step hot path (PR1 tentpole)");
+    let cases: &[(&str, usize, usize, usize)] = if quick {
+        // (model, T, images, timing iters)
+        &[("tiny", 4, 4, 5), ("mnist", 8, 2, 2)]
+    } else {
+        &[("tiny", 4, 16, 20), ("mnist", 8, 8, 8), ("cifar10", 8, 1, 2)]
+    };
+    for &(name, t, n_images, iters) in cases {
+        let spec = models::by_name(name, t).expect("preset exists");
+        let model = DeployedModel::synthesize(&spec, 7);
+        let net = Network::new(model.clone());
+        let stepwise = StepwiseGolden::new(model);
+        let images: Vec<Vec<u8>> = synth::for_model(name, 3, 0, n_images)
+            .into_iter()
+            .map(|s| s.image)
+            .collect();
+
+        // Bit-exactness first: the refactor must not change a single logit.
+        let mut scratch = Scratch::new();
+        for img in &images {
+            assert_eq!(
+                net.infer_u8_with(img, &mut scratch),
+                stepwise.infer_u8(img),
+                "{name}: time-batched logits diverge from the per-step oracle"
+            );
+        }
+
+        let t_base = bench(&format!("{name}: per-step golden (pre-refactor)"), 1, iters, || {
+            for img in &images {
+                std::hint::black_box(stepwise.infer_u8(img));
+            }
+        });
+        let t_new = bench(&format!("{name}: time-batched golden (this PR)"), 1, iters, || {
+            for img in &images {
+                std::hint::black_box(net.infer_u8_with(img, &mut scratch));
+            }
+        });
+        let ips_base = n_images as f64 / (t_base.mean_ms / 1e3);
+        let ips_new = n_images as f64 / (t_new.mean_ms / 1e3);
+        let speedup = ips_new / ips_base;
+        println!(
+            "  {name}: {ips_base:.1} -> {ips_new:.1} images/sec ({speedup:.2}x, logits bit-exact)"
+        );
+        report.throughput(
+            "golden_stepwise",
+            name,
+            ips_base,
+            "pre-refactor per-timestep baseline (baselines::golden_stepwise)",
+        );
+        report.throughput(
+            "golden",
+            name,
+            ips_new,
+            "time-batched zero-alloc hot path (snn::Network + Scratch)",
+        );
+        report.ratio(
+            &format!("{name}_golden_speedup"),
+            speedup,
+            "time-batched vs per-step, same run, bit-exact logits",
+        );
+    }
+}
+
+/// Chip-sim engine wall-clock images/sec, for the cross-engine trajectory.
+fn chip_sim_throughput(report: &mut JsonReport, quick: bool) {
+    section("chip-sim engine wall-clock (fast mode, synthesized models)");
+    let cases: &[(&str, usize, usize)] =
+        if quick { &[("tiny", 4, 3)] } else { &[("tiny", 4, 10), ("mnist", 8, 3)] };
+    for &(name, t, iters) in cases {
+        let spec = models::by_name(name, t).expect("preset exists");
+        let model = DeployedModel::synthesize(&spec, 7);
+        let img = synth::for_model(name, 3, 0, 1).remove(0).image;
+        let chip = Chip::new(HwConfig::default(), SimMode::Fast);
+        let timing = bench(&format!("{name}: full-net sim (fast)"), 1, iters, || {
+            std::hint::black_box(chip.run(&model, &img));
+        });
+        let ips = 1.0 / (timing.mean_ms / 1e3);
+        report.throughput("chip-sim", name, ips, "cycle-accurate fast mode, wall-clock");
+    }
+}
+
 fn main() {
+    let quick = quick_mode();
     let hw = HwConfig::default();
+    let mut report = JsonReport::new();
+
+    golden_before_after(&mut report, quick);
+    chip_sim_throughput(&mut report, quick);
 
     section("vectorwise utilization across layer geometries (Fig. 5/6 claim)");
     println!(
@@ -59,7 +159,13 @@ fn main() {
     }
     println!("  (geometry that divides the 32-block/8-row fabric runs at ~full utilization — the paper's claim; ragged edges show the cost of padding.)");
 
-    section("end-to-end effective throughput per model");
+    if quick {
+        report.write(REPORT_PATH);
+        println!("\n--quick: skipping artifact-dependent and serving sections");
+        return;
+    }
+
+    section("end-to-end effective throughput per model (chip cycles)");
     for (name, path) in [
         ("tiny", "artifacts/tiny_t4.vsaw"),
         ("mnist", "artifacts/mnist_t8.vsaw"),
@@ -81,10 +187,17 @@ fn main() {
     }
 
     section("vectorwise vs elementwise (SpinalFlow-style) on mnist");
-    if let Ok(net) = Network::from_vsaw_file("artifacts/mnist_t8.vsaw") {
+    {
+        // Artifact weights if present, synthesized otherwise — the
+        // comparison is structural, not accuracy-dependent.
+        let model = Network::from_vsaw_file("artifacts/mnist_t8.vsaw")
+            .map(|n| n.model)
+            .unwrap_or_else(|_| {
+                DeployedModel::synthesize(&models::by_name("mnist", 8).unwrap(), 7)
+            });
         let img = &synth::mnist_like(3, 0, 1)[0].image;
-        let vsa_r = Chip::new(hw.clone(), SimMode::Fast).run(&net.model, img);
-        let sf = spinalflow::run(&SpinalFlowConfig::default(), &net.model, img);
+        let vsa_r = Chip::new(hw.clone(), SimMode::Fast).run(&model, img);
+        let sf = spinalflow::run(&SpinalFlowConfig::default(), &model, img);
         println!(
             "  VSA:        {:>10} cycles @500MHz = {:>9.1} us  ({:.0} GOPS eff)",
             vsa_r.cycles, vsa_r.latency_us, vsa_r.gops
@@ -99,23 +212,14 @@ fn main() {
         );
     }
 
-    section("simulator wall-clock (fast mode)");
-    if let Ok(net) = Network::from_vsaw_file("artifacts/mnist_t8.vsaw") {
-        let img = &synth::mnist_like(3, 0, 1)[0].image;
-        let chip = Chip::new(hw.clone(), SimMode::Fast);
-        bench("mnist full-net sim (fast)", 2, 10, || {
-            let _ = chip.run(&net.model, img);
-        });
-        let chip_e = Chip::new(hw.clone(), SimMode::Exact);
-        bench("mnist full-net sim (exact)", 0, 1, || {
-            let _ = chip_e.run(&net.model, img);
-        });
-    }
-
     section("serving throughput vs batch size (coordinator, golden engine)");
-    if std::path::Path::new("artifacts/tiny_t4.vsaw").exists() {
+    {
+        let spec = models::by_name("tiny", 4).unwrap();
+        let model = DeployedModel::synthesize(&spec, 7);
         println!("  {:>6} {:>12} {:>10}", "batch", "req/s", "p50 ms");
+        let mut best_rps = 0.0f64;
         for batch in [1usize, 4, 8, 16] {
+            let model = model.clone();
             let coord = Coordinator::start(
                 CoordinatorConfig {
                     workers: 2,
@@ -124,10 +228,8 @@ fn main() {
                     queue_depth: 256,
                 },
                 move |_| {
-                    Box::new(GoldenEngine::new(
-                        Network::from_vsaw_file("artifacts/tiny_t4.vsaw").unwrap(),
-                        batch,
-                    )) as Box<dyn InferenceEngine>
+                    Box::new(GoldenEngine::new(Network::new(model.clone()), batch))
+                        as Box<dyn InferenceEngine>
                 },
             );
             let samples = synth::tiny_like(5, 0, 256);
@@ -139,10 +241,19 @@ fn main() {
                 rx.recv().unwrap();
             }
             let stats = coord.shutdown();
+            best_rps = best_rps.max(stats.throughput_rps);
             println!(
                 "  {batch:>6} {:>12.0} {:>10.3}",
                 stats.throughput_rps, stats.latency_ms_p50
             );
         }
+        report.throughput(
+            "coordinator-golden",
+            "tiny",
+            best_rps,
+            "best req/s across batch sweep, 2 workers",
+        );
     }
+
+    report.write(REPORT_PATH);
 }

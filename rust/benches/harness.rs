@@ -52,6 +52,93 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// CI smoke mode: `cargo bench --bench <b> -- --quick` (or
+/// `VSA_BENCH_QUICK=1`) shrinks iteration counts and skips the slow,
+/// artifact-dependent sections.  `VSA_BENCH_QUICK=0`/empty/`false`
+/// count as off.
+pub fn quick_mode() -> bool {
+    if std::env::args().any(|a| a == "--quick") {
+        return true;
+    }
+    match std::env::var("VSA_BENCH_QUICK") {
+        Ok(v) => !matches!(v.as_str(), "" | "0" | "false" | "no"),
+        Err(_) => false,
+    }
+}
+
+/// JSON-escape a string (hand-rolled: serde is unavailable offline).
+/// Escapes per RFC 8259; non-ASCII passes through as UTF-8.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Machine-readable bench report: collects rows while a bench runs and
+/// writes one JSON file (e.g. `BENCH_PR1.json`) so the perf trajectory is
+/// tracked across PRs.
+#[derive(Default)]
+pub struct JsonReport {
+    rows: Vec<String>,
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One engine/model throughput measurement.
+    pub fn throughput(&mut self, engine: &str, model: &str, images_per_sec: f64, note: &str) {
+        self.rows.push(format!(
+            "{{\"kind\": \"throughput\", \"engine\": \"{}\", \"model\": \"{}\", \
+             \"images_per_sec\": {:.3}, \"note\": \"{}\"}}",
+            json_escape(engine),
+            json_escape(model),
+            images_per_sec,
+            json_escape(note)
+        ));
+    }
+
+    /// One derived ratio (e.g. speedup vs a baseline measured in the same
+    /// run).
+    pub fn ratio(&mut self, name: &str, value: f64, note: &str) {
+        self.rows.push(format!(
+            "{{\"kind\": \"ratio\", \"name\": \"{}\", \"value\": {:.3}, \"note\": \"{}\"}}",
+            json_escape(name),
+            value,
+            json_escape(note)
+        ));
+    }
+
+    /// Write the report; the schema key lets downstream tooling evolve.
+    pub fn write(&self, path: &str) {
+        let mut body = String::from("{\n  \"schema\": \"vsa-bench-v1\",\n  \"results\": [\n");
+        for (i, row) in self.rows.iter().enumerate() {
+            body.push_str("    ");
+            body.push_str(row);
+            if i + 1 < self.rows.len() {
+                body.push(',');
+            }
+            body.push('\n');
+        }
+        body.push_str("  ]\n}\n");
+        match std::fs::write(path, &body) {
+            Ok(()) => println!("\nwrote {} ({} rows)", path, self.rows.len()),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
+    }
+}
+
 /// Print one "paper vs measured" comparison row.
 pub fn compare(metric: &str, paper: &str, measured: &str, note: &str) {
     println!("  {metric:<34} paper: {paper:<18} measured: {measured:<18} {note}");

@@ -1,0 +1,219 @@
+//! The pre-refactor per-time-step golden engine, frozen as a software
+//! baseline.
+//!
+//! This is the inference loop the golden [`crate::snn::Network`] shipped
+//! with before the time-batched rewrite (PR1): every time step re-walks
+//! the layer's weights, psums / fired-flags / spike maps are freshly
+//! allocated `Vec`s, the encoding psum is cloned T times, and fired
+//! booleans round-trip through `Vec<bool>` before being re-packed into
+//! `SpikeMap`s.  It is kept (a) as the *measured baseline* for
+//! `bench_throughput`'s before/after numbers — the software analogue of
+//! the elementwise-vs-vectorwise comparison the paper draws in §IV-B —
+//! and (b) as a bit-exactness oracle for the fused hot path in property
+//! tests.
+//!
+//! Do not optimize this module; its value is being the fixed reference
+//! point.
+
+use crate::snn::conv::{conv_multibit, PackedConv, PackedFc};
+use crate::snn::params::{DeployedModel, Kind, Layer};
+use crate::snn::spikemap::SpikeMap;
+use crate::util::FIXED_POINT;
+
+enum Prepared {
+    EncConv {
+        c_out: usize,
+        c_in: usize,
+        k: usize,
+        w: Vec<i8>,
+        bias: Vec<i32>,
+        theta: Vec<i32>,
+    },
+    Conv {
+        packed: PackedConv,
+        bias: Vec<i32>,
+        theta: Vec<i32>,
+    },
+    MaxPool,
+    Fc {
+        packed: PackedFc,
+        bias: Vec<i32>,
+        theta: Vec<i32>,
+    },
+    Readout {
+        packed: PackedFc,
+    },
+}
+
+/// The pre-refactor per-step golden engine.
+pub struct StepwiseGolden {
+    pub model: DeployedModel,
+    prepared: Vec<Prepared>,
+}
+
+impl StepwiseGolden {
+    /// Pack a deployed model (same preparation as the hot-path engine).
+    pub fn new(model: DeployedModel) -> Self {
+        let prepared = model
+            .layers
+            .iter()
+            .map(|ly| match ly {
+                Layer::Conv { kind: Kind::EncConv, c_out, c_in, k, w, bias, theta } => {
+                    Prepared::EncConv {
+                        c_out: *c_out,
+                        c_in: *c_in,
+                        k: *k,
+                        w: w.clone(),
+                        bias: bias.clone(),
+                        theta: theta.clone(),
+                    }
+                }
+                Layer::Conv { c_out, c_in, k, w, bias, theta, .. } => Prepared::Conv {
+                    packed: PackedConv::pack(*c_out, *c_in, *k, w),
+                    bias: bias.clone(),
+                    theta: theta.clone(),
+                },
+                Layer::MaxPool => Prepared::MaxPool,
+                Layer::Fc { n_out, n_in, w, bias, theta } => Prepared::Fc {
+                    packed: PackedFc::pack(*n_out, *n_in, w),
+                    bias: bias.clone(),
+                    theta: theta.clone(),
+                },
+                Layer::Readout { n_out, n_in, w } => Prepared::Readout {
+                    packed: PackedFc::pack(*n_out, *n_in, w),
+                },
+            })
+            .collect();
+        Self { model, prepared }
+    }
+
+    /// IF dynamics over per-step psums: `V += FP * psum - bias`, fire at
+    /// `V >= theta`, hard reset.  Returns (spikes per step, final residue).
+    fn if_fire(
+        psums_per_t: &[Vec<i32>],
+        bias: &[i32],
+        theta: &[i32],
+        c: usize,
+        hw: usize,
+    ) -> (Vec<Vec<bool>>, Vec<i32>) {
+        let n = c * hw;
+        let mut v = vec![0i32; n];
+        let mut spikes = Vec::with_capacity(psums_per_t.len());
+        for psum in psums_per_t {
+            debug_assert_eq!(psum.len(), n);
+            let mut fired = vec![false; n];
+            for ch in 0..c {
+                let (b, th) = (bias[ch], theta[ch]);
+                for i in ch * hw..(ch + 1) * hw {
+                    let pre = v[i] + FIXED_POINT * psum[i] - b;
+                    if pre >= th {
+                        fired[i] = true;
+                        v[i] = 0;
+                    } else {
+                        v[i] = pre;
+                    }
+                }
+            }
+            spikes.push(fired);
+        }
+        (spikes, v)
+    }
+
+    /// Inference on a raw u8 CHW image; returns the integer logits.
+    pub fn infer_u8(&self, image: &[u8]) -> Vec<i64> {
+        let t_steps = self.model.num_steps;
+        let (mut h, mut w) = (self.model.in_size, self.model.in_size);
+        assert_eq!(
+            image.len(),
+            self.model.in_channels * h * w,
+            "image geometry mismatch"
+        );
+
+        let mut spikes: Vec<SpikeMap> = Vec::new();
+
+        for prep in &self.prepared {
+            match prep {
+                Prepared::EncConv { c_out, c_in, k, w: wts, bias, theta } => {
+                    let psum = conv_multibit(image, *c_in, h, w, wts, *c_out, *k);
+                    let psums: Vec<Vec<i32>> = (0..t_steps).map(|_| psum.clone()).collect();
+                    let (fired, _residue) = Self::if_fire(&psums, bias, theta, *c_out, h * w);
+                    spikes = fired
+                        .iter()
+                        .map(|f| bools_to_map(f, *c_out, h, w))
+                        .collect();
+                }
+                Prepared::Conv { packed, bias, theta } => {
+                    let psums: Vec<Vec<i32>> =
+                        spikes.iter().map(|s| packed.conv(s)).collect();
+                    let (fired, _residue) =
+                        Self::if_fire(&psums, bias, theta, packed.c_out, h * w);
+                    spikes = fired
+                        .iter()
+                        .map(|f| bools_to_map(f, packed.c_out, h, w))
+                        .collect();
+                }
+                Prepared::MaxPool => {
+                    spikes = spikes.iter().map(|s| s.maxpool2()).collect();
+                    h /= 2;
+                    w /= 2;
+                }
+                Prepared::Fc { packed, bias, theta } => {
+                    let psums: Vec<Vec<i32>> = spikes
+                        .iter()
+                        .map(|s| packed.matvec(&s.to_flat_words()))
+                        .collect();
+                    let (fired, _residue) =
+                        Self::if_fire(&psums, bias, theta, packed.n_out, 1);
+                    spikes = fired
+                        .iter()
+                        .map(|f| bools_to_map(f, packed.n_out, 1, 1))
+                        .collect();
+                    h = 1;
+                    w = 1;
+                }
+                Prepared::Readout { packed } => {
+                    let mut logits = vec![0i64; packed.n_out];
+                    for s in &spikes {
+                        for (o, p) in packed.matvec(&s.to_flat_words()).iter().enumerate() {
+                            logits[o] += *p as i64;
+                        }
+                    }
+                    return logits;
+                }
+            }
+        }
+        panic!("network has no readout layer");
+    }
+}
+
+fn bools_to_map(fired: &[bool], c: usize, h: usize, w: usize) -> SpikeMap {
+    let mut m = SpikeMap::zeros(c, h, w);
+    for ch in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                if fired[(ch * h + y) * w + x] {
+                    m.set(ch, y, x, true);
+                }
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models;
+    use crate::data::synth;
+    use crate::snn::Network;
+
+    #[test]
+    fn stepwise_matches_hot_path_on_tiny() {
+        let model = DeployedModel::synthesize(&models::tiny(4), 11);
+        let stepwise = StepwiseGolden::new(model.clone());
+        let net = Network::new(model);
+        for s in synth::tiny_like(5, 0, 4) {
+            assert_eq!(stepwise.infer_u8(&s.image), net.infer_u8(&s.image));
+        }
+    }
+}

@@ -7,7 +7,13 @@
 //! benches can demonstrate the paper's qualitative claims (elementwise
 //! sparse processing throughput vs. vectorwise; fixed-function vs.
 //! reconfigurable) on the same workloads.
+//!
+//! [`golden_stepwise`] is a *software* baseline: the pre-refactor
+//! per-time-step golden engine, frozen as the measured reference point
+//! for the time-batched hot path (see `bench_throughput` /
+//! `BENCH_PR1.json`).
 
 pub mod bwsnn;
+pub mod golden_stepwise;
 pub mod published;
 pub mod spinalflow;

@@ -3,7 +3,7 @@
 use crate::arch::{Chip, SimMode};
 use crate::config::HwConfig;
 use crate::runtime::PjrtExecutor;
-use crate::snn::Network;
+use crate::snn::{Network, Scratch};
 use anyhow::Result;
 
 /// A batch-capable inference backend.
@@ -28,15 +28,20 @@ pub enum EngineKind {
 }
 
 /// Golden functional model engine (pure rust, any batch size).
+///
+/// Owns a [`Scratch`] arena reused across every request the worker
+/// serves, so steady-state inference allocates nothing — the worker
+/// thread's analogue of the chip's fixed SRAM working set.
 pub struct GoldenEngine {
     net: Network,
     batch: usize,
+    scratch: Scratch,
 }
 
 impl GoldenEngine {
     /// Wrap a loaded network; `batch` is the batcher's grouping target.
     pub fn new(net: Network, batch: usize) -> Self {
-        Self { net, batch }
+        Self { net, batch, scratch: Scratch::new() }
     }
 }
 
@@ -46,7 +51,10 @@ impl InferenceEngine for GoldenEngine {
     }
 
     fn infer(&mut self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
-        Ok(images.iter().map(|img| self.net.infer_u8(img)).collect())
+        Ok(images
+            .iter()
+            .map(|img| self.net.infer_u8_with(img, &mut self.scratch))
+            .collect())
     }
 
     fn name(&self) -> &'static str {

@@ -1,72 +1,127 @@
 //! A compiled PJRT executable for one (model, batch) artifact.
+//!
+//! The real implementation binds the `xla` crate (PJRT CPU client) and is
+//! gated behind the `xla` cargo feature, which requires the vendored
+//! `xla` crate the offline image does not ship.  Without the feature a
+//! stub with the identical API is compiled instead: `load` fails with a
+//! descriptive error, so every caller (CLI, coordinator, examples)
+//! degrades gracefully to the golden or chip-sim engines.
 
-use anyhow::{Context, Result};
+#[cfg(feature = "xla")]
+mod real {
+    use anyhow::{Context, Result};
 
-/// A compiled inference executable bound to a PJRT CPU client.
-///
-/// The artifact's only runtime parameter is the image batch
-/// `(B, C, H, W) f32` (weights are baked in as constants — the chip
-/// analogue of weights resident in the weight SRAM); the output is the
-/// 1-tuple of `(B, 10) f32` integer-valued logits.
-pub struct PjrtExecutor {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    pub batch: usize,
-    pub channels: usize,
-    pub size: usize,
-}
-
-impl PjrtExecutor {
-    /// Compile an HLO-text artifact on a fresh CPU client.
-    pub fn load(path: &str, batch: usize, channels: usize, size: usize) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parse HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("compile {path}"))?;
-        Ok(Self { client, exe, batch, channels, size })
+    /// A compiled inference executable bound to a PJRT CPU client.
+    ///
+    /// The artifact's only runtime parameter is the image batch
+    /// `(B, C, H, W) f32` (weights are baked in as constants — the chip
+    /// analogue of weights resident in the weight SRAM); the output is the
+    /// 1-tuple of `(B, 10) f32` integer-valued logits.
+    pub struct PjrtExecutor {
+        client: xla::PjRtClient,
+        exe: xla::PjRtLoadedExecutable,
+        pub batch: usize,
+        pub channels: usize,
+        pub size: usize,
     }
 
-    /// Platform string of the underlying client (for logs).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Run one batch of u8 images (padded/truncated to the compiled batch
-    /// size by the caller).  Returns per-image integer logits.
-    pub fn infer(&self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
-        anyhow::ensure!(
-            images.len() == self.batch,
-            "executor compiled for batch {}, got {}",
-            self.batch,
-            images.len()
-        );
-        let pixels = self.channels * self.size * self.size;
-        let mut flat = Vec::with_capacity(self.batch * pixels);
-        for img in images {
-            anyhow::ensure!(img.len() == pixels, "image geometry mismatch");
-            flat.extend(img.iter().map(|&p| p as f32));
+    impl PjrtExecutor {
+        /// Compile an HLO-text artifact on a fresh CPU client.
+        pub fn load(path: &str, batch: usize, channels: usize, size: usize) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parse HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {path}"))?;
+            Ok(Self { client, exe, batch, channels, size })
         }
-        let input = xla::Literal::vec1(&flat).reshape(&[
-            self.batch as i64,
-            self.channels as i64,
-            self.size as i64,
-            self.size as i64,
-        ])?;
-        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?; // lowered with return_tuple=True
-        let values = out.to_vec::<f32>()?;
-        anyhow::ensure!(
-            values.len() == self.batch * 10,
-            "unexpected output size {}",
-            values.len()
-        );
-        Ok(values
-            .chunks_exact(10)
-            .map(|row| row.iter().map(|&v| v.round() as i64).collect())
-            .collect())
+
+        /// Platform string of the underlying client (for logs).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Run one batch of u8 images (padded/truncated to the compiled
+        /// batch size by the caller).  Returns per-image integer logits.
+        pub fn infer(&self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
+            anyhow::ensure!(
+                images.len() == self.batch,
+                "executor compiled for batch {}, got {}",
+                self.batch,
+                images.len()
+            );
+            let pixels = self.channels * self.size * self.size;
+            let mut flat = Vec::with_capacity(self.batch * pixels);
+            for img in images {
+                anyhow::ensure!(img.len() == pixels, "image geometry mismatch");
+                flat.extend(img.iter().map(|&p| p as f32));
+            }
+            let input = xla::Literal::vec1(&flat).reshape(&[
+                self.batch as i64,
+                self.channels as i64,
+                self.size as i64,
+                self.size as i64,
+            ])?;
+            let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
+                .to_literal_sync()?;
+            let out = result.to_tuple1()?; // lowered with return_tuple=True
+            let values = out.to_vec::<f32>()?;
+            anyhow::ensure!(
+                values.len() == self.batch * 10,
+                "unexpected output size {}",
+                values.len()
+            );
+            Ok(values
+                .chunks_exact(10)
+                .map(|row| row.iter().map(|&v| v.round() as i64).collect())
+                .collect())
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use anyhow::Result;
+
+    /// Offline stand-in for the PJRT executor: loading always fails with
+    /// a descriptive error (same public surface as the real one).
+    pub struct PjrtExecutor {
+        pub batch: usize,
+        pub channels: usize,
+        pub size: usize,
+    }
+
+    impl PjrtExecutor {
+        /// Always fails: the PJRT backend is not compiled in.
+        pub fn load(
+            path: &str,
+            _batch: usize,
+            _channels: usize,
+            _size: usize,
+        ) -> Result<Self> {
+            Err(anyhow::anyhow!(
+                "PJRT backend not compiled in (vendor the xla crate, wire it as an \
+                 optional dependency, and build with `--features xla` to execute \
+                 {path}); use the golden or chip engines"
+            ))
+        }
+
+        /// Platform string of the underlying client (for logs).
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        /// Unreachable in practice (`load` never constructs a stub), but
+        /// kept API-identical.
+        pub fn infer(&self, _images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
+            Err(anyhow::anyhow!("PJRT backend not compiled in"))
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use real::PjrtExecutor;
+#[cfg(not(feature = "xla"))]
+pub use stub::PjrtExecutor;

@@ -6,6 +6,7 @@
 //! the -1 weights — exactly the chip's AND-gate + sign trick (§III-B:
 //! `o = {s & w, s}`) vectorized over 64 channels per word.
 
+use crate::snn::scratch::Scratch;
 use crate::snn::spikemap::SpikeMap;
 use crate::util::ceil_div;
 
@@ -131,6 +132,154 @@ impl PackedConv {
         }
         out
     }
+
+    /// Time-batched 'same'-padded stride-1 conv over a whole spike train.
+    ///
+    /// The chip's vectorwise reuse (§III-B, tick batching §III-A) loads a
+    /// weight vector once and applies it to every spatial position of
+    /// every time step before moving on.  This is the software mirror:
+    /// the loop nest is tap-major *outside* the timestep loop, so each
+    /// `(o, kh, kw)` neg-mask is fetched once and applied to all T spike
+    /// maps — amortizing weight traffic T× exactly like the chip — and
+    /// all working memory comes from the caller's [`Scratch`] arena
+    /// (zero allocation in steady state).
+    ///
+    /// Output: plane for step `t` at
+    /// `scratch.psums()[t * c_out * h * w ..][.. c_out * h * w]`,
+    /// bit-exact with [`PackedConv::conv`] / [`conv_naive`] per step.
+    pub fn conv_t(&self, spikes: &[SpikeMap], scratch: &mut Scratch) {
+        let t_steps = spikes.len();
+        if t_steps == 0 {
+            return;
+        }
+        let (h, w) = (spikes[0].height(), spikes[0].width());
+        for s in spikes {
+            assert_eq!(s.channels(), self.c_in, "channel mismatch");
+            assert_eq!(s.wpp(), self.wpp, "packing mismatch");
+            assert!(s.height() == h && s.width() == w, "geometry mismatch");
+        }
+        let hw = h * w;
+        let plane = self.c_out * hw;
+        scratch.ensure_conv_t(t_steps, plane, hw);
+        self.tap_ones_t(spikes, &mut scratch.ones, &mut scratch.ones_sum);
+        for o in 0..self.c_out {
+            self.conv_channel_t(
+                spikes,
+                o,
+                &scratch.ones_sum[..t_steps * hw],
+                &mut scratch.chan_psum[..t_steps * hw],
+            );
+            for t in 0..t_steps {
+                scratch.psums[t * plane + o * hw..t * plane + (o + 1) * hw]
+                    .copy_from_slice(&scratch.chan_psum[t * hw..(t + 1) * hw]);
+            }
+        }
+    }
+
+    /// Weight-independent popcount planes for a spike train: per-pixel
+    /// spike counts (`ones[t*hw + j]`) and their K×K tap sums
+    /// (`ones_sum[t*hw + j]`), shared by every output channel.
+    pub(crate) fn tap_ones_t(
+        &self,
+        spikes: &[SpikeMap],
+        ones: &mut [i32],
+        ones_sum: &mut [i32],
+    ) {
+        let t_steps = spikes.len();
+        if t_steps == 0 {
+            return;
+        }
+        let (h, w) = (spikes[0].height(), spikes[0].width());
+        let hw = h * w;
+        let wpp = self.wpp;
+        let pad = self.k / 2;
+        for (t, s) in spikes.iter().enumerate() {
+            let words = s.raw_words();
+            let ones_t = &mut ones[t * hw..(t + 1) * hw];
+            for (i, one) in ones_t.iter_mut().enumerate() {
+                *one = words[i * wpp..(i + 1) * wpp]
+                    .iter()
+                    .map(|v| v.count_ones() as i32)
+                    .sum();
+            }
+        }
+        ones_sum[..t_steps * hw].fill(0);
+        for kh in 0..self.k {
+            for kw in 0..self.k {
+                let dy = kh as isize - pad as isize;
+                let dx = kw as isize - pad as isize;
+                for t in 0..t_steps {
+                    let ones_t = &ones[t * hw..(t + 1) * hw];
+                    let sum_t = &mut ones_sum[t * hw..(t + 1) * hw];
+                    for y in 0..h {
+                        let ny = y as isize + dy;
+                        if ny < 0 || ny >= h as isize {
+                            continue;
+                        }
+                        let (x0, x1) = clip_range(dx, w);
+                        let src = (ny as usize * w) as isize + dx;
+                        for x in x0..x1 {
+                            sum_t[y * w + x] += ones_t[(src + x as isize) as usize];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// T-step psums of ONE output channel (`out[t*hw + j]`), given the
+    /// precomputed `ones_sum` planes.  Each tap's neg-mask is loaded once
+    /// for all T steps; the per-channel output (T·H·W i32s) is small
+    /// enough to stay cache-resident, which is what lets the fused
+    /// conv→IF→pool path in [`crate::snn::Network`] run the whole layer
+    /// out of L1/L2.
+    pub(crate) fn conv_channel_t(
+        &self,
+        spikes: &[SpikeMap],
+        o: usize,
+        ones_sum: &[i32],
+        out: &mut [i32],
+    ) {
+        let t_steps = spikes.len();
+        let (h, w) = (spikes[0].height(), spikes[0].width());
+        let hw = h * w;
+        let wpp = self.wpp;
+        let pad = self.k / 2;
+        out[..t_steps * hw].copy_from_slice(&ones_sum[..t_steps * hw]);
+        for kh in 0..self.k {
+            let dy = kh as isize - pad as isize;
+            for kw in 0..self.k {
+                let dx = kw as isize - pad as isize;
+                let negw = self.neg_words(o, kh, kw);
+                if negw.iter().all(|&v| v == 0) {
+                    continue; // all +1 weights for this tap
+                }
+                for (t, s) in spikes.iter().enumerate() {
+                    let words = s.raw_words();
+                    let plane = &mut out[t * hw..(t + 1) * hw];
+                    for y in 0..h {
+                        let ny = y as isize + dy;
+                        if ny < 0 || ny >= h as isize {
+                            continue;
+                        }
+                        let (x0, x1) = clip_range(dx, w);
+                        let row_base = ny as usize * w;
+                        let row = &mut plane[y * w..(y + 1) * w];
+                        for x in x0..x1 {
+                            let p = (row_base as isize + x as isize + dx) as usize * wpp;
+                            let pix = &words[p..p + wpp];
+                            let and_pop: u32 = pix
+                                .iter()
+                                .zip(negw)
+                                .map(|(a, b)| (a & b).count_ones())
+                                .sum();
+                            row[x] -= 2 * and_pop as i32;
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Valid output-x range `[x0, x1)` for a tap shifted by `dx` on width `w`.
@@ -178,6 +327,56 @@ pub fn conv_naive(
         }
     }
     out
+}
+
+/// [`conv_multibit`] into a caller buffer, with the boundary checks
+/// hoisted out of the pixel loop (the encoding conv runs once per image,
+/// §III-F, but it is the largest single kernel of small-T inference, so
+/// the golden hot path uses this variant).  Bit-exact with
+/// [`conv_multibit`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv_multibit_into(
+    image: &[u8],
+    c_in: usize,
+    h: usize,
+    w: usize,
+    weights: &[i8],
+    c_out: usize,
+    k: usize,
+    out: &mut [i32],
+) {
+    assert!(out.len() >= c_out * h * w, "psum buffer too small");
+    let pad = k / 2;
+    out[..c_out * h * w].fill(0);
+    for o in 0..c_out {
+        let plane = &mut out[o * h * w..(o + 1) * h * w];
+        for i in 0..c_in {
+            let img = &image[i * h * w..(i + 1) * h * w];
+            for kh in 0..k {
+                let dy = kh as isize - pad as isize;
+                let y0 = (-dy).max(0) as usize;
+                let y1 = ((h as isize - dy).min(h as isize)).max(0) as usize;
+                for kw in 0..k {
+                    let dx = kw as isize - pad as isize;
+                    let (x0, x1) = clip_range(dx, w);
+                    let wv = weights[((o * c_in + i) * k + kh) * k + kw] as i32;
+                    for y in y0..y1 {
+                        let src = &img[(y as isize + dy) as usize * w..][..w];
+                        let dst = &mut plane[y * w..(y + 1) * w];
+                        if wv > 0 {
+                            for x in x0..x1 {
+                                dst[x] += src[(x as isize + dx) as usize] as i32;
+                            }
+                        } else {
+                            for x in x0..x1 {
+                                dst[x] -= src[(x as isize + dx) as usize] as i32;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Multi-bit (encoding layer) conv: u8 image, +-1 weights, i32 psums.
@@ -245,6 +444,12 @@ impl PackedFc {
         Self { n_out, n_in, words, neg }
     }
 
+    /// Words per flat spike vector (`ceil(n_in / 64)`).
+    #[inline]
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
     /// psums for one time step of flat spikes (packed words, C-major order).
     pub fn matvec(&self, spike_words: &[u64]) -> Vec<i32> {
         assert_eq!(spike_words.len(), self.words);
@@ -260,6 +465,39 @@ impl PackedFc {
                 total - 2 * and_pop
             })
             .collect()
+    }
+
+    /// Time-batched matvec over T steps of flat spikes (step `t` at
+    /// `flat[t * words ..][.. words]`), writing psums to
+    /// `out[t * n_out + o]`.  Each output row's neg-mask is loaded once
+    /// and applied to all T steps — the fc twin of
+    /// [`PackedConv::conv_t`]'s weight-reuse ordering — and nothing is
+    /// allocated.  Bit-exact with per-step [`PackedFc::matvec`].
+    pub fn matvec_t(&self, flat: &[u64], t_steps: usize, out: &mut [i32]) {
+        assert_eq!(flat.len(), t_steps * self.words);
+        assert!(out.len() >= t_steps * self.n_out, "psum buffer too small");
+        for t in 0..t_steps {
+            let total: i32 = flat[t * self.words..(t + 1) * self.words]
+                .iter()
+                .map(|w| w.count_ones() as i32)
+                .sum();
+            out[t * self.n_out..(t + 1) * self.n_out].fill(total);
+        }
+        for o in 0..self.n_out {
+            let neg = &self.neg[o * self.words..(o + 1) * self.words];
+            if neg.iter().all(|&v| v == 0) {
+                continue; // all +1 weights: psum == total
+            }
+            for t in 0..t_steps {
+                let sw = &flat[t * self.words..(t + 1) * self.words];
+                let and_pop: i32 = sw
+                    .iter()
+                    .zip(neg)
+                    .map(|(s, n)| (s & n).count_ones() as i32)
+                    .sum();
+                out[t * self.n_out + o] -= 2 * and_pop;
+            }
+        }
     }
 }
 
@@ -296,6 +534,87 @@ mod tests {
         random_case(&mut rng, 65, 4, 5, 3); // crosses the word boundary
         random_case(&mut rng, 128, 8, 4, 1);
         random_case(&mut rng, 16, 8, 8, 5);
+    }
+
+    #[test]
+    fn conv_t_matches_per_step_conv() {
+        let mut rng = SplitMix64::new(29);
+        for &(c_in, c_out, hw, k, t) in &[
+            (1usize, 2usize, 5usize, 3usize, 4usize),
+            (65, 4, 6, 3, 2),
+            (33, 3, 4, 1, 8),
+            (16, 2, 7, 5, 1),
+        ] {
+            let weights: Vec<i8> = (0..c_out * c_in * k * k)
+                .map(|_| if rng.next_below(2) == 1 { 1 } else { -1 })
+                .collect();
+            let train: Vec<SpikeMap> = (0..t)
+                .map(|_| {
+                    let mut sm = SpikeMap::zeros(c_in, hw, hw);
+                    for c in 0..c_in {
+                        for y in 0..hw {
+                            for x in 0..hw {
+                                sm.set(c, y, x, rng.next_below(2) == 1);
+                            }
+                        }
+                    }
+                    sm
+                })
+                .collect();
+            let packed = PackedConv::pack(c_out, c_in, k, &weights);
+            let mut scratch = Scratch::new();
+            packed.conv_t(&train, &mut scratch);
+            let plane = c_out * hw * hw;
+            for (ti, s) in train.iter().enumerate() {
+                assert_eq!(
+                    &scratch.psums()[ti * plane..(ti + 1) * plane],
+                    &packed.conv(s)[..],
+                    "step {ti} diverges"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_per_step_matvec() {
+        let mut rng = SplitMix64::new(31);
+        for &(n_in, n_out, t) in &[(10usize, 4usize, 3usize), (64, 10, 1), (130, 7, 8)] {
+            let w: Vec<i8> = (0..n_out * n_in)
+                .map(|_| if rng.next_below(2) == 1 { 1 } else { -1 })
+                .collect();
+            let packed = PackedFc::pack(n_out, n_in, &w);
+            let words = packed.words();
+            let mut flat = vec![0u64; t * words];
+            for ti in 0..t {
+                for i in 0..n_in {
+                    if rng.next_below(2) == 1 {
+                        flat[ti * words + i / 64] |= 1u64 << (i % 64);
+                    }
+                }
+            }
+            let mut out = vec![0i32; t * n_out];
+            packed.matvec_t(&flat, t, &mut out);
+            for ti in 0..t {
+                let per_step = packed.matvec(&flat[ti * words..(ti + 1) * words]);
+                assert_eq!(&out[ti * n_out..(ti + 1) * n_out], &per_step[..]);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_multibit_into_matches_reference() {
+        let mut rng = SplitMix64::new(37);
+        for &(c_in, c_out, hw, k) in &[(1usize, 4usize, 7usize, 3usize), (3, 2, 5, 3), (2, 3, 4, 1), (1, 2, 6, 5)] {
+            let img: Vec<u8> =
+                (0..c_in * hw * hw).map(|_| rng.next_below(256) as u8).collect();
+            let w: Vec<i8> = (0..c_out * c_in * k * k)
+                .map(|_| if rng.next_below(2) == 1 { 1 } else { -1 })
+                .collect();
+            let reference = conv_multibit(&img, c_in, hw, hw, &w, c_out, k);
+            let mut fast = vec![7i32; c_out * hw * hw];
+            conv_multibit_into(&img, c_in, hw, hw, &w, c_out, k, &mut fast);
+            assert_eq!(fast, reference);
+        }
     }
 
     #[test]

@@ -21,7 +21,9 @@
 pub mod conv;
 pub mod network;
 pub mod params;
+pub mod scratch;
 pub mod spikemap;
 
 pub use network::Network;
+pub use scratch::Scratch;
 pub use spikemap::SpikeMap;

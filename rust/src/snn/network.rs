@@ -1,7 +1,24 @@
 //! The golden functional network: integer-exact deployed inference.
+//!
+//! The hot path is **time-batched and allocation-free in steady state**
+//! (PR1 tentpole): each layer processes its whole T-step spike train
+//! before the next layer starts (tick batching, §III-A), each weight
+//! vector is loaded once and applied to all T steps (vectorwise reuse,
+//! §III-B), conv→IF→maxpool runs fused per output channel so pooled
+//! layers never materialize the pre-pool spike train (the software twin
+//! of two-layer fusion, §III-G/§III-D), and all working memory lives in a
+//! caller-owned [`Scratch`] arena.  The encoding layer convolves the
+//! multi-bit image once and streams that single psum through a
+//! closed-form IF solution (§III-F: the per-step input is constant, so
+//! fire times are periodic).
+//!
+//! The pre-refactor per-time-step implementation is preserved verbatim as
+//! [`crate::baselines::golden_stepwise::StepwiseGolden`] — the bench
+//! baseline and a bit-exactness oracle.
 
-use crate::snn::conv::{conv_multibit, PackedConv, PackedFc};
+use crate::snn::conv::{conv_multibit_into, PackedConv, PackedFc};
 use crate::snn::params::{DeployedModel, Kind, Layer};
+use crate::snn::scratch::Scratch;
 use crate::snn::spikemap::SpikeMap;
 use crate::util::FIXED_POINT;
 
@@ -91,50 +108,34 @@ impl Network {
     }
 
     /// Inference on a raw u8 CHW image; returns the 10 integer logits.
+    /// Allocates a throwaway [`Scratch`] — hot callers should hold one
+    /// and use [`Network::infer_u8_with`].
     pub fn infer_u8(&self, image: &[u8]) -> Vec<i64> {
-        self.run(image, None)
+        let mut scratch = Scratch::new();
+        self.run(image, &mut scratch, None)
+    }
+
+    /// Inference reusing a caller-owned [`Scratch`] arena: after the
+    /// first call at a given model geometry, the run performs zero heap
+    /// allocation apart from the returned logits vector.
+    pub fn infer_u8_with(&self, image: &[u8], scratch: &mut Scratch) -> Vec<i64> {
+        self.run(image, scratch, None)
     }
 
     /// Inference capturing every intermediate spike train + residue.
     pub fn infer_traced(&self, image: &[u8]) -> (Vec<i64>, Trace) {
+        let mut scratch = Scratch::new();
         let mut trace = Trace::default();
-        let logits = self.run(image, Some(&mut trace));
+        let logits = self.run(image, &mut scratch, Some(&mut trace));
         (logits, trace)
     }
 
-    /// IF dynamics over per-step psums: `V += FP * psum - bias`, fire at
-    /// `V >= theta`, hard reset.  Returns (spikes per step, final residue).
-    fn if_fire(
-        psums_per_t: &[Vec<i32>],
-        bias: &[i32],
-        theta: &[i32],
-        c: usize,
-        hw: usize,
-    ) -> (Vec<Vec<bool>>, Vec<i32>) {
-        let n = c * hw;
-        let mut v = vec![0i32; n];
-        let mut spikes = Vec::with_capacity(psums_per_t.len());
-        for psum in psums_per_t {
-            debug_assert_eq!(psum.len(), n);
-            let mut fired = vec![false; n];
-            for ch in 0..c {
-                let (b, th) = (bias[ch], theta[ch]);
-                for i in ch * hw..(ch + 1) * hw {
-                    let pre = v[i] + FIXED_POINT * psum[i] - b;
-                    if pre >= th {
-                        fired[i] = true;
-                        v[i] = 0;
-                    } else {
-                        v[i] = pre;
-                    }
-                }
-            }
-            spikes.push(fired);
-        }
-        (spikes, v)
-    }
-
-    fn run(&self, image: &[u8], mut trace: Option<&mut Trace>) -> Vec<i64> {
+    fn run(
+        &self,
+        image: &[u8],
+        scratch: &mut Scratch,
+        mut trace: Option<&mut Trace>,
+    ) -> Vec<i64> {
         let t_steps = self.model.num_steps;
         let (mut h, mut w) = (self.model.in_size, self.model.in_size);
         assert_eq!(
@@ -143,92 +144,355 @@ impl Network {
             "image geometry mismatch"
         );
 
-        // spikes[t] is the current inter-layer spike train.
-        let mut spikes: Vec<SpikeMap> = Vec::new();
+        // conv→IF→pool fuses only when not tracing: the trace records the
+        // pre-pool spike train the chip simulator cross-checks against.
+        let fuse = trace.is_none();
 
-        for prep in &self.prepared {
-            match prep {
+        // Take the spike-train ping-pong buffers out of the arena so the
+        // remaining scratch fields stay borrowable by the kernels.
+        let mut cur = std::mem::take(&mut scratch.train_in);
+        let mut nxt = std::mem::take(&mut scratch.train_out);
+
+        let mut logits: Option<Vec<i64>> = None;
+        let mut i = 0;
+        while i < self.prepared.len() {
+            match &self.prepared[i] {
                 Prepared::EncConv { c_out, c_in, k, w: wts, bias, theta } => {
-                    // Conv once, accumulate the same psum every step (§III-F).
-                    let psum = conv_multibit(image, *c_in, h, w, wts, *c_out, *k);
-                    let psums: Vec<Vec<i32>> = (0..t_steps).map(|_| psum.clone()).collect();
-                    let (fired, residue) = Self::if_fire(&psums, bias, theta, *c_out, h * w);
-                    spikes = fired
-                        .iter()
-                        .map(|f| bools_to_map(f, *c_out, h, w))
-                        .collect();
+                    let pool_next = fuse
+                        && matches!(self.prepared.get(i + 1), Some(Prepared::MaxPool));
+                    let plane = c_out * h * w;
+                    scratch.ensure_enc(plane);
+                    // Conv once; the IF unit re-accumulates the same psum
+                    // every step (§III-F) — no cloning, no re-convolving.
+                    conv_multibit_into(
+                        image,
+                        *c_in,
+                        h,
+                        w,
+                        wts,
+                        *c_out,
+                        *k,
+                        &mut scratch.enc_psum,
+                    );
+                    let (oh, ow) = if pool_next { (h / 2, w / 2) } else { (h, w) };
+                    reset_train(&mut nxt, t_steps, *c_out, oh, ow);
+                    if_fire_constant(
+                        &scratch.enc_psum[..plane],
+                        t_steps,
+                        bias,
+                        theta,
+                        *c_out,
+                        h,
+                        w,
+                        pool_next,
+                        &mut scratch.v,
+                        &mut nxt,
+                    );
                     if let Some(tr) = trace.as_deref_mut() {
-                        tr.spike_trains.push(spikes.clone());
-                        tr.residues.push(residue);
+                        tr.spike_trains.push(nxt.clone());
+                        tr.residues.push(scratch.v[..plane].to_vec());
                     }
+                    if pool_next {
+                        h = oh;
+                        w = ow;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                    std::mem::swap(&mut cur, &mut nxt);
                 }
                 Prepared::Conv { packed, bias, theta } => {
-                    let psums: Vec<Vec<i32>> =
-                        spikes.iter().map(|s| packed.conv(s)).collect();
-                    let (fired, residue) =
-                        Self::if_fire(&psums, bias, theta, packed.c_out, h * w);
-                    spikes = fired
-                        .iter()
-                        .map(|f| bools_to_map(f, packed.c_out, h, w))
-                        .collect();
-                    if let Some(tr) = trace.as_deref_mut() {
-                        tr.spike_trains.push(spikes.clone());
-                        tr.residues.push(residue);
+                    let pool_next = fuse
+                        && matches!(self.prepared.get(i + 1), Some(Prepared::MaxPool));
+                    let steps = cur.len();
+                    let hw = h * w;
+                    let plane = packed.c_out * hw;
+                    scratch.ensure_fused(steps, plane, hw);
+                    packed.tap_ones_t(&cur, &mut scratch.ones, &mut scratch.ones_sum);
+                    let (oh, ow) = if pool_next { (h / 2, w / 2) } else { (h, w) };
+                    reset_train(&mut nxt, steps, packed.c_out, oh, ow);
+                    // Fused conv→IF→(pool): one output channel at a time,
+                    // its T psum planes cache-resident, fired bits written
+                    // straight into the packed (possibly pooled) maps.
+                    let channels = if steps > 0 {
+                        packed.c_out
+                    } else {
+                        scratch.v[..plane].fill(0); // residue of an empty train
+                        0
+                    };
+                    for o in 0..channels {
+                        packed.conv_channel_t(
+                            &cur,
+                            o,
+                            &scratch.ones_sum[..steps * hw],
+                            &mut scratch.chan_psum[..steps * hw],
+                        );
+                        if_fire_channel(
+                            &scratch.chan_psum[..steps * hw],
+                            steps,
+                            bias[o],
+                            theta[o],
+                            o,
+                            h,
+                            w,
+                            pool_next,
+                            &mut scratch.v[o * hw..(o + 1) * hw],
+                            &mut nxt,
+                        );
                     }
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.spike_trains.push(nxt.clone());
+                        tr.residues.push(scratch.v[..plane].to_vec());
+                    }
+                    if pool_next {
+                        h = oh;
+                        w = ow;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                    std::mem::swap(&mut cur, &mut nxt);
                 }
                 Prepared::MaxPool => {
-                    spikes = spikes.iter().map(|s| s.maxpool2()).collect();
+                    let c = cur.first().map_or(0, |m| m.channels());
+                    reset_train(&mut nxt, cur.len(), c, h / 2, w / 2);
+                    for (s, d) in cur.iter().zip(nxt.iter_mut()) {
+                        s.maxpool2_into(d);
+                    }
                     h /= 2;
                     w /= 2;
                     if let Some(tr) = trace.as_deref_mut() {
-                        tr.spike_trains.push(spikes.clone());
+                        tr.spike_trains.push(nxt.clone());
                     }
+                    i += 1;
+                    std::mem::swap(&mut cur, &mut nxt);
                 }
                 Prepared::Fc { packed, bias, theta } => {
-                    let psums: Vec<Vec<i32>> = spikes
-                        .iter()
-                        .map(|s| packed.matvec(&s.to_flat_words()))
-                        .collect();
-                    let (fired, residue) =
-                        Self::if_fire(&psums, bias, theta, packed.n_out, 1);
-                    spikes = fired
-                        .iter()
-                        .map(|f| bools_to_map(f, packed.n_out, 1, 1))
-                        .collect();
+                    let steps = flatten_and_matvec(packed, &cur, scratch);
+                    reset_train(&mut nxt, steps, packed.n_out, 1, 1);
+                    if_fire_t(
+                        &scratch.psums,
+                        packed.n_out,
+                        steps,
+                        bias,
+                        theta,
+                        packed.n_out,
+                        1,
+                        1,
+                        &mut scratch.v[..packed.n_out],
+                        &mut nxt,
+                    );
                     h = 1;
                     w = 1;
                     if let Some(tr) = trace.as_deref_mut() {
-                        tr.spike_trains.push(spikes.clone());
-                        tr.residues.push(residue);
+                        tr.spike_trains.push(nxt.clone());
+                        tr.residues.push(scratch.v[..packed.n_out].to_vec());
                     }
+                    i += 1;
+                    std::mem::swap(&mut cur, &mut nxt);
                 }
                 Prepared::Readout { packed } => {
-                    let mut logits = vec![0i64; packed.n_out];
-                    for s in &spikes {
-                        for (o, p) in packed.matvec(&s.to_flat_words()).iter().enumerate() {
-                            logits[o] += *p as i64;
+                    let steps = flatten_and_matvec(packed, &cur, scratch);
+                    let mut lg = vec![0i64; packed.n_out];
+                    for t in 0..steps {
+                        for (o, l) in lg.iter_mut().enumerate() {
+                            *l += scratch.psums[t * packed.n_out + o] as i64;
                         }
                     }
-                    return logits;
+                    logits = Some(lg);
+                    break;
                 }
             }
         }
-        panic!("network has no readout layer");
+
+        // Hand the ping-pong buffers back for the next inference.
+        scratch.train_in = cur;
+        scratch.train_out = nxt;
+        logits.expect("network has no readout layer")
     }
 }
 
-fn bools_to_map(fired: &[bool], c: usize, h: usize, w: usize) -> SpikeMap {
-    let mut m = SpikeMap::zeros(c, h, w);
-    for ch in 0..c {
-        for y in 0..h {
-            for x in 0..w {
-                if fired[(ch * h + y) * w + x] {
-                    m.set(ch, y, x, true);
+/// Shared fc/readout preamble: pack the spike train's flat words into the
+/// arena and run the time-batched matvec.  Psums land in
+/// `scratch.psums[t * n_out + o]`; returns the step count.
+fn flatten_and_matvec(packed: &PackedFc, cur: &[SpikeMap], scratch: &mut Scratch) -> usize {
+    let steps = cur.len();
+    let words = packed.words();
+    scratch.ensure_fc(steps, words, packed.n_out);
+    for (t, s) in cur.iter().enumerate() {
+        s.to_flat_words_into(&mut scratch.flat[t * words..(t + 1) * words]);
+    }
+    packed.matvec_t(&scratch.flat[..steps * words], steps, &mut scratch.psums);
+    steps
+}
+
+/// Resize a reusable spike train to exactly `t` maps of (c, h, w),
+/// cleared, without reallocating word buffers that already fit.
+fn reset_train(train: &mut Vec<SpikeMap>, t: usize, c: usize, h: usize, w: usize) {
+    train.truncate(t);
+    for m in train.iter_mut() {
+        m.reset(c, h, w);
+    }
+    while train.len() < t {
+        train.push(SpikeMap::zeros(c, h, w));
+    }
+}
+
+/// IF dynamics over per-step psum planes (`psums[t * stride ..]`),
+/// writing fired bits directly into the packed spike maps (no
+/// `Vec<bool>` round-trip).  `V += FIXED_POINT * psum - bias`, fire at
+/// `V >= theta`, hard reset.  `v` must cover `c * h * w` and is reset
+/// here.
+#[allow(clippy::too_many_arguments)]
+fn if_fire_t(
+    psums: &[i32],
+    stride: usize,
+    t_steps: usize,
+    bias: &[i32],
+    theta: &[i32],
+    c: usize,
+    h: usize,
+    w: usize,
+    v: &mut [i32],
+    out: &mut [SpikeMap],
+) {
+    let hw = h * w;
+    let n = c * hw;
+    v[..n].fill(0);
+    for t in 0..t_steps {
+        let psum = &psums[t * stride..t * stride + n];
+        let m = &mut out[t];
+        for ch in 0..c {
+            let (b, th) = (bias[ch], theta[ch]);
+            for y in 0..h {
+                for x in 0..w {
+                    let j = ch * hw + y * w + x;
+                    let pre = v[j] + FIXED_POINT * psum[j] - b;
+                    if pre >= th {
+                        v[j] = 0;
+                        m.or_bit(ch, y, x);
+                    } else {
+                        v[j] = pre;
+                    }
                 }
             }
         }
     }
-    m
+}
+
+/// IF dynamics for ONE output channel over its T-step psum planes
+/// (`psums[t * h * w + j]`), optionally fusing the 2×2 max pool by OR-ing
+/// fired bits into the pooled map position.  `v` covers `h * w` for this
+/// channel and is reset here.
+#[allow(clippy::too_many_arguments)]
+fn if_fire_channel(
+    psums: &[i32],
+    t_steps: usize,
+    bias: i32,
+    theta: i32,
+    ch: usize,
+    h: usize,
+    w: usize,
+    pooled: bool,
+    v: &mut [i32],
+    out: &mut [SpikeMap],
+) {
+    let hw = h * w;
+    // Pooled output bounds (odd trailing rows/cols are dropped, exactly
+    // like `SpikeMap::maxpool2`).
+    let (oh, ow) = (h / 2, w / 2);
+    v[..hw].fill(0);
+    for t in 0..t_steps {
+        let psum = &psums[t * hw..(t + 1) * hw];
+        let m = &mut out[t];
+        for y in 0..h {
+            for x in 0..w {
+                let j = y * w + x;
+                let pre = v[j] + FIXED_POINT * psum[j] - bias;
+                if pre >= theta {
+                    v[j] = 0;
+                    emit(m, ch, y, x, pooled, oh, ow);
+                } else {
+                    v[j] = pre;
+                }
+            }
+        }
+    }
+}
+
+/// IF dynamics when every step receives the SAME psum (the encoding
+/// layer, §III-F).  With a constant per-step increment `d = FP*psum - b`
+/// and hard reset, the fire pattern is periodic and solvable in closed
+/// form per neuron: no fire when `d <= 0`; otherwise the neuron fires
+/// every `ceil(theta / d)` steps.  Bit-exact with stepping the plain IF
+/// recurrence (verified against the stepwise oracle), O(#spikes) instead
+/// of O(T · neurons).
+#[allow(clippy::too_many_arguments)]
+fn if_fire_constant(
+    psum: &[i32],
+    t_steps: usize,
+    bias: &[i32],
+    theta: &[i32],
+    c: usize,
+    h: usize,
+    w: usize,
+    pooled: bool,
+    v: &mut [i32],
+    out: &mut [SpikeMap],
+) {
+    let hw = h * w;
+    let (oh, ow) = (h / 2, w / 2);
+    for ch in 0..c {
+        let (b, th) = (bias[ch], theta[ch]);
+        for y in 0..h {
+            for x in 0..w {
+                let j = ch * hw + y * w + x;
+                let d = FIXED_POINT * psum[j] - b;
+                if th <= 0 {
+                    // Degenerate threshold: fall back to the literal
+                    // recurrence (parsers reject theta <= 0, but direct
+                    // model builders might not).
+                    let mut vj = 0i32;
+                    for m in out.iter_mut().take(t_steps) {
+                        let pre = vj + d;
+                        if pre >= th {
+                            vj = 0;
+                            emit(m, ch, y, x, pooled, oh, ow);
+                        } else {
+                            vj = pre;
+                        }
+                    }
+                    v[j] = vj;
+                } else if d <= 0 {
+                    // Monotonically non-increasing from 0: never fires.
+                    v[j] = (d as i64 * t_steps as i64) as i32;
+                } else {
+                    // Fires whenever the accumulated potential first
+                    // reaches theta: every p = ceil(theta / d) steps.
+                    let p = ((th as i64 + d as i64 - 1) / d as i64) as usize;
+                    let fires = t_steps / p;
+                    let mut t = p - 1;
+                    for _ in 0..fires {
+                        emit(&mut out[t], ch, y, x, pooled, oh, ow);
+                        t += p;
+                    }
+                    v[j] = ((t_steps % p) as i64 * d as i64) as i32;
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn emit(m: &mut SpikeMap, ch: usize, y: usize, x: usize, pooled: bool, oh: usize, ow: usize) {
+    if pooled {
+        let (py, px) = (y / 2, x / 2);
+        if py < oh && px < ow {
+            m.or_bit(ch, py, px);
+        }
+    } else {
+        m.or_bit(ch, y, x);
+    }
 }
 
 #[cfg(test)]
@@ -306,5 +570,21 @@ mod tests {
         let (logits, trace) = net.infer_traced(&img);
         assert_eq!(logits[0], 0);
         assert_eq!(trace.residues[0][5], 90 * 256);
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let net = Network::new(micro_model());
+        let mut scratch = Scratch::new();
+        let mut img = vec![0u8; 16];
+        img[0] = 250;
+        img[7] = 130;
+        let first = net.infer_u8_with(&img, &mut scratch);
+        for _ in 0..3 {
+            assert_eq!(net.infer_u8_with(&img, &mut scratch), first);
+        }
+        // Different image through the same (dirty) scratch.
+        let clean = net.infer_u8(&[9u8; 16]);
+        assert_eq!(net.infer_u8_with(&[9u8; 16], &mut scratch), clean);
     }
 }

@@ -205,6 +205,102 @@ impl DeployedModel {
             std::fs::read(path).map_err(|e| ParseError(format!("{path}: {e}")))?;
         Self::parse(&buf)
     }
+
+    /// Deterministically synthesize deployed parameters for a Table-I
+    /// model spec: random ±1 weights and IF-BN bias/theta in ranges that
+    /// yield SNN-typical firing rates.  Benches and artifact-free tests
+    /// use this to exercise the real model geometries without the python
+    /// compile path.
+    pub fn synthesize(spec: &crate::config::models::ModelSpec, seed: u64) -> Self {
+        use crate::config::models::LayerKind;
+        use crate::util::rng::SplitMix64;
+        use crate::util::FIXED_POINT;
+
+        let mut rng = SplitMix64::new(seed ^ 0xD1E5_EED5_0B5E_55ED);
+        let mut weights = |n: usize| -> Vec<i8> {
+            (0..n).map(|_| if rng.next_below(2) == 1 { 1 } else { -1 }).collect()
+        };
+        let shapes = spec.feature_shapes();
+        let mut layers = Vec::with_capacity(spec.layers.len());
+        for (li, (ly, &(c_in, fh, fw))) in spec.layers.iter().zip(&shapes).enumerate() {
+            // Per-layer parameter stream: mix the layer index so repeated
+            // same-width layers (e.g. cifar10's 192-channel block) get
+            // independent bias/theta draws.
+            let li = li as u64;
+            match ly.kind {
+                LayerKind::EncConv => {
+                    let w = weights(ly.c_out * c_in * ly.ksize * ly.ksize);
+                    let mut rng2 = SplitMix64::new(seed ^ li.wrapping_mul(0x9E37_79B9) ^ ly.c_out as u64);
+                    layers.push(Layer::Conv {
+                        kind: Kind::EncConv,
+                        c_out: ly.c_out,
+                        c_in,
+                        k: ly.ksize,
+                        w,
+                        bias: (0..ly.c_out)
+                            .map(|_| (rng2.next_below(256) as i32 - 128) * FIXED_POINT)
+                            .collect(),
+                        // pixel-scale thresholds: fires every 1-4 steps on
+                        // typical synthetic images
+                        theta: (0..ly.c_out)
+                            .map(|_| (60 + rng2.next_below(200) as i32) * FIXED_POINT)
+                            .collect(),
+                    });
+                }
+                LayerKind::Conv => {
+                    let w = weights(ly.c_out * c_in * ly.ksize * ly.ksize);
+                    let mut rng2 =
+                        SplitMix64::new(seed ^ li.wrapping_mul(0x9E37_79B9) ^ ((ly.c_out as u64) << 8));
+                    layers.push(Layer::Conv {
+                        kind: Kind::Conv,
+                        c_out: ly.c_out,
+                        c_in,
+                        k: ly.ksize,
+                        w,
+                        bias: (0..ly.c_out)
+                            .map(|_| (rng2.next_below(9) as i32 - 4) * FIXED_POINT)
+                            .collect(),
+                        theta: (0..ly.c_out)
+                            .map(|_| (1 + rng2.next_below(12) as i32) * FIXED_POINT)
+                            .collect(),
+                    });
+                }
+                LayerKind::MaxPool => layers.push(Layer::MaxPool),
+                LayerKind::Fc => {
+                    let n_in = c_in * fh * fw;
+                    let w = weights(ly.c_out * n_in);
+                    let mut rng2 =
+                        SplitMix64::new(seed ^ li.wrapping_mul(0x9E37_79B9) ^ ((ly.c_out as u64) << 16));
+                    layers.push(Layer::Fc {
+                        n_out: ly.c_out,
+                        n_in,
+                        w,
+                        bias: (0..ly.c_out)
+                            .map(|_| (rng2.next_below(5) as i32 - 2) * FIXED_POINT)
+                            .collect(),
+                        theta: (0..ly.c_out)
+                            .map(|_| (1 + rng2.next_below(6) as i32) * FIXED_POINT)
+                            .collect(),
+                    });
+                }
+                LayerKind::Readout => {
+                    let n_in = c_in * fh * fw;
+                    layers.push(Layer::Readout {
+                        n_out: ly.c_out,
+                        n_in,
+                        w: weights(ly.c_out * n_in),
+                    });
+                }
+            }
+        }
+        DeployedModel {
+            name: spec.name.clone(),
+            num_steps: spec.num_steps,
+            in_channels: spec.in_channels,
+            in_size: spec.in_size,
+            layers,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -265,6 +361,33 @@ mod tests {
 
         let b = tiny_buf();
         assert!(DeployedModel::parse(&b[..b.len() - 10]).is_err());
+    }
+
+    #[test]
+    fn synthesize_matches_spec_geometry() {
+        let spec = crate::config::models::tiny(4);
+        let m = DeployedModel::synthesize(&spec, 7);
+        assert_eq!(m.num_steps, 4);
+        assert_eq!(m.in_size, 12);
+        assert_eq!(m.layers.len(), spec.layers.len());
+        // deterministic per seed
+        let m2 = DeployedModel::synthesize(&spec, 7);
+        match (&m.layers[0], &m2.layers[0]) {
+            (Layer::Conv { w: a, theta: ta, .. }, Layer::Conv { w: b, theta: tb, .. }) => {
+                assert_eq!(a, b);
+                assert_eq!(ta, tb);
+                assert!(ta.iter().all(|&t| t > 0));
+            }
+            other => panic!("unexpected layers {other:?}"),
+        }
+        // fc sees the pooled feature volume: 32 * 3 * 3
+        match &m.layers[4] {
+            Layer::Fc { n_in, n_out, w, .. } => {
+                assert_eq!((*n_out, *n_in), (64, 32 * 3 * 3));
+                assert_eq!(w.len(), 64 * 32 * 9);
+            }
+            other => panic!("unexpected layer {other:?}"),
+        }
     }
 
     #[test]

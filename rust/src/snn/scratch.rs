@@ -1,0 +1,101 @@
+//! Reusable scratch arena for the time-batched inference hot path.
+//!
+//! The golden [`crate::snn::Network`] is the software twin of the chip's
+//! vectorwise dataflow, and like the chip it should not "allocate" working
+//! memory per time step: the chip's psum registers, membrane SRAM and
+//! spike SRAM banks are fixed buffers reused across layers and steps
+//! (§III-A, §III-F).  A `Scratch` is the software analogue — one arena,
+//! owned by the *caller* (one per worker thread in the coordinator), grown
+//! on first use and reused for every subsequent inference, so
+//! `Network::run` performs zero heap allocation in steady state (apart
+//! from the small returned logits vector).
+//!
+//! Buffers only ever grow; running a large model then a small one keeps
+//! the large capacity around, which is exactly what a serving worker
+//! wants.
+
+use crate::snn::spikemap::SpikeMap;
+
+/// Caller-owned working memory for [`crate::snn::Network`] inference.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Inter-layer spike-train ping-pong buffers (the software spike
+    /// SRAM banks).  Taken out of the arena for the duration of a run.
+    pub(crate) train_in: Vec<SpikeMap>,
+    pub(crate) train_out: Vec<SpikeMap>,
+    /// Full T-step psum planes: `conv_t` output (plane t at
+    /// `[t * c_out * h * w ..]`) and fc psums (`[t * n_out + o]`).
+    pub(crate) psums: Vec<i32>,
+    /// Per-output-channel T-step psum planes (`[t * h * w + j]`) for the
+    /// fused conv→IF→pool path — small enough to stay cache-resident.
+    pub(crate) chan_psum: Vec<i32>,
+    /// Per-step per-pixel spike popcounts (`[t * h * w + j]`).
+    pub(crate) ones: Vec<i32>,
+    /// Tap-summed popcounts, shared by every output channel.
+    pub(crate) ones_sum: Vec<i32>,
+    /// The encoding layer's single multi-bit conv result (§III-F).
+    pub(crate) enc_psum: Vec<i32>,
+    /// Membrane potentials of the layer currently firing.
+    pub(crate) v: Vec<i32>,
+    /// Packed flat spike words for the fc/readout layers
+    /// (`[t * words ..]`).
+    pub(crate) flat: Vec<u64>,
+}
+
+fn grow_i32(buf: &mut Vec<i32>, n: usize) {
+    if buf.len() < n {
+        buf.resize(n, 0);
+    }
+}
+
+impl Scratch {
+    /// Fresh empty arena; buffers grow on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ensure the `conv_t` buffers can hold `t` planes of `c_out * hw`
+    /// psums plus the per-step popcount planes.
+    pub(crate) fn ensure_conv_t(&mut self, t: usize, plane: usize, hw: usize) {
+        grow_i32(&mut self.psums, t * plane);
+        self.ensure_ones(t, hw);
+        grow_i32(&mut self.chan_psum, t * hw);
+    }
+
+    /// Ensure the per-step popcount planes for `t` steps of `hw` pixels.
+    pub(crate) fn ensure_ones(&mut self, t: usize, hw: usize) {
+        grow_i32(&mut self.ones, t * hw);
+        grow_i32(&mut self.ones_sum, t * hw);
+    }
+
+    /// Ensure the fused conv→IF path buffers (per-channel psums + full
+    /// membrane plane).
+    pub(crate) fn ensure_fused(&mut self, t: usize, plane: usize, hw: usize) {
+        self.ensure_ones(t, hw);
+        grow_i32(&mut self.chan_psum, t * hw);
+        grow_i32(&mut self.v, plane);
+    }
+
+    /// Ensure the encoding-layer psum + membrane buffers.
+    pub(crate) fn ensure_enc(&mut self, plane: usize) {
+        grow_i32(&mut self.enc_psum, plane);
+        grow_i32(&mut self.v, plane);
+    }
+
+    /// Ensure the fc-path buffers: `t * words` flat spike words,
+    /// `t * n_out` psums, `n_out` membranes.
+    pub(crate) fn ensure_fc(&mut self, t: usize, words: usize, n_out: usize) {
+        if self.flat.len() < t * words {
+            self.flat.resize(t * words, 0);
+        }
+        grow_i32(&mut self.psums, t * n_out);
+        grow_i32(&mut self.v, n_out);
+    }
+
+    /// The psum buffer filled by [`crate::snn::conv::PackedConv::conv_t`]
+    /// (plane `t` at `[t * c_out * h * w ..][.. c_out * h * w]`) and by
+    /// [`crate::snn::conv::PackedFc::matvec_t`] (`[t * n_out + o]`).
+    pub fn psums(&self) -> &[i32] {
+        &self.psums
+    }
+}

@@ -33,6 +33,20 @@ impl SpikeMap {
         }
     }
 
+    /// Re-shape to an all-zero (c, h, w) map, reusing the existing word
+    /// buffer.  After the first call at a given geometry this performs no
+    /// heap allocation — the reuse primitive of the inference hot path.
+    pub fn reset(&mut self, channels: usize, height: usize, width: usize) {
+        let wpp = ceil_div(channels.max(1), 64);
+        self.channels = channels;
+        self.height = height;
+        self.width = width;
+        self.wpp = wpp;
+        let n = height * width * wpp;
+        self.data.clear();
+        self.data.resize(n, 0);
+    }
+
     /// Geometry accessors.
     pub fn channels(&self) -> usize {
         self.channels
@@ -67,6 +81,15 @@ impl SpikeMap {
         (self.data[idx] >> (c % 64)) & 1 == 1
     }
 
+    /// OR a spike into (c, y, x) — the write primitive of the packed IF
+    /// fire path (the map is pre-cleared, so only set bits are touched).
+    #[inline]
+    pub fn or_bit(&mut self, c: usize, y: usize, x: usize) {
+        debug_assert!(c < self.channels && y < self.height && x < self.width);
+        let idx = (y * self.width + x) * self.wpp + c / 64;
+        self.data[idx] |= 1u64 << (c % 64);
+    }
+
     /// The channel words of one pixel.
     #[inline]
     pub fn pixel_words(&self, y: usize, x: usize) -> &[u64] {
@@ -95,6 +118,15 @@ impl SpikeMap {
     /// 2x2/2 max pool (OR over each window) — paper's MP2 on spikes.
     pub fn maxpool2(&self) -> SpikeMap {
         let mut out = SpikeMap::zeros(self.channels, self.height / 2, self.width / 2);
+        self.maxpool2_into(&mut out);
+        out
+    }
+
+    /// `maxpool2` into a caller-owned (pre-reset) map — allocation-free.
+    pub fn maxpool2_into(&self, out: &mut SpikeMap) {
+        debug_assert_eq!(out.channels, self.channels);
+        debug_assert_eq!(out.height, self.height / 2);
+        debug_assert_eq!(out.width, self.width / 2);
         for y in 0..out.height {
             for x in 0..out.width {
                 let base = (y * out.width + x) * out.wpp;
@@ -107,18 +139,37 @@ impl SpikeMap {
                 }
             }
         }
-        out
+    }
+
+    /// Number of words `to_flat_words`/`to_flat_words_into` produce.
+    #[inline]
+    pub fn flat_words_len(&self) -> usize {
+        ceil_div((self.channels * self.height * self.width).max(1), 64)
     }
 
     /// Flatten to (c, y, x) C-major bit order — matches numpy's
     /// `spikes.reshape(-1)` on a (C, H, W) array.  Returned as packed u64
     /// words (bit i of the flattened vector = word i/64, bit i%64).
     pub fn to_flat_words(&self) -> Vec<u64> {
-        let n = self.channels * self.height * self.width;
-        let mut words = vec![0u64; ceil_div(n.max(1), 64)];
+        let mut words = vec![0u64; self.flat_words_len()];
+        self.to_flat_words_into(&mut words);
+        words
+    }
+
+    /// `to_flat_words` into a caller buffer (zeroed first) — the
+    /// allocation-free variant the time-batched fc path uses.
+    pub fn to_flat_words_into(&self, out: &mut [u64]) {
+        let n = self.flat_words_len();
+        out.fill(0); // whole buffer: no stale bits beyond this map's words
+        let out = &mut out[..n];
+        let hw = self.height * self.width;
+        if hw == 1 {
+            // (C, 1, 1) maps are already C-major packed: a straight copy.
+            out.copy_from_slice(&self.data);
+            return;
+        }
         // Walk set bits only (trailing_zeros skip) — §Perf optimization:
         // firing rates are ~30-50%, so this roughly halves the transpose.
-        let hw = self.height * self.width;
         for (pix, chunk) in self.data.chunks_exact(self.wpp).enumerate() {
             for (wi, &word) in chunk.iter().enumerate() {
                 let mut m = word;
@@ -126,11 +177,10 @@ impl SpikeMap {
                     let b = m.trailing_zeros() as usize;
                     m &= m - 1;
                     let i = (wi * 64 + b) * hw + pix;
-                    words[i / 64] |= 1u64 << (i % 64);
+                    out[i / 64] |= 1u64 << (i % 64);
                 }
             }
         }
-        words
     }
 
     /// Dense 0/1 bytes in (C, H, W) order — for interop and tests.
@@ -183,6 +233,56 @@ mod tests {
         m.set(2, 1, 0, true); // flat index (2*2+1)*2+0 = 10
         let words = m.to_flat_words();
         assert_eq!(words[0], (1 << 5) | (1 << 10));
+    }
+
+    #[test]
+    fn flat_into_matches_alloc_variant() {
+        let mut rng = SplitMix64::new(77);
+        for &(c, h, w) in &[(3usize, 2usize, 2usize), (130, 3, 3), (70, 1, 1), (5, 1, 1)] {
+            let mut m = SpikeMap::zeros(c, h, w);
+            for ch in 0..c {
+                for y in 0..h {
+                    for x in 0..w {
+                        m.set(ch, y, x, rng.next_below(2) == 1);
+                    }
+                }
+            }
+            let alloc = m.to_flat_words();
+            let mut buf = vec![0xFFFF_FFFF_FFFF_FFFFu64; m.flat_words_len()];
+            m.to_flat_words_into(&mut buf);
+            assert_eq!(alloc, buf);
+        }
+    }
+
+    #[test]
+    fn reset_reuses_and_zeroes() {
+        let mut m = SpikeMap::zeros(64, 4, 4);
+        m.set(3, 1, 1, true);
+        m.reset(130, 2, 2);
+        assert_eq!(m.channels(), 130);
+        assert_eq!(m.height(), 2);
+        assert_eq!(m.wpp(), 3);
+        assert_eq!(m.total_spikes(), 0);
+        m.or_bit(129, 1, 1);
+        assert!(m.get(129, 1, 1));
+        assert_eq!(m.total_spikes(), 1);
+    }
+
+    #[test]
+    fn maxpool_into_matches_alloc_variant() {
+        let mut rng = SplitMix64::new(8);
+        let mut m = SpikeMap::zeros(66, 6, 6);
+        for c in 0..66 {
+            for y in 0..6 {
+                for x in 0..6 {
+                    m.set(c, y, x, rng.next_below(2) == 1);
+                }
+            }
+        }
+        let mut out = SpikeMap::zeros(1, 1, 1);
+        out.reset(66, 3, 3);
+        m.maxpool2_into(&mut out);
+        assert_eq!(out, m.maxpool2());
     }
 
     #[test]

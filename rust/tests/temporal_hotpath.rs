@@ -1,0 +1,247 @@
+//! Property-based coverage of the time-batched inference hot path (PR1):
+//!
+//! * `PackedConv::conv_t` against the dense `conv_naive` oracle across
+//!   word-boundary channel counts, kernel sizes and time steps;
+//! * `PackedFc::matvec_t` against a dense dot-product oracle;
+//! * the fused conv→IF→maxpool network path bit-exact against the frozen
+//!   pre-refactor per-step engine (`baselines::golden_stepwise`) and the
+//!   cycle-accurate chip simulator (`engines_agree`-style);
+//! * scratch-arena reuse across different model geometries.
+
+use vsa::arch::{Chip, SimMode};
+use vsa::baselines::golden_stepwise::StepwiseGolden;
+use vsa::config::models;
+use vsa::coordinator::{ChipEngine, GoldenEngine, InferenceEngine};
+use vsa::config::HwConfig;
+use vsa::data::synth;
+use vsa::snn::conv::{conv_naive, PackedConv, PackedFc};
+use vsa::snn::params::{DeployedModel, Kind, Layer};
+use vsa::snn::{Network, Scratch, SpikeMap};
+use vsa::testing::{check, Gen};
+use vsa::util::FIXED_POINT;
+
+fn random_train(g: &mut Gen, t: usize, c: usize, h: usize, w: usize) -> Vec<SpikeMap> {
+    (0..t)
+        .map(|_| {
+            let mut m = SpikeMap::zeros(c, h, w);
+            for ch in 0..c {
+                for y in 0..h {
+                    for x in 0..w {
+                        m.set(ch, y, x, g.bool());
+                    }
+                }
+            }
+            m
+        })
+        .collect()
+}
+
+/// conv_t == conv_naive per step, across odd channel counts (word
+/// boundaries at 63/64/65/130), k in {1, 3, 5}, T in {1, 4, 8}.
+#[test]
+fn conv_t_matches_naive_across_geometries() {
+    let mut scratch = Scratch::new(); // shared across cases: exercises reuse
+    for &c_in in &[1usize, 63, 64, 65, 130] {
+        for &k in &[1usize, 3, 5] {
+            for &t in &[1usize, 4, 8] {
+                let mut g = Gen::new((c_in * 1000 + k * 10 + t) as u64);
+                let c_out = 1 + (c_in + k + t) % 4;
+                let hw = 5 + (k + t) % 3;
+                let weights = g.weights(c_out * c_in * k * k);
+                let train = random_train(&mut g, t, c_in, hw, hw);
+                let packed = PackedConv::pack(c_out, c_in, k, &weights);
+                packed.conv_t(&train, &mut scratch);
+                let plane = c_out * hw * hw;
+                for (ti, s) in train.iter().enumerate() {
+                    let naive =
+                        conv_naive(&s.to_dense(), c_in, hw, hw, &weights, c_out, k);
+                    assert_eq!(
+                        &scratch.psums()[ti * plane..(ti + 1) * plane],
+                        &naive[..],
+                        "c_in={c_in} k={k} T={t} step={ti}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// matvec_t == dense dot product per step across word boundaries.
+#[test]
+fn matvec_t_matches_naive() {
+    for &n_in in &[1usize, 63, 64, 65, 130, 1000] {
+        for &t in &[1usize, 4, 8] {
+            let mut g = Gen::new((n_in * 17 + t) as u64);
+            let n_out = 1 + (n_in + t) % 7;
+            let w = g.weights(n_out * n_in);
+            let packed = PackedFc::pack(n_out, n_in, &w);
+            let words = packed.words();
+            let dense: Vec<Vec<u8>> =
+                (0..t).map(|_| g.spikes(n_in, 40)).collect();
+            let mut flat = vec![0u64; t * words];
+            for (ti, step) in dense.iter().enumerate() {
+                for (i, &s) in step.iter().enumerate() {
+                    if s == 1 {
+                        flat[ti * words + i / 64] |= 1u64 << (i % 64);
+                    }
+                }
+            }
+            let mut out = vec![0i32; t * n_out];
+            packed.matvec_t(&flat, t, &mut out);
+            for (ti, step) in dense.iter().enumerate() {
+                for o in 0..n_out {
+                    let want: i32 = (0..n_in)
+                        .map(|i| step[i] as i32 * w[o * n_in + i] as i32)
+                        .sum();
+                    assert_eq!(
+                        out[ti * n_out + o],
+                        want,
+                        "n_in={n_in} T={t} step={ti} o={o}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Build a random small network: enc conv -> [pool] -> conv -> [pool] ->
+/// fc -> readout, mirroring sim_vs_golden's generator but always forcing
+/// at least one pooled conv so the fused path is exercised.
+fn random_model(g: &mut Gen) -> (DeployedModel, Vec<u8>) {
+    let in_size = *g.choose(&[8usize, 12, 16]);
+    let c1 = *g.choose(&[4usize, 8, 16]);
+    let c2 = *g.choose(&[4usize, 8, 33]);
+    let t = g.usize_in(1, 6);
+    let pool2 = g.bool();
+    let mid = in_size / 2; // enc layer always pooled
+    let end = if pool2 { mid / 2 } else { mid };
+    let n_fc = g.usize_in(4, 12);
+
+    let mut layers = vec![
+        Layer::Conv {
+            kind: Kind::EncConv,
+            c_out: c1,
+            c_in: 1,
+            k: 3,
+            w: g.weights(c1 * 9),
+            bias: (0..c1).map(|_| g.i32_in(-500, 500) * FIXED_POINT / 4).collect(),
+            theta: (0..c1).map(|_| g.i32_in(1, 300) * FIXED_POINT).collect(),
+        },
+        Layer::MaxPool,
+        Layer::Conv {
+            kind: Kind::Conv,
+            c_out: c2,
+            c_in: c1,
+            k: 3,
+            w: g.weights(c2 * c1 * 9),
+            bias: (0..c2).map(|_| g.i32_in(-4, 4) * FIXED_POINT).collect(),
+            theta: (0..c2).map(|_| g.i32_in(1, 12) * FIXED_POINT).collect(),
+        },
+    ];
+    if pool2 {
+        layers.push(Layer::MaxPool);
+    }
+    layers.push(Layer::Fc {
+        n_out: n_fc,
+        n_in: c2 * end * end,
+        w: g.weights(n_fc * c2 * end * end),
+        bias: (0..n_fc).map(|_| g.i32_in(-2, 2) * FIXED_POINT).collect(),
+        theta: (0..n_fc).map(|_| g.i32_in(1, 6) * FIXED_POINT).collect(),
+    });
+    layers.push(Layer::Readout {
+        n_out: 10,
+        n_in: n_fc,
+        w: g.weights(10 * n_fc),
+    });
+
+    let model = DeployedModel {
+        name: "prop".into(),
+        num_steps: t,
+        in_channels: 1,
+        in_size,
+        layers,
+    };
+    let image: Vec<u8> =
+        (0..in_size * in_size).map(|_| g.i32_in(0, 255) as u8).collect();
+    (model, image)
+}
+
+/// The fused conv→IF→pool path is bit-exact with the unfused pre-refactor
+/// engine on randomized pooled networks.
+#[test]
+fn fused_pool_path_matches_stepwise_oracle() {
+    let mut scratch = Scratch::new();
+    check("fused pool == stepwise", 25, |g: &mut Gen| {
+        let (model, image) = random_model(g);
+        let fused = Network::new(model.clone());
+        let oracle = StepwiseGolden::new(model);
+        assert_eq!(fused.infer_u8_with(&image, &mut scratch), oracle.infer_u8(&image));
+    });
+}
+
+/// Traced inference (which disables fusion to expose pre-pool trains)
+/// produces the same logits as the fused fast path.
+#[test]
+fn traced_unfused_matches_fused() {
+    check("traced == fused", 10, |g: &mut Gen| {
+        let (model, image) = random_model(g);
+        let net = Network::new(model);
+        let fast = net.infer_u8(&image);
+        let (traced, trace) = net.infer_traced(&image);
+        assert_eq!(fast, traced);
+        // enc, pool, conv, [pool], fc emit trains; readout does not
+        assert!(trace.spike_trains.len() >= 4);
+        // every firing layer leaves a residue
+        assert_eq!(trace.residues.len(), 3);
+    });
+}
+
+/// `engines_agree`-style: the golden engine (with scratch reuse across a
+/// batch) and the chip-sim engine produce identical logits.
+#[test]
+fn golden_and_chip_engines_agree_on_synth_models() {
+    for (name, t) in [("tiny", 4), ("mnist", 2)] {
+        let spec = models::by_name(name, t).unwrap();
+        let model = DeployedModel::synthesize(&spec, 13);
+        let images: Vec<Vec<u8>> = synth::for_model(name, 9, 0, 3)
+            .into_iter()
+            .map(|s| s.image)
+            .collect();
+        let mut golden = GoldenEngine::new(Network::new(model.clone()), 4);
+        let mut chip = ChipEngine::new(HwConfig::default(), Network::new(model), 4);
+        assert_eq!(
+            golden.infer(&images).unwrap(),
+            chip.infer(&images).unwrap(),
+            "{name}: golden != chip-sim"
+        );
+    }
+}
+
+/// One scratch arena survives alternating between models of different
+/// geometry (the serving worker's reconfiguration scenario).
+#[test]
+fn scratch_survives_model_reconfiguration() {
+    let tiny = Network::new(DeployedModel::synthesize(&models::tiny(4), 3));
+    let mnist = Network::new(DeployedModel::synthesize(&models::mnist(2), 3));
+    let tiny_img = &synth::tiny_like(1, 0, 1)[0].image;
+    let mnist_img = &synth::mnist_like(1, 0, 1)[0].image;
+    let want_tiny = tiny.infer_u8(tiny_img);
+    let want_mnist = mnist.infer_u8(mnist_img);
+    let mut scratch = Scratch::new();
+    for _ in 0..3 {
+        assert_eq!(tiny.infer_u8_with(tiny_img, &mut scratch), want_tiny);
+        assert_eq!(mnist.infer_u8_with(mnist_img, &mut scratch), want_mnist);
+    }
+}
+
+/// Golden vs chip-sim on the randomized pooled models too (the fused path
+/// must agree with the hardware schedule, not just the oracle).
+#[test]
+fn fused_path_matches_chip_sim() {
+    check("fused == chip sim", 10, |g: &mut Gen| {
+        let (model, image) = random_model(g);
+        let golden = Network::new(model.clone()).infer_u8(&image);
+        let report = Chip::new(HwConfig::default(), SimMode::Fast).run(&model, &image);
+        assert_eq!(report.logits, golden);
+    });
+}

@@ -1,0 +1,182 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides the subset of `anyhow` the workspace uses:
+//!
+//! * [`Error`] — a single-string error value with a context chain folded
+//!   into the message;
+//! * [`Result<T>`] with the `Error` default;
+//! * a blanket `From<E: std::error::Error>` so `?` converts any std
+//!   error (mirroring real `anyhow`, [`Error`] itself deliberately does
+//!   NOT implement `std::error::Error`, which keeps the blanket impl
+//!   coherent);
+//! * the [`Context`] extension trait on `Result` and `Option`;
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros (format-string and
+//!   single-expression forms).
+//!
+//! Swap back to the real crate by deleting `vendor/anyhow` and pointing
+//! the workspace dependency at crates.io.
+
+use std::fmt;
+
+/// A boxed-free, single-message error with its context chain pre-folded.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string() }
+    }
+
+    fn wrap(self, context: impl fmt::Display) -> Self {
+        Self { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` on real anyhow prints the whole chain; ours is already
+        // folded into one message, so both forms print the same thing.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulting to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context message to the error/none case.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an error when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().unwrap_err().to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let e: Result<()> = std::result::Result::<(), _>::Err(io_err()).context("reading x");
+        assert_eq!(e.unwrap_err().to_string(), "reading x: gone");
+        let n: Result<u8> = None.with_context(|| format!("missing {}", "y"));
+        assert_eq!(n.unwrap_err().to_string(), "missing y");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let value = 3;
+        let e = anyhow!("bad value {value} ({})", "extra");
+        assert_eq!(e.to_string(), "bad value 3 (extra)");
+        let from_string = anyhow!(String::from("plain"));
+        assert_eq!(from_string.to_string(), "plain");
+
+        fn guarded(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            ensure!(x < 100);
+            if x == 13 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(guarded(5).unwrap(), 5);
+        assert!(guarded(-1).unwrap_err().to_string().contains("positive"));
+        assert!(guarded(200).unwrap_err().to_string().contains("condition failed"));
+        assert!(guarded(13).unwrap_err().to_string().contains("unlucky"));
+    }
+
+    #[test]
+    fn alternate_display_matches_plain() {
+        let e = anyhow!("top").wrap("ctx");
+        assert_eq!(format!("{e}"), format!("{e:#}"));
+        assert_eq!(format!("{e:?}"), "ctx: top");
+    }
+}
