@@ -1,0 +1,74 @@
+//! Design-space exploration walkthrough — making the paper's
+//! "reconfigurable" claim executable at scale: sweep the chip's knobs,
+//! extract the (throughput, power, area) Pareto frontier, and see where
+//! the published design point lands.  Needs no artifacts: candidates are
+//! scored by the analytic timing model (`Chip::analyze`), which charges
+//! the exact counters of a functional run without executing the datapath.
+//!
+//! ```sh
+//! cargo run --release --example design_space
+//! ```
+
+use vsa::config::HwConfig;
+use vsa::dse::{self, Candidate, SearchSpace};
+use vsa::energy::area;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. a declarative space over every reconfigurable knob ------------
+    let space = SearchSpace::small();
+    let workloads = ["mnist", "cifar10"];
+    println!("== space '{}': {} grid points", space.name, space.len());
+
+    // Validity filtering: points the timing model would mis-represent
+    // (conv weights that cannot stay resident, spike planes overflowing a
+    // ping-pong bank, PE arrays too skinny for a 3x3 kernel, fusion with
+    // no fusible pair) are rejected before evaluation.
+    let candidates: Vec<Candidate> = space
+        .cartesian()
+        .filter(|c| dse::validate(c, &workloads).is_ok())
+        .collect();
+    println!("   {} candidates valid for {:?}", candidates.len(), workloads);
+
+    // --- 2. evaluate every candidate on both Table-I workloads -----------
+    let t0 = std::time::Instant::now();
+    let results = dse::evaluate_all(&candidates, &workloads, 4);
+    println!(
+        "   evaluated in {:.1} ms on 4 threads (analytic model: no inference runs)",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // --- 3. Pareto frontier over (throughput, power, area) ---------------
+    let front = dse::frontier(&results);
+    print!("\n{}", dse::report::render(&results, &front, 3));
+
+    // --- 4. where the published design point lands ------------------------
+    // Chip-vs-chip optimality is judged at the paper's T = 8: lower-T
+    // candidates do strictly less compute and dominate trivially while
+    // paying an accuracy cost the analytic model does not score.
+    let slack = dse::paper_slack_at_t(&results).expect("paper point is in the space");
+    println!(
+        "\npaper design point [{}]: slack {:.4} vs the T=8 frontier \
+         (<= 0 means Pareto-optimal; ties pin it at 0)",
+        Candidate::paper().id(),
+        slack
+    );
+
+    // --- 5. single-knob sensitivity: PE blocks ----------------------------
+    println!("\n== PE-block sensitivity at the design point (cifar10, T=8)");
+    println!("{:>8} {:>8} {:>12} {:>10} {:>10}", "blocks", "PEs", "inf/s", "mW", "KGE");
+    for blocks in [8, 16, 32, 64] {
+        let hw = HwConfig { pe_blocks: blocks, ..HwConfig::default() };
+        let cand = Candidate { hw, num_steps: 8 };
+        let r = dse::evaluate_one(&cand, &["cifar10"]);
+        println!(
+            "{:>8} {:>8} {:>12.1} {:>10.3} {:>10.1}",
+            blocks,
+            cand.hw.total_pes(),
+            r.throughput_ips,
+            r.power_mw,
+            area::total_area_kge(&cand.hw)
+        );
+    }
+    println!("\n(the frontier JSON report comes from `vsa dse`; see README)");
+    Ok(())
+}

@@ -7,6 +7,9 @@
 //! after the time-batched refactor in the same run** — the per-step
 //! engine is frozen in `baselines::golden_stepwise` — and records
 //! images/sec for the golden and chip-sim engines in `BENCH_PR1.json`.
+//! The PR2 section additionally sweeps the design space (`vsa::dse`),
+//! times the chip at the Pareto-best configuration, and appends the rows
+//! to `BENCH_PR2.json`.
 //!
 //! Run: `cargo bench --bench bench_throughput` (add `-- --quick` for the
 //! CI smoke subset).
@@ -16,8 +19,11 @@ mod harness;
 
 use harness::{bench, quick_mode, section, JsonReport};
 
-/// Repo-root report path (cargo runs benches with CWD = the package dir).
+/// Repo-root report paths (cargo runs benches with CWD = the package
+/// dir).  BENCH_PR1.json keeps the PR1 rows for continuity;
+/// BENCH_PR2.json appends the DSE rows — the cross-PR trajectory file.
 const REPORT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR1.json");
+const REPORT2_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR2.json");
 use std::time::Duration;
 use vsa::arch::schedule::{LayerPlan, PlanKind};
 use vsa::arch::{Chip, SimMode};
@@ -26,6 +32,7 @@ use vsa::baselines::spinalflow::{self, SpinalFlowConfig};
 use vsa::config::{models, HwConfig};
 use vsa::coordinator::{Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine};
 use vsa::data::synth;
+use vsa::dse::{self, Candidate, SearchSpace};
 use vsa::snn::params::DeployedModel;
 use vsa::snn::{Network, Scratch};
 
@@ -126,6 +133,70 @@ fn chip_sim_throughput(report: &mut JsonReport, quick: bool) {
     }
 }
 
+/// Chip throughput at the DSE-selected best configuration (highest-
+/// throughput Pareto point of the mnist sweep) next to the published
+/// design point — the start of the cross-PR images/sec trajectory the
+/// ROADMAP asks for (recorded in BENCH_PR2.json).
+fn dse_best_config(report: &mut JsonReport, quick: bool) {
+    section("chip at the DSE-selected best config (Pareto sweep, mnist)");
+    let mut space = if quick { SearchSpace::tiny() } else { SearchSpace::small() };
+    // Pin the sweep to the paper's T so the trajectory compares chips,
+    // not time-step counts (lower T does strictly less compute at an
+    // accuracy cost the analytic model does not score).
+    space.num_steps = vec![Candidate::paper().num_steps];
+    let workloads = ["mnist"];
+    let cands: Vec<Candidate> = space
+        .cartesian()
+        .filter(|c| dse::validate(c, &workloads).is_ok())
+        .collect();
+    let results = dse::evaluate_all(&cands, &workloads, 4);
+    let front = dse::frontier(&results);
+    let best = &results[front[0]]; // frontier is sorted by throughput desc
+    let paper = dse::evaluate_one(&Candidate::paper(), &workloads);
+    println!(
+        "  space '{}': best frontier point [{}]\n  modeled {:.1} inf/s vs paper point {:.1} inf/s",
+        space.name,
+        best.candidate.id(),
+        best.throughput_ips,
+        paper.throughput_ips
+    );
+    report.throughput(
+        "chip-model-paper",
+        "mnist",
+        paper.throughput_ips,
+        "analytic chip model at the published design point",
+    );
+    report.throughput(
+        "chip-model-dse-best",
+        "mnist",
+        best.throughput_ips,
+        &format!("analytic chip model at DSE frontier best [{}]", best.candidate.id()),
+    );
+    report.ratio(
+        "mnist_dse_best_vs_paper",
+        best.throughput_ips / paper.throughput_ips,
+        "modeled throughput, DSE frontier best vs published design point",
+    );
+
+    // Wall-clock of the functional simulator reconfigured to the best
+    // point (results stay bit-identical to the golden model; only the
+    // timing/traffic counters change with the config).
+    let spec = models::by_name("mnist", best.candidate.num_steps).expect("preset exists");
+    let model = DeployedModel::synthesize(&spec, 7);
+    let img = synth::for_model("mnist", 3, 0, 1).remove(0).image;
+    let chip = Chip::new(best.candidate.hw.clone(), SimMode::Fast);
+    let iters = if quick { 2 } else { 3 };
+    let timing = bench("mnist: full-net sim at DSE best (fast)", 1, iters, || {
+        std::hint::black_box(chip.run(&model, &img));
+    });
+    report.throughput(
+        "chip-sim-dse-best",
+        "mnist",
+        1.0 / (timing.mean_ms / 1e3),
+        "cycle-accurate fast mode wall-clock at the DSE-selected config",
+    );
+}
+
 fn main() {
     let quick = quick_mode();
     let hw = HwConfig::default();
@@ -161,6 +232,8 @@ fn main() {
 
     if quick {
         report.write(REPORT_PATH);
+        dse_best_config(&mut report, true);
+        report.write(REPORT2_PATH);
         println!("\n--quick: skipping artifact-dependent and serving sections");
         return;
     }
@@ -256,4 +329,6 @@ fn main() {
     }
 
     report.write(REPORT_PATH);
+    dse_best_config(&mut report, false);
+    report.write(REPORT2_PATH);
 }

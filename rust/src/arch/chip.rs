@@ -79,6 +79,61 @@ impl Chip {
         (report, trace)
     }
 
+    /// Analytic per-candidate entry point for design-space exploration:
+    /// charges the identical cycle, SRAM and DRAM counters as [`Chip::run`]
+    /// without executing the datapath.  The counters are data-independent
+    /// (they depend only on layer geometry, the hardware config and the
+    /// fusion plan — asserted by `analyze_matches_run_counters`), so a
+    /// candidate evaluates in microseconds instead of a full inference.
+    /// No weights are needed: the plan comes straight from the
+    /// [`ModelSpec`].  `logits` and per-layer spike counts are zero.
+    pub fn analyze(&self, spec: &crate::config::models::ModelSpec) -> RunReport {
+        let plans = crate::arch::schedule::plan_spec(spec);
+        let groups = plan_fusion(&plans, &self.hw);
+        let t_steps = spec.num_steps;
+
+        let mut dram = Dram::default();
+        let mut sram = SramAccesses::default();
+        let mut layer_reports = Vec::with_capacity(plans.len());
+        let mut cycles_total = 0u64;
+        let mut pe_ops_total = 0u64;
+
+        for (idx, plan) in plans.iter().enumerate() {
+            let (fused_in, fused_out) = roles(&groups, idx);
+            layer_dram(plan, t_steps, fused_in, fused_out, true, &mut dram);
+            let acc = layer_sram(plan, &self.hw, t_steps);
+            let cycles = plan.cycles(&self.hw, t_steps);
+            cycles_total += cycles;
+            pe_ops_total += plan.pe_ops(&self.hw, t_steps);
+            layer_reports.push(LayerReport {
+                kind: plan.kind,
+                cycles,
+                utilization: plan.utilization(&self.hw, t_steps),
+                spikes_emitted: 0,
+                membrane_accesses: acc.membrane_rmw,
+            });
+            sram.add(&acc);
+        }
+
+        let freq_hz = self.hw.freq_mhz * 1e6;
+        let latency_us = cycles_total as f64 / freq_hz * 1e6;
+        let gops = (2.0 * pe_ops_total as f64) / (cycles_total as f64 / freq_hz) / 1e9;
+        let utilization =
+            pe_ops_total as f64 / (cycles_total as f64 * self.hw.total_pes() as f64);
+
+        RunReport {
+            logits: Vec::new(),
+            cycles: cycles_total,
+            layers: layer_reports,
+            dram,
+            sram,
+            pe_ops: pe_ops_total,
+            latency_us,
+            gops,
+            utilization,
+        }
+    }
+
     fn run_inner(
         &self,
         model: &DeployedModel,
@@ -543,6 +598,34 @@ pub(crate) mod tests {
         assert!(on.dram.total() < off.dram.total());
         assert_eq!(on.logits, off.logits); // fusion never changes results
         assert_eq!(on.cycles, off.cycles); // fusion is a bandwidth feature
+    }
+
+    /// The analytic DSE entry point charges exactly the counters a real
+    /// (functional) run charges — on every Table-I preset and with fusion
+    /// both on and off.
+    #[test]
+    fn analyze_matches_run_counters() {
+        use crate::config::models;
+        use crate::data::synth;
+        use crate::snn::params::DeployedModel;
+        for fusion in [true, false] {
+            let hw = HwConfig { layer_fusion: fusion, ..HwConfig::default() };
+            for (name, t) in [("tiny", 4), ("mnist", 8)] {
+                let spec = models::by_name(name, t).unwrap();
+                let model = DeployedModel::synthesize(&spec, 7);
+                let img = &synth::for_model(name, 3, 0, 1)[0].image;
+                let chip = Chip::new(hw.clone(), SimMode::Fast);
+                let ran = chip.run(&model, img);
+                let analyzed = chip.analyze(&spec);
+                assert_eq!(analyzed.cycles, ran.cycles, "{name}: cycles");
+                assert_eq!(analyzed.pe_ops, ran.pe_ops, "{name}: pe_ops");
+                assert_eq!(analyzed.dram.total(), ran.dram.total(), "{name}: dram");
+                assert_eq!(analyzed.sram.total(), ran.sram.total(), "{name}: sram");
+                assert_eq!(analyzed.layers.len(), ran.layers.len());
+                assert!((analyzed.latency_us - ran.latency_us).abs() < 1e-9);
+                assert!((analyzed.utilization - ran.utilization).abs() < 1e-12);
+            }
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub fn plan_fusion(plans: &[LayerPlan], hw: &HwConfig) -> Vec<FusionGroup> {
     if !hw.layer_fusion {
         return (0..plans.len()).map(|i| FusionGroup { start: i, len: 1 }).collect();
     }
-    let budget_bits = (hw.weight_sram_kb * 1024.0 * 8.0) as u64;
+    let budget_bits = hw.weight_sram_bits();
     let mut groups = Vec::new();
     let mut i = 0;
     while i < plans.len() {
@@ -105,6 +105,42 @@ mod tests {
         let groups = plan_fusion(&plans, &hw);
         assert_eq!(groups.len(), 3);
         assert!(groups.iter().all(|g| g.len == 1));
+    }
+
+    /// Property: across randomized layer sizes and SRAM budgets —
+    /// including budgets smaller than any single layer — `plan_fusion`
+    /// (a) partitions the plan indices exactly once, in order, into
+    /// groups of length 1 or 2, and (b) never emits a fused pair whose
+    /// combined weights exceed the weight-SRAM budget.
+    #[test]
+    fn fusion_partition_and_budget_property() {
+        use crate::testing::{check, Gen};
+        check("plan_fusion partitions in order under budget", 300, |g: &mut Gen| {
+            let n = g.usize_in(0, 12);
+            let plans: Vec<LayerPlan> = (0..n)
+                .map(|_| plan(g.usize_in(1, 512), g.usize_in(1, 512)))
+                .collect();
+            // 0.05 KiB (410 bits) is below any single 3x3 layer here;
+            // 2304 KiB holds even two maximal 512x512x3x3 layers.
+            let weight_sram_kb = *g.choose(&[0.05, 1.0, 16.0, 96.0, 2304.0]);
+            let hw = HwConfig { weight_sram_kb, layer_fusion: g.bool(), ..HwConfig::default() };
+            let groups = plan_fusion(&plans, &hw);
+
+            let mut next = 0usize;
+            for fg in &groups {
+                assert_eq!(fg.start, next, "groups out of order or overlapping");
+                assert!(fg.len == 1 || fg.len == 2, "group of len {}", fg.len);
+                next += fg.len;
+            }
+            assert_eq!(next, plans.len(), "groups do not cover every plan");
+
+            let budget_bits = hw.weight_sram_bits();
+            for fg in groups.iter().filter(|fg| fg.len == 2) {
+                assert!(hw.layer_fusion, "fused pair with fusion disabled");
+                let pair = plans[fg.start].weight_bits() + plans[fg.start + 1].weight_bits();
+                assert!(pair <= budget_bits, "pair {pair} bits over budget {budget_bits}");
+            }
+        });
     }
 
     #[test]

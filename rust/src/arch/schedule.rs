@@ -21,6 +21,7 @@
 
 use crate::arch::accumulator::PIPELINE_DEPTH;
 use crate::arch::dram::{Dram, Traffic};
+use crate::config::models::{LayerKind, ModelSpec};
 use crate::config::HwConfig;
 use crate::snn::params::{DeployedModel, Kind, Layer};
 use crate::util::ceil_div;
@@ -35,7 +36,7 @@ pub enum PlanKind {
 }
 
 /// One compute layer of the execution plan.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerPlan {
     pub kind: PlanKind,
     pub c_in: usize,
@@ -192,6 +193,58 @@ pub fn plan_model(model: &DeployedModel) -> Vec<LayerPlan> {
     plans
 }
 
+/// Fold a Table-I [`ModelSpec`] into compute-layer plans without
+/// synthesizing weights — the design-space-exploration path.  Timing,
+/// SRAM and DRAM counters are data-independent, so a plan built from the
+/// bare spec is interchangeable with one built from a [`DeployedModel`]
+/// of the same geometry (asserted by `plan_spec_matches_plan_model`).
+pub fn plan_spec(spec: &ModelSpec) -> Vec<LayerPlan> {
+    let mut plans: Vec<LayerPlan> = Vec::new();
+    let (mut c, mut s) = (spec.in_channels, spec.in_size);
+    for (idx, ly) in spec.layers.iter().enumerate() {
+        match ly.kind {
+            LayerKind::EncConv | LayerKind::Conv => {
+                plans.push(LayerPlan {
+                    kind: if ly.kind == LayerKind::EncConv {
+                        PlanKind::EncConv
+                    } else {
+                        PlanKind::Conv
+                    },
+                    c_in: c,
+                    c_out: ly.c_out,
+                    k: ly.ksize,
+                    h: s,
+                    w: s,
+                    pooled: false,
+                    model_index: idx,
+                });
+                c = ly.c_out;
+            }
+            LayerKind::MaxPool => {
+                let last = plans.last_mut().expect("maxpool cannot be the first layer");
+                assert!(!last.pooled, "consecutive pools unsupported");
+                last.pooled = true;
+                s /= 2;
+            }
+            LayerKind::Fc | LayerKind::Readout => {
+                plans.push(LayerPlan {
+                    kind: if ly.kind == LayerKind::Fc { PlanKind::Fc } else { PlanKind::Readout },
+                    c_in: c * s * s,
+                    c_out: ly.c_out,
+                    k: 1,
+                    h: 1,
+                    w: 1,
+                    pooled: false,
+                    model_index: idx,
+                });
+                c = ly.c_out;
+                s = 1;
+            }
+        }
+    }
+    plans
+}
+
 /// Per-layer SRAM access totals for one inference (all T steps).
 #[derive(Debug, Clone, Default)]
 pub struct SramAccesses {
@@ -270,7 +323,8 @@ pub fn layer_dram(
             dram.read(Traffic::Image, plan.in_bits_per_step());
         }
         _ if !fused_input => {
-            dram.read(Traffic::SpikesIn, ceil_div((plan.in_bits_per_step() * t) as usize, 8) as u64);
+            let bytes = ceil_div((plan.in_bits_per_step() * t) as usize, 8) as u64;
+            dram.read(Traffic::SpikesIn, bytes);
         }
         _ => {}
     }
@@ -390,6 +444,20 @@ mod tests {
         let mut b = Dram::default();
         layer_dram(&plan, 8, false, false, true, &mut b);
         assert_eq!(a.category(Traffic::Weights), 8 * b.category(Traffic::Weights));
+    }
+
+    /// `plan_spec` (bare spec, no weights) and `plan_model` (deployed
+    /// weights) must produce identical plans for the same geometry.
+    #[test]
+    fn plan_spec_matches_plan_model() {
+        use crate::config::models;
+        use crate::snn::params::DeployedModel;
+        for name in ["tiny", "mnist", "cifar10"] {
+            let spec = models::by_name(name, 8).unwrap();
+            let from_spec = plan_spec(&spec);
+            let from_model = plan_model(&DeployedModel::synthesize(&spec, 7));
+            assert_eq!(from_spec, from_model, "{name}: plan mismatch");
+        }
     }
 
     #[test]

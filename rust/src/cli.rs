@@ -54,20 +54,35 @@ impl Args {
         self.flags.get(key).map(String::as_str)
     }
 
-    /// usize flag with default.
-    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+    /// Parse a typed flag with a default; `what` names the expected type
+    /// in the error message.
+    fn get_parsed<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+        what: &str,
+    ) -> anyhow::Result<T> {
         match self.flags.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects {what}, got '{v}'")),
         }
+    }
+
+    /// usize flag with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        self.get_parsed(key, default, "an integer")
     }
 
     /// u64 flag with default.
     pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
-        match self.flags.get(key) {
-            None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
-        }
+        self.get_parsed(key, default, "an integer")
+    }
+
+    /// f64 flag with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        self.get_parsed(key, default, "a number")
     }
 
     /// Boolean switch (present or not).

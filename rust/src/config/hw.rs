@@ -81,6 +81,37 @@ impl HwConfig {
         self.total_pes() as f64 * self.freq_mhz * 1e6 * 2.0 / 1e9
     }
 
+    /// Weight SRAM capacity in bits (the budget `plan_fusion` packs into).
+    pub fn weight_sram_bits(&self) -> u64 {
+        (self.weight_sram_kb * 1024.0 * 8.0) as u64
+    }
+
+    /// Per-bank capacity of the ping-pong spike SRAM in bits
+    /// (`spike_sram_kb` counts both banks, Table III).
+    pub fn spike_bank_bits(&self) -> u64 {
+        (self.spike_sram_kb / 2.0 * 1024.0 * 8.0) as u64
+    }
+
+    /// Compact, stable signature naming every DSE-swept knob.  Used as the
+    /// deterministic Pareto tie-break and as the report label, so two runs
+    /// of the same sweep always order identical candidates identically.
+    /// Float knobs print exactly (`{}`), not rounded: distinct configs
+    /// must never share a signature.
+    pub fn signature(&self) -> String {
+        format!(
+            "{}x{}x({}x{}) f{} w{} sp{} bp{} {}",
+            self.pe_blocks,
+            self.arrays_per_block,
+            self.rows_per_array,
+            self.cols_per_array,
+            self.freq_mhz,
+            self.weight_sram_kb,
+            self.spike_sram_kb,
+            self.encode_bitplanes,
+            if self.layer_fusion { "fuse" } else { "nofuse" }
+        )
+    }
+
     /// Total on-chip SRAM in KiB.
     pub fn total_sram_kb(&self) -> f64 {
         self.weight_sram_kb
@@ -150,6 +181,12 @@ impl HwConfig {
         if self.encode_bitplanes == 0 || self.encode_bitplanes > 16 {
             return Err("encode_bitplanes must be in 1..=16".into());
         }
+        if self.weight_sram_kb <= 0.0 || self.spike_sram_kb <= 0.0 {
+            return Err("weight and spike SRAM capacities must be positive".into());
+        }
+        if self.membrane_sram_kb < 0.0 || self.temp_sram_kb < 0.0 || self.boundary_sram_kb < 0.0 {
+            return Err("SRAM capacities must be non-negative".into());
+        }
         Ok(())
     }
 
@@ -191,5 +228,23 @@ mod tests {
         assert!(HwConfig::from_json(&v).is_err());
         let v = Json::parse(r#"{"encode_bitplanes": 99}"#).unwrap();
         assert!(HwConfig::from_json(&v).is_err());
+        let v = Json::parse(r#"{"weight_sram_kb": 0}"#).unwrap();
+        assert!(HwConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn sram_bit_budgets() {
+        let cfg = HwConfig::default();
+        assert_eq!(cfg.weight_sram_bits(), 96 * 1024 * 8);
+        // ping-pong: half of the 64 KiB total per bank
+        assert_eq!(cfg.spike_bank_bits(), 32 * 1024 * 8);
+    }
+
+    #[test]
+    fn signature_is_stable_and_distinguishes_knobs() {
+        let a = HwConfig::default();
+        assert_eq!(a.signature(), "32x3x(8x3) f500 w96 sp64 bp8 fuse");
+        let b = HwConfig { layer_fusion: false, ..HwConfig::default() };
+        assert_ne!(a.signature(), b.signature());
     }
 }

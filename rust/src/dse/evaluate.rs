@@ -1,0 +1,165 @@
+//! Multi-threaded candidate evaluation through the analytic chip model.
+//!
+//! Each candidate runs every workload through [`Chip::analyze`] — the
+//! data-independent timing/SRAM/DRAM walk of `arch::schedule` — and is
+//! scored on the three Pareto objectives (throughput, core power, area)
+//! plus the derived TOPS/W figure.  Evaluation is pure, so results are
+//! bit-identical for any thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::arch::{Chip, SimMode};
+use crate::config::models;
+use crate::dse::space::Candidate;
+use crate::energy::{area, power};
+
+/// Per-workload figures of one candidate.
+#[derive(Debug, Clone)]
+pub struct WorkloadMetrics {
+    pub workload: String,
+    pub cycles: u64,
+    pub latency_us: f64,
+    pub inf_per_sec: f64,
+    pub dram_bytes: u64,
+    pub core_power_mw: f64,
+    pub utilization: f64,
+}
+
+/// One evaluated candidate with its Pareto objectives.
+#[derive(Debug, Clone)]
+pub struct CandidateResult {
+    pub candidate: Candidate,
+    pub per_workload: Vec<WorkloadMetrics>,
+    /// Maximize: geometric mean of inferences/sec across the workloads
+    /// (scale-free, so MNIST's kHz rates don't drown CIFAR-10's).
+    pub throughput_ips: f64,
+    /// Minimize: worst-case core power across the workloads, mW.
+    pub power_mw: f64,
+    /// Minimize: total silicon proxy (logic + SRAM macros), KGE.
+    pub area_kge: f64,
+    /// Peak power efficiency at the worst-case power, TOPS/W.
+    pub tops_per_w: f64,
+}
+
+/// Evaluate one candidate on the given workload presets.
+pub fn evaluate_one(cand: &Candidate, workloads: &[&str]) -> CandidateResult {
+    let chip = Chip::new(cand.hw.clone(), SimMode::Fast);
+    let mut per_workload = Vec::with_capacity(workloads.len());
+    for name in workloads {
+        let spec = models::by_name(name, cand.num_steps).expect("validated workload");
+        let r = chip.analyze(&spec);
+        per_workload.push(WorkloadMetrics {
+            workload: (*name).to_string(),
+            cycles: r.cycles,
+            latency_us: r.latency_us,
+            inf_per_sec: 1e6 / r.latency_us,
+            dram_bytes: r.dram.total(),
+            core_power_mw: power::core_power_mw(&cand.hw, &r),
+            utilization: r.utilization,
+        });
+    }
+    let throughput_ips = geomean(per_workload.iter().map(|m| m.inf_per_sec));
+    let power_mw = per_workload.iter().map(|m| m.core_power_mw).fold(0.0, f64::max);
+    CandidateResult {
+        throughput_ips,
+        power_mw,
+        area_kge: area::total_area_kge(&cand.hw),
+        tops_per_w: power::power_efficiency_tops_w(&cand.hw, power_mw),
+        candidate: cand.clone(),
+        per_workload,
+    }
+}
+
+/// Evaluate all candidates across `threads` OS threads.  Workers stripe
+/// over a shared index; results come back in input order.
+pub fn evaluate_all(
+    cands: &[Candidate],
+    workloads: &[&str],
+    threads: usize,
+) -> Vec<CandidateResult> {
+    let n_threads = threads.max(1).min(cands.len().max(1));
+    let next = AtomicUsize::new(0);
+    let mut indexed: Vec<(usize, CandidateResult)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= cands.len() {
+                            break;
+                        }
+                        out.push((i, evaluate_one(&cands[i], workloads)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("dse worker panicked"))
+            .collect()
+    });
+    indexed.sort_by_key(|(i, _)| *i);
+    indexed.into_iter().map(|(_, r)| r).collect()
+}
+
+fn geomean(xs: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut n) = (0.0f64, 0usize);
+    for x in xs {
+        sum += x.ln();
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        (sum / n as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+
+    #[test]
+    fn paper_point_metrics_sane() {
+        let r = evaluate_one(&Candidate::paper(), &["mnist", "cifar10"]);
+        assert_eq!(r.per_workload.len(), 2);
+        assert!(r.throughput_ips > 0.0);
+        assert!(r.power_mw > power::LEAKAGE_MW);
+        assert!(r.area_kge > 0.0);
+        // CIFAR-10 is the slower, hungrier workload
+        assert!(r.per_workload[0].inf_per_sec > r.per_workload[1].inf_per_sec);
+        let worst = r.per_workload.iter().map(|m| m.core_power_mw).fold(0.0, f64::max);
+        assert_eq!(r.power_mw, worst);
+    }
+
+    #[test]
+    fn evaluation_deterministic_across_thread_counts() {
+        let cands: Vec<Candidate> = crate::dse::space::SearchSpace::tiny().cartesian().collect();
+        let a = evaluate_all(&cands, &["mnist"], 1);
+        let b = evaluate_all(&cands, &["mnist"], 4);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.candidate.id(), y.candidate.id());
+            assert_eq!(x.throughput_ips.to_bits(), y.throughput_ips.to_bits());
+            assert_eq!(x.power_mw.to_bits(), y.power_mw.to_bits());
+            assert_eq!(x.area_kge.to_bits(), y.area_kge.to_bits());
+        }
+    }
+
+    #[test]
+    fn more_pes_mean_more_throughput_for_divisible_geometry() {
+        // CIFAR-10's early layers have C_in = 128: 32 -> 64 blocks halves
+        // the group count and therefore the cycle count.
+        let hw32 = HwConfig { pe_blocks: 32, ..HwConfig::default() };
+        let hw64 = HwConfig { pe_blocks: 64, ..HwConfig::default() };
+        let small = Candidate { hw: hw32, num_steps: 8 };
+        let big = Candidate { hw: hw64, num_steps: 8 };
+        let rs = evaluate_one(&small, &["cifar10"]);
+        let rb = evaluate_one(&big, &["cifar10"]);
+        assert!(rb.throughput_ips > rs.throughput_ips);
+        assert!(rb.area_kge > rs.area_kge);
+    }
+}

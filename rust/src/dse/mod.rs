@@ -1,0 +1,31 @@
+//! Design-space exploration of the reconfigurable VSA chip.
+//!
+//! The paper's headline claim is reconfigurability — PE geometry, SRAM
+//! split, clock, time steps, fusion and the encoding layer are all knobs —
+//! but a single published design point.  This subsystem turns the analytic
+//! timing model ([`crate::arch::Chip::analyze`]) and the energy/area
+//! models ([`crate::energy`]) into a search engine:
+//!
+//! * [`space`] — a declarative [`space::SearchSpace`] with cartesian and
+//!   seeded random-sampling iterators plus validity filtering;
+//! * [`evaluate`] — a multi-threaded driver scoring each candidate on
+//!   latency/throughput, DRAM traffic, core power, area and TOPS/W per
+//!   workload (Table I presets);
+//! * [`pareto`] — dominated-point pruning over (throughput, power, area)
+//!   with a deterministic total-order tie-break;
+//! * [`report`] — JSON output (via `config::json`) and a rendered table
+//!   in the style of `energy::report`.
+//!
+//! Entry points: the `vsa dse` subcommand and
+//! `examples/design_space.rs`.  The paper's design point is asserted to
+//! lie on (or within a small documented slack of) the extracted frontier
+//! by `rust/tests/dse_frontier.rs`.
+
+pub mod evaluate;
+pub mod pareto;
+pub mod report;
+pub mod space;
+
+pub use evaluate::{evaluate_all, evaluate_one, CandidateResult, WorkloadMetrics};
+pub use pareto::{dominates, find_by_id, frontier, paper_slack_at_t, slack};
+pub use space::{validate, Candidate, SearchSpace};

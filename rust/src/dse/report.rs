@@ -1,0 +1,209 @@
+//! DSE reporting: a machine-readable JSON document (the `config::json`
+//! value model, so it round-trips through the repo's own parser) and a
+//! rendered frontier table that reuses the Table III column layout of
+//! [`crate::energy::report`].
+
+use std::collections::BTreeMap;
+
+use crate::config::json::Json;
+use crate::dse::evaluate::CandidateResult;
+use crate::energy::report as ereport;
+
+/// Sweep provenance recorded in the JSON report.
+#[derive(Debug, Clone)]
+pub struct SweepMeta {
+    pub space: String,
+    pub workloads: Vec<String>,
+    /// Cartesian grid size of the space (before filtering/sampling).
+    pub grid_size: usize,
+    /// Random-sample size (0 = the full grid was enumerated).
+    pub sampled: usize,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn candidate_json(r: &CandidateResult) -> Json {
+    let hw = &r.candidate.hw;
+    let per: Vec<Json> = r
+        .per_workload
+        .iter()
+        .map(|m| {
+            obj(vec![
+                ("workload", Json::Str(m.workload.clone())),
+                ("cycles", num(m.cycles as f64)),
+                ("latency_us", num(m.latency_us)),
+                ("inf_per_sec", num(m.inf_per_sec)),
+                ("dram_bytes", num(m.dram_bytes as f64)),
+                ("core_power_mw", num(m.core_power_mw)),
+                ("utilization", num(m.utilization)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("id", Json::Str(r.candidate.id())),
+        ("pe_blocks", num(hw.pe_blocks as f64)),
+        ("arrays_per_block", num(hw.arrays_per_block as f64)),
+        ("rows_per_array", num(hw.rows_per_array as f64)),
+        ("cols_per_array", num(hw.cols_per_array as f64)),
+        ("freq_mhz", num(hw.freq_mhz)),
+        ("weight_sram_kb", num(hw.weight_sram_kb)),
+        ("spike_sram_kb", num(hw.spike_sram_kb)),
+        ("encode_bitplanes", num(hw.encode_bitplanes as f64)),
+        ("layer_fusion", Json::Bool(hw.layer_fusion)),
+        ("num_steps", num(r.candidate.num_steps as f64)),
+        ("total_pes", num(hw.total_pes() as f64)),
+        ("throughput_ips", num(r.throughput_ips)),
+        ("power_mw", num(r.power_mw)),
+        ("area_kge", num(r.area_kge)),
+        ("tops_per_w", num(r.tops_per_w)),
+        ("per_workload", Json::Arr(per)),
+    ])
+}
+
+/// Assemble the full sweep report.  `frontier` indexes into `results`;
+/// `paper_slack` is the epsilon-dominance slack of the paper's design
+/// point when it was part of the sweep (computed by the caller, normally
+/// pinned to the paper's T — see the `dse` CLI).
+pub fn to_json(
+    meta: &SweepMeta,
+    results: &[CandidateResult],
+    frontier: &[usize],
+    paper_slack: Option<f64>,
+) -> Json {
+    let frontier_rows: Vec<Json> = frontier.iter().map(|&i| candidate_json(&results[i])).collect();
+    let mut entries = vec![
+        ("schema", Json::Str("vsa-dse-v1".into())),
+        ("space", Json::Str(meta.space.clone())),
+        (
+            "workloads",
+            Json::Arr(meta.workloads.iter().map(|w| Json::Str(w.clone())).collect()),
+        ),
+        ("grid_size", num(meta.grid_size as f64)),
+        ("sampled", num(meta.sampled as f64)),
+        // string, not number: a u64 seed above 2^53 would lose digits in
+        // the f64 value model and break replayability of the sweep
+        ("seed", Json::Str(meta.seed.to_string())),
+        ("threads", num(meta.threads as f64)),
+        ("candidates_evaluated", num(results.len() as f64)),
+        ("frontier_size", num(frontier.len() as f64)),
+        (
+            "objectives",
+            obj(vec![
+                ("throughput_ips", Json::Str("geomean inf/s across workloads, maximize".into())),
+                ("power_mw", Json::Str("worst-case core power, minimize".into())),
+                ("area_kge", Json::Str("logic + SRAM macro proxy, minimize".into())),
+            ]),
+        ),
+        ("frontier", Json::Arr(frontier_rows)),
+    ];
+    if let Some(s) = paper_slack {
+        entries.push(("paper_point_slack", num(s)));
+    }
+    obj(entries)
+}
+
+/// Render the frontier for humans: a ranked summary table plus the
+/// Table III-style column view (via [`ereport::render_table3`]) of the
+/// `top` highest-throughput frontier designs.
+pub fn render(results: &[CandidateResult], frontier: &[usize], top: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Pareto frontier: {} of {} evaluated candidates (throughput vs power vs area)\n\n",
+        frontier.len(),
+        results.len()
+    ));
+    out.push_str(&format!(
+        "{:<5} {:<38} {:>12} {:>10} {:>10} {:>9}\n",
+        "rank", "candidate", "inf/s", "mW", "KGE", "TOPS/W"
+    ));
+    for (rank, &i) in frontier.iter().enumerate() {
+        let r = &results[i];
+        out.push_str(&format!(
+            "{:<5} {:<38} {:>12.1} {:>10.3} {:>10.1} {:>9.2}\n",
+            format!("#{}", rank + 1),
+            r.candidate.id(),
+            r.throughput_ips,
+            r.power_mw,
+            r.area_kge,
+            r.tops_per_w
+        ));
+    }
+
+    let shown = top.min(frontier.len());
+    if shown > 0 {
+        out.push_str("\nTable III-style view of the top designs (by throughput):\n\n");
+        let rows: Vec<ereport::DesignRow> = frontier[..shown]
+            .iter()
+            .enumerate()
+            .map(|(rank, &i)| {
+                let r = &results[i];
+                ereport::design_row(&format!("#{}", rank + 1), &r.candidate.hw, r.power_mw)
+            })
+            .collect();
+        out.push_str(&ereport::render_table3(&rows));
+        out.push_str("\nlegend:\n");
+        for (rank, &i) in frontier[..shown].iter().enumerate() {
+            out.push_str(&format!("  #{}  {}\n", rank + 1, results[i].candidate.id()));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json;
+    use crate::dse::{evaluate, pareto, space};
+
+    fn tiny_sweep() -> (Vec<CandidateResult>, Vec<usize>) {
+        let cands: Vec<space::Candidate> = space::SearchSpace::tiny()
+            .cartesian()
+            .filter(|c| space::validate(c, &["mnist"]).is_ok())
+            .collect();
+        let results = evaluate::evaluate_all(&cands, &["mnist"], 2);
+        let front = pareto::frontier(&results);
+        (results, front)
+    }
+
+    #[test]
+    fn json_roundtrips_through_own_parser() {
+        let (results, front) = tiny_sweep();
+        let meta = SweepMeta {
+            space: "tiny".into(),
+            workloads: vec!["mnist".into()],
+            grid_size: 8,
+            sampled: 0,
+            seed: 7,
+            threads: 2,
+        };
+        let doc = to_json(&meta, &results, &front, Some(0.0));
+        let text = json::to_string(&doc);
+        let parsed = Json::parse(&text).expect("report parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some("vsa-dse-v1"));
+        assert_eq!(parsed.get("frontier_size").unwrap().as_usize(), Some(front.len()));
+        let rows = parsed.get("frontier").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), front.len());
+        assert!(rows[0].get("throughput_ips").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn render_lists_every_frontier_point() {
+        let (results, front) = tiny_sweep();
+        let text = render(&results, &front, 3);
+        assert!(text.contains("Pareto frontier"));
+        assert!(text.contains("#1"));
+        for &i in &front {
+            assert!(text.contains(&results[i].candidate.id()));
+        }
+        // Table III-style section present
+        assert!(text.contains("PE number"));
+    }
+}

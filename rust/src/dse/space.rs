@@ -1,0 +1,381 @@
+//! Declarative search space over the reconfigurable chip's knobs.
+//!
+//! Every `HwConfig` dimension the paper calls "reconfigurable" is an axis
+//! here; the space is the cartesian product of the axis lists.  A
+//! [`Candidate`] pairs a hardware configuration with the inference
+//! time-step count T (an SNN deployment knob the paper reconfigures per
+//! model, so it sweeps alongside the chip).  Candidates are filtered by
+//! [`validate`] before evaluation so the analytic timing model is only
+//! applied where its assumptions hold.
+
+use std::collections::BTreeSet;
+
+use crate::arch::schedule::{plan_spec, PlanKind};
+use crate::config::{models, HwConfig};
+use crate::util::rng::SplitMix64;
+
+/// One point of the design space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    pub hw: HwConfig,
+    /// Inference time steps the workloads run at.
+    pub num_steps: usize,
+}
+
+impl Candidate {
+    /// The paper's published design point (default `HwConfig`, T = 8).
+    pub fn paper() -> Self {
+        Self { hw: HwConfig::default(), num_steps: 8 }
+    }
+
+    /// Stable identifier: the hardware signature plus T.  Lexicographic
+    /// order of ids is the deterministic tie-break everywhere in `dse`.
+    pub fn id(&self) -> String {
+        format!("{} T{}", self.hw.signature(), self.num_steps)
+    }
+}
+
+/// Axis lists for every swept knob; the space is their cartesian product.
+/// Un-swept `HwConfig` fields (tech node, voltage, membrane/temp/boundary
+/// SRAMs, DRAM energy) keep their defaults.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub name: String,
+    pub pe_blocks: Vec<usize>,
+    pub arrays_per_block: Vec<usize>,
+    pub rows_per_array: Vec<usize>,
+    pub cols_per_array: Vec<usize>,
+    pub freq_mhz: Vec<f64>,
+    pub weight_sram_kb: Vec<f64>,
+    pub spike_sram_kb: Vec<f64>,
+    pub encode_bitplanes: Vec<usize>,
+    pub layer_fusion: Vec<bool>,
+    pub num_steps: Vec<usize>,
+}
+
+impl SearchSpace {
+    /// Laptop-scale grid around the published design point: 648 points,
+    /// all 648 valid for MNIST and 432 for CIFAR-10 (the 64 KiB weight
+    /// SRAM cannot hold CIFAR-10's largest conv layer).
+    pub fn small() -> Self {
+        Self {
+            name: "small".into(),
+            pe_blocks: vec![16, 32, 64],
+            arrays_per_block: vec![3],
+            rows_per_array: vec![4, 8, 16],
+            cols_per_array: vec![3],
+            freq_mhz: vec![250.0, 500.0, 800.0],
+            weight_sram_kb: vec![64.0, 96.0, 192.0],
+            spike_sram_kb: vec![32.0, 64.0],
+            encode_bitplanes: vec![8],
+            layer_fusion: vec![false, true],
+            num_steps: vec![4, 8],
+        }
+    }
+
+    /// CI-smoke grid: 8 points including the paper's design point.
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny".into(),
+            pe_blocks: vec![16, 32],
+            arrays_per_block: vec![3],
+            rows_per_array: vec![8],
+            cols_per_array: vec![3],
+            freq_mhz: vec![250.0, 500.0],
+            weight_sram_kb: vec![96.0],
+            spike_sram_kb: vec![64.0],
+            encode_bitplanes: vec![8],
+            layer_fusion: vec![false, true],
+            num_steps: vec![8],
+        }
+    }
+
+    /// Wide space for random sampling (~17k grid points): adds binary
+    /// (1-bitplane) encoding, more block counts/clocks and more SRAM
+    /// splits.  Arrays narrower than the 3x3 kernels are excluded up
+    /// front — validity rule 5 would reject every such point for the
+    /// Table-I workloads, wasting the sample budget.
+    pub fn wide() -> Self {
+        Self {
+            name: "wide".into(),
+            pe_blocks: vec![8, 16, 32, 64, 128],
+            arrays_per_block: vec![3, 6],
+            rows_per_array: vec![4, 8, 16],
+            cols_per_array: vec![3],
+            freq_mhz: vec![125.0, 250.0, 500.0, 800.0],
+            weight_sram_kb: vec![32.0, 64.0, 96.0, 192.0],
+            spike_sram_kb: vec![32.0, 64.0, 128.0],
+            encode_bitplanes: vec![1, 8],
+            layer_fusion: vec![false, true],
+            num_steps: vec![1, 4, 8],
+        }
+    }
+
+    /// Look up a preset space by name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "small" => Some(Self::small()),
+            "tiny" => Some(Self::tiny()),
+            "wide" => Some(Self::wide()),
+            _ => None,
+        }
+    }
+
+    fn axis_sizes(&self) -> [usize; 10] {
+        [
+            self.pe_blocks.len(),
+            self.arrays_per_block.len(),
+            self.rows_per_array.len(),
+            self.cols_per_array.len(),
+            self.freq_mhz.len(),
+            self.weight_sram_kb.len(),
+            self.spike_sram_kb.len(),
+            self.encode_bitplanes.len(),
+            self.layer_fusion.len(),
+            self.num_steps.len(),
+        ]
+    }
+
+    /// Number of grid points (cartesian product of the axes).
+    pub fn len(&self) -> usize {
+        self.axis_sizes().iter().product()
+    }
+
+    /// True when any axis is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Candidate at linear grid index `i` (row-major over the axes).
+    fn candidate_at(&self, i: usize) -> Candidate {
+        let sizes = self.axis_sizes();
+        let mut digits = [0usize; 10];
+        let mut rest = i;
+        for (d, &s) in digits.iter_mut().zip(&sizes) {
+            *d = rest % s;
+            rest /= s;
+        }
+        let hw = HwConfig {
+            pe_blocks: self.pe_blocks[digits[0]],
+            arrays_per_block: self.arrays_per_block[digits[1]],
+            rows_per_array: self.rows_per_array[digits[2]],
+            cols_per_array: self.cols_per_array[digits[3]],
+            freq_mhz: self.freq_mhz[digits[4]],
+            weight_sram_kb: self.weight_sram_kb[digits[5]],
+            spike_sram_kb: self.spike_sram_kb[digits[6]],
+            encode_bitplanes: self.encode_bitplanes[digits[7]],
+            layer_fusion: self.layer_fusion[digits[8]],
+            ..HwConfig::default()
+        };
+        Candidate { hw, num_steps: self.num_steps[digits[9]] }
+    }
+
+    /// Iterator over the full cartesian grid, in a fixed deterministic
+    /// order.
+    pub fn cartesian(&self) -> impl Iterator<Item = Candidate> + '_ {
+        (0..self.len()).map(|i| self.candidate_at(i))
+    }
+
+    /// Up to `n` *distinct* grid points drawn uniformly with a seeded
+    /// PRNG — the random-sampling iterator for spaces too large to
+    /// enumerate.  Deterministic for a fixed seed; returns fewer than `n`
+    /// only when the grid itself is smaller.
+    pub fn sample(&self, n: usize, seed: u64) -> Vec<Candidate> {
+        let len = self.len();
+        if len == 0 {
+            return Vec::new();
+        }
+        if n >= len {
+            return self.cartesian().collect();
+        }
+        let mut rng = SplitMix64::new(seed);
+        let mut seen = BTreeSet::new();
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let i = rng.next_index(len);
+            if seen.insert(i) {
+                out.push(self.candidate_at(i));
+            }
+        }
+        out
+    }
+}
+
+/// Validity of a candidate for a set of workloads.  Each rule keeps the
+/// analytic timing/traffic model honest (an invalid point would be
+/// mis-modelled, not merely slow):
+///
+/// 1. [`HwConfig::validate`] — non-degenerate geometry and capacities.
+/// 2. Every conv layer's weights fit the weight SRAM: under tick batching
+///    the kernel stack is replayed across all T steps from on-chip memory
+///    (the DRAM model charges conv weights exactly once).  Dense layers
+///    are exempt — the vectorwise walk visits output channels outermost,
+///    so they stream one weight row at a time.
+/// 3. With fusion on, at least one adjacent layer pair must fit the
+///    weight SRAM together, else `plan_fusion` degrades to the fusion-off
+///    schedule and the candidate duplicates another design point.
+/// 4. Each ping-pong spike bank holds the largest single-step inter-layer
+///    spike plane (producer writes one bank while the consumer reads the
+///    other).  The encoding layer reads the multi-bit image from DRAM,
+///    not the spike SRAM, so its input is exempt.
+/// 5. The PE fabric covers the conv kernels: the vectorwise schedule
+///    assigns one PE array per kernel column and one PE column per tap
+///    (Fig. 5), so `arrays_per_block` and `cols_per_array` must both be
+///    at least k for every conv layer — otherwise the one-cycle-per-
+///    output-column timing claim does not hold.
+pub fn validate(cand: &Candidate, workloads: &[&str]) -> Result<(), String> {
+    cand.hw.validate()?;
+    for name in workloads {
+        let spec = models::by_name(name, cand.num_steps)
+            .ok_or_else(|| format!("unknown workload '{name}'"))?;
+        let plans = plan_spec(&spec);
+        for p in &plans {
+            if p.k > 1 && (cand.hw.arrays_per_block < p.k || cand.hw.cols_per_array < p.k) {
+                return Err(format!(
+                    "{name}: {}x({}-wide) PE arrays cannot cover a {}x{} kernel in one cycle",
+                    cand.hw.arrays_per_block, cand.hw.cols_per_array, p.k, p.k
+                ));
+            }
+        }
+        let budget = cand.hw.weight_sram_bits();
+        for p in &plans {
+            if matches!(p.kind, PlanKind::EncConv | PlanKind::Conv) && p.weight_bits() > budget {
+                return Err(format!(
+                    "{name}: conv layer {} needs {} weight bits > {} SRAM bits",
+                    p.model_index,
+                    p.weight_bits(),
+                    budget
+                ));
+            }
+        }
+        if cand.hw.layer_fusion {
+            let any_pair = plans
+                .windows(2)
+                .any(|pair| pair[0].weight_bits() + pair[1].weight_bits() <= budget);
+            if !any_pair {
+                return Err(format!("{name}: fusion enabled but no layer pair fits the SRAM"));
+            }
+        }
+        let bank = cand.hw.spike_bank_bits();
+        for p in &plans {
+            if p.kind != PlanKind::EncConv && p.in_bits_per_step() > bank {
+                return Err(format!(
+                    "{name}: layer {} spike plane of {} bits exceeds the {}-bit bank",
+                    p.model_index,
+                    p.in_bits_per_step(),
+                    bank
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cartesian_covers_the_grid_exactly_once() {
+        let space = SearchSpace::tiny();
+        let cands: Vec<Candidate> = space.cartesian().collect();
+        assert_eq!(cands.len(), space.len());
+        let ids: BTreeSet<String> = cands.iter().map(|c| c.id()).collect();
+        assert_eq!(ids.len(), cands.len(), "duplicate grid points");
+    }
+
+    #[test]
+    fn paper_point_is_in_small_and_tiny() {
+        let paper = Candidate::paper().id();
+        for space in [SearchSpace::small(), SearchSpace::tiny()] {
+            assert!(
+                space.cartesian().any(|c| c.id() == paper),
+                "{}: paper design point missing",
+                space.name
+            );
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_distinct() {
+        let space = SearchSpace::wide();
+        let a = space.sample(50, 42);
+        let b = space.sample(50, 42);
+        assert_eq!(a.len(), 50);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.id() == y.id()));
+        let ids: BTreeSet<String> = a.iter().map(|c| c.id()).collect();
+        assert_eq!(ids.len(), 50);
+        let c = space.sample(50, 43);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.id() != y.id()));
+    }
+
+    #[test]
+    fn sample_larger_than_grid_returns_grid() {
+        let space = SearchSpace::tiny();
+        assert_eq!(space.sample(10_000, 1).len(), space.len());
+    }
+
+    #[test]
+    fn paper_point_valid_for_both_workloads() {
+        assert_eq!(validate(&Candidate::paper(), &["mnist", "cifar10"]), Ok(()));
+    }
+
+    #[test]
+    fn small_weight_sram_invalid_for_cifar_convs() {
+        // 64 KiB cannot hold CIFAR-10's 256x256x3x3 conv (72 KiB)...
+        let mut cand = Candidate::paper();
+        cand.hw.weight_sram_kb = 64.0;
+        assert!(validate(&cand, &["cifar10"]).is_err());
+        // ...but MNIST's largest conv is 4.5 KiB.
+        assert_eq!(validate(&cand, &["mnist"]), Ok(()));
+    }
+
+    #[test]
+    fn tiny_spike_bank_invalid_for_cifar_planes() {
+        // CIFAR-10's 128x32x32 inter-layer plane is 16 KiB; a 16 KiB
+        // ping-pong SRAM leaves only an 8 KiB bank.
+        let mut cand = Candidate::paper();
+        cand.hw.spike_sram_kb = 16.0;
+        assert!(validate(&cand, &["cifar10"]).is_err());
+        assert_eq!(validate(&cand, &["mnist"]), Ok(()));
+    }
+
+    #[test]
+    fn fusion_needs_one_fitting_pair() {
+        let mut cand = Candidate::paper();
+        // 4.5 KiB = 36864 bits: exactly holds MNIST's largest conv
+        // (rule 2 passes) but not the smallest pair, enc + conv2 =
+        // 576 + 36864 = 37440 bits — so only the fusion rule can fire.
+        cand.hw.weight_sram_kb = 4.5;
+        let err = validate(&cand, &["mnist"]).unwrap_err();
+        assert!(err.contains("fusion"), "unexpected error: {err}");
+        // the same budget is fine once the fusion knob is off
+        cand.hw.layer_fusion = false;
+        assert_eq!(validate(&cand, &["mnist"]), Ok(()));
+    }
+
+    #[test]
+    fn skinny_arrays_cannot_run_3x3_kernels() {
+        let mut cand = Candidate::paper();
+        cand.hw.arrays_per_block = 1;
+        assert!(validate(&cand, &["mnist"]).is_err());
+        cand.hw.arrays_per_block = 3;
+        cand.hw.cols_per_array = 1;
+        assert!(validate(&cand, &["mnist"]).is_err());
+    }
+
+    #[test]
+    fn small_space_has_enough_valid_candidates() {
+        let space = SearchSpace::small();
+        let valid = space
+            .cartesian()
+            .filter(|c| validate(c, &["mnist"]).is_ok())
+            .count();
+        assert!(valid >= 200, "only {valid} valid candidates for mnist");
+        let valid_cifar = space
+            .cartesian()
+            .filter(|c| validate(c, &["cifar10"]).is_ok())
+            .count();
+        assert!(valid_cifar >= 200, "only {valid_cifar} valid candidates for cifar10");
+    }
+}

@@ -72,6 +72,21 @@ pub fn area_efficiency(hw: &HwConfig) -> f64 {
     hw.peak_gops() / logic_area(hw).total()
 }
 
+/// First-order SRAM macro cost in gate equivalents per bit.  A 6T bitcell
+/// is ~1.5 GE of raw transistors (GE = 4-transistor NAND2); compiled SRAM
+/// macros are roughly twice as dense as standard-cell logic, so ~0.75
+/// GE/bit is the conventional first-order figure.
+pub const SRAM_GE_PER_BIT: f64 = 0.75;
+
+/// Total silicon-area proxy in KGE: logic plus SRAM macros.  Table III
+/// reports the two separately (KGE and KB); the design-space exploration
+/// needs a single area objective so SRAM-capacity knobs trade against PE
+/// count on the same axis.  At the design point the SRAMs dominate
+/// (~1415 KGE-equivalent vs 115 KGE of logic), as they do on the die.
+pub fn total_area_kge(hw: &HwConfig) -> f64 {
+    logic_area(hw).total() + hw.total_sram_kb() * 1024.0 * 8.0 * SRAM_GE_PER_BIT / 1000.0
+}
+
 // ---------------------------------------------------------------------------
 // IF-BN ablation (paper §II-B): hardware cost of explicit BatchNorm vs the
 // folded IF-BN formulation.
@@ -137,6 +152,19 @@ mod tests {
         // and the explicit version would be a visible fraction of the chip
         let total = logic_area(&HwConfig::default()).total();
         assert!(explicit / total > 0.1);
+    }
+
+    #[test]
+    fn total_area_charges_sram() {
+        let hw = HwConfig::default();
+        let logic = logic_area(&hw).total();
+        let total = total_area_kge(&hw);
+        assert!(total > logic);
+        // 230.3125 KB * 8192 bit/KB * 0.75 GE/bit = ~1415 KGE of SRAM
+        assert!((total - logic - 1415.04).abs() < 1.0, "got {}", total - logic);
+        // shrinking the weight SRAM must shrink the area objective
+        let small = HwConfig { weight_sram_kb: 48.0, ..HwConfig::default() };
+        assert!(total_area_kge(&small) < total);
     }
 
     #[test]

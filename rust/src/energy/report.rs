@@ -26,11 +26,17 @@ pub struct DesignRow {
 
 /// Build the "This work" column from a simulated run.
 pub fn this_work(hw: &HwConfig, report: &RunReport) -> DesignRow {
+    design_row("This work", hw, power::core_power_mw(hw, report))
+}
+
+/// Build a design column for any configuration from its core power —
+/// shared by Table III ("This work") and the DSE Pareto report, where the
+/// power comes from an analytic [`crate::arch::Chip::analyze`] evaluation.
+pub fn design_row(name: &str, hw: &HwConfig, core_mw: f64) -> DesignRow {
     let area_kge = area::logic_area(hw).total();
-    let core_mw = power::core_power_mw(hw, report);
     let eff = power::power_efficiency_tops_w(hw, core_mw);
     DesignRow {
-        name: "This work".into(),
+        name: name.into(),
         tech_nm: hw.tech_nm,
         voltage: Some(hw.voltage),
         freq_mhz: Some(hw.freq_mhz),

@@ -19,6 +19,9 @@
 //! * [`arch`] — the cycle-accurate VSA chip simulator: vectorwise PE
 //!   blocks, three-stage accumulator, IF neuron unit, SRAM/DRAM hierarchy,
 //!   tick batching, two-layer fusion, encoding bitplane mode.
+//! * [`dse`] — design-space exploration: declarative search spaces over
+//!   the `HwConfig` knobs, a multi-threaded analytic evaluator, and
+//!   Pareto-frontier extraction over (throughput, power, area).
 //! * [`energy`] — area (KGE) / power / energy model and the technology
 //!   normalization used by paper Table III.
 //! * [`baselines`] — SpinalFlow-style and BW-SNN-style comparison models.
@@ -36,6 +39,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dse;
 pub mod energy;
 pub mod metrics;
 pub mod runtime;

@@ -5,6 +5,7 @@
 //! vsa simulate --model cifar10 [--mode fast|exact] [--no-fusion]
 //! vsa table3   [--model cifar10]               # Table III report
 //! vsa fusion   [--model cifar10]               # §IV-B DRAM study
+//! vsa dse      --space small --workload mnist  # Pareto design sweep
 //! vsa infer    --engine golden|pjrt|chip --model mnist --count 8
 //! vsa serve    --model mnist --requests 64 --workers 2 --batch 8
 //! vsa selftest                                 # cross-layer consistency
@@ -15,7 +16,8 @@ use std::time::Instant;
 use vsa::arch::{Chip, SimMode};
 use vsa::baselines::published;
 use vsa::cli::Args;
-use vsa::config::{models, HwConfig};
+use vsa::config::{json, models, HwConfig};
+use vsa::dse;
 use vsa::coordinator::{
     ChipEngine, Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine, PjrtEngine,
 };
@@ -38,6 +40,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "table3" => cmd_table3(&args),
         "fusion" => cmd_fusion(&args),
+        "dse" => cmd_dse(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
         "selftest" => cmd_selftest(&args),
@@ -61,11 +64,16 @@ commands:
   simulate    run the cycle-accurate chip simulator on one inference
   table3      regenerate the paper's Table III comparison
   fusion      regenerate the §IV-B layer-fusion DRAM study
+  dse         sweep the reconfigurable design space, emit a Pareto report
   infer       classify synthetic samples (golden | chip | pjrt engines)
   serve       run the serving coordinator demo
   selftest    cross-check golden model, simulator and PJRT runtime
 
 common flags: --model tiny|mnist|cifar10  --artifacts DIR  --steps T
+
+dse flags:    --space tiny|small|wide  --workload mnist|cifar10|both
+              --sample N (0 = full grid)  --seed S  --threads N
+              --top N  --tolerance EPS  --out FILE.json
 ";
 
 fn load_network(args: &Args) -> anyhow::Result<(String, Network)> {
@@ -206,6 +214,91 @@ fn cmd_fusion(args: &Args) -> anyhow::Result<()> {
     println!("  paper (CIFAR-10): 1450.172 KB -> 938.172 KB (-35.3%)");
     println!("\nwith-fusion breakdown:\n{}", on.dram.report());
     println!("\nwithout-fusion breakdown:\n{}", off.dram.report());
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> anyhow::Result<()> {
+    let space_name = args.get("space", "small");
+    let space = dse::SearchSpace::by_name(&space_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown space '{space_name}' (tiny|small|wide)"))?;
+    let workload = args.get("workload", "mnist");
+    let workloads: Vec<&str> = match workload.as_str() {
+        "both" => vec!["mnist", "cifar10"],
+        "mnist" => vec!["mnist"],
+        "cifar10" => vec!["cifar10"],
+        other => anyhow::bail!("unknown workload '{other}' (mnist|cifar10|both)"),
+    };
+    let sample = args.get_usize("sample", 0)?;
+    let seed = args.get_u64("seed", 7)?;
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = args.get_usize("threads", default_threads)?;
+    let top = args.get_usize("top", 5)?;
+    let tolerance = args.get_f64("tolerance", 0.05)?;
+    let out = args.get("out", "dse_report.json");
+
+    let t0 = Instant::now();
+    let drawn: Vec<dse::Candidate> =
+        if sample == 0 { space.cartesian().collect() } else { space.sample(sample, seed) };
+    let candidates: Vec<dse::Candidate> = drawn
+        .into_iter()
+        .filter(|c| dse::validate(c, &workloads).is_ok())
+        .collect();
+    anyhow::ensure!(!candidates.is_empty(), "no valid candidates in space '{space_name}'");
+    println!(
+        "space '{space_name}': {} grid points, {} drawn valid candidates, workloads {:?}",
+        space.len(),
+        candidates.len(),
+        workloads
+    );
+
+    let results = dse::evaluate_all(&candidates, &workloads, threads);
+    let front = dse::frontier(&results);
+    let wall = t0.elapsed();
+    println!(
+        "evaluated {} candidates on {threads} threads in {:.1} ms\n",
+        results.len(),
+        wall.as_secs_f64() * 1e3
+    );
+    print!("{}", dse::report::render(&results, &front, top));
+
+    // Where the published design point lands.  The slack comparison is
+    // pinned to the paper's T (see `dse::paper_slack_at_t`): lower-T
+    // candidates do strictly less compute and dominate trivially while
+    // paying an accuracy cost the analytic model does not score.
+    let paper = dse::Candidate::paper();
+    let paper_slack = dse::paper_slack_at_t(&results).map(|s| {
+        let t = paper.num_steps;
+        let verdict = if s < 0.0 {
+            format!("strictly Pareto-optimal at T={t} (slack {s:.4})")
+        } else if s <= tolerance {
+            format!("on/within tolerance {tolerance} of the T={t} frontier (slack {s:.4})")
+        } else {
+            format!("OFF the T={t} frontier (slack {s:.4} > tolerance {tolerance})")
+        };
+        println!("\npaper design point [{}]: {verdict}", paper.id());
+        if let Some(full) = dse::find_by_id(&results, &paper.id()) {
+            let fs = dse::slack(&results[full], &results);
+            if fs > s {
+                println!(
+                    "  (full sweep incl. the T axis: slack {fs:.4} — lower-T points \
+                     dominate by trading accuracy, which the model does not score)"
+                );
+            }
+        }
+        s
+    });
+
+    let meta = dse::report::SweepMeta {
+        space: space.name.clone(),
+        workloads: workloads.iter().map(|w| w.to_string()).collect(),
+        grid_size: space.len(),
+        sampled: sample,
+        seed,
+        threads,
+    };
+    let doc = dse::report::to_json(&meta, &results, &front, paper_slack);
+    std::fs::write(&out, json::to_string(&doc) + "\n")?;
+    println!("\nJSON report written to {out}");
     Ok(())
 }
 

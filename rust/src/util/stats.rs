@@ -29,15 +29,23 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// `q`-quantile (0..=1) by nearest-rank on a sorted copy.
+/// `q`-quantile (0..=1) by nearest-rank on a sorted copy.  Sorts with the
+/// IEEE total order, so NaN samples sort last instead of panicking.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    quantile_sorted(&v, q)
+}
+
+/// Nearest-rank quantile of an already-sorted (ascending) slice — use
+/// when several quantiles come from one sort (see
+/// [`Accumulator::percentiles`]).
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let idx = ((v.len() - 1) as f64 * q).round() as usize;
-    v[idx]
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
 }
 
 /// Online latency/throughput accumulator used by the coordinator metrics.
@@ -62,12 +70,14 @@ impl Accumulator {
         mean(&self.samples)
     }
 
-    /// p50/p95/p99 summary.
+    /// p50/p95/p99 summary from a single sorted copy of the samples.
     pub fn percentiles(&self) -> (f64, f64, f64) {
+        let mut v = self.samples.clone();
+        v.sort_by(f64::total_cmp);
         (
-            quantile(&self.samples, 0.50),
-            quantile(&self.samples, 0.95),
-            quantile(&self.samples, 0.99),
+            quantile_sorted(&v, 0.50),
+            quantile_sorted(&v, 0.95),
+            quantile_sorted(&v, 0.99),
         )
     }
 }
@@ -94,6 +104,27 @@ mod tests {
         assert_eq!(quantile(&xs, 0.0), 1.0);
         assert_eq!(quantile(&xs, 1.0), 100.0);
         assert_eq!(quantile(&xs, 0.5), 51.0); // round(49.5) -> index 50
+    }
+
+    #[test]
+    fn quantile_tolerates_nan() {
+        // NaN sorts last under the total order — no panic, and the lower
+        // quantiles still see the finite samples.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert!(quantile(&xs, 1.0).is_nan());
+    }
+
+    #[test]
+    fn percentiles_match_single_quantiles() {
+        let mut acc = Accumulator::default();
+        for i in (1..=100).rev() {
+            acc.push(i as f64);
+        }
+        let (p50, p95, p99) = acc.percentiles();
+        assert_eq!(p50, 51.0);
+        assert_eq!(p95, 95.0);
+        assert_eq!(p99, 99.0);
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Design-space exploration acceptance tests: the `small` grid sweep is
+//! laptop-scale, deterministic, produces a well-formed Pareto frontier,
+//! and the paper's published design point — 32x3x(8x3) PEs, 500 MHz,
+//! 96 KiB weight SRAM, T = 8 — lies on (or within a small documented
+//! slack of) the extracted frontier.
+
+use vsa::config::json::{self, Json};
+use vsa::dse::{self, report::SweepMeta, Candidate, SearchSpace};
+
+/// Tolerated epsilon-dominance slack for the paper's design point: no
+/// other candidate at the same T may beat it by more than 5% in *every*
+/// objective (throughput, core power, area) simultaneously.
+///
+/// The comparison is pinned to the paper's T = 8: fewer time steps do
+/// strictly less compute, so lower-T candidates dominate trivially while
+/// paying an accuracy cost the analytic model does not score (Fig. 8's
+/// accuracy-vs-T trade-off).  Chip-vs-chip comparisons are only
+/// meaningful at a fixed workload setting.  The measured slack on the
+/// small grid is 0.000 for MNIST (tied by smaller-SRAM configs with
+/// identical timing) and ~0.036 for MNIST+CIFAR-10 (a 1152-PE 800 MHz
+/// point edges the paper chip on the geomean objective).
+const PAPER_SLACK_TOLERANCE: f64 = 0.05;
+
+fn sweep(workloads: &[&str]) -> (Vec<dse::CandidateResult>, Vec<usize>) {
+    let space = SearchSpace::small();
+    let candidates: Vec<Candidate> = space
+        .cartesian()
+        .filter(|c| dse::validate(c, workloads).is_ok())
+        .collect();
+    assert!(
+        candidates.len() >= 200,
+        "acceptance: small grid must keep >= 200 valid candidates, got {}",
+        candidates.len()
+    );
+    let results = dse::evaluate_all(&candidates, workloads, 4);
+    let front = dse::frontier(&results);
+    (results, front)
+}
+
+#[test]
+fn small_sweep_frontier_is_well_formed() {
+    let (results, front) = sweep(&["mnist"]);
+    assert!(!front.is_empty());
+    // every frontier pair is mutually non-dominating
+    for (a, &i) in front.iter().enumerate() {
+        for &j in &front[a + 1..] {
+            assert!(
+                !dse::dominates(&results[i], &results[j])
+                    && !dse::dominates(&results[j], &results[i]),
+                "frontier points {i} and {j} dominate each other"
+            );
+        }
+    }
+    // every non-frontier point is dominated by someone
+    for i in 0..results.len() {
+        if front.contains(&i) {
+            continue;
+        }
+        assert!(
+            results.iter().any(|o| dse::dominates(o, &results[i])),
+            "point {i} excluded from the frontier but undominated"
+        );
+    }
+    // frontier is sorted by descending throughput
+    for w in front.windows(2) {
+        assert!(results[w[0]].throughput_ips >= results[w[1]].throughput_ips);
+    }
+}
+
+#[test]
+fn paper_design_point_is_pareto_optimal_on_mnist() {
+    let (results, _) = sweep(&["mnist"]);
+    let slack = dse::paper_slack_at_t(&results)
+        .expect("paper design point must be a valid candidate of the small space");
+    assert!(
+        slack <= PAPER_SLACK_TOLERANCE,
+        "paper design point off the T=8 frontier with slack {slack:.4} > {PAPER_SLACK_TOLERANCE}"
+    );
+}
+
+#[test]
+fn paper_design_point_is_pareto_optimal_on_both_workloads() {
+    let (results, _) = sweep(&["mnist", "cifar10"]);
+    let slack = dse::paper_slack_at_t(&results).expect("paper point valid for both workloads");
+    assert!(
+        slack <= PAPER_SLACK_TOLERANCE,
+        "paper design point off the joint T=8 frontier with slack {slack:.4}"
+    );
+}
+
+/// Lower T trivially dominates (less compute, unmodeled accuracy cost):
+/// the reason the paper-point regression pins T.  This documents the
+/// behaviour instead of hiding it.
+#[test]
+fn lower_t_dominates_across_the_t_axis() {
+    let (results, _) = sweep(&["mnist"]);
+    let paper = Candidate::paper();
+    let i = dse::find_by_id(&results, &paper.id()).unwrap();
+    let full_slack = dse::slack(&results[i], &results);
+    let pinned_slack = dse::paper_slack_at_t(&results).unwrap();
+    assert!(
+        full_slack > pinned_slack,
+        "expected cross-T domination: full {full_slack:.4} vs pinned {pinned_slack:.4}"
+    );
+}
+
+/// A fixed seed makes the whole pipeline reproducible: sampling,
+/// evaluation (any thread count) and frontier extraction, down to the
+/// serialized JSON bytes.
+#[test]
+fn sweep_is_deterministic_for_fixed_seed() {
+    let space = SearchSpace::wide();
+    let mut docs = Vec::new();
+    for threads in [1usize, 4] {
+        let candidates: Vec<Candidate> = space
+            .sample(64, 123)
+            .into_iter()
+            .filter(|c| dse::validate(c, &["mnist"]).is_ok())
+            .collect();
+        let results = dse::evaluate_all(&candidates, &["mnist"], threads);
+        let front = dse::frontier(&results);
+        let meta = SweepMeta {
+            space: space.name.clone(),
+            workloads: vec!["mnist".into()],
+            grid_size: space.len(),
+            sampled: 64,
+            seed: 123,
+            threads: 1, // keep provenance identical so the bytes can match
+        };
+        docs.push(json::to_string(&dse::report::to_json(&meta, &results, &front, None)));
+    }
+    assert_eq!(docs[0], docs[1], "sweep output depends on thread count");
+}
+
+#[test]
+fn report_json_parses_and_counts_match() {
+    let (results, front) = sweep(&["mnist"]);
+    let meta = SweepMeta {
+        space: "small".into(),
+        workloads: vec!["mnist".into()],
+        grid_size: SearchSpace::small().len(),
+        sampled: 0,
+        seed: 7,
+        threads: 4,
+    };
+    let text = json::to_string(&dse::report::to_json(&meta, &results, &front, Some(0.0)));
+    let doc = Json::parse(&text).expect("valid JSON");
+    assert_eq!(doc.get("candidates_evaluated").unwrap().as_usize(), Some(results.len()));
+    assert_eq!(doc.get("frontier").unwrap().as_arr().unwrap().len(), front.len());
+    assert_eq!(doc.get("schema").unwrap().as_str(), Some("vsa-dse-v1"));
+}
