@@ -66,7 +66,11 @@ fn main() -> anyhow::Result<()> {
     .run(&net.model, &samples[0].image);
     let on_kb = r.dram.total() as f64 / 1024.0;
     let off_kb = off.dram.total() as f64 / 1024.0;
-    println!("\nDRAM per inference: {off_kb:.1} KB -> {on_kb:.1} KB with fusion ({:.1}% saved)", (1.0 - on_kb / off_kb) * 100.0);
+    println!(
+        "\nDRAM per inference: {off_kb:.1} KB -> {on_kb:.1} KB with fusion \
+         ({:.1}% saved)",
+        (1.0 - on_kb / off_kb) * 100.0
+    );
     println!("paper: 1450.172 KB -> 938.172 KB (35.3% saved)");
 
     // --- Table III summary -----------------------------------------------

@@ -69,7 +69,8 @@ fn main() -> anyhow::Result<()> {
         layer_dram(plan, t, false, false, false, &mut without_tb);
     }
     println!(
-        "\ntick batching (no fusion): {:.1} KB vs {:.1} KB without ({:.1}x), membrane alone {:.1} KB",
+        "\ntick batching (no fusion): {:.1} KB vs {:.1} KB without ({:.1}x), \
+         membrane alone {:.1} KB",
         with_tb.total() as f64 / 1024.0,
         without_tb.total() as f64 / 1024.0,
         without_tb.total() as f64 / with_tb.total() as f64,

@@ -72,7 +72,10 @@ fn main() {
             (1.0 - kb / off_kb) * 100.0
         );
     }
-    println!("  (larger weight SRAM -> more pairs fuse -> more traffic saved; the paper sizes the weight SRAM 'large enough for two layers')");
+    println!(
+        "  (larger weight SRAM -> more pairs fuse -> more traffic saved; the paper \
+         sizes the weight SRAM 'large enough for two layers')"
+    );
 
     section("tick-batching ablation (membrane + weight re-fetch without it)");
     let plans = plan_model(&net.model);

@@ -92,7 +92,10 @@ fn rust_side_reconfig() {
             .count();
         println!("  {t:>3} {:>10.3}", correct as f64 / samples.len() as f64);
     }
-    println!("  (trained at T=4; nearby T still classifies — the reconfigurable-time-steps claim)");
+    println!(
+        "  (trained at T=4; nearby T still classifies — the \
+         reconfigurable-time-steps claim)"
+    );
 }
 
 fn main() {

@@ -69,7 +69,8 @@ fn main() {
         }
     });
     println!(
-        "  temporal amortization: {:.2}x per train (weight vectors loaded once for all T — §III-A/§III-B)",
+        "  temporal amortization: {:.2}x per train (weight vectors loaded once for \
+         all T — §III-A/§III-B)",
         t_per_step.mean_ms / t_batched.mean_ms
     );
 

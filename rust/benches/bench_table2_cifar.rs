@@ -26,9 +26,19 @@ struct Row {
 }
 
 const LITERATURE: &[Row] = &[
-    Row { model: "Sengupta et al. [14]", precision: "full-precision", time_steps: 2500, accuracy: 0.9155 },
+    Row {
+        model: "Sengupta et al. [14]",
+        precision: "full-precision",
+        time_steps: 2500,
+        accuracy: 0.9155,
+    },
     Row { model: "Wu et al. [8]", precision: "full-precision", time_steps: 12, accuracy: 0.9053 },
-    Row { model: "Rathi et al. [15]", precision: "full-precision", time_steps: 200, accuracy: 0.9202 },
+    Row {
+        model: "Rathi et al. [15]",
+        precision: "full-precision",
+        time_steps: 200,
+        accuracy: 0.9202,
+    },
     Row { model: "RMP-SNN [16]", precision: "full-precision", time_steps: 256, accuracy: 0.9304 },
     Row { model: "Wang et al. [17]", precision: "binary", time_steps: 100, accuracy: 0.9019 },
     Row { model: "Ours (paper)", precision: "binary", time_steps: 8, accuracy: 0.9028 },
@@ -96,12 +106,16 @@ fn main() {
                 .min()
                 .unwrap();
             println!(
-                "  time-step reduction: {:.1}x vs best prior ({best_prior} -> 8), {:.1}x vs best binary prior ({best_binary_prior} -> 8)",
+                "  time-step reduction: {:.1}x vs best prior ({best_prior} -> 8), \
+                 {:.1}x vs best binary prior ({best_binary_prior} -> 8)",
                 best_prior as f64 / 8.0,
                 best_binary_prior as f64 / 8.0
             );
         }
         Err(e) => eprintln!("  run `make artifacts` first: {e}"),
     }
-    println!("\n  shape check: ours is the ONLY binary-weight entry at single-digit time steps, within ~1pt of full-precision accuracy — the paper's Table II claim.");
+    println!(
+        "\n  shape check: ours is the ONLY binary-weight entry at single-digit time \
+         steps, within ~1pt of full-precision accuracy — the paper's Table II claim."
+    );
 }

@@ -77,7 +77,8 @@ fn main() {
         hw.peak_gops() / bw.peak_gops
     );
     println!(
-        "  power eff.:  this {:.1} TOPS/W vs SpinalFlow {:.3} ({:.0}x better); BW-SNN {:.1} (fixed-function, {:.1}x better than this)",
+        "  power eff.:  this {:.1} TOPS/W vs SpinalFlow {:.3} ({:.0}x better); \
+         BW-SNN {:.1} (fixed-function, {:.1}x better than this)",
         eff,
         sf.power_eff_tops_w.unwrap(),
         eff / sf.power_eff_tops_w.unwrap(),
@@ -90,7 +91,11 @@ fn main() {
         bw.area_eff_norm.unwrap(),
         (hw.peak_gops() / kge) / bw.area_eff_norm.unwrap()
     );
-    println!("  (matches the paper's ordering: VSA wins throughput + area eff. and beats the reconfigurable baseline on power eff.; only the fixed-function ASIC is more power-efficient.)");
+    println!(
+        "  (matches the paper's ordering: VSA wins throughput + area eff. and beats \
+         the reconfigurable baseline on power eff.; only the fixed-function ASIC is \
+         more power-efficient.)"
+    );
 
     section("IF-BN ablation (paper §II-B: BN folded into the IF neuron)");
     let (explicit, folded) = area::bn_overhead(&hw);
@@ -99,5 +104,8 @@ fn main() {
         explicit / kge * 100.0
     );
     println!("  folded IF-BN (Eq. 4):    {folded:.2} KGE ({:.0}x smaller)", explicit / folded);
-    println!("  (the multiplier/divider of per-step BN is replaced by one pre-computed bias subtract + the comparator the IF neuron already has)");
+    println!(
+        "  (the multiplier/divider of per-step BN is replaced by one pre-computed \
+         bias subtract + the comparator the IF neuron already has)"
+    );
 }

@@ -228,7 +228,10 @@ fn main() {
             util * 100.0
         );
     }
-    println!("  (geometry that divides the 32-block/8-row fabric runs at ~full utilization — the paper's claim; ragged edges show the cost of padding.)");
+    println!(
+        "  (geometry that divides the 32-block/8-row fabric runs at ~full \
+         utilization — the paper's claim; ragged edges show the cost of padding.)"
+    );
 
     if quick {
         report.write(REPORT_PATH);
@@ -276,7 +279,8 @@ fn main() {
             vsa_r.cycles, vsa_r.latency_us, vsa_r.gops
         );
         println!(
-            "  SpinalFlow: {:>10} cycles @200MHz = {:>9.1} us  ({:.1} GOPS eff, {} spikes processed)",
+            "  SpinalFlow: {:>10} cycles @200MHz = {:>9.1} us  ({:.1} GOPS eff, \
+             {} spikes processed)",
             sf.cycles, sf.latency_us, sf.effective_gops, sf.total_spikes
         );
         println!(

@@ -1,0 +1,67 @@
+//! Training-loop throughput: STBP steps/sec for the micro and tiny
+//! models, plus the export + golden-eval path of a finished artifact.
+//!
+//! Run: `cargo bench --bench bench_train` (add `-- --quick` for the CI
+//! smoke subset — micro only).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, quick_mode, section};
+use vsa::config::models;
+use vsa::data::synth;
+use vsa::train::{self, optim, tensor, Net, SpikeMode};
+
+fn images_for(spec: &models::ModelSpec, batch: usize) -> (Vec<f32>, Vec<usize>) {
+    let samples = synth::batch(7, 0, batch, spec.in_channels, spec.in_size);
+    let plane = spec.in_channels * spec.in_size * spec.in_size;
+    let mut images = vec![0.0f32; batch * plane];
+    let mut labels = vec![0usize; batch];
+    for (r, s) in samples.iter().enumerate() {
+        for (dst, &px) in images[r * plane..(r + 1) * plane].iter_mut().zip(&s.image) {
+            *dst = px as f32 / 255.0;
+        }
+        labels[r] = s.label;
+    }
+    (images, labels)
+}
+
+fn bench_model(name: &str, spec: &models::ModelSpec, batch: usize, iters: usize) {
+    let mut net = Net::init(spec, 7);
+    let mut opt = optim::Sgd::new(&net, 0.9);
+    let (images, labels) = images_for(spec, batch);
+    let classes = net.classes();
+    let mut dlogits = vec![0.0f32; batch * classes];
+    let t = bench(&format!("{name} fwd+bwd+step (batch {batch})"), 1, iters, || {
+        let fwd = net.forward(&images, batch, SpikeMode::Hard, true);
+        tensor::softmax_ce(
+            &fwd.logits,
+            batch,
+            classes,
+            &labels,
+            spec.num_steps as f32,
+            &mut dlogits,
+        );
+        let grads = net.backward(&fwd, &images, &dlogits, true);
+        opt.step(&mut net, &grads, 0.05);
+        net.apply_bn_ema(&fwd);
+    });
+    println!(
+        "    -> {:.1} samples/sec through the trainer",
+        batch as f64 / (t.mean_ms / 1e3)
+    );
+
+    let samples = train::holdout_synth(spec, 7, 64);
+    bench(&format!("{name} export + golden eval (64 imgs)"), 1, iters.min(5), || {
+        let model = train::deploy(&net);
+        let _ = train::eval_golden(&model, &samples);
+    });
+}
+
+fn main() {
+    section("STBP training hot path");
+    bench_model("micro T=4", &models::micro(4), 16, if quick_mode() { 3 } else { 10 });
+    if !quick_mode() {
+        bench_model("tiny  T=4", &models::tiny(4), 32, 3);
+    }
+}

@@ -84,7 +84,8 @@ pub fn run(cfg: &SpinalFlowConfig, model: &DeployedModel, image: &[u8]) -> Spina
                 // each spike touches k*k output columns x C_out channels,
                 // tiled over the PE array
                 let tile_passes = ceil_div(*c_out * k * k, cfg.pes) as f64;
-                cycles += spikes_in as f64 * (cfg.cycles_per_spike * tile_passes + cfg.sort_overhead);
+                cycles +=
+                    spikes_in as f64 * (cfg.cycles_per_spike * tile_passes + cfg.sort_overhead);
                 dense_macs += (*c_out * *c_in * k * k * h * w) as u64
                     * model.num_steps as u64;
                 li += 1;
@@ -97,7 +98,8 @@ pub fn run(cfg: &SpinalFlowConfig, model: &DeployedModel, image: &[u8]) -> Spina
                 let spikes_in: u64 = train.iter().map(|s| s.total_spikes()).sum();
                 total_spikes += spikes_in;
                 let tile_passes = ceil_div(*n_out, cfg.pes) as f64;
-                cycles += spikes_in as f64 * (cfg.cycles_per_spike * tile_passes + cfg.sort_overhead);
+                cycles +=
+                    spikes_in as f64 * (cfg.cycles_per_spike * tile_passes + cfg.sort_overhead);
                 dense_macs += (*n_out * *n_in) as u64 * model.num_steps as u64;
                 if matches!(layer, Layer::Fc { .. }) {
                     li += 1;

@@ -54,6 +54,14 @@ impl Args {
         self.flags.get(key).map(String::as_str)
     }
 
+    /// Mandatory string flag — errors with the flag name when absent.
+    pub fn require(&self, key: &str) -> anyhow::Result<String> {
+        self.flags
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{key}"))
+    }
+
     /// Parse a typed flag with a default; `what` names the expected type
     /// in the error message.
     fn get_parsed<T: std::str::FromStr>(
@@ -130,6 +138,14 @@ mod tests {
     fn bad_integer_reports_error() {
         let a = parse("x --n abc");
         assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn require_names_the_missing_flag() {
+        let a = parse("eval --count 4");
+        assert_eq!(a.require("count").unwrap(), "4");
+        let err = a.require("weights").unwrap_err().to_string();
+        assert!(err.contains("--weights"), "error should name the flag: {err}");
     }
 
     #[test]

@@ -166,12 +166,31 @@ pub fn tiny(num_steps: usize) -> ModelSpec {
     }
 }
 
+/// Micro network — the smallest spec with every layer kind the trainer
+/// supports; sized so STBP gradient tests and CI train smokes run in
+/// debug-mode milliseconds.
+pub fn micro(num_steps: usize) -> ModelSpec {
+    ModelSpec {
+        name: "micro".into(),
+        in_channels: 1,
+        in_size: 8,
+        layers: vec![
+            LayerSpec::conv(LayerKind::EncConv, 8),
+            LayerSpec::pool(),
+            LayerSpec::dense(LayerKind::Fc, 32),
+            LayerSpec::dense(LayerKind::Readout, 10),
+        ],
+        num_steps,
+    }
+}
+
 /// Look up a preset by name.
 pub fn by_name(name: &str, num_steps: usize) -> Option<ModelSpec> {
     match name {
         "mnist" => Some(mnist(num_steps)),
         "cifar10" => Some(cifar10(num_steps)),
         "tiny" => Some(tiny(num_steps)),
+        "micro" => Some(micro(num_steps)),
         _ => None,
     }
 }
@@ -221,6 +240,16 @@ mod tests {
     #[test]
     fn by_name_lookup() {
         assert!(by_name("mnist", 8).is_some());
+        assert!(by_name("micro", 2).is_some());
         assert!(by_name("nope", 8).is_none());
+    }
+
+    #[test]
+    fn micro_shapes() {
+        let m = micro(2);
+        let shapes = m.feature_shapes();
+        assert_eq!(shapes[0], (1, 8, 8));
+        assert_eq!(shapes[2], (8, 4, 4)); // fc sees 128 inputs
+        assert_eq!(*shapes.last().unwrap(), (32, 1, 1));
     }
 }

@@ -73,6 +73,26 @@ mod tests {
     }
 
     #[test]
+    fn zero_max_wait_returns_first_without_spinning() {
+        // max_wait == 0 degenerates to "serve whatever arrived first,
+        // alone": the deadline is already past when the drain loop is
+        // reached, so the call must return immediately after the
+        // blocking recv — no busy-wait, no timeout sleep.
+        let (tx, rx) = channel();
+        for i in 0..3 {
+            tx.send(req(i)).unwrap();
+        }
+        let t0 = Instant::now();
+        let batch = next_batch(&rx, 8, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 0);
+        assert!(t0.elapsed() < Duration::from_millis(50), "zero-wait batch must not block");
+        // the rest are still queued, one per call
+        assert_eq!(next_batch(&rx, 8, Duration::ZERO).unwrap()[0].id, 1);
+        assert_eq!(next_batch(&rx, 8, Duration::ZERO).unwrap()[0].id, 2);
+    }
+
+    #[test]
     fn closed_channel_returns_none() {
         let (tx, rx) = channel::<Request<u64>>();
         drop(tx);

@@ -80,10 +80,26 @@ pub fn load_samples(
         .collect())
 }
 
-/// Real MNIST under `data/mnist/`, if present.
+/// Real MNIST test split under `data/mnist/`, if present.
 pub fn mnist_if_available(limit: usize) -> Option<Vec<Sample>> {
-    let imgs = "data/mnist/t10k-images-idx3-ubyte";
-    let labs = "data/mnist/t10k-labels-idx1-ubyte";
+    pair_if_available(
+        "data/mnist/t10k-images-idx3-ubyte",
+        "data/mnist/t10k-labels-idx1-ubyte",
+        limit,
+    )
+}
+
+/// Real MNIST *train* split under `data/mnist/`, if present — consumed
+/// by `vsa train --dataset mnist`.
+pub fn mnist_train_if_available(limit: usize) -> Option<Vec<Sample>> {
+    pair_if_available(
+        "data/mnist/train-images-idx3-ubyte",
+        "data/mnist/train-labels-idx1-ubyte",
+        limit,
+    )
+}
+
+fn pair_if_available(imgs: &str, labs: &str, limit: usize) -> Option<Vec<Sample>> {
     if std::path::Path::new(imgs).exists() && std::path::Path::new(labs).exists() {
         load_samples(imgs, labs, limit).ok()
     } else {

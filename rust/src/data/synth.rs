@@ -89,6 +89,7 @@ pub fn for_model(name: &str, seed: u64, start: u64, count: usize) -> Vec<Sample>
     match name {
         "mnist" => mnist_like(seed, start, count),
         "cifar10" => cifar_like(seed, start, count),
+        "micro" => batch(seed, start, count, 1, 8),
         _ => tiny_like(seed, start, count),
     }
 }

@@ -5,13 +5,23 @@
 //! scored on the three Pareto objectives (throughput, core power, area)
 //! plus the derived TOPS/W figure.  Evaluation is pure, so results are
 //! bit-identical for any thread count.
+//!
+//! With a trained artifact (`vsa dse --artifact model.vsaw`, see
+//! [`accuracy_by_t`]) candidates additionally carry a measured **accuracy
+//! objective**: the golden model's held-out accuracy at the candidate's
+//! T.  Accuracy depends only on T (and the artifact) among the searched
+//! knobs, so it is measured once per distinct T and joined in — making
+//! the paper's Fig. 8 accuracy-vs-T trade-off a first-class Pareto axis
+//! instead of an unmodeled excuse (see `pareto::dominates`).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::arch::{Chip, SimMode};
 use crate::config::models;
 use crate::dse::space::Candidate;
 use crate::energy::{area, power};
+use crate::snn::params::DeployedModel;
 
 /// Per-workload figures of one candidate.
 #[derive(Debug, Clone)]
@@ -39,10 +49,22 @@ pub struct CandidateResult {
     pub area_kge: f64,
     /// Peak power efficiency at the worst-case power, TOPS/W.
     pub tops_per_w: f64,
+    /// Maximize: golden-model held-out accuracy of the reference
+    /// artifact at this candidate's T (`None` without an artifact).
+    pub accuracy: Option<f64>,
 }
 
 /// Evaluate one candidate on the given workload presets.
 pub fn evaluate_one(cand: &Candidate, workloads: &[&str]) -> CandidateResult {
+    evaluate_one_with(cand, workloads, None)
+}
+
+/// [`evaluate_one`] joining in the per-T accuracy table when present.
+pub fn evaluate_one_with(
+    cand: &Candidate,
+    workloads: &[&str],
+    accuracy_by_t: Option<&BTreeMap<usize, f64>>,
+) -> CandidateResult {
     let chip = Chip::new(cand.hw.clone(), SimMode::Fast);
     let mut per_workload = Vec::with_capacity(workloads.len());
     for name in workloads {
@@ -65,6 +87,7 @@ pub fn evaluate_one(cand: &Candidate, workloads: &[&str]) -> CandidateResult {
         power_mw,
         area_kge: area::total_area_kge(&cand.hw),
         tops_per_w: power::power_efficiency_tops_w(&cand.hw, power_mw),
+        accuracy: accuracy_by_t.map(|acc| acc[&cand.num_steps]),
         candidate: cand.clone(),
         per_workload,
     }
@@ -76,6 +99,17 @@ pub fn evaluate_all(
     cands: &[Candidate],
     workloads: &[&str],
     threads: usize,
+) -> Vec<CandidateResult> {
+    evaluate_all_with(cands, workloads, threads, None)
+}
+
+/// [`evaluate_all`] with an optional per-T accuracy table (from
+/// [`accuracy_by_t`]); every candidate's T must have an entry.
+pub fn evaluate_all_with(
+    cands: &[Candidate],
+    workloads: &[&str],
+    threads: usize,
+    accuracy: Option<&BTreeMap<usize, f64>>,
 ) -> Vec<CandidateResult> {
     let n_threads = threads.max(1).min(cands.len().max(1));
     let next = AtomicUsize::new(0);
@@ -89,7 +123,7 @@ pub fn evaluate_all(
                         if i >= cands.len() {
                             break;
                         }
-                        out.push((i, evaluate_one(&cands[i], workloads)));
+                        out.push((i, evaluate_one_with(&cands[i], workloads, accuracy)));
                     }
                     out
                 })
@@ -102,6 +136,30 @@ pub fn evaluate_all(
     });
     indexed.sort_by_key(|(i, _)| *i);
     indexed.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Golden-model held-out accuracy of `artifact` at each T in `ts`
+/// (deduplicated): the artifact's trained thresholds are kept and only
+/// `num_steps` is overridden — exactly the paper's Fig. 8 sweep, using
+/// the synthetic corpus in the artifact's input geometry.
+pub fn accuracy_by_t(
+    artifact: &DeployedModel,
+    ts: impl IntoIterator<Item = usize>,
+    count: usize,
+    seed: u64,
+) -> BTreeMap<usize, f64> {
+    let samples =
+        crate::train::holdout_samples(artifact.in_channels, artifact.in_size, seed, count);
+    let mut out = BTreeMap::new();
+    for t in ts {
+        out.entry(t).or_insert_with(|| {
+            let mut model = artifact.clone();
+            model.num_steps = t;
+            let (correct, total) = crate::train::eval_golden(&model, &samples);
+            correct as f64 / total.max(1) as f64
+        });
+    }
+    out
 }
 
 fn geomean(xs: impl Iterator<Item = f64>) -> f64 {
@@ -133,6 +191,21 @@ mod tests {
         assert!(r.per_workload[0].inf_per_sec > r.per_workload[1].inf_per_sec);
         let worst = r.per_workload.iter().map(|m| m.core_power_mw).fold(0.0, f64::max);
         assert_eq!(r.power_mw, worst);
+    }
+
+    #[test]
+    fn accuracy_join_is_per_t() {
+        let artifact = DeployedModel::synthesize(&models::micro(4), 7);
+        let acc = accuracy_by_t(&artifact, [2usize, 4, 2, 8], 16, 7);
+        assert_eq!(acc.len(), 3); // deduplicated
+        assert!(acc.values().all(|&a| (0.0..=1.0).contains(&a)));
+        // deterministic
+        assert_eq!(acc, accuracy_by_t(&artifact, [2usize, 4, 8], 16, 7));
+        // joined onto results at the candidate's T
+        let cand = Candidate { hw: HwConfig::default(), num_steps: 4 };
+        let r = evaluate_one_with(&cand, &["mnist"], Some(&acc));
+        assert_eq!(r.accuracy, Some(acc[&4]));
+        assert_eq!(evaluate_one(&cand, &["mnist"]).accuracy, None);
     }
 
     #[test]

@@ -26,6 +26,9 @@ pub mod pareto;
 pub mod report;
 pub mod space;
 
-pub use evaluate::{evaluate_all, evaluate_one, CandidateResult, WorkloadMetrics};
+pub use evaluate::{
+    accuracy_by_t, evaluate_all, evaluate_all_with, evaluate_one, evaluate_one_with,
+    CandidateResult, WorkloadMetrics,
+};
 pub use pareto::{dominates, find_by_id, frontier, paper_slack_at_t, slack};
 pub use space::{validate, Candidate, SearchSpace};

@@ -3,21 +3,32 @@
 use crate::dse::evaluate::CandidateResult;
 
 /// `a` dominates `b`: no worse in every objective and strictly better in
-/// at least one.
+/// at least one.  The measured accuracy objective (present when the
+/// sweep ran against a trained artifact) participates whenever both
+/// sides carry it — so a lower-T candidate no longer dominates "for
+/// free": it must also not lose accuracy (the paper's Fig. 8
+/// trade-off).  Accuracy is ignored when either side lacks it.
 pub fn dominates(a: &CandidateResult, b: &CandidateResult) -> bool {
-    let no_worse = a.throughput_ips >= b.throughput_ips
+    let mut no_worse = a.throughput_ips >= b.throughput_ips
         && a.power_mw <= b.power_mw
         && a.area_kge <= b.area_kge;
-    let strictly = a.throughput_ips > b.throughput_ips
+    let mut strictly = a.throughput_ips > b.throughput_ips
         || a.power_mw < b.power_mw
         || a.area_kge < b.area_kge;
+    if let (Some(aa), Some(ab)) = (a.accuracy, b.accuracy) {
+        no_worse = no_worse && aa >= ab;
+        strictly = strictly || aa > ab;
+    }
     no_worse && strictly
 }
 
 /// Indices (into `results`) of the non-dominated set, sorted by
-/// (throughput desc, power asc, area asc, candidate id asc).  The id is
-/// unique per design point, so the sort key is a total order and the
-/// frontier is byte-for-byte reproducible across runs and thread counts.
+/// (throughput desc, power asc, area asc, accuracy desc, candidate id
+/// asc).  The id is unique per design point, so the sort key is a total
+/// order and the frontier is byte-for-byte reproducible across runs and
+/// thread counts.  Every objective in [`dominates`] appears in the key
+/// (missing accuracy compares equal), preserving the invariant the
+/// prefix scan below depends on: a dominator sorts strictly earlier.
 pub fn frontier(results: &[CandidateResult]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..results.len()).collect();
     idx.sort_by(|&a, &b| {
@@ -26,6 +37,11 @@ pub fn frontier(results: &[CandidateResult]) -> Vec<usize> {
             .total_cmp(&ra.throughput_ips)
             .then(ra.power_mw.total_cmp(&rb.power_mw))
             .then(ra.area_kge.total_cmp(&rb.area_kge))
+            .then(
+                rb.accuracy
+                    .unwrap_or(f64::NEG_INFINITY)
+                    .total_cmp(&ra.accuracy.unwrap_or(f64::NEG_INFINITY)),
+            )
             .then_with(|| ra.candidate.id().cmp(&rb.candidate.id()))
     });
     // Any dominator sorts strictly earlier under this key (better or equal
@@ -110,6 +126,7 @@ mod tests {
             power_mw: pow,
             area_kge: area,
             tops_per_w: 0.0,
+            accuracy: None,
         }
     }
 
@@ -125,6 +142,27 @@ mod tests {
         // trade-off: faster but hotter — no domination either way
         let d = point(4, 12.0, 7.0, 100.0);
         assert!(!dominates(&a, &d) && !dominates(&d, &a));
+    }
+
+    #[test]
+    fn accuracy_objective_blocks_free_domination() {
+        // a is all-around better on the chip objectives but loses
+        // accuracy (the lower-T story): with the objective measured,
+        // neither dominates; without it, a dominates.
+        let mut a = point(1, 10.0, 5.0, 100.0);
+        let mut b = point(2, 8.0, 6.0, 120.0);
+        assert!(dominates(&a, &b));
+        a.accuracy = Some(0.80);
+        b.accuracy = Some(0.95);
+        assert!(!dominates(&a, &b) && !dominates(&b, &a));
+        // equal chip objectives + better accuracy -> domination
+        let mut c = point(3, 10.0, 5.0, 100.0);
+        c.accuracy = Some(0.95);
+        a.accuracy = Some(0.80);
+        assert!(dominates(&c, &a));
+        // both on the frontier when accuracy splits them
+        let f = frontier(&[a.clone(), b.clone()]);
+        assert_eq!(f.len(), 2);
     }
 
     #[test]

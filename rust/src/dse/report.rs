@@ -47,7 +47,7 @@ fn candidate_json(r: &CandidateResult) -> Json {
             ])
         })
         .collect();
-    obj(vec![
+    let mut entries = vec![
         ("id", Json::Str(r.candidate.id())),
         ("pe_blocks", num(hw.pe_blocks as f64)),
         ("arrays_per_block", num(hw.arrays_per_block as f64)),
@@ -65,7 +65,50 @@ fn candidate_json(r: &CandidateResult) -> Json {
         ("area_kge", num(r.area_kge)),
         ("tops_per_w", num(r.tops_per_w)),
         ("per_workload", Json::Arr(per)),
-    ])
+    ];
+    if let Some(acc) = r.accuracy {
+        entries.push(("accuracy", num(acc)));
+    }
+    obj(entries)
+}
+
+/// Render the sweep as CSV: one row per **frontier** point carrying
+/// every knob and every objective, ready for scatter plotting
+/// (`vsa dse --csv frontier.csv`).  The `accuracy` column is empty when
+/// the sweep ran without a reference artifact.
+pub fn to_csv(results: &[CandidateResult], frontier: &[usize]) -> String {
+    let mut out = String::from(
+        "rank,id,pe_blocks,arrays_per_block,rows_per_array,cols_per_array,\
+         freq_mhz,weight_sram_kb,spike_sram_kb,encode_bitplanes,layer_fusion,\
+         num_steps,total_pes,throughput_ips,power_mw,area_kge,tops_per_w,accuracy\n",
+    );
+    for (rank, &i) in frontier.iter().enumerate() {
+        let r = &results[i];
+        let hw = &r.candidate.hw;
+        let acc = r.accuracy.map_or(String::new(), |a| format!("{a}"));
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            rank + 1,
+            r.candidate.id(),
+            hw.pe_blocks,
+            hw.arrays_per_block,
+            hw.rows_per_array,
+            hw.cols_per_array,
+            hw.freq_mhz,
+            hw.weight_sram_kb,
+            hw.spike_sram_kb,
+            hw.encode_bitplanes,
+            hw.layer_fusion,
+            r.candidate.num_steps,
+            hw.total_pes(),
+            r.throughput_ips,
+            r.power_mw,
+            r.area_kge,
+            r.tops_per_w,
+            acc
+        ));
+    }
+    out
 }
 
 /// Assemble the full sweep report.  `frontier` indexes into `results`;

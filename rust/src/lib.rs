@@ -16,6 +16,9 @@
 //! * [`snn`] — the bit-exact functional golden model of the deployed
 //!   binary-weight spiking network (integer semantics; the contract shared
 //!   with the JAX model and the chip).
+//! * [`train`] — in-repo STBP training: binary weights (straight-through
+//!   estimator), IF-based BN folded into integer thresholds at export,
+//!   producing the VSAW artifacts the golden model / chip / DSE consume.
 //! * [`arch`] — the cycle-accurate VSA chip simulator: vectorwise PE
 //!   blocks, three-stage accumulator, IF neuron unit, SRAM/DRAM hierarchy,
 //!   tick batching, two-layer fusion, encoding bitplane mode.
@@ -45,4 +48,5 @@ pub mod metrics;
 pub mod runtime;
 pub mod snn;
 pub mod testing;
+pub mod train;
 pub mod util;

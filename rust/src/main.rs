@@ -8,6 +8,8 @@
 //! vsa dse      --space small --workload mnist  # Pareto design sweep
 //! vsa infer    --engine golden|pjrt|chip --model mnist --count 8
 //! vsa serve    --model mnist --requests 64 --workers 2 --batch 8
+//! vsa train    --model tiny --dataset synth --epochs 6 --seed 7
+//! vsa eval     --weights artifacts/tiny_t4_trained.vsaw [--steps T]
 //! vsa selftest                                 # cross-layer consistency
 //! ```
 
@@ -23,8 +25,11 @@ use vsa::coordinator::{
 };
 use vsa::data::synth;
 use vsa::energy::{power, report};
+use vsa::data::idx;
 use vsa::runtime::{Manifest, PjrtExecutor};
+use vsa::snn::params::DeployedModel;
 use vsa::snn::Network;
+use vsa::train;
 use vsa::util::stats::argmax;
 
 fn main() {
@@ -43,6 +48,8 @@ fn main() {
         "dse" => cmd_dse(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
         "selftest" => cmd_selftest(&args),
         "" | "help" => {
             print!("{HELP}");
@@ -67,13 +74,24 @@ commands:
   dse         sweep the reconfigurable design space, emit a Pareto report
   infer       classify synthetic samples (golden | chip | pjrt engines)
   serve       run the serving coordinator demo
+  train       STBP-train a binary-weight SNN, export a VSAW artifact
+  eval        golden-model accuracy of an artifact (optionally at --steps T)
   selftest    cross-check golden model, simulator and PJRT runtime
 
 common flags: --model tiny|mnist|cifar10  --artifacts DIR  --steps T
 
 dse flags:    --space tiny|small|wide  --workload mnist|cifar10|both
               --sample N (0 = full grid)  --seed S  --threads N
-              --top N  --tolerance EPS  --out FILE.json
+              --top N  --tolerance EPS  --out FILE.json  --csv FILE.csv
+              --artifact FILE.vsaw (adds the measured accuracy objective)
+              --acc-count N  --acc-seed S
+
+train flags:  --model tiny|mnist|micro  --dataset synth|mnist  --steps T
+              --epochs N  --batches-per-epoch N  --batch B  --lr LR
+              --momentum M  --seed S  --out FILE.vsaw  --eval-count N
+
+eval flags:   --weights FILE.vsaw  --dataset synth|mnist  --count N
+              --seed S  --steps T (override the artifact's T)
 ";
 
 fn load_network(args: &Args) -> anyhow::Result<(String, Network)> {
@@ -251,7 +269,32 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
         workloads
     );
 
-    let results = dse::evaluate_all(&candidates, &workloads, threads);
+    // Optional measured-accuracy objective: a trained artifact scored at
+    // every distinct T in the sweep (golden model, held-out samples).
+    let acc_map = match args.get_opt("artifact") {
+        Some(path) => {
+            let artifact = DeployedModel::from_file(path)?;
+            let acc_count = args.get_usize("acc-count", 64)?;
+            let acc_seed = args.get_u64("acc-seed", 7)?;
+            let map = dse::accuracy_by_t(
+                &artifact,
+                candidates.iter().map(|c| c.num_steps),
+                acc_count,
+                acc_seed,
+            );
+            println!(
+                "accuracy objective from {path} ({} held-out samples/T):",
+                acc_count
+            );
+            for (t, a) in &map {
+                println!("  T={t}: {:.3}", a);
+            }
+            Some(map)
+        }
+        None => None,
+    };
+
+    let results = dse::evaluate_all_with(&candidates, &workloads, threads, acc_map.as_ref());
     let front = dse::frontier(&results);
     let wall = t0.elapsed();
     println!(
@@ -299,6 +342,10 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
     let doc = dse::report::to_json(&meta, &results, &front, paper_slack);
     std::fs::write(&out, json::to_string(&doc) + "\n")?;
     println!("\nJSON report written to {out}");
+    if let Some(csv_path) = args.get_opt("csv") {
+        std::fs::write(csv_path, dse::report::to_csv(&results, &front))?;
+        println!("frontier CSV ({} rows) written to {csv_path}", front.len());
+    }
     Ok(())
 }
 
@@ -421,6 +468,93 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         stats.latency_ms_p50, stats.latency_ms_p95, stats.latency_ms_p99
     );
     println!("  accuracy {correct}/{requests}");
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let model = args.get("model", "tiny");
+    let dataset = match args.get("dataset", "synth").as_str() {
+        "synth" => train::Dataset::Synth,
+        "mnist" => train::Dataset::Mnist,
+        other => anyhow::bail!("unknown dataset '{other}' (synth|mnist)"),
+    };
+    let num_steps = args.get_usize("steps", 4)?;
+    let cfg = train::TrainConfig {
+        model: model.clone(),
+        num_steps,
+        dataset,
+        epochs: args.get_usize("epochs", 6)?,
+        batches_per_epoch: args.get_usize("batches-per-epoch", 50)?,
+        batch: args.get_usize("batch", 32)?,
+        lr: args.get_f64("lr", 0.1)?,
+        momentum: args.get_f64("momentum", 0.9)? as f32,
+        seed: args.get_u64("seed", 7)?,
+        log_every: args.get_usize("log-every", 25)?,
+    };
+    let out_path =
+        args.get("out", &format!("artifacts/{model}_t{num_steps}_trained.vsaw"));
+
+    let t0 = Instant::now();
+    let outcome = train::train(&cfg)?;
+    let wall = t0.elapsed();
+    let deployed = train::write_artifact(&outcome.net, &out_path)?;
+    println!(
+        "trained {model} (T={num_steps}) for {} steps in {:.1} s: final loss {:.4}, \
+         batch acc {:.3}",
+        outcome.steps,
+        wall.as_secs_f64(),
+        outcome.final_loss,
+        outcome.final_batch_acc
+    );
+    println!("artifact: {out_path} ({} bytes)", deployed.to_bytes().len());
+
+    let count = args.get_usize("eval-count", 256)?;
+    let samples = match cfg.dataset {
+        train::Dataset::Synth => train::holdout_synth(&outcome.net.spec, cfg.seed, count),
+        train::Dataset::Mnist => idx::mnist_if_available(count)
+            .ok_or_else(|| anyhow::anyhow!("t10k IDX files missing for held-out eval"))?,
+    };
+    let (correct, total) = train::eval_golden(&deployed, &samples);
+    println!(
+        "deployed golden-model accuracy: {correct}/{total} ({:.1}%) held out",
+        100.0 * correct as f64 / total.max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let path = args.require("weights")?;
+    let mut model = DeployedModel::from_file(&path)?;
+    let t = args.get_usize("steps", model.num_steps)?;
+    anyhow::ensure!(t > 0, "--steps (T) must be positive");
+    model.num_steps = t;
+    let count = args.get_usize("count", 256)?;
+    let seed = args.get_u64("seed", 7)?;
+    let samples = match args.get("dataset", "synth").as_str() {
+        // Same held-out stream as `vsa train`'s final report.
+        "synth" => train::holdout_samples(model.in_channels, model.in_size, seed, count),
+        "mnist" => {
+            let s = idx::mnist_if_available(count)
+                .ok_or_else(|| anyhow::anyhow!("data/mnist/t10k-* IDX files not found"))?;
+            anyhow::ensure!(!s.is_empty(), "MNIST test split is empty");
+            anyhow::ensure!(
+                s[0].channels == model.in_channels && s[0].size == model.in_size,
+                "MNIST geometry does not match artifact ({}x{})",
+                model.in_channels,
+                model.in_size
+            );
+            s
+        }
+        other => anyhow::bail!("unknown dataset '{other}' (synth|mnist)"),
+    };
+    let t0 = Instant::now();
+    let (correct, total) = train::eval_golden(&model, &samples);
+    println!(
+        "eval {}: accuracy {correct}/{total} ({:.1}%) at T={t} in {:.1} ms",
+        model.name,
+        100.0 * correct as f64 / total.max(1) as f64,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
     Ok(())
 }
 

@@ -604,7 +604,8 @@ mod tests {
     #[test]
     fn conv_multibit_into_matches_reference() {
         let mut rng = SplitMix64::new(37);
-        for &(c_in, c_out, hw, k) in &[(1usize, 4usize, 7usize, 3usize), (3, 2, 5, 3), (2, 3, 4, 1), (1, 2, 6, 5)] {
+        let cases = [(1usize, 4usize, 7usize, 3usize), (3, 2, 5, 3), (2, 3, 4, 1), (1, 2, 6, 5)];
+        for &(c_in, c_out, hw, k) in &cases {
             let img: Vec<u8> =
                 (0..c_in * hw * hw).map(|_| rng.next_below(256) as u8).collect();
             let w: Vec<i8> = (0..c_out * c_in * k * k)

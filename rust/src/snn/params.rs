@@ -206,6 +206,60 @@ impl DeployedModel {
         Self::parse(&buf)
     }
 
+    /// Serialize to VSAW v1 bytes — the exact inverse of [`parse`] and
+    /// the rust twin of `python/compile/params_io.py::save_deployed`.
+    /// `vsa train` exports artifacts through this writer.
+    ///
+    /// [`parse`]: DeployedModel::parse
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend(b"VSAW");
+        b.extend(1u32.to_le_bytes());
+        b.extend((self.name.len() as u32).to_le_bytes());
+        b.extend(self.name.as_bytes());
+        b.extend((self.num_steps as u32).to_le_bytes());
+        b.extend((self.in_channels as u32).to_le_bytes());
+        b.extend((self.in_size as u32).to_le_bytes());
+        b.extend((self.layers.len() as u32).to_le_bytes());
+        for ly in &self.layers {
+            match ly {
+                Layer::Conv { kind, c_out, c_in, k, w, bias, theta } => {
+                    b.push(if *kind == Kind::EncConv { 0 } else { 1 });
+                    b.extend((*c_out as u32).to_le_bytes());
+                    b.extend((*c_in as u32).to_le_bytes());
+                    b.extend((*k as u32).to_le_bytes());
+                    b.extend(w.iter().map(|&v| v as u8));
+                    for &v in bias {
+                        b.extend(v.to_le_bytes());
+                    }
+                    for &v in theta {
+                        b.extend(v.to_le_bytes());
+                    }
+                }
+                Layer::MaxPool => b.push(2),
+                Layer::Fc { n_out, n_in, w, bias, theta } => {
+                    b.push(3);
+                    b.extend((*n_out as u32).to_le_bytes());
+                    b.extend((*n_in as u32).to_le_bytes());
+                    b.extend(w.iter().map(|&v| v as u8));
+                    for &v in bias {
+                        b.extend(v.to_le_bytes());
+                    }
+                    for &v in theta {
+                        b.extend(v.to_le_bytes());
+                    }
+                }
+                Layer::Readout { n_out, n_in, w } => {
+                    b.push(4);
+                    b.extend((*n_out as u32).to_le_bytes());
+                    b.extend((*n_in as u32).to_le_bytes());
+                    b.extend(w.iter().map(|&v| v as u8));
+                }
+            }
+        }
+        b
+    }
+
     /// Deterministically synthesize deployed parameters for a Table-I
     /// model spec: random ±1 weights and IF-BN bias/theta in ranges that
     /// yield SNN-typical firing rates.  Benches and artifact-free tests
@@ -230,7 +284,8 @@ impl DeployedModel {
             match ly.kind {
                 LayerKind::EncConv => {
                     let w = weights(ly.c_out * c_in * ly.ksize * ly.ksize);
-                    let mut rng2 = SplitMix64::new(seed ^ li.wrapping_mul(0x9E37_79B9) ^ ly.c_out as u64);
+                    let mut rng2 =
+                        SplitMix64::new(seed ^ li.wrapping_mul(0x9E37_79B9) ^ ly.c_out as u64);
                     layers.push(Layer::Conv {
                         kind: Kind::EncConv,
                         c_out: ly.c_out,
@@ -249,8 +304,8 @@ impl DeployedModel {
                 }
                 LayerKind::Conv => {
                     let w = weights(ly.c_out * c_in * ly.ksize * ly.ksize);
-                    let mut rng2 =
-                        SplitMix64::new(seed ^ li.wrapping_mul(0x9E37_79B9) ^ ((ly.c_out as u64) << 8));
+                    let salt = li.wrapping_mul(0x9E37_79B9) ^ ((ly.c_out as u64) << 8);
+                    let mut rng2 = SplitMix64::new(seed ^ salt);
                     layers.push(Layer::Conv {
                         kind: Kind::Conv,
                         c_out: ly.c_out,
@@ -269,8 +324,8 @@ impl DeployedModel {
                 LayerKind::Fc => {
                     let n_in = c_in * fh * fw;
                     let w = weights(ly.c_out * n_in);
-                    let mut rng2 =
-                        SplitMix64::new(seed ^ li.wrapping_mul(0x9E37_79B9) ^ ((ly.c_out as u64) << 16));
+                    let salt = li.wrapping_mul(0x9E37_79B9) ^ ((ly.c_out as u64) << 16);
+                    let mut rng2 = SplitMix64::new(seed ^ salt);
                     layers.push(Layer::Fc {
                         n_out: ly.c_out,
                         n_in,
@@ -388,6 +443,21 @@ mod tests {
             }
             other => panic!("unexpected layer {other:?}"),
         }
+    }
+
+    #[test]
+    fn to_bytes_is_parse_inverse() {
+        // writer(reader(buf)) == buf on the hand-built buffer...
+        let buf = tiny_buf();
+        let m = DeployedModel::parse(&buf).unwrap();
+        assert_eq!(m.to_bytes(), buf);
+        // ...and reader(writer(model)) == model on a synthesized one.
+        let spec = crate::config::models::tiny(4);
+        let m = DeployedModel::synthesize(&spec, 3);
+        let re = DeployedModel::parse(&m.to_bytes()).unwrap();
+        assert_eq!(re.name, m.name);
+        assert_eq!(re.num_steps, m.num_steps);
+        assert_eq!(re.to_bytes(), m.to_bytes());
     }
 
     #[test]

@@ -1,0 +1,40 @@
+//! Latent-weight binarization with a straight-through estimator.
+//!
+//! Forward: `w_bin = sign(w)` with `sign(0) = +1` (the convention of
+//! `python/compile/model.py::binarize_ste` and of the VSAW format, which
+//! only stores ±1).  Backward: the gradient computed with respect to the
+//! binarized weights is applied to the latent weights unchanged
+//! (identity STE, BinaryConnect / BW-SNN style) — so the latent f32
+//! weights drift across sign boundaries over training while the network
+//! always *computes* with ±1.
+
+/// Binarize `latent` into `out` (both same length).
+pub fn sign_into(latent: &[f32], out: &mut [f32]) {
+    for (o, &w) in out.iter_mut().zip(latent) {
+        *o = if w >= 0.0 { 1.0 } else { -1.0 };
+    }
+}
+
+/// Binarize into a fresh buffer.
+pub fn sign_vec(latent: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0; latent.len()];
+    sign_into(latent, &mut out);
+    out
+}
+
+/// Export-time binarization to the i8 form `snn::params` stores.
+pub fn sign_i8(latent: &[f32]) -> Vec<i8> {
+    latent.iter().map(|&w| if w >= 0.0 { 1 } else { -1 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_convention_matches_deploy() {
+        // sign(0) = +1, matching jnp.where(w >= 0, 1, -1).
+        assert_eq!(sign_vec(&[-0.5, 0.0, 0.5]), vec![-1.0, 1.0, 1.0]);
+        assert_eq!(sign_i8(&[-0.5, 0.0, 0.5]), vec![-1, 1, 1]);
+    }
+}

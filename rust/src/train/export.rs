@@ -1,0 +1,120 @@
+//! Export: trained [`Net`] → deployed integer artifact.
+//!
+//! Binarizes the latent weights, folds each layer's IF-BN into the
+//! quantized per-channel `(bias, theta)` pair (see
+//! [`crate::train::ifbn`]), and assembles the
+//! [`crate::snn::params::DeployedModel`] the golden model, the chip
+//! simulator and `vsa dse` all consume.  `write_artifact` serializes it
+//! in VSAW v1 via [`DeployedModel::to_bytes`] — the byte format is a
+//! pure function of the trained parameters, so identically-seeded
+//! training runs produce byte-identical artifacts.
+
+use crate::snn::params::{DeployedModel, Kind, Layer};
+use crate::train::binarize::sign_i8;
+use crate::train::ifbn::BN_EPS;
+use crate::train::stbp::{Net, TrainLayer};
+
+/// Input scale of the encoding layer's fold: training consumes
+/// pixels/255, the deployed graph raw u8 pixels.
+pub const ENC_INPUT_SCALE: f64 = 255.0;
+
+/// Fold + binarize into the deployed integer model.
+pub fn deploy(net: &Net) -> DeployedModel {
+    deploy_with_eps(net, BN_EPS)
+}
+
+/// [`deploy`] with an explicit BN epsilon.  The fold-exactness test runs
+/// at `eps = 0`, where dyadic-rational BN parameters make the folded
+/// integer model *provably* bit-equivalent to the unfolded float
+/// reference; production exports use [`BN_EPS`].
+pub fn deploy_with_eps(net: &Net, eps: f64) -> DeployedModel {
+    let layers = net
+        .layers
+        .iter()
+        .map(|ly| match ly {
+            TrainLayer::Conv { enc, c_out, c_in, k, w, bn } => {
+                let scale = if *enc { ENC_INPUT_SCALE } else { 1.0 };
+                let (bias, theta) = bn.quantize(scale, eps);
+                Layer::Conv {
+                    kind: if *enc { Kind::EncConv } else { Kind::Conv },
+                    c_out: *c_out,
+                    c_in: *c_in,
+                    k: *k,
+                    w: sign_i8(w),
+                    bias,
+                    theta,
+                }
+            }
+            TrainLayer::MaxPool => Layer::MaxPool,
+            TrainLayer::Fc { n_out, n_in, w, bn } => {
+                let (bias, theta) = bn.quantize(1.0, eps);
+                Layer::Fc { n_out: *n_out, n_in: *n_in, w: sign_i8(w), bias, theta }
+            }
+            TrainLayer::Readout { n_out, n_in, w } => {
+                Layer::Readout { n_out: *n_out, n_in: *n_in, w: sign_i8(w) }
+            }
+        })
+        .collect();
+    DeployedModel {
+        name: net.spec.name.clone(),
+        num_steps: net.spec.num_steps,
+        in_channels: net.spec.in_channels,
+        in_size: net.spec.in_size,
+        layers,
+    }
+}
+
+/// Deploy and write the VSAW v1 artifact; creates parent directories.
+pub fn write_artifact(net: &Net, path: &str) -> std::io::Result<DeployedModel> {
+    let model = deploy(net);
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, model.to_bytes())?;
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models;
+    use crate::train::stbp::Net;
+
+    #[test]
+    fn deploy_geometry_matches_spec() {
+        let spec = models::micro(3);
+        let net = Net::init(&spec, 9);
+        let model = deploy(&net);
+        assert_eq!(model.num_steps, 3);
+        assert_eq!(model.layers.len(), spec.layers.len());
+        match &model.layers[0] {
+            Layer::Conv { kind: Kind::EncConv, w, theta, .. } => {
+                assert!(w.iter().all(|&v| v == 1 || v == -1));
+                assert!(theta.iter().all(|&t| t > 0));
+            }
+            other => panic!("expected enc conv, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn artifact_roundtrips_through_parser() {
+        let spec = models::micro(2);
+        let net = Net::init(&spec, 4);
+        let model = deploy(&net);
+        let bytes = model.to_bytes();
+        let parsed = DeployedModel::parse(&bytes).expect("exported artifact parses");
+        assert_eq!(parsed.to_bytes(), bytes);
+        assert_eq!(parsed.name, model.name);
+        assert_eq!(parsed.layers.len(), model.layers.len());
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let spec = models::micro(2);
+        let a = deploy(&Net::init(&spec, 11)).to_bytes();
+        let b = deploy(&Net::init(&spec, 11)).to_bytes();
+        assert_eq!(a, b);
+    }
+}

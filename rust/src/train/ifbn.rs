@@ -1,0 +1,288 @@
+//! IF-based Batch Normalization (paper §II, Eq. (3)-(4)).
+//!
+//! During STBP training every weight layer is followed by standard BN
+//! whose statistics are shared across the T time steps (Eq. (3)):
+//! batch statistics normalize the psums, then the IF neuron fires
+//! against the fixed threshold `v_th`.  At export the affine BN and the
+//! threshold fold into two per-channel integers (Eq. (4)) the hardware's
+//! IF unit consumes:
+//!
+//! ```text
+//! sigma  = sqrt(var + eps)
+//! bias   = mu - sigma/gamma * beta          (psum-domain offset)
+//! theta  = sigma/gamma * v_th               (psum-domain threshold)
+//! bias_q = round(bias * input_scale * FIXED_POINT)
+//! theta_q = max(round(theta * input_scale * FIXED_POINT), 1)
+//! ```
+//!
+//! because, for `gamma > 0`,
+//! `gamma * (x - mu) / sigma + beta >= v_th  <=>  x - bias >= theta`
+//! and the same rescaling maps the hard-reset membrane recurrences onto
+//! each other step by step.  `gamma` is clamped positive by the
+//! optimizer ([`crate::train::optim`]) so the inequality never flips.
+//! `input_scale` is 255 for the encoding layer (training consumes
+//! pixels/255, the deployed graph raw u8 pixels) and 1 elsewhere.
+//!
+//! The fold is verified bit-exactly in `rust/tests/train_stbp.rs`
+//! (`ifbn_fold_is_bit_exact_*`): with dyadic-rational parameters both
+//! sides are computed without rounding error, so folded integer
+//! inference must reproduce the unfolded train-time reference
+//! spike-for-spike.
+
+use crate::util::FIXED_POINT;
+
+/// Default BN epsilon — matches `python/compile/model.py::BN_EPS`.
+pub const BN_EPS: f64 = 1e-5;
+
+/// Training threshold — matches `python/compile/model.py::DEFAULT_V_TH`.
+pub const V_TH: f32 = 1.0;
+
+/// Running-stat EMA momentum — matches `compile/train.py::BN_MOMENTUM`.
+pub const BN_MOMENTUM: f32 = 0.9;
+
+/// Per-channel IF-BN parameters of one weight layer.
+#[derive(Debug, Clone)]
+pub struct IfBn {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    /// Running mean (EMA of batch means) — the deployed statistics.
+    pub mu: Vec<f32>,
+    /// Running variance (EMA of batch variances).
+    pub var: Vec<f32>,
+}
+
+/// Backward cache of one training-mode normalization.
+#[derive(Debug, Clone, Default)]
+pub struct BnCache {
+    /// Normalized activations `(x - mu_b) / sigma_b`, caller layout.
+    pub xn: Vec<f32>,
+    /// Per-channel `sqrt(var_b + eps)`.
+    pub sigma: Vec<f32>,
+    /// Per-channel batch mean (for the EMA update).
+    pub mu_b: Vec<f32>,
+    /// Per-channel batch variance (for the EMA update).
+    pub var_b: Vec<f32>,
+}
+
+impl IfBn {
+    /// Identity-initialized BN for `c` channels (gamma 1, beta 0, running
+    /// stats standard normal) — matching `compile/model.py::init_params`.
+    pub fn new(c: usize) -> Self {
+        Self {
+            gamma: vec![1.0; c],
+            beta: vec![0.0; c],
+            mu: vec![0.0; c],
+            var: vec![1.0; c],
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.gamma.len()
+    }
+
+    /// Training-mode normalization of `x` laid out as `(n, c, s)`
+    /// (channel-major maps, `s = 1` for fc): batch statistics per
+    /// channel over the `n * s` samples, written in place.  Returns the
+    /// backward cache.
+    pub fn normalize_train(&self, x: &mut [f32], n: usize, s: usize) -> BnCache {
+        let c = self.channels();
+        assert_eq!(x.len(), n * c * s, "bn input geometry");
+        let cnt = (n * s) as f64;
+        let mut mu_b = vec![0.0f32; c];
+        let mut var_b = vec![0.0f32; c];
+        let mut sigma = vec![0.0f32; c];
+        for ch in 0..c {
+            let mut sum = 0.0f64;
+            let mut sumsq = 0.0f64;
+            for r in 0..n {
+                let plane = &x[(r * c + ch) * s..(r * c + ch + 1) * s];
+                for &v in plane {
+                    sum += v as f64;
+                    sumsq += v as f64 * v as f64;
+                }
+            }
+            let m = sum / cnt;
+            let v = (sumsq / cnt - m * m).max(0.0);
+            mu_b[ch] = m as f32;
+            var_b[ch] = v as f32;
+            sigma[ch] = ((v + BN_EPS).sqrt()) as f32;
+        }
+        let mut xn = vec![0.0f32; x.len()];
+        for r in 0..n {
+            for ch in 0..c {
+                let base = (r * c + ch) * s;
+                let (m, sg) = (mu_b[ch], sigma[ch]);
+                let (g, b) = (self.gamma[ch], self.beta[ch]);
+                for j in 0..s {
+                    let z = (x[base + j] - m) / sg;
+                    xn[base + j] = z;
+                    x[base + j] = g * z + b;
+                }
+            }
+        }
+        BnCache { xn, sigma, mu_b, var_b }
+    }
+
+    /// Eval-mode normalization with the running statistics, in place.
+    /// `eps` is exposed so the fold-exactness test can run at `eps = 0`.
+    pub fn normalize_eval(&self, x: &mut [f32], n: usize, s: usize, eps: f64) {
+        let c = self.channels();
+        assert_eq!(x.len(), n * c * s, "bn input geometry");
+        for r in 0..n {
+            for ch in 0..c {
+                let base = (r * c + ch) * s;
+                let sg = ((self.var[ch] as f64 + eps).sqrt()) as f32;
+                let (m, g, b) = (self.mu[ch], self.gamma[ch], self.beta[ch]);
+                for j in 0..s {
+                    x[base + j] = g * (x[base + j] - m) / sg + b;
+                }
+            }
+        }
+    }
+
+    /// Backward through training-mode BN.  `dy` (caller layout `(n, c,
+    /// s)`) is consumed into `dx` in place; gradients for gamma/beta are
+    /// accumulated into `dgamma`/`dbeta` (zeroed here).
+    ///
+    /// `dx = gamma/sigma * (dy' - mean(dy') - xn * mean(dy' * xn))` with
+    /// `dy' = dy` per channel — the full batch-statistics gradient.
+    pub fn backward(
+        &self,
+        cache: &BnCache,
+        dy: &mut [f32],
+        n: usize,
+        s: usize,
+        dgamma: &mut [f32],
+        dbeta: &mut [f32],
+    ) {
+        let c = self.channels();
+        let cnt = (n * s) as f64;
+        for ch in 0..c {
+            let mut sum_dy = 0.0f64;
+            let mut sum_dyxn = 0.0f64;
+            for r in 0..n {
+                let base = (r * c + ch) * s;
+                for j in 0..s {
+                    let g = dy[base + j] as f64;
+                    sum_dy += g;
+                    sum_dyxn += g * cache.xn[base + j] as f64;
+                }
+            }
+            dgamma[ch] = sum_dyxn as f32;
+            dbeta[ch] = sum_dy as f32;
+            let mean_dy = (sum_dy / cnt) as f32;
+            let mean_dyxn = (sum_dyxn / cnt) as f32;
+            let scale = self.gamma[ch] / cache.sigma[ch];
+            for r in 0..n {
+                let base = (r * c + ch) * s;
+                for j in 0..s {
+                    dy[base + j] = scale
+                        * (dy[base + j] - mean_dy - cache.xn[base + j] * mean_dyxn);
+                }
+            }
+        }
+    }
+
+    /// EMA update of the running statistics from one batch's statistics.
+    pub fn ema_update(&mut self, cache: &BnCache) {
+        for ch in 0..self.channels() {
+            self.mu[ch] = BN_MOMENTUM * self.mu[ch] + (1.0 - BN_MOMENTUM) * cache.mu_b[ch];
+            self.var[ch] = BN_MOMENTUM * self.var[ch] + (1.0 - BN_MOMENTUM) * cache.var_b[ch];
+        }
+    }
+
+    /// Fold BN + threshold into the psum-domain `(bias, theta)` pair
+    /// (unquantized, f64) — Eq. (4) before the fixed-point rounding.
+    pub fn fold(&self, input_scale: f64, eps: f64) -> (Vec<f64>, Vec<f64>) {
+        let c = self.channels();
+        let mut bias = vec![0.0f64; c];
+        let mut theta = vec![0.0f64; c];
+        for ch in 0..c {
+            let sigma = (self.var[ch] as f64 + eps).sqrt();
+            let ratio = sigma / self.gamma[ch] as f64;
+            bias[ch] = (self.mu[ch] as f64 - ratio * self.beta[ch] as f64) * input_scale;
+            theta[ch] = ratio * V_TH as f64 * input_scale;
+        }
+        (bias, theta)
+    }
+
+    /// Quantize the fold onto the `FIXED_POINT` grid: the i32 pair the
+    /// VSAW format stores and the golden model / chip execute.  Theta is
+    /// floored at 1 so the firing inequality stays well-defined.
+    pub fn quantize(&self, input_scale: f64, eps: f64) -> (Vec<i32>, Vec<i32>) {
+        let (bias, theta) = self.fold(input_scale, eps);
+        let q = |v: f64| (v * FIXED_POINT as f64).round();
+        (
+            bias.iter().map(|&b| q(b) as i32).collect(),
+            theta.iter().map(|&t| q(t).max(1.0) as i32).collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_train_standardizes() {
+        let bn = IfBn::new(2);
+        // channel 0: 1..4, channel 1: constant 5
+        let mut x = vec![1.0, 5.0, 2.0, 5.0, 3.0, 5.0, 4.0, 5.0];
+        let cache = bn.normalize_train(&mut x, 4, 1);
+        assert!((cache.mu_b[0] - 2.5).abs() < 1e-6);
+        assert!((cache.mu_b[1] - 5.0).abs() < 1e-6);
+        // normalized channel 0 has ~zero mean
+        let m: f32 = (0..4).map(|r| x[r * 2]).sum::<f32>() / 4.0;
+        assert!(m.abs() < 1e-6);
+        // constant channel collapses to beta = 0 (sigma = sqrt(eps))
+        assert!(x[1].abs() < 1e-3);
+    }
+
+    #[test]
+    fn eval_uses_running_stats() {
+        let mut bn = IfBn::new(1);
+        bn.mu = vec![2.0];
+        bn.var = vec![4.0];
+        let mut x = vec![4.0];
+        bn.normalize_eval(&mut x, 1, 1, 0.0);
+        assert_eq!(x[0], 1.0); // (4 - 2) / 2
+    }
+
+    #[test]
+    fn fold_quantize_matches_hand_math() {
+        let mut bn = IfBn::new(1);
+        bn.gamma = vec![0.5];
+        bn.beta = vec![0.125];
+        bn.mu = vec![0.25];
+        bn.var = vec![4.0];
+        let (bias, theta) = bn.fold(1.0, 0.0);
+        // sigma/gamma = 4: bias = 0.25 - 4*0.125 = -0.25, theta = 4
+        assert_eq!(bias[0], -0.25);
+        assert_eq!(theta[0], 4.0);
+        let (bq, tq) = bn.quantize(1.0, 0.0);
+        assert_eq!(bq[0], -64);
+        assert_eq!(tq[0], 1024);
+    }
+
+    #[test]
+    fn theta_floor_keeps_positive() {
+        let mut bn = IfBn::new(1);
+        bn.var = vec![0.0];
+        let (_, tq) = bn.quantize(1.0, 0.0);
+        assert_eq!(tq[0], 1); // sigma 0 would give theta 0; floored to 1
+    }
+
+    #[test]
+    fn ema_moves_toward_batch_stats() {
+        let mut bn = IfBn::new(1);
+        let cache = BnCache {
+            xn: vec![],
+            sigma: vec![1.0],
+            mu_b: vec![10.0],
+            var_b: vec![2.0],
+        };
+        bn.ema_update(&cache);
+        assert!((bn.mu[0] - 1.0).abs() < 1e-6); // 0.9*0 + 0.1*10
+        assert!((bn.var[0] - 1.1).abs() < 1e-6); // 0.9*1 + 0.1*2
+    }
+}

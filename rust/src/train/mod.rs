@@ -1,0 +1,319 @@
+//! In-repo STBP training of the binary-weight spiking models (paper
+//! §II) — no external ML stack, just f32 loops over the repo's own
+//! datasets, producing deployable VSAW artifacts.
+//!
+//! The paper's contribution is algorithm/hardware co-design: a
+//! binary-weight SNN with IF-based BatchNorm trained *directly* with
+//! spatio-temporal backprop at small T, which the VSA chip then
+//! executes.  This module is the algorithm half in Rust:
+//!
+//! * [`tensor`] — the dense f32 kernels training needs (SAME conv,
+//!   dense matmul, 2x2 max pool, softmax cross-entropy) with hand-rolled
+//!   backward passes;
+//! * [`stbp`] — the trainable network and forward/backward through the
+//!   T time steps with a rectangular surrogate for the IF spike;
+//! * [`binarize`] — sign() weights forward, straight-through backward;
+//! * [`ifbn`] — train-time BatchNorm folded into per-channel integer IF
+//!   thresholds at export (paper Eq. (4));
+//! * [`optim`] — momentum SGD with a cosine schedule;
+//! * [`export`] — fold + binarize + serialize into the VSAW v1 format
+//!   [`crate::snn::Network`] loads, closing the `vsa train → vsa infer →
+//!   vsa dse` loop on one artifact.
+//!
+//! Everything is seeded from one `SplitMix64` stream and runs
+//! single-threaded in a fixed order: training is **byte-reproducible**
+//! — the same `(model, T, dataset, hyperparameters, seed)` produce a
+//! byte-identical artifact on every run (see README §TRAINING).
+
+pub mod binarize;
+pub mod export;
+pub mod ifbn;
+pub mod optim;
+pub mod stbp;
+pub mod tensor;
+
+pub use export::{deploy, deploy_with_eps, write_artifact};
+pub use stbp::{Net, SpikeMode};
+
+use crate::config::models::{self, ModelSpec};
+use crate::data::{idx, synth, Sample};
+use crate::snn::params::DeployedModel;
+use crate::snn::{Network, Scratch};
+
+/// Training data source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    /// The deterministic synthetic corpus (`data::synth`), generated on
+    /// the fly in the model's input geometry — always available.
+    Synth,
+    /// Real MNIST IDX files under `data/mnist/` (train split for
+    /// training, t10k for held-out eval); requires the files on disk.
+    Mnist,
+}
+
+/// Hyperparameters of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model preset (`config::models::by_name`).
+    pub model: String,
+    /// Time steps T.
+    pub num_steps: usize,
+    pub dataset: Dataset,
+    pub epochs: usize,
+    /// Batches per epoch for the (infinite) synthetic corpus; MNIST
+    /// derives it from the dataset size instead.
+    pub batches_per_epoch: usize,
+    pub batch: usize,
+    /// Base learning rate (cosine-annealed to 0 across the run).
+    pub lr: f64,
+    pub momentum: f32,
+    pub seed: u64,
+    /// Print a progress line every N steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "tiny".into(),
+            num_steps: 4,
+            dataset: Dataset::Synth,
+            epochs: 6,
+            batches_per_epoch: 50,
+            batch: 32,
+            lr: 0.1,
+            momentum: 0.9,
+            seed: 7,
+            log_every: 25,
+        }
+    }
+}
+
+/// Result of a training run.
+pub struct TrainOutcome {
+    pub net: Net,
+    pub steps: usize,
+    pub final_loss: f32,
+    /// Training-batch accuracy of the last step.
+    pub final_batch_acc: f64,
+}
+
+/// Index of the maximum f32 (first on ties) — the train-side twin of
+/// `util::stats::argmax`.
+pub fn argmax_f32(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Resolve the spec and run STBP training to completion.
+pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
+    let spec = models::by_name(&cfg.model, cfg.num_steps).ok_or_else(|| {
+        anyhow::anyhow!("unknown model '{}' (tiny|mnist|cifar10|micro)", cfg.model)
+    })?;
+    anyhow::ensure!(cfg.num_steps > 0, "--steps (T) must be positive");
+    anyhow::ensure!(cfg.batch > 0, "--batch must be positive");
+    anyhow::ensure!(cfg.epochs > 0, "--epochs must be positive");
+
+    let mnist_train: Option<Vec<Sample>> = match cfg.dataset {
+        Dataset::Synth => None,
+        Dataset::Mnist => {
+            let data = idx::mnist_train_if_available(usize::MAX).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--dataset mnist needs data/mnist/train-images-idx3-ubyte and \
+                     train-labels-idx1-ubyte (synthetic fallback: --dataset synth)"
+                )
+            })?;
+            anyhow::ensure!(!data.is_empty(), "MNIST train split is empty");
+            let s = &data[0];
+            anyhow::ensure!(
+                s.channels == spec.in_channels && s.size == spec.in_size,
+                "MNIST geometry ({}, {}) does not match model '{}' ({}, {})",
+                s.channels,
+                s.size,
+                spec.name,
+                spec.in_channels,
+                spec.in_size
+            );
+            Some(data)
+        }
+    };
+    let batches_per_epoch = match &mnist_train {
+        Some(data) => (data.len() / cfg.batch).max(1),
+        None => cfg.batches_per_epoch.max(1),
+    };
+    let total_steps = cfg.epochs * batches_per_epoch;
+
+    let mut net = Net::init(&spec, cfg.seed);
+    let mut opt = optim::Sgd::new(&net, cfg.momentum);
+    let classes = net.classes();
+    let plane = spec.in_channels * spec.in_size * spec.in_size;
+    let mut images = vec![0.0f32; cfg.batch * plane];
+    let mut labels = vec![0usize; cfg.batch];
+    let mut dlogits = vec![0.0f32; cfg.batch * classes];
+    let (mut final_loss, mut final_acc) = (f32::NAN, 0.0f64);
+
+    for step in 0..total_steps {
+        let count = load_batch(
+            &spec,
+            cfg,
+            mnist_train.as_deref(),
+            step,
+            batches_per_epoch,
+            &mut images,
+            &mut labels,
+        );
+        let fwd = net.forward(&images[..count * plane], count, SpikeMode::Hard, true);
+        let loss = tensor::softmax_ce(
+            &fwd.logits,
+            count,
+            classes,
+            &labels[..count],
+            spec.num_steps as f32,
+            &mut dlogits[..count * classes],
+        );
+        let grads = net.backward(&fwd, &images[..count * plane], &dlogits[..count * classes], true);
+        opt.step(&mut net, &grads, optim::cosine_lr(cfg.lr, step, total_steps));
+        net.apply_bn_ema(&fwd);
+
+        let correct = (0..count)
+            .filter(|&r| argmax_f32(&fwd.logits[r * classes..(r + 1) * classes]) == labels[r])
+            .count();
+        final_loss = loss;
+        final_acc = correct as f64 / count as f64;
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == total_steps) {
+            println!(
+                "[train:{} T={}] step {:4}/{} loss {:.4} acc {:.3}",
+                spec.name, spec.num_steps, step, total_steps, loss, final_acc
+            );
+        }
+    }
+    Ok(TrainOutcome { net, steps: total_steps, final_loss, final_batch_acc: final_acc })
+}
+
+/// Fill `images`/`labels` with the samples of `step`; returns the count.
+fn load_batch(
+    spec: &ModelSpec,
+    cfg: &TrainConfig,
+    mnist: Option<&[Sample]>,
+    step: usize,
+    batches_per_epoch: usize,
+    images: &mut [f32],
+    labels: &mut [usize],
+) -> usize {
+    let plane = spec.in_channels * spec.in_size * spec.in_size;
+    let samples: Vec<Sample> = match mnist {
+        None => synth::batch(
+            cfg.seed,
+            (step * cfg.batch) as u64,
+            cfg.batch,
+            spec.in_channels,
+            spec.in_size,
+        ),
+        Some(data) => {
+            let start = (step % batches_per_epoch) * cfg.batch;
+            data[start..(start + cfg.batch).min(data.len())].to_vec()
+        }
+    };
+    for (r, s) in samples.iter().enumerate() {
+        for (dst, &px) in images[r * plane..(r + 1) * plane].iter_mut().zip(&s.image) {
+            *dst = px as f32 / 255.0;
+        }
+        labels[r] = s.label;
+    }
+    samples.len()
+}
+
+/// Held-out synthetic samples in an explicit input geometry — the ONE
+/// definition of the held-out convention (shifted seed, indices from
+/// 10M, disjoint from every training batch; same as
+/// `compile/train.py::evaluate_deployed`).  `vsa train`'s final report,
+/// `vsa eval` and the DSE accuracy objective all sample through here.
+pub fn holdout_samples(channels: usize, size: usize, seed: u64, count: usize) -> Vec<Sample> {
+    synth::batch(seed + 1000, 10_000_000, count, channels, size)
+}
+
+/// [`holdout_samples`] in a spec's geometry.
+pub fn holdout_synth(spec: &ModelSpec, seed: u64, count: usize) -> Vec<Sample> {
+    holdout_samples(spec.in_channels, spec.in_size, seed, count)
+}
+
+/// Golden-model accuracy of a deployed artifact on `samples`.
+/// Returns (correct, total).
+pub fn eval_golden(model: &DeployedModel, samples: &[Sample]) -> (usize, usize) {
+    let net = Network::new(model.clone());
+    let mut scratch = Scratch::new();
+    let correct = samples
+        .iter()
+        .filter(|s| {
+            let logits = net.infer_u8_with(&s.image, &mut scratch);
+            crate::util::stats::argmax(&logits) == s.label
+        })
+        .count();
+    (correct, samples.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_training_step_runs_and_is_deterministic() {
+        let cfg = TrainConfig {
+            model: "micro".into(),
+            num_steps: 2,
+            epochs: 1,
+            batches_per_epoch: 3,
+            batch: 4,
+            log_every: 0,
+            ..TrainConfig::default()
+        };
+        let a = train(&cfg).unwrap();
+        let b = train(&cfg).unwrap();
+        assert_eq!(a.steps, 3);
+        assert_eq!(deploy(&a.net).to_bytes(), deploy(&b.net).to_bytes());
+        assert!(a.final_loss.is_finite());
+    }
+
+    #[test]
+    fn holdout_disjoint_from_training_indices() {
+        let spec = models::micro(2);
+        let train_s = synth::batch(7, 0, 8, spec.in_channels, spec.in_size);
+        let hold = holdout_synth(&spec, 7, 8);
+        assert_eq!(hold.len(), 8);
+        assert!(train_s.iter().zip(&hold).any(|(a, b)| a.image != b.image));
+    }
+
+    #[test]
+    fn eval_golden_counts_correct() {
+        let spec = models::micro(2);
+        let model = deploy(&Net::init(&spec, 5));
+        let samples = holdout_synth(&spec, 5, 10);
+        let (correct, total) = eval_golden(&model, &samples);
+        assert_eq!(total, 10);
+        assert!(correct <= total);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let cfg = TrainConfig { model: "nope".into(), ..TrainConfig::default() };
+        assert!(train(&cfg).is_err());
+    }
+
+    #[test]
+    fn mnist_without_files_reports_clearly() {
+        let cfg = TrainConfig {
+            dataset: Dataset::Mnist,
+            model: "mnist".into(),
+            ..TrainConfig::default()
+        };
+        if idx::mnist_train_if_available(1).is_none() {
+            let err = train(&cfg).unwrap_err().to_string();
+            assert!(err.contains("data/mnist"), "unhelpful error: {err}");
+        }
+    }
+}

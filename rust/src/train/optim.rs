@@ -1,0 +1,130 @@
+//! SGD with classical momentum and a cosine learning-rate schedule.
+//!
+//! Matches the update `compile/train.py` performs structurally (one
+//! velocity slot per trainable leaf; `gamma` clamped positive after the
+//! step so the IF-BN fold keeps its firing-inequality direction), but
+//! with momentum-SGD + cosine decay instead of Adam: no per-parameter
+//! second moments to serialize, and bit-deterministic with plain f32
+//! arithmetic.
+
+use crate::train::stbp::{LayerGrads, Net, TrainLayer};
+
+/// Lower clamp for BN gamma — matches `compile/train.py::GAMMA_MIN`.
+pub const GAMMA_MIN: f32 = 0.05;
+
+/// Cosine-annealed learning rate: `lr/2 * (1 + cos(pi * step/total))`.
+pub fn cosine_lr(base_lr: f64, step: usize, total_steps: usize) -> f64 {
+    let frac = step as f64 / total_steps.max(1) as f64;
+    0.5 * base_lr * (1.0 + (std::f64::consts::PI * frac).cos())
+}
+
+/// Per-layer velocity slots mirroring [`LayerGrads`].
+#[derive(Debug, Clone, Default)]
+struct LayerVel {
+    w: Vec<f32>,
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+}
+
+/// Momentum-SGD state over a [`Net`].
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub momentum: f32,
+    vel: Vec<LayerVel>,
+}
+
+impl Sgd {
+    /// Zero-initialized velocities for every trainable leaf of `net`.
+    pub fn new(net: &Net, momentum: f32) -> Self {
+        let vel = net
+            .layers
+            .iter()
+            .map(|ly| match ly {
+                TrainLayer::Conv { w, bn, .. } | TrainLayer::Fc { w, bn, .. } => LayerVel {
+                    w: vec![0.0; w.len()],
+                    gamma: vec![0.0; bn.channels()],
+                    beta: vec![0.0; bn.channels()],
+                },
+                TrainLayer::Readout { w, .. } => LayerVel {
+                    w: vec![0.0; w.len()],
+                    gamma: Vec::new(),
+                    beta: Vec::new(),
+                },
+                TrainLayer::MaxPool => LayerVel::default(),
+            })
+            .collect();
+        Self { momentum, vel }
+    }
+
+    /// One update: `v = momentum * v + g; p -= lr * v`, then the gamma
+    /// clamp.  `grads` must be parallel to `net.layers`.
+    pub fn step(&mut self, net: &mut Net, grads: &[LayerGrads], lr: f64) {
+        let lr = lr as f32;
+        let mom = self.momentum;
+        let apply = |p: &mut [f32], g: &[f32], v: &mut [f32]| {
+            for ((pv, &gv), vv) in p.iter_mut().zip(g).zip(v.iter_mut()) {
+                *vv = mom * *vv + gv;
+                *pv -= lr * *vv;
+            }
+        };
+        for (ly, (g, v)) in net.layers.iter_mut().zip(grads.iter().zip(&mut self.vel)) {
+            match ly {
+                TrainLayer::Conv { w, bn, .. } | TrainLayer::Fc { w, bn, .. } => {
+                    apply(w, &g.w, &mut v.w);
+                    apply(&mut bn.gamma, &g.gamma, &mut v.gamma);
+                    apply(&mut bn.beta, &g.beta, &mut v.beta);
+                    for gm in bn.gamma.iter_mut() {
+                        *gm = gm.max(GAMMA_MIN);
+                    }
+                }
+                TrainLayer::Readout { w, .. } => apply(w, &g.w, &mut v.w),
+                TrainLayer::MaxPool => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models;
+    use crate::train::stbp::Net;
+
+    #[test]
+    fn cosine_schedule_endpoints() {
+        assert!((cosine_lr(0.1, 0, 100) - 0.1).abs() < 1e-12);
+        assert!((cosine_lr(0.1, 50, 100) - 0.05).abs() < 1e-12);
+        assert!(cosine_lr(0.1, 100, 100).abs() < 1e-12);
+    }
+
+    #[test]
+    fn momentum_accumulates_and_gamma_clamps() {
+        let spec = models::micro(2);
+        let mut net = Net::init(&spec, 1);
+        let mut opt = Sgd::new(&net, 0.9);
+        // Gradients that push gamma of the first layer far negative.
+        let mut grads: Vec<LayerGrads> =
+            net.layers.iter().map(|_| LayerGrads::default()).collect();
+        if let TrainLayer::Conv { w, bn, .. } = &net.layers[0] {
+            grads[0] = LayerGrads {
+                w: vec![1.0; w.len()],
+                gamma: vec![100.0; bn.channels()],
+                beta: vec![0.0; bn.channels()],
+            };
+        }
+        let w0 = match &net.layers[0] {
+            TrainLayer::Conv { w, .. } => w[0],
+            _ => unreachable!(),
+        };
+        opt.step(&mut net, &grads, 0.1);
+        opt.step(&mut net, &grads, 0.1);
+        match &net.layers[0] {
+            TrainLayer::Conv { w, bn, .. } => {
+                // two momentum steps move further than two plain steps
+                assert!(w[0] < w0 - 2.0 * 0.1);
+                assert!(bn.gamma.iter().all(|&g| g == GAMMA_MIN));
+            }
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,0 +1,566 @@
+//! STBP: spatio-temporal backpropagation through the binary-weight
+//! spiking network (paper §II; Wu et al.'s STBP with a rectangular
+//! surrogate).
+//!
+//! The trainable network mirrors [`crate::config::models::ModelSpec`]
+//! layer for layer: encoding conv (multi-bit input, psums shared across
+//! the T steps, §III-F), spiking convs, 2x2 max pools, spiking fc, and a
+//! non-firing readout.  Weight layers hold *latent* f32 weights that are
+//! binarized to ±1 in the forward pass (straight-through backward, see
+//! [`crate::train::binarize`]) and an [`IfBn`] normalizer (batch
+//! statistics during training, running statistics at export).
+//!
+//! ## Surrogate gradient
+//!
+//! The hard fire `o = H(v_pre - v_th)` is not differentiable; the
+//! backward pass uses the rectangular window `do/dv = 1(|v_pre - v_th| <
+//! 1/2)` and differentiates the hard reset `v_res = v_pre * (1 - o)`
+//! through both factors.  [`SpikeMode::Soft`] replaces the forward fire
+//! with the *continuous* ramp `clamp(v_pre - v_th + 1/2, 0, 1)` whose
+//! exact derivative is that same window — the finite-difference
+//! correctness test runs in this mode, so the identical backward code is
+//! checked against numerics without the Heaviside discontinuity.
+//!
+//! Spike trains are laid out `(T, B, F)` with `F = C*H*W` flat, so the
+//! `(T*B, F)` views the conv/fc kernels need are free reinterpretations.
+
+use crate::config::models::{LayerKind, ModelSpec};
+use crate::train::binarize::sign_vec;
+use crate::train::ifbn::{BnCache, IfBn, V_TH};
+use crate::train::tensor;
+use crate::util::rng::SplitMix64;
+
+/// Half-width of the rectangular surrogate window (STBP `a/2` with
+/// `a = 1`, matching `compile/model.py::SURROGATE_WIDTH`).
+pub const SURR_HALF: f32 = 0.5;
+
+/// Seed salt for weight init (keeps the trainer's stream independent of
+/// the dataset streams derived from the same user seed).
+const INIT_SALT: u64 = 0x5EED_7261_11E5;
+
+/// Forward spike semantics: `Hard` is real training/eval; `Soft` is the
+/// continuous relaxation used by the gradient finite-difference test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpikeMode {
+    Hard,
+    Soft,
+}
+
+/// One trainable layer (parallel to `ModelSpec::layers`).
+#[derive(Debug, Clone)]
+pub enum TrainLayer {
+    /// Encoding or spiking conv: latent weights `(c_out, c_in, k, k)`.
+    Conv { enc: bool, c_out: usize, c_in: usize, k: usize, w: Vec<f32>, bn: IfBn },
+    MaxPool,
+    /// Spiking fully-connected: latent weights `(n_out, n_in)`.
+    Fc { n_out: usize, n_in: usize, w: Vec<f32>, bn: IfBn },
+    /// Non-firing accumulation layer.
+    Readout { n_out: usize, n_in: usize, w: Vec<f32> },
+}
+
+/// The trainable network.
+#[derive(Debug, Clone)]
+pub struct Net {
+    pub spec: ModelSpec,
+    pub layers: Vec<TrainLayer>,
+}
+
+/// Per-layer caches of one forward pass.
+#[derive(Debug, Clone, Default)]
+struct Cache {
+    /// Output spike train `(T, B, F)` (for the readout: empty).
+    spikes: Vec<f32>,
+    /// Pre-reset membrane `(T, B, F)` (firing layers only).
+    v_pre: Vec<f32>,
+    /// BN cache (weight layers in train mode only).
+    bn: BnCache,
+    /// Output feature dims per map.
+    c: usize,
+    h: usize,
+    w: usize,
+}
+
+/// Everything one forward pass produces.
+pub struct Forward {
+    /// `(B, classes)` accumulated readout logits.
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    caches: Vec<Cache>,
+}
+
+/// Per-layer parameter gradients (empty vecs where not applicable).
+#[derive(Debug, Clone, Default)]
+pub struct LayerGrads {
+    pub w: Vec<f32>,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+}
+
+impl Net {
+    /// Initialize latent weights from one seeded SplitMix64 stream:
+    /// uniform in `±1/sqrt(fan_in)`, drawn in layer order, row-major —
+    /// byte-reproducible per seed.
+    pub fn init(spec: &ModelSpec, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed ^ INIT_SALT);
+        let mut draw = |n: usize, fan_in: usize| -> Vec<f32> {
+            let bound = 1.0 / (fan_in as f64).sqrt();
+            (0..n).map(|_| ((rng.next_f64() * 2.0 - 1.0) * bound) as f32).collect()
+        };
+        let shapes = spec.feature_shapes();
+        let layers = spec
+            .layers
+            .iter()
+            .zip(&shapes)
+            .map(|(ly, &(c_in, fh, fw))| match ly.kind {
+                LayerKind::EncConv | LayerKind::Conv => {
+                    let fan_in = c_in * ly.ksize * ly.ksize;
+                    TrainLayer::Conv {
+                        enc: ly.kind == LayerKind::EncConv,
+                        c_out: ly.c_out,
+                        c_in,
+                        k: ly.ksize,
+                        w: draw(ly.c_out * fan_in, fan_in),
+                        bn: IfBn::new(ly.c_out),
+                    }
+                }
+                LayerKind::MaxPool => TrainLayer::MaxPool,
+                LayerKind::Fc => {
+                    let n_in = c_in * fh * fw;
+                    TrainLayer::Fc {
+                        n_out: ly.c_out,
+                        n_in,
+                        w: draw(ly.c_out * n_in, n_in),
+                        bn: IfBn::new(ly.c_out),
+                    }
+                }
+                LayerKind::Readout => {
+                    let n_in = c_in * fh * fw;
+                    TrainLayer::Readout {
+                        n_out: ly.c_out,
+                        n_in,
+                        w: draw(ly.c_out * n_in, n_in),
+                    }
+                }
+            })
+            .collect();
+        Self { spec: spec.clone(), layers }
+    }
+
+    /// Number of readout classes.
+    pub fn classes(&self) -> usize {
+        match self.layers.last() {
+            Some(TrainLayer::Readout { n_out, .. }) => *n_out,
+            _ => panic!("network has no readout layer"),
+        }
+    }
+
+    /// Training forward (batch-statistics BN).  `images` is `(B, C_in *
+    /// H * W)` f32 in `[0, 1]`; `binarized = false` runs on the latent
+    /// weights (gradient-test mode).
+    pub fn forward(
+        &self,
+        images: &[f32],
+        batch: usize,
+        mode: SpikeMode,
+        binarized: bool,
+    ) -> Forward {
+        self.forward_impl(images, batch, mode, binarized, true, 0.0)
+    }
+
+    /// Eval forward: running-statistics BN, hard spikes, binarized
+    /// weights — the float twin of the deployed graph.  `eps` is the BN
+    /// epsilon ([`crate::train::ifbn::BN_EPS`] normally; the
+    /// fold-exactness test passes 0).
+    pub fn forward_eval(&self, images: &[f32], batch: usize, eps: f64) -> Vec<f32> {
+        self.forward_impl(images, batch, SpikeMode::Hard, true, false, eps).logits
+    }
+
+    fn forward_impl(
+        &self,
+        images: &[f32],
+        batch: usize,
+        mode: SpikeMode,
+        binarized: bool,
+        train: bool,
+        eps: f64,
+    ) -> Forward {
+        let t_steps = self.spec.num_steps;
+        let (mut h, mut w) = (self.spec.in_size, self.spec.in_size);
+        assert_eq!(
+            images.len(),
+            batch * self.spec.in_channels * h * w,
+            "image geometry mismatch"
+        );
+        let mut caches: Vec<Cache> = Vec::with_capacity(self.layers.len());
+        let mut logits: Option<Vec<f32>> = None;
+
+        for ly in &self.layers {
+            // Input spike train of this layer: previous cache (or none
+            // for the encoding layer, which reads `images`).
+            match ly {
+                TrainLayer::Conv { enc: true, c_out, c_in, k, w: wts, bn } => {
+                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let hw = h * w;
+                    let f = c_out * hw;
+                    let mut y = vec![0.0f32; batch * f];
+                    tensor::conv2d_same(images, batch, *c_in, h, w, &wb, *c_out, *k, &mut y);
+                    let bn_cache = if train {
+                        bn.normalize_train(&mut y, batch, hw)
+                    } else {
+                        bn.normalize_eval(&mut y, batch, hw, eps);
+                        BnCache::default()
+                    };
+                    // §III-F: the same psum plane drives every step.
+                    let mut psums = vec![0.0f32; t_steps * batch * f];
+                    for t in 0..t_steps {
+                        psums[t * batch * f..(t + 1) * batch * f].copy_from_slice(&y);
+                    }
+                    let mut spikes = vec![0.0f32; t_steps * batch * f];
+                    let mut v_pre = vec![0.0f32; t_steps * batch * f];
+                    if_forward(&psums, t_steps, batch * f, mode, &mut spikes, &mut v_pre);
+                    caches.push(Cache { spikes, v_pre, bn: bn_cache, c: *c_out, h, w });
+                }
+                TrainLayer::Conv { enc: false, c_out, c_in, k, w: wts, bn } => {
+                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let hw = h * w;
+                    let f = c_out * hw;
+                    let n = t_steps * batch;
+                    let x_in = &caches.last().expect("conv input").spikes;
+                    let mut y = vec![0.0f32; n * f];
+                    tensor::conv2d_same(x_in, n, *c_in, h, w, &wb, *c_out, *k, &mut y);
+                    let bn_cache = if train {
+                        bn.normalize_train(&mut y, n, hw)
+                    } else {
+                        bn.normalize_eval(&mut y, n, hw, eps);
+                        BnCache::default()
+                    };
+                    let mut spikes = vec![0.0f32; n * f];
+                    let mut v_pre = vec![0.0f32; n * f];
+                    if_forward(&y, t_steps, batch * f, mode, &mut spikes, &mut v_pre);
+                    caches.push(Cache { spikes, v_pre, bn: bn_cache, c: *c_out, h, w });
+                }
+                TrainLayer::MaxPool => {
+                    let prev = caches.last().expect("pool input");
+                    let (c, oh, ow) = (prev.c, h / 2, w / 2);
+                    let n = t_steps * batch;
+                    let mut spikes = vec![0.0f32; n * c * oh * ow];
+                    tensor::maxpool2(&prev.spikes, n, c, h, w, &mut spikes);
+                    h = oh;
+                    w = ow;
+                    caches.push(Cache {
+                        spikes,
+                        v_pre: Vec::new(),
+                        bn: BnCache::default(),
+                        c,
+                        h,
+                        w,
+                    });
+                }
+                TrainLayer::Fc { n_out, n_in, w: wts, bn } => {
+                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let n = t_steps * batch;
+                    let x_in = &caches.last().expect("fc input").spikes;
+                    let mut y = vec![0.0f32; n * n_out];
+                    tensor::matmul_nt(x_in, n, *n_in, &wb, *n_out, &mut y);
+                    let bn_cache = if train {
+                        bn.normalize_train(&mut y, n, 1)
+                    } else {
+                        bn.normalize_eval(&mut y, n, 1, eps);
+                        BnCache::default()
+                    };
+                    let mut spikes = vec![0.0f32; n * n_out];
+                    let mut v_pre = vec![0.0f32; n * n_out];
+                    if_forward(&y, t_steps, batch * n_out, mode, &mut spikes, &mut v_pre);
+                    h = 1;
+                    w = 1;
+                    caches.push(Cache { spikes, v_pre, bn: bn_cache, c: *n_out, h, w });
+                }
+                TrainLayer::Readout { n_out, n_in, w: wts } => {
+                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let n = t_steps * batch;
+                    let x_in = &caches.last().expect("readout input").spikes;
+                    let mut y = vec![0.0f32; n * n_out];
+                    tensor::matmul_nt(x_in, n, *n_in, &wb, *n_out, &mut y);
+                    let mut lg = vec![0.0f32; batch * n_out];
+                    for t in 0..t_steps {
+                        for (l, &v) in lg.iter_mut().zip(&y[t * batch * n_out..]) {
+                            *l += v;
+                        }
+                    }
+                    logits = Some(lg);
+                    caches.push(Cache::default());
+                    break;
+                }
+            }
+        }
+        Forward {
+            logits: logits.expect("network has no readout layer"),
+            batch,
+            caches,
+        }
+    }
+
+    /// Update every layer's BN running statistics from the batch
+    /// statistics a training forward recorded (EMA, momentum
+    /// [`crate::train::ifbn::BN_MOMENTUM`]).  Call after the optimizer
+    /// step, mirroring `compile/train.py`.
+    pub fn apply_bn_ema(&mut self, fwd: &Forward) {
+        for (ly, cache) in self.layers.iter_mut().zip(&fwd.caches) {
+            match ly {
+                TrainLayer::Conv { bn, .. } | TrainLayer::Fc { bn, .. } => {
+                    if !cache.bn.mu_b.is_empty() {
+                        bn.ema_update(&cache.bn);
+                    }
+                }
+                TrainLayer::MaxPool | TrainLayer::Readout { .. } => {}
+            }
+        }
+    }
+
+    /// Backward pass.  `dlogits` is `(B, classes)`; `binarized` must
+    /// match the forward call.  Returns per-layer gradients (with
+    /// respect to the latent weights via the straight-through
+    /// estimator).
+    pub fn backward(
+        &self,
+        fwd: &Forward,
+        images: &[f32],
+        dlogits: &[f32],
+        binarized: bool,
+    ) -> Vec<LayerGrads> {
+        let t_steps = self.spec.num_steps;
+        let batch = fwd.batch;
+        let mut grads: Vec<LayerGrads> =
+            self.layers.iter().map(|_| LayerGrads::default()).collect();
+        // Gradient flowing into the current layer's OUTPUT spike train.
+        let mut d_spikes: Vec<f32> = Vec::new();
+
+        for li in (0..self.layers.len()).rev() {
+            let cache = &fwd.caches[li];
+            let x_in_spikes = if li > 0 { Some(&fwd.caches[li - 1].spikes) } else { None };
+            match &self.layers[li] {
+                TrainLayer::Readout { n_out, n_in, w: wts } => {
+                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let x_in = x_in_spikes.expect("readout has an input layer");
+                    let mut dw = vec![0.0f32; wts.len()];
+                    let mut dx = vec![0.0f32; t_steps * batch * n_in];
+                    // The same dlogits row feeds every time step.
+                    for t in 0..t_steps {
+                        tensor::matmul_nt_grads(
+                            &x_in[t * batch * n_in..(t + 1) * batch * n_in],
+                            batch,
+                            *n_in,
+                            &wb,
+                            *n_out,
+                            dlogits,
+                            &mut dx[t * batch * n_in..(t + 1) * batch * n_in],
+                            &mut dw,
+                        );
+                    }
+                    grads[li].w = dw;
+                    d_spikes = dx;
+                }
+                TrainLayer::Fc { n_out, n_in, w: wts, bn } => {
+                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let x_in = x_in_spikes.expect("fc has an input layer");
+                    if_backward(&mut d_spikes, &cache.spikes, &cache.v_pre, t_steps, batch * n_out);
+                    let n = t_steps * batch;
+                    let mut dgamma = vec![0.0f32; *n_out];
+                    let mut dbeta = vec![0.0f32; *n_out];
+                    bn.backward(&cache.bn, &mut d_spikes, n, 1, &mut dgamma, &mut dbeta);
+                    let mut dw = vec![0.0f32; wts.len()];
+                    let mut dx = vec![0.0f32; n * n_in];
+                    tensor::matmul_nt_grads(
+                        x_in, n, *n_in, &wb, *n_out, &d_spikes, &mut dx, &mut dw,
+                    );
+                    grads[li] = LayerGrads { w: dw, gamma: dgamma, beta: dbeta };
+                    d_spikes = dx;
+                }
+                TrainLayer::MaxPool => {
+                    let prev = &fwd.caches[li - 1];
+                    let n = t_steps * batch;
+                    let mut dx = vec![0.0f32; n * prev.c * prev.h * prev.w];
+                    tensor::maxpool2_grads(
+                        &prev.spikes,
+                        n,
+                        prev.c,
+                        prev.h,
+                        prev.w,
+                        &cache.spikes,
+                        &d_spikes,
+                        &mut dx,
+                    );
+                    d_spikes = dx;
+                }
+                TrainLayer::Conv { enc, c_out, c_in, k, w: wts, bn } => {
+                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let (h, w) = (cache.h, cache.w);
+                    let hw = h * w;
+                    let m = batch * c_out * hw;
+                    if_backward(&mut d_spikes, &cache.spikes, &cache.v_pre, t_steps, m);
+                    let mut dgamma = vec![0.0f32; *c_out];
+                    let mut dbeta = vec![0.0f32; *c_out];
+                    let mut dw = vec![0.0f32; wts.len()];
+                    if *enc {
+                        // The broadcast over T sums the per-step grads.
+                        let bf = batch * c_out * hw;
+                        let mut dy = vec![0.0f32; bf];
+                        for t in 0..t_steps {
+                            for (d, &g) in dy.iter_mut().zip(&d_spikes[t * bf..(t + 1) * bf]) {
+                                *d += g;
+                            }
+                        }
+                        bn.backward(&cache.bn, &mut dy, batch, hw, &mut dgamma, &mut dbeta);
+                        let mut dx = vec![0.0f32; batch * c_in * hw];
+                        tensor::conv2d_same_grads(
+                            images, batch, *c_in, h, w, &wb, *c_out, *k, &dy, &mut dx, &mut dw,
+                        );
+                        d_spikes = Vec::new(); // input image needs no gradient
+                    } else {
+                        let n = t_steps * batch;
+                        let x_in = x_in_spikes.expect("conv has an input layer");
+                        bn.backward(&cache.bn, &mut d_spikes, n, hw, &mut dgamma, &mut dbeta);
+                        let mut dx = vec![0.0f32; n * c_in * hw];
+                        tensor::conv2d_same_grads(
+                            x_in, n, *c_in, h, w, &wb, *c_out, *k, &d_spikes, &mut dx, &mut dw,
+                        );
+                        d_spikes = dx;
+                    }
+                    grads[li] = LayerGrads { w: dw, gamma: dgamma, beta: dbeta };
+                }
+            }
+        }
+        grads
+    }
+}
+
+/// IF dynamics over `(T, m)` psums with hard reset, fixed `v_th`.
+/// `Hard`: `o = H(v_pre - v_th)`.  `Soft`: `o = clamp(v_pre - v_th +
+/// 1/2, 0, 1)` (continuous ramp with the same surrogate window).
+pub fn if_forward(
+    psums: &[f32],
+    t_steps: usize,
+    m: usize,
+    mode: SpikeMode,
+    spikes: &mut [f32],
+    v_pre_out: &mut [f32],
+) {
+    assert_eq!(psums.len(), t_steps * m, "psum geometry");
+    let mut v_res = vec![0.0f32; m];
+    for t in 0..t_steps {
+        let ps = &psums[t * m..(t + 1) * m];
+        let sp = &mut spikes[t * m..(t + 1) * m];
+        let vp = &mut v_pre_out[t * m..(t + 1) * m];
+        for j in 0..m {
+            let pre = v_res[j] + ps[j];
+            let o = match mode {
+                SpikeMode::Hard => {
+                    if pre >= V_TH {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+                SpikeMode::Soft => (pre - V_TH + SURR_HALF).clamp(0.0, 1.0),
+            };
+            v_res[j] = pre * (1.0 - o);
+            sp[j] = o;
+            vp[j] = pre;
+        }
+    }
+}
+
+/// Backward of [`if_forward`], in place over `d_spikes` (which becomes
+/// the psum gradient).  Rectangular surrogate `do/dv = 1(|v_pre - v_th|
+/// < 1/2)`; the reset is differentiated through both `v_pre` and `o`.
+pub fn if_backward(d_spikes: &mut [f32], spikes: &[f32], v_pre: &[f32], t_steps: usize, m: usize) {
+    assert_eq!(d_spikes.len(), t_steps * m, "spike-grad geometry");
+    let mut g_vres = vec![0.0f32; m];
+    for t in (0..t_steps).rev() {
+        let base = t * m;
+        for j in 0..m {
+            let vp = v_pre[base + j];
+            let g_o = d_spikes[base + j] - g_vres[j] * vp;
+            let window = if (vp - V_TH).abs() < SURR_HALF { 1.0 } else { 0.0 };
+            let g = g_vres[j] * (1.0 - spikes[base + j]) + g_o * window;
+            d_spikes[base + j] = g;
+            g_vres[j] = g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models;
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let spec = models::micro(2);
+        let net = Net::init(&spec, 7);
+        let images = vec![0.5f32; 3 * spec.in_channels * spec.in_size * spec.in_size];
+        let a = net.forward(&images, 3, SpikeMode::Hard, true);
+        assert_eq!(a.logits.len(), 3 * net.classes());
+        let b = net.forward(&images, 3, SpikeMode::Hard, true);
+        assert_eq!(a.logits, b.logits);
+        // different seeds give different nets
+        let other = Net::init(&spec, 8);
+        let c = other.forward(&images, 3, SpikeMode::Hard, true);
+        assert_ne!(a.logits, c.logits);
+    }
+
+    #[test]
+    fn hard_spikes_are_binary() {
+        let spec = models::micro(3);
+        let net = Net::init(&spec, 1);
+        let images: Vec<f32> = (0..spec.in_size * spec.in_size)
+            .map(|v| (v % 256) as f32 / 255.0)
+            .collect();
+        let fwd = net.forward(&images, 1, SpikeMode::Hard, true);
+        for cache in &fwd.caches {
+            for &s in &cache.spikes {
+                assert!(s == 0.0 || s == 1.0, "non-binary hard spike {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn if_soft_matches_hard_away_from_threshold() {
+        // psums far from v_th: the ramp saturates to the hard value.
+        let psums = vec![3.0f32, -2.0, 3.0, -2.0]; // T=2, m=2
+        let mut hard_s = vec![0.0; 4];
+        let mut hard_v = vec![0.0; 4];
+        let mut soft_s = vec![0.0; 4];
+        let mut soft_v = vec![0.0; 4];
+        if_forward(&psums, 2, 2, SpikeMode::Hard, &mut hard_s, &mut hard_v);
+        if_forward(&psums, 2, 2, SpikeMode::Soft, &mut soft_s, &mut soft_v);
+        assert_eq!(hard_s, soft_s);
+        assert_eq!(hard_v, soft_v);
+    }
+
+    #[test]
+    fn backward_produces_grads_for_every_weight_layer() {
+        let spec = models::micro(2);
+        let net = Net::init(&spec, 3);
+        let b = 2;
+        let images = vec![0.3f32; b * spec.in_size * spec.in_size];
+        let fwd = net.forward(&images, b, SpikeMode::Hard, true);
+        let dlogits = vec![0.1f32; b * net.classes()];
+        let grads = net.backward(&fwd, &images, &dlogits, true);
+        assert_eq!(grads.len(), net.layers.len());
+        for (ly, g) in net.layers.iter().zip(&grads) {
+            match ly {
+                TrainLayer::Conv { w, bn, .. } => {
+                    assert_eq!(g.w.len(), w.len());
+                    assert_eq!(g.gamma.len(), bn.channels());
+                }
+                TrainLayer::Fc { w, bn, .. } => {
+                    assert_eq!(g.w.len(), w.len());
+                    assert_eq!(g.gamma.len(), bn.channels());
+                }
+                TrainLayer::Readout { w, .. } => assert_eq!(g.w.len(), w.len()),
+                TrainLayer::MaxPool => assert!(g.w.is_empty()),
+            }
+        }
+    }
+}

@@ -1,0 +1,353 @@
+//! Minimal dense f32 kernels for training — just the ops STBP needs.
+//!
+//! Everything operates on flat `&[f32]` buffers with explicit dimensions
+//! (the same convention as `snn::conv`), single-threaded and in a fixed
+//! iteration order so training runs are byte-reproducible per seed.
+//! Reductions accumulate in f64: cheap at these sizes and it keeps batch
+//! statistics stable regardless of batch layout.
+
+/// SAME-padded stride-1 2-D convolution.
+///
+/// `x` is `(n, c_in, h, w)`, `w` is `(c_out, c_in, k, k)` (both row-major);
+/// the result lands in `out` as `(n, c_out, h, w)`.  Matches
+/// `python/compile/kernels/ref.py::conv2d_binary` (pad `k/2` on each side).
+pub fn conv2d_same(
+    x: &[f32],
+    n: usize,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    wts: &[f32],
+    c_out: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), n * c_in * h * w, "conv input geometry");
+    assert_eq!(wts.len(), c_out * c_in * k * k, "conv weight geometry");
+    assert_eq!(out.len(), n * c_out * h * w, "conv output geometry");
+    let pad = (k / 2) as isize;
+    let hw = h * w;
+    out.fill(0.0);
+    for img in 0..n {
+        let xin = &x[img * c_in * hw..(img + 1) * c_in * hw];
+        let xout = &mut out[img * c_out * hw..(img + 1) * c_out * hw];
+        for o in 0..c_out {
+            for i in 0..c_in {
+                let plane = &xin[i * hw..(i + 1) * hw];
+                for kh in 0..k {
+                    for kw in 0..k {
+                        let wv = wts[((o * c_in + i) * k + kh) * k + kw];
+                        let dy = kh as isize - pad;
+                        let dx = kw as isize - pad;
+                        let y0 = (-dy).max(0) as usize;
+                        let y1 = (h as isize - dy).clamp(0, h as isize) as usize;
+                        let x0 = (-dx).max(0) as usize;
+                        let x1 = (w as isize - dx).clamp(0, w as isize) as usize;
+                        for y in y0..y1 {
+                            let src = ((y as isize + dy) as usize) * w;
+                            let dst = o * hw + y * w;
+                            for xx in x0..x1 {
+                                xout[dst + xx] +=
+                                    wv * plane[src + (xx as isize + dx) as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Gradients of [`conv2d_same`]: `dy` is `(n, c_out, h, w)`; accumulates
+/// the input gradient into `dx` (same shape as `x`, zeroed here) and the
+/// weight gradient into `dw` (same shape as `wts`, zeroed here).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_grads(
+    x: &[f32],
+    n: usize,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    wts: &[f32],
+    c_out: usize,
+    k: usize,
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+) {
+    let pad = (k / 2) as isize;
+    let hw = h * w;
+    dx.fill(0.0);
+    dw.fill(0.0);
+    for img in 0..n {
+        let xin = &x[img * c_in * hw..(img + 1) * c_in * hw];
+        let dyi = &dy[img * c_out * hw..(img + 1) * c_out * hw];
+        let dxi = &mut dx[img * c_in * hw..(img + 1) * c_in * hw];
+        for o in 0..c_out {
+            let dplane = &dyi[o * hw..(o + 1) * hw];
+            for i in 0..c_in {
+                let plane = &xin[i * hw..(i + 1) * hw];
+                let gplane = &mut dxi[i * hw..(i + 1) * hw];
+                for kh in 0..k {
+                    for kw in 0..k {
+                        let widx = ((o * c_in + i) * k + kh) * k + kw;
+                        let wv = wts[widx];
+                        let dyk = kh as isize - pad;
+                        let dxk = kw as isize - pad;
+                        let y0 = (-dyk).max(0) as usize;
+                        let y1 = (h as isize - dyk).clamp(0, h as isize) as usize;
+                        let x0 = (-dxk).max(0) as usize;
+                        let x1 = (w as isize - dxk).clamp(0, w as isize) as usize;
+                        let mut acc = 0.0f32;
+                        for y in y0..y1 {
+                            let src = ((y as isize + dyk) as usize) * w;
+                            let dst = y * w;
+                            for xx in x0..x1 {
+                                let xi = src + (xx as isize + dxk) as usize;
+                                let g = dplane[dst + xx];
+                                acc += g * plane[xi];
+                                gplane[xi] += g * wv;
+                            }
+                        }
+                        dw[widx] += acc;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dense layer forward: `x` is `(n, n_in)`, `wts` is `(n_out, n_in)`;
+/// writes `out = x @ wts^T` as `(n, n_out)`.
+pub fn matmul_nt(x: &[f32], n: usize, n_in: usize, wts: &[f32], n_out: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), n * n_in, "matmul input geometry");
+    assert_eq!(wts.len(), n_out * n_in, "matmul weight geometry");
+    assert_eq!(out.len(), n * n_out, "matmul output geometry");
+    for r in 0..n {
+        let xi = &x[r * n_in..(r + 1) * n_in];
+        let oi = &mut out[r * n_out..(r + 1) * n_out];
+        for (o, ov) in oi.iter_mut().enumerate() {
+            let wr = &wts[o * n_in..(o + 1) * n_in];
+            let mut acc = 0.0f32;
+            for (a, b) in xi.iter().zip(wr) {
+                acc += a * b;
+            }
+            *ov = acc;
+        }
+    }
+}
+
+/// Gradients of [`matmul_nt`]: accumulates `dx = dy @ wts` (zeroed here)
+/// and `dw += dy^T @ x` (NOT zeroed — fc layers sum over time steps).
+pub fn matmul_nt_grads(
+    x: &[f32],
+    n: usize,
+    n_in: usize,
+    wts: &[f32],
+    n_out: usize,
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+) {
+    dx.fill(0.0);
+    for r in 0..n {
+        let xi = &x[r * n_in..(r + 1) * n_in];
+        let dyi = &dy[r * n_out..(r + 1) * n_out];
+        let dxi = &mut dx[r * n_in..(r + 1) * n_in];
+        for (o, &g) in dyi.iter().enumerate() {
+            if g == 0.0 {
+                continue;
+            }
+            let wr = &wts[o * n_in..(o + 1) * n_in];
+            let dwr = &mut dw[o * n_in..(o + 1) * n_in];
+            for j in 0..n_in {
+                dxi[j] += g * wr[j];
+                dwr[j] += g * xi[j];
+            }
+        }
+    }
+}
+
+/// 2x2/stride-2 max pool over `(n, c, h, w)` maps; writes
+/// `(n, c, h/2, w/2)` into `out` (odd trailing rows/cols dropped, like
+/// `SpikeMap::maxpool2`).
+pub fn maxpool2(x: &[f32], n: usize, c: usize, h: usize, w: usize, out: &mut [f32]) {
+    let (oh, ow) = (h / 2, w / 2);
+    assert_eq!(out.len(), n * c * oh * ow, "pool output geometry");
+    for m in 0..n * c {
+        let xi = &x[m * h * w..(m + 1) * h * w];
+        let oi = &mut out[m * oh * ow..(m + 1) * oh * ow];
+        for y in 0..oh {
+            for xx in 0..ow {
+                let base = 2 * y * w + 2 * xx;
+                let v = xi[base]
+                    .max(xi[base + 1])
+                    .max(xi[base + w])
+                    .max(xi[base + w + 1]);
+                oi[y * ow + xx] = v;
+            }
+        }
+    }
+}
+
+/// Backward of [`maxpool2`]: routes each pooled gradient to the FIRST
+/// element of its 2x2 window equal to the max (scan order (0,0), (0,1),
+/// (1,0), (1,1)).  `dx` is zeroed here.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool2_grads(
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    pooled: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    dx.fill(0.0);
+    for m in 0..n * c {
+        let xi = &x[m * h * w..(m + 1) * h * w];
+        let pi = &pooled[m * oh * ow..(m + 1) * oh * ow];
+        let di = &dy[m * oh * ow..(m + 1) * oh * ow];
+        let gi = &mut dx[m * h * w..(m + 1) * h * w];
+        for y in 0..oh {
+            for xx in 0..ow {
+                let j = y * ow + xx;
+                let base = 2 * y * w + 2 * xx;
+                let top = pi[j];
+                for off in [0, 1, w, w + 1] {
+                    if xi[base + off] == top {
+                        gi[base + off] += di[j];
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Mean softmax cross-entropy of `logits / t_scale` against integer
+/// labels.  Returns the loss and writes `dlogits` (gradient wrt the RAW
+/// logits, i.e. already divided by `n * t_scale`).
+pub fn softmax_ce(
+    logits: &[f32],
+    n: usize,
+    classes: usize,
+    labels: &[usize],
+    t_scale: f32,
+    dlogits: &mut [f32],
+) -> f32 {
+    assert_eq!(logits.len(), n * classes, "logit geometry");
+    assert_eq!(labels.len(), n, "label count");
+    let mut loss = 0.0f64;
+    for r in 0..n {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let drow = &mut dlogits[r * classes..(r + 1) * classes];
+        let mut mx = f32::NEG_INFINITY;
+        for &v in row {
+            mx = mx.max(v / t_scale);
+        }
+        let mut denom = 0.0f32;
+        for (j, &v) in row.iter().enumerate() {
+            let e = ((v / t_scale) - mx).exp();
+            drow[j] = e;
+            denom += e;
+        }
+        for d in drow.iter_mut() {
+            *d /= denom;
+        }
+        loss -= (drow[labels[r]].max(1e-30) as f64).ln();
+        drow[labels[r]] -= 1.0;
+        for d in drow.iter_mut() {
+            *d /= n as f32 * t_scale;
+        }
+    }
+    (loss / n as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel of +1 is the identity.
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let mut out = vec![0.0; 12];
+        conv2d_same(&x, 1, 1, 3, 4, &[1.0], 1, 1, &mut out);
+        assert_eq!(x, out);
+    }
+
+    #[test]
+    fn conv_same_padding_edges() {
+        // 3x3 all-ones kernel on a 3x3 all-ones image: corner sees 4,
+        // edge 6, center 9.
+        let x = vec![1.0f32; 9];
+        let mut out = vec![0.0; 9];
+        conv2d_same(&x, 1, 1, 3, 3, &[1.0; 9], 1, 3, &mut out);
+        assert_eq!(out, vec![4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    fn conv_grads_match_fd() {
+        // Central finite differences on a small conv, f32 with a loose
+        // but discriminating gate.
+        let mut rng = crate::util::rng::SplitMix64::new(5);
+        let mut draw = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+        };
+        let (n, c_in, h, w, c_out, k) = (2, 2, 4, 4, 3, 3);
+        let x = draw(n * c_in * h * w);
+        let wts = draw(c_out * c_in * k * k);
+        let r = draw(n * c_out * h * w); // random cotangent
+        let loss = |x: &[f32], wts: &[f32]| -> f64 {
+            let mut out = vec![0.0; n * c_out * h * w];
+            conv2d_same(x, n, c_in, h, w, wts, c_out, k, &mut out);
+            out.iter().zip(&r).map(|(&o, &g)| (o * g) as f64).sum()
+        };
+        let mut dx = vec![0.0; x.len()];
+        let mut dw = vec![0.0; wts.len()];
+        conv2d_same_grads(&x, n, c_in, h, w, &wts, c_out, k, &r, &mut dx, &mut dw);
+        let eps = 1e-2f32;
+        for idx in [0usize, 7, 31, 63] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let fd = (loss(&xp, &wts) - loss(&xm, &wts)) / (2.0 * eps as f64);
+            assert!((fd - dx[idx] as f64).abs() < 1e-2, "dx[{idx}] {fd} vs {}", dx[idx]);
+        }
+        for idx in [0usize, 10, 26] {
+            let mut wp = wts.clone();
+            wp[idx] += eps;
+            let mut wm = wts.clone();
+            wm[idx] -= eps;
+            let fd = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps as f64);
+            assert!((fd - dw[idx] as f64).abs() < 1e-2, "dw[{idx}] {fd} vs {}", dw[idx]);
+        }
+    }
+
+    #[test]
+    fn maxpool_routes_gradient_to_first_max() {
+        let x = vec![1.0, 3.0, 3.0, 2.0]; // 2x2 window, max 3 at index 1
+        let mut out = vec![0.0; 1];
+        maxpool2(&x, 1, 1, 2, 2, &mut out);
+        assert_eq!(out[0], 3.0);
+        let mut dx = vec![0.0; 4];
+        maxpool2_grads(&x, 1, 1, 2, 2, &out, &[5.0], &mut dx);
+        assert_eq!(dx, vec![0.0, 5.0, 0.0, 0.0]); // first max wins
+    }
+
+    #[test]
+    fn softmax_ce_gradient_sums_to_zero() {
+        let logits = vec![2.0f32, -1.0, 0.5, 0.0, 0.0, 4.0];
+        let mut d = vec![0.0; 6];
+        let loss = softmax_ce(&logits, 2, 3, &[0, 2], 2.0, &mut d);
+        assert!(loss > 0.0);
+        for r in 0..2 {
+            let s: f32 = d[r * 3..(r + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6, "per-row gradient sums to 0, got {s}");
+        }
+    }
+}

@@ -149,3 +149,65 @@ fn report_json_parses_and_counts_match() {
     assert_eq!(doc.get("frontier").unwrap().as_arr().unwrap().len(), front.len());
     assert_eq!(doc.get("schema").unwrap().as_str(), Some("vsa-dse-v1"));
 }
+
+/// PR3 satellite: the frontier CSV export carries one row per frontier
+/// point with every knob and objective, in frontier order.
+#[test]
+fn csv_export_one_row_per_frontier_point() {
+    let (results, front) = sweep(&["mnist"]);
+    let csv = dse::report::to_csv(&results, &front);
+    let lines: Vec<&str> = csv.lines().collect();
+    assert_eq!(lines.len(), front.len() + 1, "header + one row per point");
+    let header: Vec<&str> = lines[0].split(',').collect();
+    assert_eq!(header[0], "rank");
+    assert!(header.contains(&"throughput_ips"));
+    assert!(header.contains(&"num_steps"));
+    assert!(header.contains(&"accuracy"));
+    for (rank, (&i, line)) in front.iter().zip(&lines[1..]).enumerate() {
+        let cols: Vec<&str> = line.split(',').collect();
+        assert_eq!(cols.len(), header.len(), "row {rank} column count");
+        assert_eq!(cols[0], format!("{}", rank + 1));
+        assert_eq!(cols[1], results[i].candidate.id());
+        let thr: f64 = cols[header.iter().position(|&h| h == "throughput_ips").unwrap()]
+            .parse()
+            .expect("numeric throughput");
+        assert_eq!(thr, results[i].throughput_ips);
+        // no artifact in this sweep: accuracy column is empty
+        assert_eq!(*cols.last().unwrap(), "");
+    }
+}
+
+/// PR3 tentpole follow-through: with a trained artifact the sweep gains
+/// a measured accuracy objective; low-T candidates then stop dominating
+/// "for free" and the frontier separates by T where accuracy differs.
+#[test]
+fn accuracy_objective_joins_sweep_and_report() {
+    use vsa::config::models;
+    use vsa::snn::params::DeployedModel;
+
+    let space = SearchSpace::tiny();
+    let candidates: Vec<Candidate> = space
+        .cartesian()
+        .filter(|c| dse::validate(c, &["mnist"]).is_ok())
+        .collect();
+    // A deterministic stand-in artifact (synthesized weights): accuracy
+    // is near-chance but *measured*, which is all the plumbing needs.
+    let artifact = DeployedModel::synthesize(&models::micro(4), 7);
+    let acc = dse::accuracy_by_t(&artifact, candidates.iter().map(|c| c.num_steps), 16, 7);
+    let results = dse::evaluate_all_with(&candidates, &["mnist"], 2, Some(&acc));
+    assert!(results.iter().all(|r| r.accuracy.is_some()));
+    for r in &results {
+        assert_eq!(r.accuracy, Some(acc[&r.candidate.num_steps]));
+    }
+    // byte-determinism holds with the objective attached
+    let again = dse::evaluate_all_with(&candidates, &["mnist"], 4, Some(&acc));
+    for (a, b) in results.iter().zip(&again) {
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(a.throughput_ips.to_bits(), b.throughput_ips.to_bits());
+    }
+    // the CSV now fills the accuracy column
+    let front = dse::frontier(&results);
+    let csv = dse::report::to_csv(&results, &front);
+    let last_col = csv.lines().nth(1).unwrap().split(',').next_back().unwrap().to_string();
+    assert!(last_col.parse::<f64>().is_ok(), "accuracy column filled, got '{last_col}'");
+}
