@@ -1,16 +1,25 @@
-//! Training-loop throughput: STBP steps/sec for the micro and tiny
-//! models, plus the export + golden-eval path of a finished artifact.
+//! Training-loop throughput: STBP steps/sec across the PR trajectory —
+//! the frozen PR3 scalar baseline (`baselines::stbp_scalar`) vs the
+//! PR4 fixed hot path at 1 thread vs the PR4 batch-parallel path at
+//! [`PAR_THREADS`] threads — plus the export + golden-eval path of a
+//! finished artifact.  Results land in `BENCH_PR4.json` (uploaded as a
+//! CI artifact); the acceptance bar is >= 3x parallel-vs-scalar on the
+//! mnist model at 4 threads on a quiet 4-core machine.
 //!
 //! Run: `cargo bench --bench bench_train` (add `-- --quick` for the CI
-//! smoke subset — micro only).
+//! smoke subset — micro plus a small-batch mnist row).
 
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{bench, quick_mode, section};
+use harness::{bench, quick_mode, section, JsonReport};
+use vsa::baselines::stbp_scalar;
 use vsa::config::models;
 use vsa::data::synth;
 use vsa::train::{self, optim, tensor, Net, SpikeMode};
+
+/// Thread count of the parallel rows (the acceptance configuration).
+const PAR_THREADS: usize = 4;
 
 fn images_for(spec: &models::ModelSpec, batch: usize) -> (Vec<f32>, Vec<usize>) {
     let samples = synth::batch(7, 0, batch, spec.in_channels, spec.in_size);
@@ -26,42 +35,118 @@ fn images_for(spec: &models::ModelSpec, batch: usize) -> (Vec<f32>, Vec<usize>) 
     (images, labels)
 }
 
-fn bench_model(name: &str, spec: &models::ModelSpec, batch: usize, iters: usize) {
-    let mut net = Net::init(spec, 7);
-    let mut opt = optim::Sgd::new(&net, 0.9);
-    let (images, labels) = images_for(spec, batch);
+/// One full PR3-scalar training step (frozen baseline).
+fn step_scalar(
+    net: &mut Net,
+    opt: &mut optim::Sgd,
+    images: &[f32],
+    labels: &[usize],
+    batch: usize,
+    dlogits: &mut [f32],
+) {
     let classes = net.classes();
-    let mut dlogits = vec![0.0f32; batch * classes];
-    let t = bench(&format!("{name} fwd+bwd+step (batch {batch})"), 1, iters, || {
-        let fwd = net.forward(&images, batch, SpikeMode::Hard, true);
-        tensor::softmax_ce(
-            &fwd.logits,
-            batch,
-            classes,
-            &labels,
-            spec.num_steps as f32,
-            &mut dlogits,
-        );
-        let grads = net.backward(&fwd, &images, &dlogits, true);
-        opt.step(&mut net, &grads, 0.05);
-        net.apply_bn_ema(&fwd);
-    });
-    println!(
-        "    -> {:.1} samples/sec through the trainer",
-        batch as f64 / (t.mean_ms / 1e3)
-    );
+    let t = net.spec.num_steps as f32;
+    let fwd = stbp_scalar::forward(net, images, batch);
+    tensor::softmax_ce(&fwd.logits, batch, classes, labels, t, dlogits);
+    let grads = stbp_scalar::backward(net, &fwd, images, dlogits);
+    opt.step(net, &grads, 0.05);
+    stbp_scalar::apply_bn_ema(net, &fwd);
+}
 
+/// One full PR4 training step at `threads`.
+fn step_current(
+    net: &mut Net,
+    opt: &mut optim::Sgd,
+    images: &[f32],
+    labels: &[usize],
+    batch: usize,
+    dlogits: &mut [f32],
+    threads: usize,
+) {
+    let classes = net.classes();
+    let t = net.spec.num_steps as f32;
+    let fwd = net.forward(images, batch, SpikeMode::Hard, true, threads);
+    tensor::softmax_ce(&fwd.logits, batch, classes, labels, t, dlogits);
+    let grads = net.backward(&fwd, images, dlogits, true, threads);
+    opt.step(net, &grads, 0.05);
+    net.apply_bn_ema(&fwd);
+}
+
+/// Bench the three trajectory points on one model; returns steps/sec as
+/// (scalar_pr3, fixed_1thread, parallel).
+fn bench_model(
+    name: &str,
+    spec: &models::ModelSpec,
+    batch: usize,
+    iters: usize,
+    report: &mut JsonReport,
+) -> (f64, f64, f64) {
+    let (images, labels) = images_for(spec, batch);
+    // threads == 0 selects the frozen PR3 scalar baseline.
+    let mut run_variant = |label: &str, threads: usize| -> f64 {
+        let mut net = Net::init(spec, 7);
+        let mut opt = optim::Sgd::new(&net, 0.9);
+        let mut dlogits = vec![0.0f32; batch * net.classes()];
+        let t = bench(&format!("{name} {label} (batch {batch})"), 1, iters, || {
+            if threads == 0 {
+                step_scalar(&mut net, &mut opt, &images, &labels, batch, &mut dlogits);
+            } else {
+                step_current(&mut net, &mut opt, &images, &labels, batch, &mut dlogits, threads);
+            }
+        });
+        report.throughput(
+            &format!("stbp-{label}"),
+            name,
+            batch as f64 / (t.mean_ms / 1e3),
+            "trainer samples/sec (fwd+bwd+step)",
+        );
+        1e3 / t.mean_ms
+    };
+    let scalar = run_variant("pr3-scalar", 0);
+    let fixed = run_variant("pr4-fixed t1", 1);
+    let par = run_variant("pr4-parallel t4", PAR_THREADS);
+    println!(
+        "    -> steps/sec: scalar {scalar:.2}  fixed {fixed:.2}  parallel {par:.2}  \
+         (fixed/scalar {:.2}x, parallel/scalar {:.2}x)",
+        fixed / scalar,
+        par / scalar
+    );
+    report.ratio(
+        &format!("train_fixed_vs_pr3_scalar_{name}"),
+        fixed / scalar,
+        "steps/sec, 1 thread vs frozen PR3 scalar",
+    );
+    report.ratio(
+        &format!("train_parallel_vs_pr3_scalar_{name}"),
+        par / scalar,
+        &format!("steps/sec, {PAR_THREADS} threads vs frozen PR3 scalar (bar: >= 3x on mnist)"),
+    );
+    (scalar, fixed, par)
+}
+
+fn bench_export_eval(spec: &models::ModelSpec, iters: usize) {
+    let net = Net::init(spec, 7);
     let samples = train::holdout_synth(spec, 7, 64);
-    bench(&format!("{name} export + golden eval (64 imgs)"), 1, iters.min(5), || {
+    bench(&format!("{} export + golden eval (64 imgs)", spec.name), 1, iters, || {
         let model = train::deploy(&net);
         let _ = train::eval_golden(&model, &samples);
     });
 }
 
 fn main() {
-    section("STBP training hot path");
-    bench_model("micro T=4", &models::micro(4), 16, if quick_mode() { 3 } else { 10 });
-    if !quick_mode() {
-        bench_model("tiny  T=4", &models::tiny(4), 32, 3);
+    let mut report = JsonReport::new();
+    section("STBP training hot path (PR3 scalar -> PR4 fixed -> PR4 parallel)");
+    let micro_iters = if quick_mode() { 3 } else { 10 };
+    bench_model("micro T=4", &models::micro(4), 16, micro_iters, &mut report);
+    if quick_mode() {
+        // CI smoke: a small-batch mnist row keeps the acceptance ratio
+        // observable without laptop-scale runtime.
+        bench_model("mnist T=4", &models::mnist(4), 8, 2, &mut report);
+    } else {
+        bench_model("tiny  T=4", &models::tiny(4), 32, 3, &mut report);
+        bench_model("mnist T=4", &models::mnist(4), 32, 2, &mut report);
     }
+    section("export + deployed eval");
+    bench_export_eval(&models::micro(4), if quick_mode() { 2 } else { 5 });
+    report.write("BENCH_PR4.json");
 }

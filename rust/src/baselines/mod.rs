@@ -11,9 +11,12 @@
 //! [`golden_stepwise`] is a *software* baseline: the pre-refactor
 //! per-time-step golden engine, frozen as the measured reference point
 //! for the time-batched hot path (see `bench_throughput` /
-//! `BENCH_PR1.json`).
+//! `BENCH_PR1.json`).  [`stbp_scalar`] plays the same role for the
+//! trainer: the PR3 scalar STBP hot path, frozen as `bench_train`'s
+//! baseline and the forward oracle of `rust/tests/train_parallel.rs`.
 
 pub mod bwsnn;
 pub mod golden_stepwise;
 pub mod published;
 pub mod spinalflow;
+pub mod stbp_scalar;

@@ -1,0 +1,568 @@
+//! The PR3 scalar STBP trainer, frozen verbatim as a baseline — the
+//! training-side analogue of [`super::golden_stepwise`].
+//!
+//! This is the pre-PR4 hot path: unblocked conv/matmul inner loops, the
+//! encoding layer materializing T identical psum copies, `sign_vec`
+//! re-run for every layer in `backward`, the readout backward looping
+//! its T identical per-step products, and single-threaded BN.  It
+//! exists for two jobs:
+//!
+//! * **measured baseline** — `bench_train` times one training step here
+//!   against the PR4 path (`BENCH_PR4.json` rows; the acceptance bar is
+//!   >= 3x steps/sec on the mnist model at 4 threads);
+//! * **forward oracle** — PR4's forward restructure (blocked kernels,
+//!   broadcast psums, cached binarized weights, sharded BN) is
+//!   *bit-exact* by construction, and `rust/tests/train_parallel.rs`
+//!   asserts logits and every spike train against this frozen code.
+//!   (The backward is *not* bit-identical: PR4 re-groups the weight
+//!   gradient reductions — per-shard buffers, summed-over-T readout —
+//!   which is deterministic but rounds differently.)
+//!
+//! Only the training configuration PR3 benched is frozen: hard spikes,
+//! binarized weights, batch-statistics BN.  Everything here operates on
+//! the live [`Net`] so baseline and current trainer share one
+//! parameter state.
+
+use crate::train::binarize::sign_vec;
+use crate::train::ifbn::{BnCache, IfBn, BN_EPS, V_TH};
+use crate::train::stbp::{LayerGrads, Net, TrainLayer};
+
+/// PR3's rectangular-surrogate half-width (== `stbp::SURR_HALF`).
+const SURR_HALF: f32 = 0.5;
+
+/// Per-layer caches of one scalar forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct ScalarCache {
+    pub spikes: Vec<f32>,
+    pub v_pre: Vec<f32>,
+    pub bn: BnCache,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+/// Everything one scalar forward pass produces.
+pub struct ScalarForward {
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub caches: Vec<ScalarCache>,
+}
+
+/// PR3 training forward: hard spikes, binarized weights, batch-stat BN.
+pub fn forward(net: &Net, images: &[f32], batch: usize) -> ScalarForward {
+    let t_steps = net.spec.num_steps;
+    let (mut h, mut w) = (net.spec.in_size, net.spec.in_size);
+    assert_eq!(images.len(), batch * net.spec.in_channels * h * w, "image geometry");
+    let mut caches: Vec<ScalarCache> = Vec::with_capacity(net.layers.len());
+    let mut logits: Option<Vec<f32>> = None;
+
+    for ly in &net.layers {
+        match ly {
+            TrainLayer::Conv { enc: true, c_out, c_in, k, w: wts, bn } => {
+                let wb = sign_vec(wts);
+                let hw = h * w;
+                let f = c_out * hw;
+                let mut y = vec![0.0f32; batch * f];
+                conv2d_same(images, batch, *c_in, h, w, &wb, *c_out, *k, &mut y);
+                let bn_cache = bn_normalize_train(bn, &mut y, batch, hw);
+                // PR3: the shared psum plane was copied T times.
+                let mut psums = vec![0.0f32; t_steps * batch * f];
+                for t in 0..t_steps {
+                    psums[t * batch * f..(t + 1) * batch * f].copy_from_slice(&y);
+                }
+                let mut spikes = vec![0.0f32; t_steps * batch * f];
+                let mut v_pre = vec![0.0f32; t_steps * batch * f];
+                if_forward(&psums, t_steps, batch * f, &mut spikes, &mut v_pre);
+                caches.push(ScalarCache { spikes, v_pre, bn: bn_cache, c: *c_out, h, w });
+            }
+            TrainLayer::Conv { enc: false, c_out, c_in, k, w: wts, bn } => {
+                let wb = sign_vec(wts);
+                let hw = h * w;
+                let f = c_out * hw;
+                let n = t_steps * batch;
+                let x_in = &caches.last().expect("conv input").spikes;
+                let mut y = vec![0.0f32; n * f];
+                conv2d_same(x_in, n, *c_in, h, w, &wb, *c_out, *k, &mut y);
+                let bn_cache = bn_normalize_train(bn, &mut y, n, hw);
+                let mut spikes = vec![0.0f32; n * f];
+                let mut v_pre = vec![0.0f32; n * f];
+                if_forward(&y, t_steps, batch * f, &mut spikes, &mut v_pre);
+                caches.push(ScalarCache { spikes, v_pre, bn: bn_cache, c: *c_out, h, w });
+            }
+            TrainLayer::MaxPool => {
+                let prev = caches.last().expect("pool input");
+                let (c, oh, ow) = (prev.c, h / 2, w / 2);
+                let n = t_steps * batch;
+                let mut spikes = vec![0.0f32; n * c * oh * ow];
+                maxpool2(&prev.spikes, n, c, h, w, &mut spikes);
+                h = oh;
+                w = ow;
+                caches.push(ScalarCache { spikes, c, h, w, ..ScalarCache::default() });
+            }
+            TrainLayer::Fc { n_out, n_in, w: wts, bn } => {
+                let wb = sign_vec(wts);
+                let n = t_steps * batch;
+                let x_in = &caches.last().expect("fc input").spikes;
+                let mut y = vec![0.0f32; n * n_out];
+                matmul_nt(x_in, n, *n_in, &wb, *n_out, &mut y);
+                let bn_cache = bn_normalize_train(bn, &mut y, n, 1);
+                let mut spikes = vec![0.0f32; n * n_out];
+                let mut v_pre = vec![0.0f32; n * n_out];
+                if_forward(&y, t_steps, batch * n_out, &mut spikes, &mut v_pre);
+                h = 1;
+                w = 1;
+                caches.push(ScalarCache { spikes, v_pre, bn: bn_cache, c: *n_out, h, w });
+            }
+            TrainLayer::Readout { n_out, n_in, w: wts } => {
+                let wb = sign_vec(wts);
+                let n = t_steps * batch;
+                let x_in = &caches.last().expect("readout input").spikes;
+                let mut y = vec![0.0f32; n * n_out];
+                matmul_nt(x_in, n, *n_in, &wb, *n_out, &mut y);
+                let mut lg = vec![0.0f32; batch * n_out];
+                for t in 0..t_steps {
+                    for (l, &v) in lg.iter_mut().zip(&y[t * batch * n_out..]) {
+                        *l += v;
+                    }
+                }
+                logits = Some(lg);
+                caches.push(ScalarCache::default());
+                break;
+            }
+        }
+    }
+    ScalarForward {
+        logits: logits.expect("network has no readout layer"),
+        batch,
+        caches,
+    }
+}
+
+/// PR3 backward: `sign_vec` re-run per weight layer, readout gradients
+/// accumulated per time step.
+pub fn backward(
+    net: &Net,
+    fwd: &ScalarForward,
+    images: &[f32],
+    dlogits: &[f32],
+) -> Vec<LayerGrads> {
+    let t_steps = net.spec.num_steps;
+    let batch = fwd.batch;
+    let mut grads: Vec<LayerGrads> =
+        net.layers.iter().map(|_| LayerGrads::default()).collect();
+    let mut d_spikes: Vec<f32> = Vec::new();
+
+    for li in (0..net.layers.len()).rev() {
+        let cache = &fwd.caches[li];
+        let x_in_spikes = if li > 0 { Some(&fwd.caches[li - 1].spikes) } else { None };
+        match &net.layers[li] {
+            TrainLayer::Readout { n_out, n_in, w: wts } => {
+                let wb = sign_vec(wts);
+                let x_in = x_in_spikes.expect("readout has an input layer");
+                let mut dw = vec![0.0f32; wts.len()];
+                let mut dx = vec![0.0f32; t_steps * batch * n_in];
+                for t in 0..t_steps {
+                    matmul_nt_grads(
+                        &x_in[t * batch * n_in..(t + 1) * batch * n_in],
+                        batch,
+                        *n_in,
+                        &wb,
+                        *n_out,
+                        dlogits,
+                        &mut dx[t * batch * n_in..(t + 1) * batch * n_in],
+                        &mut dw,
+                    );
+                }
+                grads[li].w = dw;
+                d_spikes = dx;
+            }
+            TrainLayer::Fc { n_out, n_in, w: wts, bn } => {
+                let wb = sign_vec(wts);
+                let x_in = x_in_spikes.expect("fc has an input layer");
+                if_backward(&mut d_spikes, &cache.spikes, &cache.v_pre, t_steps, batch * n_out);
+                let n = t_steps * batch;
+                let mut dgamma = vec![0.0f32; *n_out];
+                let mut dbeta = vec![0.0f32; *n_out];
+                bn_backward(bn, &cache.bn, &mut d_spikes, n, 1, &mut dgamma, &mut dbeta);
+                let mut dw = vec![0.0f32; wts.len()];
+                let mut dx = vec![0.0f32; n * n_in];
+                matmul_nt_grads(x_in, n, *n_in, &wb, *n_out, &d_spikes, &mut dx, &mut dw);
+                grads[li] = LayerGrads { w: dw, gamma: dgamma, beta: dbeta };
+                d_spikes = dx;
+            }
+            TrainLayer::MaxPool => {
+                let prev = &fwd.caches[li - 1];
+                let n = t_steps * batch;
+                let mut dx = vec![0.0f32; n * prev.c * prev.h * prev.w];
+                maxpool2_grads(
+                    &prev.spikes,
+                    n,
+                    prev.c,
+                    prev.h,
+                    prev.w,
+                    &cache.spikes,
+                    &d_spikes,
+                    &mut dx,
+                );
+                d_spikes = dx;
+            }
+            TrainLayer::Conv { enc, c_out, c_in, k, w: wts, bn } => {
+                let wb = sign_vec(wts);
+                let (h, w) = (cache.h, cache.w);
+                let hw = h * w;
+                let m = batch * c_out * hw;
+                if_backward(&mut d_spikes, &cache.spikes, &cache.v_pre, t_steps, m);
+                let mut dgamma = vec![0.0f32; *c_out];
+                let mut dbeta = vec![0.0f32; *c_out];
+                let mut dw = vec![0.0f32; wts.len()];
+                if *enc {
+                    let bf = batch * c_out * hw;
+                    let mut dy = vec![0.0f32; bf];
+                    for t in 0..t_steps {
+                        for (d, &g) in dy.iter_mut().zip(&d_spikes[t * bf..(t + 1) * bf]) {
+                            *d += g;
+                        }
+                    }
+                    bn_backward(bn, &cache.bn, &mut dy, batch, hw, &mut dgamma, &mut dbeta);
+                    let mut dx = vec![0.0f32; batch * c_in * hw];
+                    conv2d_same_grads(
+                        images, batch, *c_in, h, w, &wb, *c_out, *k, &dy, &mut dx, &mut dw,
+                    );
+                    d_spikes = Vec::new();
+                } else {
+                    let n = t_steps * batch;
+                    let x_in = x_in_spikes.expect("conv has an input layer");
+                    bn_backward(bn, &cache.bn, &mut d_spikes, n, hw, &mut dgamma, &mut dbeta);
+                    let mut dx = vec![0.0f32; n * c_in * hw];
+                    conv2d_same_grads(
+                        x_in, n, *c_in, h, w, &wb, *c_out, *k, &d_spikes, &mut dx, &mut dw,
+                    );
+                    d_spikes = dx;
+                }
+                grads[li] = LayerGrads { w: dw, gamma: dgamma, beta: dbeta };
+            }
+        }
+    }
+    grads
+}
+
+/// PR3 post-step EMA update (same arithmetic as `Net::apply_bn_ema`).
+pub fn apply_bn_ema(net: &mut Net, fwd: &ScalarForward) {
+    for (ly, cache) in net.layers.iter_mut().zip(&fwd.caches) {
+        match ly {
+            TrainLayer::Conv { bn, .. } | TrainLayer::Fc { bn, .. } => {
+                if !cache.bn.mu_b.is_empty() {
+                    bn.ema_update(&cache.bn);
+                }
+            }
+            TrainLayer::MaxPool | TrainLayer::Readout { .. } => {}
+        }
+    }
+}
+
+// ---- frozen PR3 kernels ------------------------------------------------
+
+fn if_forward(psums: &[f32], t_steps: usize, m: usize, spikes: &mut [f32], v_pre: &mut [f32]) {
+    assert_eq!(psums.len(), t_steps * m, "psum geometry");
+    let mut v_res = vec![0.0f32; m];
+    for t in 0..t_steps {
+        let ps = &psums[t * m..(t + 1) * m];
+        let sp = &mut spikes[t * m..(t + 1) * m];
+        let vp = &mut v_pre[t * m..(t + 1) * m];
+        for j in 0..m {
+            let pre = v_res[j] + ps[j];
+            let o = if pre >= V_TH { 1.0 } else { 0.0 };
+            v_res[j] = pre * (1.0 - o);
+            sp[j] = o;
+            vp[j] = pre;
+        }
+    }
+}
+
+fn if_backward(d_spikes: &mut [f32], spikes: &[f32], v_pre: &[f32], t_steps: usize, m: usize) {
+    let mut g_vres = vec![0.0f32; m];
+    for t in (0..t_steps).rev() {
+        let base = t * m;
+        for j in 0..m {
+            let vp = v_pre[base + j];
+            let g_o = d_spikes[base + j] - g_vres[j] * vp;
+            let window = if (vp - V_TH).abs() < SURR_HALF { 1.0 } else { 0.0 };
+            let g = g_vres[j] * (1.0 - spikes[base + j]) + g_o * window;
+            d_spikes[base + j] = g;
+            g_vres[j] = g;
+        }
+    }
+}
+
+fn bn_normalize_train(bn: &IfBn, x: &mut [f32], n: usize, s: usize) -> BnCache {
+    let c = bn.channels();
+    assert_eq!(x.len(), n * c * s, "bn input geometry");
+    let cnt = (n * s) as f64;
+    let mut mu_b = vec![0.0f32; c];
+    let mut var_b = vec![0.0f32; c];
+    let mut sigma = vec![0.0f32; c];
+    for ch in 0..c {
+        let mut sum = 0.0f64;
+        let mut sumsq = 0.0f64;
+        for r in 0..n {
+            let plane = &x[(r * c + ch) * s..(r * c + ch + 1) * s];
+            for &v in plane {
+                sum += v as f64;
+                sumsq += v as f64 * v as f64;
+            }
+        }
+        let m = sum / cnt;
+        let v = (sumsq / cnt - m * m).max(0.0);
+        mu_b[ch] = m as f32;
+        var_b[ch] = v as f32;
+        sigma[ch] = ((v + BN_EPS).sqrt()) as f32;
+    }
+    let mut xn = vec![0.0f32; x.len()];
+    for r in 0..n {
+        for ch in 0..c {
+            let base = (r * c + ch) * s;
+            let (m, sg) = (mu_b[ch], sigma[ch]);
+            let (g, b) = (bn.gamma[ch], bn.beta[ch]);
+            for j in 0..s {
+                let z = (x[base + j] - m) / sg;
+                xn[base + j] = z;
+                x[base + j] = g * z + b;
+            }
+        }
+    }
+    BnCache { xn, sigma, mu_b, var_b }
+}
+
+fn bn_backward(
+    bn: &IfBn,
+    cache: &BnCache,
+    dy: &mut [f32],
+    n: usize,
+    s: usize,
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) {
+    let c = bn.channels();
+    let cnt = (n * s) as f64;
+    for ch in 0..c {
+        let mut sum_dy = 0.0f64;
+        let mut sum_dyxn = 0.0f64;
+        for r in 0..n {
+            let base = (r * c + ch) * s;
+            for j in 0..s {
+                let g = dy[base + j] as f64;
+                sum_dy += g;
+                sum_dyxn += g * cache.xn[base + j] as f64;
+            }
+        }
+        dgamma[ch] = sum_dyxn as f32;
+        dbeta[ch] = sum_dy as f32;
+        let mean_dy = (sum_dy / cnt) as f32;
+        let mean_dyxn = (sum_dyxn / cnt) as f32;
+        let scale = bn.gamma[ch] / cache.sigma[ch];
+        for r in 0..n {
+            let base = (r * c + ch) * s;
+            for j in 0..s {
+                dy[base + j] = scale
+                    * (dy[base + j] - mean_dy - cache.xn[base + j] * mean_dyxn);
+            }
+        }
+    }
+}
+
+fn conv2d_same(
+    x: &[f32],
+    n: usize,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    wts: &[f32],
+    c_out: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    let pad = (k / 2) as isize;
+    let hw = h * w;
+    out.fill(0.0);
+    for img in 0..n {
+        let xin = &x[img * c_in * hw..(img + 1) * c_in * hw];
+        let xout = &mut out[img * c_out * hw..(img + 1) * c_out * hw];
+        for o in 0..c_out {
+            for i in 0..c_in {
+                let plane = &xin[i * hw..(i + 1) * hw];
+                for kh in 0..k {
+                    for kw in 0..k {
+                        let wv = wts[((o * c_in + i) * k + kh) * k + kw];
+                        let dy = kh as isize - pad;
+                        let dx = kw as isize - pad;
+                        let y0 = (-dy).max(0) as usize;
+                        let y1 = (h as isize - dy).clamp(0, h as isize) as usize;
+                        let x0 = (-dx).max(0) as usize;
+                        let x1 = (w as isize - dx).clamp(0, w as isize) as usize;
+                        for y in y0..y1 {
+                            let src = ((y as isize + dy) as usize) * w;
+                            let dst = o * hw + y * w;
+                            for xx in x0..x1 {
+                                xout[dst + xx] +=
+                                    wv * plane[src + (xx as isize + dx) as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_same_grads(
+    x: &[f32],
+    n: usize,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    wts: &[f32],
+    c_out: usize,
+    k: usize,
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+) {
+    let pad = (k / 2) as isize;
+    let hw = h * w;
+    dx.fill(0.0);
+    dw.fill(0.0);
+    for img in 0..n {
+        let xin = &x[img * c_in * hw..(img + 1) * c_in * hw];
+        let dyi = &dy[img * c_out * hw..(img + 1) * c_out * hw];
+        let dxi = &mut dx[img * c_in * hw..(img + 1) * c_in * hw];
+        for o in 0..c_out {
+            let dplane = &dyi[o * hw..(o + 1) * hw];
+            for i in 0..c_in {
+                let plane = &xin[i * hw..(i + 1) * hw];
+                let gplane = &mut dxi[i * hw..(i + 1) * hw];
+                for kh in 0..k {
+                    for kw in 0..k {
+                        let widx = ((o * c_in + i) * k + kh) * k + kw;
+                        let wv = wts[widx];
+                        let dyk = kh as isize - pad;
+                        let dxk = kw as isize - pad;
+                        let y0 = (-dyk).max(0) as usize;
+                        let y1 = (h as isize - dyk).clamp(0, h as isize) as usize;
+                        let x0 = (-dxk).max(0) as usize;
+                        let x1 = (w as isize - dxk).clamp(0, w as isize) as usize;
+                        let mut acc = 0.0f32;
+                        for y in y0..y1 {
+                            let src = ((y as isize + dyk) as usize) * w;
+                            let dst = y * w;
+                            for xx in x0..x1 {
+                                let xi = src + (xx as isize + dxk) as usize;
+                                let g = dplane[dst + xx];
+                                acc += g * plane[xi];
+                                gplane[xi] += g * wv;
+                            }
+                        }
+                        dw[widx] += acc;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn matmul_nt(x: &[f32], n: usize, n_in: usize, wts: &[f32], n_out: usize, out: &mut [f32]) {
+    for r in 0..n {
+        let xi = &x[r * n_in..(r + 1) * n_in];
+        let oi = &mut out[r * n_out..(r + 1) * n_out];
+        for (o, ov) in oi.iter_mut().enumerate() {
+            let wr = &wts[o * n_in..(o + 1) * n_in];
+            let mut acc = 0.0f32;
+            for (a, b) in xi.iter().zip(wr) {
+                acc += a * b;
+            }
+            *ov = acc;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn matmul_nt_grads(
+    x: &[f32],
+    n: usize,
+    n_in: usize,
+    wts: &[f32],
+    n_out: usize,
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+) {
+    dx.fill(0.0);
+    for r in 0..n {
+        let xi = &x[r * n_in..(r + 1) * n_in];
+        let dyi = &dy[r * n_out..(r + 1) * n_out];
+        let dxi = &mut dx[r * n_in..(r + 1) * n_in];
+        for (o, &g) in dyi.iter().enumerate() {
+            if g == 0.0 {
+                continue;
+            }
+            let wr = &wts[o * n_in..(o + 1) * n_in];
+            let dwr = &mut dw[o * n_in..(o + 1) * n_in];
+            for j in 0..n_in {
+                dxi[j] += g * wr[j];
+                dwr[j] += g * xi[j];
+            }
+        }
+    }
+}
+
+fn maxpool2(x: &[f32], n: usize, c: usize, h: usize, w: usize, out: &mut [f32]) {
+    let (oh, ow) = (h / 2, w / 2);
+    for m in 0..n * c {
+        let xi = &x[m * h * w..(m + 1) * h * w];
+        let oi = &mut out[m * oh * ow..(m + 1) * oh * ow];
+        for y in 0..oh {
+            for xx in 0..ow {
+                let base = 2 * y * w + 2 * xx;
+                let v = xi[base]
+                    .max(xi[base + 1])
+                    .max(xi[base + w])
+                    .max(xi[base + w + 1]);
+                oi[y * ow + xx] = v;
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn maxpool2_grads(
+    x: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    pooled: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    dx.fill(0.0);
+    for m in 0..n * c {
+        let xi = &x[m * h * w..(m + 1) * h * w];
+        let pi = &pooled[m * oh * ow..(m + 1) * oh * ow];
+        let di = &dy[m * oh * ow..(m + 1) * oh * ow];
+        let gi = &mut dx[m * h * w..(m + 1) * h * w];
+        for y in 0..oh {
+            for xx in 0..ow {
+                let j = y * ow + xx;
+                let base = 2 * y * w + 2 * xx;
+                let top = pi[j];
+                for off in [0, 1, w, w + 1] {
+                    if xi[base + off] == top {
+                        gi[base + off] += di[j];
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}

@@ -25,7 +25,16 @@ pub fn load_images(path: &str) -> Result<(Vec<Vec<u8>>, usize, usize), String> {
     let n = u32::from_be_bytes(buf[4..8].try_into().unwrap()) as usize;
     let rows = u32::from_be_bytes(buf[8..12].try_into().unwrap()) as usize;
     let cols = u32::from_be_bytes(buf[12..16].try_into().unwrap()) as usize;
-    let need = 16 + n * rows * cols;
+    // A corrupt/hostile header can make `n * rows * cols` overflow
+    // (panic in debug, wrapped bound check then slice OOB in release) —
+    // compute the body size checked and report instead.
+    let need = n
+        .checked_mul(rows)
+        .and_then(|v| v.checked_mul(cols))
+        .and_then(|v| v.checked_add(16))
+        .ok_or_else(|| {
+            format!("{path}: corrupt header ({n} x {rows} x {cols} images overflows)")
+        })?;
     if buf.len() < need {
         return Err(format!("{path}: truncated body ({} < {need})", buf.len()));
     }
@@ -50,10 +59,13 @@ pub fn load_labels(path: &str) -> Result<Vec<u8>, String> {
         return Err(format!("{path}: bad magic {magic:#x} (want 0x801)"));
     }
     let n = u32::from_be_bytes(buf[4..8].try_into().unwrap()) as usize;
-    if buf.len() < 8 + n {
+    let need = n
+        .checked_add(8)
+        .ok_or_else(|| format!("{path}: corrupt header ({n} labels overflows)"))?;
+    if buf.len() < need {
         return Err(format!("{path}: truncated body"));
     }
-    Ok(buf[8..8 + n].to_vec())
+    Ok(buf[8..need].to_vec())
 }
 
 /// Load paired images+labels into [`Sample`]s; `limit` caps the count.
@@ -66,6 +78,16 @@ pub fn load_samples(
     let labels = load_labels(labels_path)?;
     if rows != cols {
         return Err(format!("non-square images {rows}x{cols} unsupported"));
+    }
+    // Zipping unequal splits would silently truncate a mislabeled
+    // dataset to the shorter side — refuse instead.
+    if images.len() != labels.len() {
+        return Err(format!(
+            "image/label count mismatch: {} images ({images_path}) vs {} labels \
+             ({labels_path})",
+            images.len(),
+            labels.len()
+        ));
     }
     Ok(images
         .into_iter()
@@ -153,5 +175,38 @@ mod tests {
         std::fs::write(&p, b"not an idx file....").unwrap();
         assert!(load_images(p.to_str().unwrap()).is_err());
         assert!(load_labels(p.to_str().unwrap()).is_err());
+    }
+
+    #[test]
+    fn corrupt_header_overflow_is_an_error_not_a_panic() {
+        // Valid magic, dimensions whose product overflows usize: must
+        // return Err (previously: debug overflow panic, or a wrapped
+        // size check followed by an out-of-bounds slice in release).
+        let dir = std::env::temp_dir().join("vsa_idx_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("overflow");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&0x0803u32.to_be_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_be_bytes()); // n
+        bytes.extend_from_slice(&u32::MAX.to_be_bytes()); // rows
+        bytes.extend_from_slice(&u32::MAX.to_be_bytes()); // cols
+        bytes.extend_from_slice(&[0u8; 8]); // tiny body
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_images(p.to_str().unwrap()).unwrap_err();
+        assert!(err.contains("corrupt header"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn image_label_count_mismatch_is_an_error() {
+        // 3 images zipped with 2 labels used to silently truncate.
+        let dir = std::env::temp_dir().join("vsa_idx_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ip = dir.join("imgs");
+        let lp = dir.join("labels");
+        write_idx3(&ip, 3, 4);
+        write_idx1(&lp, &[7, 1]);
+        let err = load_samples(ip.to_str().unwrap(), lp.to_str().unwrap(), 10).unwrap_err();
+        assert!(err.contains("mismatch"), "unhelpful error: {err}");
+        assert!(err.contains("3 images") && err.contains("2 labels"), "{err}");
     }
 }

@@ -89,6 +89,8 @@ dse flags:    --space tiny|small|wide  --workload mnist|cifar10|both
 train flags:  --model tiny|mnist|micro  --dataset synth|mnist  --steps T
               --epochs N  --batches-per-epoch N  --batch B  --lr LR
               --momentum M  --seed S  --out FILE.vsaw  --eval-count N
+              --threads N (batch-parallel workers; artifacts are
+              byte-identical for every N)
 
 eval flags:   --weights FILE.vsaw  --dataset synth|mnist  --count N
               --seed S  --steps T (override the artifact's T)
@@ -490,6 +492,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         momentum: args.get_f64("momentum", 0.9)? as f32,
         seed: args.get_u64("seed", 7)?,
         log_every: args.get_usize("log-every", 25)?,
+        threads: args.get_usize("threads", 1)?,
     };
     let out_path =
         args.get("out", &format!("artifacts/{model}_t{num_steps}_trained.vsaw"));

@@ -29,6 +29,7 @@
 //! inference must reproduce the unfolded train-time reference
 //! spike-for-spike.
 
+use crate::train::par;
 use crate::util::FIXED_POINT;
 
 /// Default BN epsilon — matches `python/compile/model.py::BN_EPS`.
@@ -84,41 +85,73 @@ impl IfBn {
     /// (channel-major maps, `s = 1` for fc): batch statistics per
     /// channel over the `n * s` samples, written in place.  Returns the
     /// backward cache.
-    pub fn normalize_train(&self, x: &mut [f32], n: usize, s: usize) -> BnCache {
+    ///
+    /// Statistics are sharded over *channels* (each channel's f64 sums
+    /// run in the scalar row order on exactly one worker) and the
+    /// normalization over rows — both disjoint-output splits, so the
+    /// result is bit-identical for every `threads` value.
+    pub fn normalize_train(&self, x: &mut [f32], n: usize, s: usize, threads: usize) -> BnCache {
         let c = self.channels();
         assert_eq!(x.len(), n * c * s, "bn input geometry");
+        let threads = par::threads_for(4 * n * c * s, threads);
         let cnt = (n * s) as f64;
         let mut mu_b = vec![0.0f32; c];
         let mut var_b = vec![0.0f32; c];
         let mut sigma = vec![0.0f32; c];
-        for ch in 0..c {
-            let mut sum = 0.0f64;
-            let mut sumsq = 0.0f64;
-            for r in 0..n {
-                let plane = &x[(r * c + ch) * s..(r * c + ch + 1) * s];
-                for &v in plane {
-                    sum += v as f64;
-                    sumsq += v as f64 * v as f64;
+        {
+            let ch_ranges = par::shard_ranges(c, par::SHARDS);
+            let mus = par::split_rows(&mut mu_b, &ch_ranges, 1);
+            let vars = par::split_rows(&mut var_b, &ch_ranges, 1);
+            let sigmas = par::split_rows(&mut sigma, &ch_ranges, 1);
+            let ctxs: Vec<_> = ch_ranges
+                .iter()
+                .cloned()
+                .zip(mus)
+                .zip(vars)
+                .zip(sigmas)
+                .map(|(((r, m), v), sg)| (r, m, v, sg))
+                .collect();
+            let x_ro: &[f32] = x;
+            par::run(threads, ctxs, |_, (range, mus, vars, sigmas)| {
+                for (i, ch) in range.enumerate() {
+                    let mut sum = 0.0f64;
+                    let mut sumsq = 0.0f64;
+                    for r in 0..n {
+                        let plane = &x_ro[(r * c + ch) * s..(r * c + ch + 1) * s];
+                        for &v in plane {
+                            sum += v as f64;
+                            sumsq += v as f64 * v as f64;
+                        }
+                    }
+                    let m = sum / cnt;
+                    let v = (sumsq / cnt - m * m).max(0.0);
+                    mus[i] = m as f32;
+                    vars[i] = v as f32;
+                    sigmas[i] = ((v + BN_EPS).sqrt()) as f32;
                 }
-            }
-            let m = sum / cnt;
-            let v = (sumsq / cnt - m * m).max(0.0);
-            mu_b[ch] = m as f32;
-            var_b[ch] = v as f32;
-            sigma[ch] = ((v + BN_EPS).sqrt()) as f32;
+            });
         }
         let mut xn = vec![0.0f32; x.len()];
-        for r in 0..n {
-            for ch in 0..c {
-                let base = (r * c + ch) * s;
-                let (m, sg) = (mu_b[ch], sigma[ch]);
-                let (g, b) = (self.gamma[ch], self.beta[ch]);
-                for j in 0..s {
-                    let z = (x[base + j] - m) / sg;
-                    xn[base + j] = z;
-                    x[base + j] = g * z + b;
+        {
+            let row_ranges = par::shard_ranges(n, par::SHARDS);
+            let xs = par::split_rows(x, &row_ranges, c * s);
+            let xns = par::split_rows(&mut xn, &row_ranges, c * s);
+            let ctxs: Vec<_> = xs.into_iter().zip(xns).collect();
+            let (mu_b, sigma) = (&mu_b, &sigma);
+            par::run(threads, ctxs, |_, (xc, xnc)| {
+                for (xr, xnr) in xc.chunks_mut(c * s).zip(xnc.chunks_mut(c * s)) {
+                    for ch in 0..c {
+                        let base = ch * s;
+                        let (m, sg) = (mu_b[ch], sigma[ch]);
+                        let (g, b) = (self.gamma[ch], self.beta[ch]);
+                        for j in 0..s {
+                            let z = (xr[base + j] - m) / sg;
+                            xnr[base + j] = z;
+                            xr[base + j] = g * z + b;
+                        }
+                    }
                 }
-            }
+            });
         }
         BnCache { xn, sigma, mu_b, var_b }
     }
@@ -146,6 +179,8 @@ impl IfBn {
     ///
     /// `dx = gamma/sigma * (dy' - mean(dy') - xn * mean(dy' * xn))` with
     /// `dy' = dy` per channel — the full batch-statistics gradient.
+    /// Sharded like [`Self::normalize_train`] (channel-sharded sums,
+    /// row-sharded scaling): bit-identical for every `threads` value.
     pub fn backward(
         &self,
         cache: &BnCache,
@@ -154,33 +189,66 @@ impl IfBn {
         s: usize,
         dgamma: &mut [f32],
         dbeta: &mut [f32],
+        threads: usize,
     ) {
         let c = self.channels();
+        let threads = par::threads_for(6 * n * c * s, threads);
         let cnt = (n * s) as f64;
-        for ch in 0..c {
-            let mut sum_dy = 0.0f64;
-            let mut sum_dyxn = 0.0f64;
-            for r in 0..n {
-                let base = (r * c + ch) * s;
-                for j in 0..s {
-                    let g = dy[base + j] as f64;
-                    sum_dy += g;
-                    sum_dyxn += g * cache.xn[base + j] as f64;
+        let mut mean_dy = vec![0.0f32; c];
+        let mut mean_dyxn = vec![0.0f32; c];
+        {
+            let ch_ranges = par::shard_ranges(c, par::SHARDS);
+            let dgs = par::split_rows(dgamma, &ch_ranges, 1);
+            let dbs = par::split_rows(dbeta, &ch_ranges, 1);
+            let mds = par::split_rows(&mut mean_dy, &ch_ranges, 1);
+            let mxs = par::split_rows(&mut mean_dyxn, &ch_ranges, 1);
+            let ctxs: Vec<_> = ch_ranges
+                .iter()
+                .cloned()
+                .zip(dgs)
+                .zip(dbs)
+                .zip(mds)
+                .zip(mxs)
+                .map(|((((r, dg), db), md), mx)| (r, dg, db, md, mx))
+                .collect();
+            let dy_ro: &[f32] = dy;
+            par::run(threads, ctxs, |_, (range, dgs, dbs, mds, mxs)| {
+                for (i, ch) in range.enumerate() {
+                    let mut sum_dy = 0.0f64;
+                    let mut sum_dyxn = 0.0f64;
+                    for r in 0..n {
+                        let base = (r * c + ch) * s;
+                        for j in 0..s {
+                            let g = dy_ro[base + j] as f64;
+                            sum_dy += g;
+                            sum_dyxn += g * cache.xn[base + j] as f64;
+                        }
+                    }
+                    dgs[i] = sum_dyxn as f32;
+                    dbs[i] = sum_dy as f32;
+                    mds[i] = (sum_dy / cnt) as f32;
+                    mxs[i] = (sum_dyxn / cnt) as f32;
                 }
-            }
-            dgamma[ch] = sum_dyxn as f32;
-            dbeta[ch] = sum_dy as f32;
-            let mean_dy = (sum_dy / cnt) as f32;
-            let mean_dyxn = (sum_dyxn / cnt) as f32;
-            let scale = self.gamma[ch] / cache.sigma[ch];
-            for r in 0..n {
-                let base = (r * c + ch) * s;
-                for j in 0..s {
-                    dy[base + j] = scale
-                        * (dy[base + j] - mean_dy - cache.xn[base + j] * mean_dyxn);
-                }
-            }
+            });
         }
+        let row_ranges = par::shard_ranges(n, par::SHARDS);
+        let dys = par::split_rows(dy, &row_ranges, c * s);
+        let ctxs: Vec<_> = row_ranges.iter().cloned().zip(dys).collect();
+        let (mean_dy, mean_dyxn) = (&mean_dy, &mean_dyxn);
+        par::run(threads, ctxs, |_, (range, dyc)| {
+            for (k, dyr) in dyc.chunks_mut(c * s).enumerate() {
+                let r = range.start + k;
+                for ch in 0..c {
+                    let scale = self.gamma[ch] / cache.sigma[ch];
+                    let xnr = &cache.xn[(r * c + ch) * s..(r * c + ch + 1) * s];
+                    let base = ch * s;
+                    for j in 0..s {
+                        dyr[base + j] = scale
+                            * (dyr[base + j] - mean_dy[ch] - xnr[j] * mean_dyxn[ch]);
+                    }
+                }
+            }
+        });
     }
 
     /// EMA update of the running statistics from one batch's statistics.
@@ -228,7 +296,7 @@ mod tests {
         let bn = IfBn::new(2);
         // channel 0: 1..4, channel 1: constant 5
         let mut x = vec![1.0, 5.0, 2.0, 5.0, 3.0, 5.0, 4.0, 5.0];
-        let cache = bn.normalize_train(&mut x, 4, 1);
+        let cache = bn.normalize_train(&mut x, 4, 1, 1);
         assert!((cache.mu_b[0] - 2.5).abs() < 1e-6);
         assert!((cache.mu_b[1] - 5.0).abs() < 1e-6);
         // normalized channel 0 has ~zero mean
@@ -236,6 +304,33 @@ mod tests {
         assert!(m.abs() < 1e-6);
         // constant channel collapses to beta = 0 (sigma = sqrt(eps))
         assert!(x[1].abs() < 1e-3);
+    }
+
+    #[test]
+    fn normalize_and_backward_identical_for_every_thread_count() {
+        let mut bn = IfBn::new(3);
+        bn.gamma = vec![1.5, 0.7, 1.0];
+        bn.beta = vec![0.1, -0.2, 0.0];
+        let (n, s) = (5, 4);
+        let mut rng = crate::util::rng::SplitMix64::new(41);
+        let mut draw = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+        };
+        let x0 = draw(n * 3 * s);
+        let dy0 = draw(n * 3 * s);
+        let run = |threads: usize| {
+            let mut x = x0.clone();
+            let cache = bn.normalize_train(&mut x, n, s, threads);
+            let mut dy = dy0.clone();
+            let mut dgamma = vec![0.0f32; 3];
+            let mut dbeta = vec![0.0f32; 3];
+            bn.backward(&cache, &mut dy, n, s, &mut dgamma, &mut dbeta, threads);
+            (x, cache.xn, cache.mu_b, dy, dgamma, dbeta)
+        };
+        let base = run(1);
+        for t in [2, 3, 4, 8] {
+            assert_eq!(base, run(t), "BN results must not depend on threads={t}");
+        }
     }
 
     #[test]

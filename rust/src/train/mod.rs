@@ -20,15 +20,19 @@
 //!   [`crate::snn::Network`] loads, closing the `vsa train → vsa infer →
 //!   vsa dse` loop on one artifact.
 //!
-//! Everything is seeded from one `SplitMix64` stream and runs
-//! single-threaded in a fixed order: training is **byte-reproducible**
-//! — the same `(model, T, dataset, hyperparameters, seed)` produce a
-//! byte-identical artifact on every run (see README §TRAINING).
+//! Everything is seeded from one `SplitMix64` stream and runs in a
+//! fixed order — including under `--threads N` batch parallelism
+//! ([`par`]: fixed work shards, per-shard gradient buffers reduced in
+//! fixed shard order): training is **byte-reproducible** — the same
+//! `(model, T, dataset, hyperparameters, seed)` produce a
+//! byte-identical artifact on every run at every thread count (see
+//! README §TRAINING).
 
 pub mod binarize;
 pub mod export;
 pub mod ifbn;
 pub mod optim;
+pub mod par;
 pub mod stbp;
 pub mod tensor;
 
@@ -70,6 +74,9 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Print a progress line every N steps (0 = silent).
     pub log_every: usize,
+    /// Worker threads for the batch-parallel hot path (1 = in-line).
+    /// Artifacts are byte-identical for every value (see [`par`]).
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -85,6 +92,7 @@ impl Default for TrainConfig {
             momentum: 0.9,
             seed: 7,
             log_every: 25,
+            threads: 1,
         }
     }
 }
@@ -98,16 +106,25 @@ pub struct TrainOutcome {
     pub final_batch_acc: f64,
 }
 
-/// Index of the maximum f32 (first on ties) — the train-side twin of
-/// `util::stats::argmax`.
-pub fn argmax_f32(xs: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
-        }
-    }
-    best
+/// Re-exported from `util::stats` (one definition since PR4): f32
+/// argmax under the IEEE total order — NaN can no longer make every
+/// comparison fail and silently return index 0.
+pub use crate::util::stats::argmax_f32;
+
+/// Rows of `(n, classes)` logits whose argmax matches the label.  A row
+/// containing ANY non-finite logit (diverged run) never counts as
+/// correct — the NaN-safety half of the `argmax_f32` fix.  The whole
+/// row is scanned because under the IEEE total order a *negative* NaN
+/// sorts below -inf and would otherwise hide behind a finite maximum.
+pub fn count_correct(logits: &[f32], classes: usize, labels: &[usize]) -> usize {
+    labels
+        .iter()
+        .enumerate()
+        .filter(|&(r, &label)| {
+            let row = &logits[r * classes..(r + 1) * classes];
+            row.iter().all(|v| v.is_finite()) && argmax_f32(row) == label
+        })
+        .count()
 }
 
 /// Resolve the spec and run STBP training to completion.
@@ -143,10 +160,13 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
         }
     };
     let batches_per_epoch = match &mnist_train {
-        Some(data) => (data.len() / cfg.batch).max(1),
+        // Ceil division: the tail of the dataset forms a short final
+        // batch instead of being silently dropped.
+        Some(data) => (data.len() + cfg.batch - 1) / cfg.batch,
         None => cfg.batches_per_epoch.max(1),
     };
     let total_steps = cfg.epochs * batches_per_epoch;
+    let threads = cfg.threads.max(1);
 
     let mut net = Net::init(&spec, cfg.seed);
     let mut opt = optim::Sgd::new(&net, cfg.momentum);
@@ -167,7 +187,7 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
             &mut images,
             &mut labels,
         );
-        let fwd = net.forward(&images[..count * plane], count, SpikeMode::Hard, true);
+        let fwd = net.forward(&images[..count * plane], count, SpikeMode::Hard, true, threads);
         let loss = tensor::softmax_ce(
             &fwd.logits,
             count,
@@ -176,13 +196,17 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
             spec.num_steps as f32,
             &mut dlogits[..count * classes],
         );
-        let grads = net.backward(&fwd, &images[..count * plane], &dlogits[..count * classes], true);
+        let grads = net.backward(
+            &fwd,
+            &images[..count * plane],
+            &dlogits[..count * classes],
+            true,
+            threads,
+        );
         opt.step(&mut net, &grads, optim::cosine_lr(cfg.lr, step, total_steps));
         net.apply_bn_ema(&fwd);
 
-        let correct = (0..count)
-            .filter(|&r| argmax_f32(&fwd.logits[r * classes..(r + 1) * classes]) == labels[r])
-            .count();
+        let correct = count_correct(&fwd.logits, classes, &labels[..count]);
         final_loss = loss;
         final_acc = correct as f64 / count as f64;
         if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == total_steps) {
@@ -196,6 +220,8 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
 }
 
 /// Fill `images`/`labels` with the samples of `step`; returns the count.
+/// The MNIST branch borrows straight from the resident dataset — no
+/// per-step `Sample` clones in the hot loop.
 fn load_batch(
     spec: &ModelSpec,
     cfg: &TrainConfig,
@@ -206,26 +232,31 @@ fn load_batch(
     labels: &mut [usize],
 ) -> usize {
     let plane = spec.in_channels * spec.in_size * spec.in_size;
-    let samples: Vec<Sample> = match mnist {
-        None => synth::batch(
-            cfg.seed,
-            (step * cfg.batch) as u64,
-            cfg.batch,
-            spec.in_channels,
-            spec.in_size,
-        ),
+    let fill = |samples: &[Sample], images: &mut [f32], labels: &mut [usize]| {
+        for (r, s) in samples.iter().enumerate() {
+            for (dst, &px) in images[r * plane..(r + 1) * plane].iter_mut().zip(&s.image) {
+                *dst = px as f32 / 255.0;
+            }
+            labels[r] = s.label;
+        }
+        samples.len()
+    };
+    match mnist {
+        None => {
+            let samples = synth::batch(
+                cfg.seed,
+                (step * cfg.batch) as u64,
+                cfg.batch,
+                spec.in_channels,
+                spec.in_size,
+            );
+            fill(&samples, images, labels)
+        }
         Some(data) => {
             let start = (step % batches_per_epoch) * cfg.batch;
-            data[start..(start + cfg.batch).min(data.len())].to_vec()
+            fill(&data[start..(start + cfg.batch).min(data.len())], images, labels)
         }
-    };
-    for (r, s) in samples.iter().enumerate() {
-        for (dst, &px) in images[r * plane..(r + 1) * plane].iter_mut().zip(&s.image) {
-            *dst = px as f32 / 255.0;
-        }
-        labels[r] = s.label;
     }
-    samples.len()
 }
 
 /// Held-out synthetic samples in an explicit input geometry — the ONE
@@ -278,6 +309,95 @@ mod tests {
         assert_eq!(deploy(&a.net).to_bytes(), deploy(&b.net).to_bytes());
         assert!(a.final_loss.is_finite());
     }
+
+    /// Hand-built "MNIST" split in micro geometry for load_batch tests.
+    fn fake_mnist(n: usize, plane_side: usize) -> Vec<Sample> {
+        (0..n)
+            .map(|i| Sample {
+                image: vec![(i + 1) as u8 * 10; plane_side * plane_side],
+                channels: 1,
+                size: plane_side,
+                label: i % 10,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn load_batch_short_final_batch_and_wraparound() {
+        let spec = models::micro(2);
+        let cfg = TrainConfig { batch: 4, ..TrainConfig::default() };
+        let data = fake_mnist(6, spec.in_size); // 6 % 4 != 0
+        let bpe = (data.len() + cfg.batch - 1) / cfg.batch; // = 2, as train() derives
+        let plane = spec.in_size * spec.in_size;
+        let mut images = vec![0.0f32; cfg.batch * plane];
+        let mut labels = vec![0usize; cfg.batch];
+        // step 0: full batch of 4
+        let c0 = load_batch(&spec, &cfg, Some(&data[..]), 0, bpe, &mut images, &mut labels);
+        assert_eq!(c0, 4);
+        assert_eq!(labels[..4], [0, 1, 2, 3]);
+        // step 1: short final batch of 2 — the tail is NOT dropped
+        let c1 = load_batch(&spec, &cfg, Some(&data[..]), 1, bpe, &mut images, &mut labels);
+        assert_eq!(c1, 2, "tail of len % batch samples must form a short batch");
+        assert_eq!(labels[..2], [4, 5]);
+        assert_eq!(images[0], 50.0f32 / 255.0, "short batch holds samples 4..6");
+        // step 2 wraps around to the first batch of the next epoch
+        let c2 = load_batch(&spec, &cfg, Some(&data[..]), 2, bpe, &mut images, &mut labels);
+        assert_eq!(c2, 4);
+        assert_eq!(labels[..4], [0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn load_batch_stale_tail_rows_never_reach_loss_or_accuracy() {
+        let spec = models::micro(2);
+        let cfg = TrainConfig { batch: 4, ..TrainConfig::default() };
+        let data = fake_mnist(2, spec.in_size); // short batch of 2
+        let plane = spec.in_size * spec.in_size;
+        // Poison the buffers: rows >= count keep whatever was there.
+        let mut poisoned = vec![777.0f32; cfg.batch * plane];
+        let mut clean = vec![0.0f32; cfg.batch * plane];
+        let mut labels = vec![9usize; cfg.batch];
+        let count = load_batch(&spec, &cfg, Some(&data[..]), 0, 1, &mut poisoned, &mut labels);
+        let count_b = load_batch(&spec, &cfg, Some(&data[..]), 0, 1, &mut clean, &mut labels);
+        assert_eq!((count, count_b), (2, 2));
+        // The live prefix is identical; the stale tail differs...
+        assert_eq!(poisoned[..count * plane], clean[..count * plane]);
+        assert_eq!(poisoned[count * plane], 777.0, "tail rows are untouched");
+        // ...and everything downstream (forward/loss/accuracy) slices by
+        // `count`, so the poisoned tail cannot leak into training math.
+        let net = Net::init(&spec, 5);
+        let classes = net.classes();
+        let mut dl = vec![0.0f32; count * classes];
+        let fa = net.forward(&poisoned[..count * plane], count, SpikeMode::Hard, true, 1);
+        let fb = net.forward(&clean[..count * plane], count, SpikeMode::Hard, true, 1);
+        assert_eq!(fa.logits, fb.logits);
+        let la = tensor::softmax_ce(&fa.logits, count, classes, &labels[..count], 2.0, &mut dl);
+        let lb = tensor::softmax_ce(&fb.logits, count, classes, &labels[..count], 2.0, &mut dl);
+        assert_eq!(la, lb);
+        assert_eq!(
+            count_correct(&fa.logits, classes, &labels[..count]),
+            count_correct(&fb.logits, classes, &labels[..count])
+        );
+    }
+
+    #[test]
+    fn count_correct_rejects_nan_rows() {
+        // Diverged logits (NaN) must never count as correct, whatever
+        // index argmax lands on.
+        let logits = vec![f32::NAN, 0.0, 0.0, /* row 2 */ 3.0, 1.0, 0.0];
+        let labels = [0usize, 0];
+        assert_eq!(count_correct(&logits, 3, &labels), 1, "only the finite row counts");
+        let all_nan = vec![f32::NAN; 3];
+        assert_eq!(count_correct(&all_nan, 3, &[0]), 0);
+        // Negative NaN sorts BELOW -inf under the total order: argmax
+        // lands on the finite 1.0, but the row is still diverged.
+        let neg_nan_row = vec![-f32::NAN, 1.0, 0.0];
+        assert_eq!(argmax_f32(&neg_nan_row), 1);
+        assert_eq!(count_correct(&neg_nan_row, 3, &[1]), 0, "diverged row must not count");
+    }
+
+    // (Thread-count byte-identity of full train() runs lives in
+    // rust/tests/train_parallel.rs — broader coverage, not duplicated
+    // here.)
 
     #[test]
     fn holdout_disjoint_from_training_indices() {

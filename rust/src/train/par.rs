@@ -1,0 +1,171 @@
+//! Deterministic work-sharding for the training hot path.
+//!
+//! The trainer's parallelism contract is stronger than "same result for
+//! a fixed thread count": `vsa train` must produce **byte-identical**
+//! artifacts at any `--threads`.  The scheme that guarantees it:
+//!
+//! 1. Work is cut into a *fixed* number of shards ([`SHARDS`]) derived
+//!    only from the problem size — never from the thread count.  Each
+//!    shard owns a disjoint slice of the output (rows of a conv/matmul
+//!    output, a channel range of BN statistics) and computes it with
+//!    exactly the scalar kernel's iteration order.
+//! 2. Threads merely *execute* shards ([`run`] stripes shard indices
+//!    over `threads` scoped OS threads).  Which thread runs a shard can
+//!    never change the arithmetic, because no two shards write the same
+//!    element and no shard reads another's output.
+//! 3. The only cross-shard reductions are the weight gradients and they
+//!    use per-shard buffers summed on the caller thread in fixed shard
+//!    order (see `tensor::conv2d_same_grads_mt`) — f32 addition is
+//!    non-associative, so the grouping is pinned by construction.
+//!
+//! Consequence: for every thread count (including 1, which skips thread
+//! spawning entirely) the same shards run the same scalar code and the
+//! same reductions in the same order, so the trained artifact bytes
+//! cannot depend on `--threads`.  This is the trainer's analogue of
+//! PR1's one-`Scratch`-per-worker ownership model: each worker owns its
+//! working set outright for the duration of a parallel section
+//! (`std::thread::scope` is the only synchronization primitive used).
+
+use std::ops::Range;
+
+/// Fixed shard count — a constant so the work partition (and therefore
+/// every reduction order) is independent of `--threads`.  Sixteen keeps
+/// 4–8 worker threads load-balanced.  Note the cost: the gradient
+/// `_mt` kernels transiently hold up to 16x the largest layer's weight
+/// gradient (tens of MB for cifar-scale layers), freshly zeroed per
+/// call — a reusable per-`Net` scratch arena is a known follow-on
+/// (ROADMAP, training follow-ons).
+pub const SHARDS: usize = 16;
+
+/// Sections below this approximate f32-op count run inline even when
+/// `--threads` is higher: a `thread::scope` spawn/join cycle costs tens
+/// of microseconds, more than the arithmetic of a small BN or micro-net
+/// stage.  Pure scheduling — the shard partition and every reduction
+/// order are unchanged, so the bytes cannot depend on this gate
+/// (covered by the cross-thread-count determinism tests).
+pub const MIN_PAR_OPS: usize = 1 << 16;
+
+/// Clamp `threads` to 1 for sections whose work is too small to
+/// amortize thread spawns.
+pub fn threads_for(ops: usize, threads: usize) -> usize {
+    if ops < MIN_PAR_OPS {
+        1
+    } else {
+        threads
+    }
+}
+
+/// Cut `0..n` into up to [`SHARDS`] contiguous, equally-sized (ceil)
+/// ranges.  Depends only on `n`; empty ranges are never produced.
+pub fn shard_ranges(n: usize, max_shards: usize) -> Vec<Range<usize>> {
+    if n == 0 || max_shards == 0 {
+        return Vec::new();
+    }
+    let size = (n + max_shards - 1) / max_shards;
+    let mut out = Vec::with_capacity(max_shards.min(n));
+    let mut start = 0;
+    while start < n {
+        out.push(start..(start + size).min(n));
+        start += size;
+    }
+    out
+}
+
+/// Split `buf` (whose rows are `row_len` elements) into per-range
+/// mutable chunks — the disjoint output views handed to shards.
+/// `ranges` must be ascending, contiguous from 0 and cover exactly
+/// `buf.len() / row_len` rows (what [`shard_ranges`] produces).
+pub fn split_rows<'a>(
+    mut buf: &'a mut [f32],
+    ranges: &[Range<usize>],
+    row_len: usize,
+) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    for r in ranges {
+        let (head, tail) = buf.split_at_mut((r.end - r.start) * row_len);
+        out.push(head);
+        buf = tail;
+    }
+    assert!(buf.is_empty(), "ranges must cover the whole buffer");
+    out
+}
+
+/// Execute one closure call per shard context, striping shards over at
+/// most `threads` scoped OS threads.  `ctxs[s]` is shard `s`'s private
+/// mutable context (disjoint views prepared by the caller); the closure
+/// also receives the shard index.  With `threads <= 1` (or a single
+/// shard) everything runs on the caller thread with no spawning — the
+/// arithmetic is identical either way, only the schedule changes.
+pub fn run<C: Send>(threads: usize, ctxs: Vec<C>, f: impl Fn(usize, C) + Sync) {
+    let threads = threads.max(1).min(ctxs.len());
+    if threads <= 1 {
+        for (s, c) in ctxs.into_iter().enumerate() {
+            f(s, c);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<(usize, C)>> = (0..threads).map(|_| Vec::new()).collect();
+    for (s, c) in ctxs.into_iter().enumerate() {
+        buckets[s % threads].push((s, c));
+    }
+    std::thread::scope(|scope| {
+        for bucket in buckets {
+            let f = &f;
+            scope.spawn(move || {
+                for (s, c) in bucket {
+                    f(s, c);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_and_never_depend_on_threads() {
+        for n in [0usize, 1, 5, 16, 17, 100, 1000] {
+            let rs = shard_ranges(n, SHARDS);
+            assert!(rs.len() <= SHARDS);
+            let mut next = 0;
+            for r in &rs {
+                assert_eq!(r.start, next, "contiguous from 0");
+                assert!(r.end > r.start, "no empty shards");
+                next = r.end;
+            }
+            assert_eq!(next, n, "ranges cover 0..{n}");
+        }
+    }
+
+    #[test]
+    fn split_rows_is_disjoint_and_complete() {
+        let mut buf = vec![0.0f32; 10 * 3];
+        let ranges = shard_ranges(10, 4);
+        let chunks = split_rows(&mut buf, &ranges, 3);
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 30);
+        assert_eq!(chunks.len(), ranges.len());
+    }
+
+    #[test]
+    fn run_gives_identical_results_for_any_thread_count() {
+        let compute = |threads: usize| -> Vec<f32> {
+            let mut out = vec![0.0f32; 103];
+            let ranges = shard_ranges(103, SHARDS);
+            let chunks = split_rows(&mut out, &ranges, 1);
+            let ctxs: Vec<_> = ranges.iter().cloned().zip(chunks).collect();
+            run(threads, ctxs, |_, (r, chunk)| {
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v = ((r.start + k) as f32).sqrt();
+                }
+            });
+            out
+        };
+        let base = compute(1);
+        for t in [2, 3, 4, 9] {
+            assert_eq!(base, compute(t), "threads={t} must match threads=1");
+        }
+    }
+}

@@ -23,6 +23,18 @@
 //!
 //! Spike trains are laid out `(T, B, F)` with `F = C*H*W` flat, so the
 //! `(T*B, F)` views the conv/fc kernels need are free reinterpretations.
+//!
+//! ## Hot path (PR4)
+//!
+//! The forward binarizes each layer's weights **once** and caches them
+//! in the [`Forward`] ([`Cache::wb`]) so `backward` never re-runs
+//! `sign_vec`; the encoding layer drives all T steps from **one** psum
+//! plane ([`if_forward_broadcast`] — the trainer's analogue of the
+//! golden engine's `if_fire_constant`) instead of materializing T
+//! copies; and every conv/matmul/BN stage shards its rows or channels
+//! over `threads` scoped workers via [`crate::train::par`] — a fixed,
+//! thread-count-independent partition, so logits, gradients and
+//! exported artifacts are byte-identical at any `--threads`.
 
 use crate::config::models::{LayerKind, ModelSpec};
 use crate::train::binarize::sign_vec;
@@ -74,6 +86,11 @@ struct Cache {
     v_pre: Vec<f32>,
     /// BN cache (weight layers in train mode only).
     bn: BnCache,
+    /// Weights the forward computed with: `sign_vec` of the latent
+    /// weights when the pass ran binarized, empty otherwise (backward
+    /// then falls back to the latent weights).  Cached here so
+    /// `backward` performs zero `sign_vec` calls.
+    wb: Vec<f32>,
     /// Output feature dims per map.
     c: usize,
     h: usize,
@@ -88,8 +105,18 @@ pub struct Forward {
     caches: Vec<Cache>,
 }
 
+impl Forward {
+    /// Read-only view of one layer's cached `(spikes, v_pre)` trains —
+    /// the oracle hook for the bit-exactness tests against
+    /// `baselines::stbp_scalar` (empty slices for pool/readout caches
+    /// where not recorded).
+    pub fn layer_cache(&self, li: usize) -> (&[f32], &[f32]) {
+        (&self.caches[li].spikes, &self.caches[li].v_pre)
+    }
+}
+
 /// Per-layer parameter gradients (empty vecs where not applicable).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct LayerGrads {
     pub w: Vec<f32>,
     pub gamma: Vec<f32>,
@@ -156,15 +183,17 @@ impl Net {
 
     /// Training forward (batch-statistics BN).  `images` is `(B, C_in *
     /// H * W)` f32 in `[0, 1]`; `binarized = false` runs on the latent
-    /// weights (gradient-test mode).
+    /// weights (gradient-test mode).  `threads` only changes which
+    /// worker computes which shard — never the bytes of the result.
     pub fn forward(
         &self,
         images: &[f32],
         batch: usize,
         mode: SpikeMode,
         binarized: bool,
+        threads: usize,
     ) -> Forward {
-        self.forward_impl(images, batch, mode, binarized, true, 0.0)
+        self.forward_impl(images, batch, mode, binarized, true, 0.0, threads)
     }
 
     /// Eval forward: running-statistics BN, hard spikes, binarized
@@ -172,9 +201,10 @@ impl Net {
     /// epsilon ([`crate::train::ifbn::BN_EPS`] normally; the
     /// fold-exactness test passes 0).
     pub fn forward_eval(&self, images: &[f32], batch: usize, eps: f64) -> Vec<f32> {
-        self.forward_impl(images, batch, SpikeMode::Hard, true, false, eps).logits
+        self.forward_impl(images, batch, SpikeMode::Hard, true, false, eps, 1).logits
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn forward_impl(
         &self,
         images: &[f32],
@@ -183,6 +213,7 @@ impl Net {
         binarized: bool,
         train: bool,
         eps: f64,
+        threads: usize,
     ) -> Forward {
         let t_steps = self.spec.num_steps;
         let (mut h, mut w) = (self.spec.in_size, self.spec.in_size);
@@ -199,37 +230,39 @@ impl Net {
             // for the encoding layer, which reads `images`).
             match ly {
                 TrainLayer::Conv { enc: true, c_out, c_in, k, w: wts, bn } => {
-                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let (ci, co, kk) = (*c_in, *c_out, *k);
+                    let wb = if binarized { sign_vec(wts) } else { Vec::new() };
+                    let wref: &[f32] = if binarized { &wb } else { wts };
                     let hw = h * w;
-                    let f = c_out * hw;
+                    let f = co * hw;
                     let mut y = vec![0.0f32; batch * f];
-                    tensor::conv2d_same(images, batch, *c_in, h, w, &wb, *c_out, *k, &mut y);
+                    tensor::conv2d_same_mt(images, batch, ci, h, w, wref, co, kk, &mut y, threads);
                     let bn_cache = if train {
-                        bn.normalize_train(&mut y, batch, hw)
+                        bn.normalize_train(&mut y, batch, hw, threads)
                     } else {
                         bn.normalize_eval(&mut y, batch, hw, eps);
                         BnCache::default()
                     };
-                    // §III-F: the same psum plane drives every step.
-                    let mut psums = vec![0.0f32; t_steps * batch * f];
-                    for t in 0..t_steps {
-                        psums[t * batch * f..(t + 1) * batch * f].copy_from_slice(&y);
-                    }
+                    // §III-F: the same psum plane drives every step —
+                    // broadcast into the IF recurrence, never copied T
+                    // times (O(batch·f) psum storage).
                     let mut spikes = vec![0.0f32; t_steps * batch * f];
                     let mut v_pre = vec![0.0f32; t_steps * batch * f];
-                    if_forward(&psums, t_steps, batch * f, mode, &mut spikes, &mut v_pre);
-                    caches.push(Cache { spikes, v_pre, bn: bn_cache, c: *c_out, h, w });
+                    if_forward_broadcast(&y, t_steps, batch * f, mode, &mut spikes, &mut v_pre);
+                    caches.push(Cache { spikes, v_pre, bn: bn_cache, wb, c: co, h, w });
                 }
                 TrainLayer::Conv { enc: false, c_out, c_in, k, w: wts, bn } => {
-                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let (ci, co, kk) = (*c_in, *c_out, *k);
+                    let wb = if binarized { sign_vec(wts) } else { Vec::new() };
+                    let wref: &[f32] = if binarized { &wb } else { wts };
                     let hw = h * w;
-                    let f = c_out * hw;
+                    let f = co * hw;
                     let n = t_steps * batch;
                     let x_in = &caches.last().expect("conv input").spikes;
                     let mut y = vec![0.0f32; n * f];
-                    tensor::conv2d_same(x_in, n, *c_in, h, w, &wb, *c_out, *k, &mut y);
+                    tensor::conv2d_same_mt(x_in, n, ci, h, w, wref, co, kk, &mut y, threads);
                     let bn_cache = if train {
-                        bn.normalize_train(&mut y, n, hw)
+                        bn.normalize_train(&mut y, n, hw, threads)
                     } else {
                         bn.normalize_eval(&mut y, n, hw, eps);
                         BnCache::default()
@@ -237,7 +270,7 @@ impl Net {
                     let mut spikes = vec![0.0f32; n * f];
                     let mut v_pre = vec![0.0f32; n * f];
                     if_forward(&y, t_steps, batch * f, mode, &mut spikes, &mut v_pre);
-                    caches.push(Cache { spikes, v_pre, bn: bn_cache, c: *c_out, h, w });
+                    caches.push(Cache { spikes, v_pre, bn: bn_cache, wb, c: co, h, w });
                 }
                 TrainLayer::MaxPool => {
                     let prev = caches.last().expect("pool input");
@@ -247,40 +280,36 @@ impl Net {
                     tensor::maxpool2(&prev.spikes, n, c, h, w, &mut spikes);
                     h = oh;
                     w = ow;
-                    caches.push(Cache {
-                        spikes,
-                        v_pre: Vec::new(),
-                        bn: BnCache::default(),
-                        c,
-                        h,
-                        w,
-                    });
+                    caches.push(Cache { spikes, c, h, w, ..Cache::default() });
                 }
                 TrainLayer::Fc { n_out, n_in, w: wts, bn } => {
-                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let (ni, no) = (*n_in, *n_out);
+                    let wb = if binarized { sign_vec(wts) } else { Vec::new() };
+                    let wref: &[f32] = if binarized { &wb } else { wts };
                     let n = t_steps * batch;
                     let x_in = &caches.last().expect("fc input").spikes;
-                    let mut y = vec![0.0f32; n * n_out];
-                    tensor::matmul_nt(x_in, n, *n_in, &wb, *n_out, &mut y);
+                    let mut y = vec![0.0f32; n * no];
+                    tensor::matmul_nt_mt(x_in, n, ni, wref, no, &mut y, threads);
                     let bn_cache = if train {
-                        bn.normalize_train(&mut y, n, 1)
+                        bn.normalize_train(&mut y, n, 1, threads)
                     } else {
                         bn.normalize_eval(&mut y, n, 1, eps);
                         BnCache::default()
                     };
-                    let mut spikes = vec![0.0f32; n * n_out];
-                    let mut v_pre = vec![0.0f32; n * n_out];
-                    if_forward(&y, t_steps, batch * n_out, mode, &mut spikes, &mut v_pre);
+                    let mut spikes = vec![0.0f32; n * no];
+                    let mut v_pre = vec![0.0f32; n * no];
+                    if_forward(&y, t_steps, batch * no, mode, &mut spikes, &mut v_pre);
                     h = 1;
                     w = 1;
-                    caches.push(Cache { spikes, v_pre, bn: bn_cache, c: *n_out, h, w });
+                    caches.push(Cache { spikes, v_pre, bn: bn_cache, wb, c: no, h, w });
                 }
                 TrainLayer::Readout { n_out, n_in, w: wts } => {
-                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let wb = if binarized { sign_vec(wts) } else { Vec::new() };
+                    let wref: &[f32] = if binarized { &wb } else { wts };
                     let n = t_steps * batch;
                     let x_in = &caches.last().expect("readout input").spikes;
                     let mut y = vec![0.0f32; n * n_out];
-                    tensor::matmul_nt(x_in, n, *n_in, &wb, *n_out, &mut y);
+                    tensor::matmul_nt_mt(x_in, n, *n_in, wref, *n_out, &mut y, threads);
                     let mut lg = vec![0.0f32; batch * n_out];
                     for t in 0..t_steps {
                         for (l, &v) in lg.iter_mut().zip(&y[t * batch * n_out..]) {
@@ -288,7 +317,7 @@ impl Net {
                         }
                     }
                     logits = Some(lg);
-                    caches.push(Cache::default());
+                    caches.push(Cache { wb, ..Cache::default() });
                     break;
                 }
             }
@@ -318,15 +347,18 @@ impl Net {
     }
 
     /// Backward pass.  `dlogits` is `(B, classes)`; `binarized` must
-    /// match the forward call.  Returns per-layer gradients (with
-    /// respect to the latent weights via the straight-through
-    /// estimator).
+    /// match the forward call (the binarized weights are read from the
+    /// forward's cache — no re-binarization happens here).  Returns
+    /// per-layer gradients (with respect to the latent weights via the
+    /// straight-through estimator).  Like the forward, `threads` can
+    /// never change the resulting bytes.
     pub fn backward(
         &self,
         fwd: &Forward,
         images: &[f32],
         dlogits: &[f32],
         binarized: bool,
+        threads: usize,
     ) -> Vec<LayerGrads> {
         let t_steps = self.spec.num_steps;
         let batch = fwd.batch;
@@ -340,38 +372,49 @@ impl Net {
             let x_in_spikes = if li > 0 { Some(&fwd.caches[li - 1].spikes) } else { None };
             match &self.layers[li] {
                 TrainLayer::Readout { n_out, n_in, w: wts } => {
-                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let (ni, no) = (*n_in, *n_out);
+                    let wb: &[f32] = if binarized { &cache.wb } else { wts };
                     let x_in = x_in_spikes.expect("readout has an input layer");
-                    let mut dw = vec![0.0f32; wts.len()];
-                    let mut dx = vec![0.0f32; t_steps * batch * n_in];
-                    // The same dlogits row feeds every time step.
+                    // The same dlogits row feeds every time step, so
+                    // `dx` is computed once and broadcast, and `dw`
+                    // contracts against the spike train summed over T.
+                    // The sum itself is exact for hard 0/1 spikes, but
+                    // the contraction groups rounding differently than
+                    // PR3's per-step accumulation (g*k vs k additions
+                    // of g) — deterministic, NOT bit-identical to the
+                    // frozen baseline (see baselines::stbp_scalar).
+                    let mut x_sum = vec![0.0f32; batch * ni];
                     for t in 0..t_steps {
-                        tensor::matmul_nt_grads(
-                            &x_in[t * batch * n_in..(t + 1) * batch * n_in],
-                            batch,
-                            *n_in,
-                            &wb,
-                            *n_out,
-                            dlogits,
-                            &mut dx[t * batch * n_in..(t + 1) * batch * n_in],
-                            &mut dw,
-                        );
+                        let plane = &x_in[t * batch * ni..(t + 1) * batch * ni];
+                        for (a, &v) in x_sum.iter_mut().zip(plane) {
+                            *a += v;
+                        }
+                    }
+                    let mut dw = vec![0.0f32; wts.len()];
+                    let mut dx1 = vec![0.0f32; batch * ni];
+                    tensor::matmul_nt_grads_mt(
+                        &x_sum, batch, ni, wb, no, dlogits, &mut dx1, &mut dw, threads,
+                    );
+                    let mut dx = vec![0.0f32; t_steps * batch * ni];
+                    for plane in dx.chunks_mut(batch * ni) {
+                        plane.copy_from_slice(&dx1);
                     }
                     grads[li].w = dw;
                     d_spikes = dx;
                 }
                 TrainLayer::Fc { n_out, n_in, w: wts, bn } => {
-                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let (ni, no) = (*n_in, *n_out);
+                    let wb: &[f32] = if binarized { &cache.wb } else { wts };
                     let x_in = x_in_spikes.expect("fc has an input layer");
-                    if_backward(&mut d_spikes, &cache.spikes, &cache.v_pre, t_steps, batch * n_out);
+                    if_backward(&mut d_spikes, &cache.spikes, &cache.v_pre, t_steps, batch * no);
                     let n = t_steps * batch;
-                    let mut dgamma = vec![0.0f32; *n_out];
-                    let mut dbeta = vec![0.0f32; *n_out];
-                    bn.backward(&cache.bn, &mut d_spikes, n, 1, &mut dgamma, &mut dbeta);
+                    let mut dgamma = vec![0.0f32; no];
+                    let mut dbeta = vec![0.0f32; no];
+                    bn.backward(&cache.bn, &mut d_spikes, n, 1, &mut dgamma, &mut dbeta, threads);
                     let mut dw = vec![0.0f32; wts.len()];
-                    let mut dx = vec![0.0f32; n * n_in];
-                    tensor::matmul_nt_grads(
-                        x_in, n, *n_in, &wb, *n_out, &d_spikes, &mut dx, &mut dw,
+                    let mut dx = vec![0.0f32; n * ni];
+                    tensor::matmul_nt_grads_mt(
+                        x_in, n, ni, wb, no, &d_spikes, &mut dx, &mut dw, threads,
                     );
                     grads[li] = LayerGrads { w: dw, gamma: dgamma, beta: dbeta };
                     d_spikes = dx;
@@ -393,36 +436,41 @@ impl Net {
                     d_spikes = dx;
                 }
                 TrainLayer::Conv { enc, c_out, c_in, k, w: wts, bn } => {
-                    let wb = if binarized { sign_vec(wts) } else { wts.clone() };
+                    let (ci, co, kk) = (*c_in, *c_out, *k);
+                    let wb: &[f32] = if binarized { &cache.wb } else { wts };
                     let (h, w) = (cache.h, cache.w);
                     let hw = h * w;
-                    let m = batch * c_out * hw;
+                    let m = batch * co * hw;
                     if_backward(&mut d_spikes, &cache.spikes, &cache.v_pre, t_steps, m);
-                    let mut dgamma = vec![0.0f32; *c_out];
-                    let mut dbeta = vec![0.0f32; *c_out];
+                    let mut dgamma = vec![0.0f32; co];
+                    let mut dbeta = vec![0.0f32; co];
                     let mut dw = vec![0.0f32; wts.len()];
                     if *enc {
                         // The broadcast over T sums the per-step grads.
-                        let bf = batch * c_out * hw;
+                        let bf = batch * co * hw;
                         let mut dy = vec![0.0f32; bf];
                         for t in 0..t_steps {
                             for (d, &g) in dy.iter_mut().zip(&d_spikes[t * bf..(t + 1) * bf]) {
                                 *d += g;
                             }
                         }
-                        bn.backward(&cache.bn, &mut dy, batch, hw, &mut dgamma, &mut dbeta);
-                        let mut dx = vec![0.0f32; batch * c_in * hw];
-                        tensor::conv2d_same_grads(
-                            images, batch, *c_in, h, w, &wb, *c_out, *k, &dy, &mut dx, &mut dw,
+                        bn.backward(
+                            &cache.bn, &mut dy, batch, hw, &mut dgamma, &mut dbeta, threads,
+                        );
+                        let mut dx = vec![0.0f32; batch * ci * hw];
+                        tensor::conv2d_same_grads_mt(
+                            images, batch, ci, h, w, wb, co, kk, &dy, &mut dx, &mut dw, threads,
                         );
                         d_spikes = Vec::new(); // input image needs no gradient
                     } else {
                         let n = t_steps * batch;
                         let x_in = x_in_spikes.expect("conv has an input layer");
-                        bn.backward(&cache.bn, &mut d_spikes, n, hw, &mut dgamma, &mut dbeta);
-                        let mut dx = vec![0.0f32; n * c_in * hw];
-                        tensor::conv2d_same_grads(
-                            x_in, n, *c_in, h, w, &wb, *c_out, *k, &d_spikes, &mut dx, &mut dw,
+                        bn.backward(
+                            &cache.bn, &mut d_spikes, n, hw, &mut dgamma, &mut dbeta, threads,
+                        );
+                        let mut dx = vec![0.0f32; n * ci * hw];
+                        tensor::conv2d_same_grads_mt(
+                            x_in, n, ci, h, w, wb, co, kk, &d_spikes, &mut dx, &mut dw, threads,
                         );
                         d_spikes = dx;
                     }
@@ -446,9 +494,43 @@ pub fn if_forward(
     v_pre_out: &mut [f32],
 ) {
     assert_eq!(psums.len(), t_steps * m, "psum geometry");
+    if_forward_strided(psums, m, t_steps, m, mode, spikes, v_pre_out);
+}
+
+/// [`if_forward`] for the encoding layer's constant drive (§III-F, the
+/// trainer's twin of the golden engine's `if_fire_constant`): one
+/// `(m,)` psum plane feeds every time step, so the caller never
+/// materializes T copies.  Spikes and membranes still differ per step
+/// (the hard reset couples them through time) and are written out in
+/// full for the backward pass.
+pub fn if_forward_broadcast(
+    psum: &[f32],
+    t_steps: usize,
+    m: usize,
+    mode: SpikeMode,
+    spikes: &mut [f32],
+    v_pre_out: &mut [f32],
+) {
+    assert_eq!(psum.len(), m, "broadcast psum geometry");
+    if_forward_strided(psum, 0, t_steps, m, mode, spikes, v_pre_out);
+}
+
+/// Shared IF recurrence: step `t` reads its psums at `psums[t * stride
+/// ..][..m]` (`stride = m` per-step, `stride = 0` broadcast).
+fn if_forward_strided(
+    psums: &[f32],
+    stride: usize,
+    t_steps: usize,
+    m: usize,
+    mode: SpikeMode,
+    spikes: &mut [f32],
+    v_pre_out: &mut [f32],
+) {
+    assert_eq!(spikes.len(), t_steps * m, "spike geometry");
+    assert_eq!(v_pre_out.len(), t_steps * m, "membrane geometry");
     let mut v_res = vec![0.0f32; m];
     for t in 0..t_steps {
-        let ps = &psums[t * m..(t + 1) * m];
+        let ps = &psums[t * stride..t * stride + m];
         let sp = &mut spikes[t * m..(t + 1) * m];
         let vp = &mut v_pre_out[t * m..(t + 1) * m];
         for j in 0..m {
@@ -499,13 +581,13 @@ mod tests {
         let spec = models::micro(2);
         let net = Net::init(&spec, 7);
         let images = vec![0.5f32; 3 * spec.in_channels * spec.in_size * spec.in_size];
-        let a = net.forward(&images, 3, SpikeMode::Hard, true);
+        let a = net.forward(&images, 3, SpikeMode::Hard, true, 1);
         assert_eq!(a.logits.len(), 3 * net.classes());
-        let b = net.forward(&images, 3, SpikeMode::Hard, true);
+        let b = net.forward(&images, 3, SpikeMode::Hard, true, 1);
         assert_eq!(a.logits, b.logits);
         // different seeds give different nets
         let other = Net::init(&spec, 8);
-        let c = other.forward(&images, 3, SpikeMode::Hard, true);
+        let c = other.forward(&images, 3, SpikeMode::Hard, true, 1);
         assert_ne!(a.logits, c.logits);
     }
 
@@ -516,7 +598,7 @@ mod tests {
         let images: Vec<f32> = (0..spec.in_size * spec.in_size)
             .map(|v| (v % 256) as f32 / 255.0)
             .collect();
-        let fwd = net.forward(&images, 1, SpikeMode::Hard, true);
+        let fwd = net.forward(&images, 1, SpikeMode::Hard, true, 1);
         for cache in &fwd.caches {
             for &s in &cache.spikes {
                 assert!(s == 0.0 || s == 1.0, "non-binary hard spike {s}");
@@ -539,14 +621,37 @@ mod tests {
     }
 
     #[test]
+    fn broadcast_if_matches_materialized_psums() {
+        // The broadcast recurrence must equal if_forward fed T copies.
+        let m = 5;
+        let t_steps = 4;
+        let mut rng = crate::util::rng::SplitMix64::new(13);
+        let plane: Vec<f32> = (0..m).map(|_| (rng.next_f64() * 3.0 - 1.0) as f32).collect();
+        let mut copies = vec![0.0f32; t_steps * m];
+        for chunk in copies.chunks_mut(m) {
+            chunk.copy_from_slice(&plane);
+        }
+        for mode in [SpikeMode::Hard, SpikeMode::Soft] {
+            let mut s_a = vec![0.0; t_steps * m];
+            let mut v_a = vec![0.0; t_steps * m];
+            let mut s_b = vec![0.0; t_steps * m];
+            let mut v_b = vec![0.0; t_steps * m];
+            if_forward(&copies, t_steps, m, mode, &mut s_a, &mut v_a);
+            if_forward_broadcast(&plane, t_steps, m, mode, &mut s_b, &mut v_b);
+            assert_eq!(s_a, s_b);
+            assert_eq!(v_a, v_b);
+        }
+    }
+
+    #[test]
     fn backward_produces_grads_for_every_weight_layer() {
         let spec = models::micro(2);
         let net = Net::init(&spec, 3);
         let b = 2;
         let images = vec![0.3f32; b * spec.in_size * spec.in_size];
-        let fwd = net.forward(&images, b, SpikeMode::Hard, true);
+        let fwd = net.forward(&images, b, SpikeMode::Hard, true, 1);
         let dlogits = vec![0.1f32; b * net.classes()];
-        let grads = net.backward(&fwd, &images, &dlogits, true);
+        let grads = net.backward(&fwd, &images, &dlogits, true, 1);
         assert_eq!(grads.len(), net.layers.len());
         for (ly, g) in net.layers.iter().zip(&grads) {
             match ly {
@@ -561,6 +666,26 @@ mod tests {
                 TrainLayer::Readout { w, .. } => assert_eq!(g.w.len(), w.len()),
                 TrainLayer::MaxPool => assert!(g.w.is_empty()),
             }
+        }
+    }
+
+    #[test]
+    fn forward_and_backward_identical_across_thread_counts() {
+        let spec = models::micro(3);
+        let net = Net::init(&spec, 19);
+        let b = 5;
+        let plane = spec.in_size * spec.in_size;
+        let nc = net.classes();
+        let images: Vec<f32> = (0..b * plane).map(|v| (v % 97) as f32 / 96.0).collect();
+        let dlogits: Vec<f32> = (0..b * nc).map(|v| (v as f32 - 3.0) * 0.01).collect();
+        let run = |threads: usize| {
+            let fwd = net.forward(&images, b, SpikeMode::Hard, true, threads);
+            let grads = net.backward(&fwd, &images, &dlogits, true, threads);
+            (fwd.logits, grads)
+        };
+        let base = run(1);
+        for t in [2, 4, 7] {
+            assert_eq!(base, run(t), "training math must not depend on threads={t}");
         }
     }
 }

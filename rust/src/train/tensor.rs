@@ -1,16 +1,39 @@
 //! Minimal dense f32 kernels for training — just the ops STBP needs.
 //!
 //! Everything operates on flat `&[f32]` buffers with explicit dimensions
-//! (the same convention as `snn::conv`), single-threaded and in a fixed
-//! iteration order so training runs are byte-reproducible per seed.
-//! Reductions accumulate in f64: cheap at these sizes and it keeps batch
-//! statistics stable regardless of batch layout.
+//! (the same convention as `snn::conv`) in a fixed iteration order so
+//! training runs are byte-reproducible per seed.  Reductions accumulate
+//! in f64: cheap at these sizes and it keeps batch statistics stable
+//! regardless of batch layout.
+//!
+//! Since PR4 the scalar kernels block their inner loops over output
+//! channels (each input value loaded once feeds [`CONV_BLOCK`] /
+//! [`MM_BLOCK`] accumulators) — **bit-exactly**: every output element's
+//! reduction still runs in the original order, only independent output
+//! elements are interleaved.  The `_mt` variants shard rows over
+//! [`crate::train::par`]'s fixed, thread-count-independent partition;
+//! the weight-gradient reduction uses per-shard buffers summed in fixed
+//! shard order, so results are identical for every thread count.
+
+use crate::train::par;
+
+/// Output channels swept together per input-plane pass of
+/// [`conv2d_same`].
+pub const CONV_BLOCK: usize = 4;
+
+/// Output rows swept together per x-row pass of [`matmul_nt`].
+pub const MM_BLOCK: usize = 4;
 
 /// SAME-padded stride-1 2-D convolution.
 ///
 /// `x` is `(n, c_in, h, w)`, `w` is `(c_out, c_in, k, k)` (both row-major);
 /// the result lands in `out` as `(n, c_out, h, w)`.  Matches
 /// `python/compile/kernels/ref.py::conv2d_binary` (pad `k/2` on each side).
+///
+/// Blocked over [`CONV_BLOCK`] output channels so each input pixel read
+/// feeds several accumulations; per output element the `(c_in, kh, kw)`
+/// summation order is unchanged, so results are bit-identical to the
+/// unblocked loop (asserted against `baselines::stbp_scalar`).
 pub fn conv2d_same(
     x: &[f32],
     n: usize,
@@ -31,31 +54,68 @@ pub fn conv2d_same(
     for img in 0..n {
         let xin = &x[img * c_in * hw..(img + 1) * c_in * hw];
         let xout = &mut out[img * c_out * hw..(img + 1) * c_out * hw];
-        for o in 0..c_out {
+        let mut o0 = 0;
+        while o0 < c_out {
+            let ob = (c_out - o0).min(CONV_BLOCK);
             for i in 0..c_in {
                 let plane = &xin[i * hw..(i + 1) * hw];
                 for kh in 0..k {
                     for kw in 0..k {
-                        let wv = wts[((o * c_in + i) * k + kh) * k + kw];
                         let dy = kh as isize - pad;
                         let dx = kw as isize - pad;
                         let y0 = (-dy).max(0) as usize;
                         let y1 = (h as isize - dy).clamp(0, h as isize) as usize;
                         let x0 = (-dx).max(0) as usize;
                         let x1 = (w as isize - dx).clamp(0, w as isize) as usize;
+                        let mut wv = [0.0f32; CONV_BLOCK];
+                        for (bo, wvb) in wv.iter_mut().enumerate().take(ob) {
+                            *wvb = wts[((o0 + bo) * c_in + i) * k * k + kh * k + kw];
+                        }
                         for y in y0..y1 {
                             let src = ((y as isize + dy) as usize) * w;
-                            let dst = o * hw + y * w;
+                            let row = y * w;
                             for xx in x0..x1 {
-                                xout[dst + xx] +=
-                                    wv * plane[src + (xx as isize + dx) as usize];
+                                let pv = plane[src + (xx as isize + dx) as usize];
+                                for bo in 0..ob {
+                                    xout[(o0 + bo) * hw + row + xx] += wv[bo] * pv;
+                                }
                             }
                         }
                     }
                 }
             }
+            o0 += ob;
         }
     }
+}
+
+/// [`conv2d_same`] with rows (images) sharded over `threads` scoped
+/// worker threads.  Images are independent, so any schedule of the
+/// fixed shard partition produces bit-identical output.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_mt(
+    x: &[f32],
+    n: usize,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    wts: &[f32],
+    c_out: usize,
+    k: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(x.len(), n * c_in * h * w, "conv input geometry");
+    assert_eq!(out.len(), n * c_out * h * w, "conv output geometry");
+    let (in_row, out_row) = (c_in * h * w, c_out * h * w);
+    let threads = par::threads_for(n * out_row * c_in * k * k, threads);
+    let ranges = par::shard_ranges(n, par::SHARDS);
+    let outs = par::split_rows(out, &ranges, out_row);
+    let ctxs: Vec<_> = ranges.iter().cloned().zip(outs).collect();
+    par::run(threads, ctxs, |_, (r, o)| {
+        let rows = r.end - r.start;
+        conv2d_same(&x[r.start * in_row..r.end * in_row], rows, c_in, h, w, wts, c_out, k, o);
+    });
 }
 
 /// Gradients of [`conv2d_same`]: `dy` is `(n, c_out, h, w)`; accumulates
@@ -117,8 +177,74 @@ pub fn conv2d_same_grads(
     }
 }
 
+/// [`conv2d_same_grads`] with rows sharded over `threads` workers.  The
+/// input gradient is row-disjoint (each shard zeroes and fills its own
+/// rows); the weight gradient is reduced from per-shard buffers in
+/// fixed shard order, so every thread count produces identical bytes.
+/// Like the scalar kernel, `dx` and `dw` are (re)computed from zero.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_grads_mt(
+    x: &[f32],
+    n: usize,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    wts: &[f32],
+    c_out: usize,
+    k: usize,
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    threads: usize,
+) {
+    let (in_row, out_row) = (c_in * h * w, c_out * h * w);
+    assert_eq!(x.len(), n * in_row, "conv-grad input geometry");
+    assert_eq!(dy.len(), n * out_row, "conv-grad dy geometry");
+    assert_eq!(dx.len(), n * in_row, "conv-grad dx geometry");
+    assert_eq!(dw.len(), c_out * c_in * k * k, "conv-grad dw geometry");
+    let threads = par::threads_for(2 * n * out_row * c_in * k * k, threads);
+    let ranges = par::shard_ranges(n, par::SHARDS);
+    let mut parts = vec![0.0f32; ranges.len() * dw.len()];
+    {
+        let dxs = par::split_rows(dx, &ranges, in_row);
+        let ctxs: Vec<_> = ranges
+            .iter()
+            .cloned()
+            .zip(dxs)
+            .zip(parts.chunks_mut(dw.len().max(1)))
+            .map(|((r, dxc), dwc)| (r, dxc, dwc))
+            .collect();
+        par::run(threads, ctxs, |_, (r, dxc, dwc)| {
+            conv2d_same_grads(
+                &x[r.start * in_row..r.end * in_row],
+                r.end - r.start,
+                c_in,
+                h,
+                w,
+                wts,
+                c_out,
+                k,
+                &dy[r.start * out_row..r.end * out_row],
+                dxc,
+                dwc,
+            );
+        });
+    }
+    dw.fill(0.0);
+    for part in parts.chunks(dw.len().max(1)) {
+        for (d, &p) in dw.iter_mut().zip(part) {
+            *d += p;
+        }
+    }
+}
+
 /// Dense layer forward: `x` is `(n, n_in)`, `wts` is `(n_out, n_in)`;
 /// writes `out = x @ wts^T` as `(n, n_out)`.
+///
+/// Blocked over [`MM_BLOCK`] weight rows per x-row sweep: each `x` load
+/// feeds four independent accumulator chains.  Each output's dot
+/// product still sums over `j` in order — bit-identical to the
+/// unblocked loop.
 pub fn matmul_nt(x: &[f32], n: usize, n_in: usize, wts: &[f32], n_out: usize, out: &mut [f32]) {
     assert_eq!(x.len(), n * n_in, "matmul input geometry");
     assert_eq!(wts.len(), n_out * n_in, "matmul weight geometry");
@@ -126,19 +252,66 @@ pub fn matmul_nt(x: &[f32], n: usize, n_in: usize, wts: &[f32], n_out: usize, ou
     for r in 0..n {
         let xi = &x[r * n_in..(r + 1) * n_in];
         let oi = &mut out[r * n_out..(r + 1) * n_out];
-        for (o, ov) in oi.iter_mut().enumerate() {
+        let mut o = 0;
+        while o + MM_BLOCK <= n_out {
+            let w0 = &wts[o * n_in..(o + 1) * n_in];
+            let w1 = &wts[(o + 1) * n_in..(o + 2) * n_in];
+            let w2 = &wts[(o + 2) * n_in..(o + 3) * n_in];
+            let w3 = &wts[(o + 3) * n_in..(o + 4) * n_in];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for (j, &xv) in xi.iter().enumerate() {
+                a0 += xv * w0[j];
+                a1 += xv * w1[j];
+                a2 += xv * w2[j];
+                a3 += xv * w3[j];
+            }
+            oi[o] = a0;
+            oi[o + 1] = a1;
+            oi[o + 2] = a2;
+            oi[o + 3] = a3;
+            o += MM_BLOCK;
+        }
+        while o < n_out {
             let wr = &wts[o * n_in..(o + 1) * n_in];
             let mut acc = 0.0f32;
             for (a, b) in xi.iter().zip(wr) {
                 acc += a * b;
             }
-            *ov = acc;
+            oi[o] = acc;
+            o += 1;
         }
     }
 }
 
+/// [`matmul_nt`] with rows sharded over `threads` workers.  Rows are
+/// independent — bit-identical for any thread count.
+pub fn matmul_nt_mt(
+    x: &[f32],
+    n: usize,
+    n_in: usize,
+    wts: &[f32],
+    n_out: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(x.len(), n * n_in, "matmul input geometry");
+    assert_eq!(out.len(), n * n_out, "matmul output geometry");
+    let threads = par::threads_for(n * n_in * n_out, threads);
+    let ranges = par::shard_ranges(n, par::SHARDS);
+    let outs = par::split_rows(out, &ranges, n_out);
+    let ctxs: Vec<_> = ranges.iter().cloned().zip(outs).collect();
+    par::run(threads, ctxs, |_, (r, o)| {
+        matmul_nt(&x[r.start * n_in..r.end * n_in], r.end - r.start, n_in, wts, n_out, o);
+    });
+}
+
 /// Gradients of [`matmul_nt`]: accumulates `dx = dy @ wts` (zeroed here)
-/// and `dw += dy^T @ x` (NOT zeroed — fc layers sum over time steps).
+/// and `dw += dy^T @ x` (NOT zeroed — callers may accumulate).
+///
+/// Blocked over pairs of outputs sharing each `x`/`dx` access; `dx[j]`
+/// still receives the pair's contributions sequentially (`o` before
+/// `o + 1`) and zero-gradient outputs are skipped exactly as before, so
+/// results are bit-identical to the unblocked loop.
 pub fn matmul_nt_grads(
     x: &[f32],
     n: usize,
@@ -154,16 +327,90 @@ pub fn matmul_nt_grads(
         let xi = &x[r * n_in..(r + 1) * n_in];
         let dyi = &dy[r * n_out..(r + 1) * n_out];
         let dxi = &mut dx[r * n_in..(r + 1) * n_in];
-        for (o, &g) in dyi.iter().enumerate() {
-            if g == 0.0 {
-                continue;
-            }
+        let single = |o: usize, g: f32, dxi: &mut [f32], dw: &mut [f32]| {
             let wr = &wts[o * n_in..(o + 1) * n_in];
             let dwr = &mut dw[o * n_in..(o + 1) * n_in];
             for j in 0..n_in {
                 dxi[j] += g * wr[j];
                 dwr[j] += g * xi[j];
             }
+        };
+        let mut o = 0;
+        while o + 2 <= n_out {
+            let (g0, g1) = (dyi[o], dyi[o + 1]);
+            match (g0 != 0.0, g1 != 0.0) {
+                (true, true) => {
+                    let w0 = &wts[o * n_in..(o + 1) * n_in];
+                    let w1 = &wts[(o + 1) * n_in..(o + 2) * n_in];
+                    let (dw0, dw1) = dw[o * n_in..(o + 2) * n_in].split_at_mut(n_in);
+                    for j in 0..n_in {
+                        let xv = xi[j];
+                        let t = dxi[j] + g0 * w0[j];
+                        dxi[j] = t + g1 * w1[j];
+                        dw0[j] += g0 * xv;
+                        dw1[j] += g1 * xv;
+                    }
+                }
+                (true, false) => single(o, g0, dxi, dw),
+                (false, true) => single(o + 1, g1, dxi, dw),
+                (false, false) => {}
+            }
+            o += 2;
+        }
+        if o < n_out && dyi[o] != 0.0 {
+            single(o, dyi[o], dxi, dw);
+        }
+    }
+}
+
+/// [`matmul_nt_grads`] with rows sharded over `threads` workers: `dx`
+/// rows are disjoint per shard, `dw` is reduced from per-shard buffers
+/// in fixed shard order (accumulate semantics preserved) — identical
+/// bytes for every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_grads_mt(
+    x: &[f32],
+    n: usize,
+    n_in: usize,
+    wts: &[f32],
+    n_out: usize,
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(x.len(), n * n_in, "matmul-grad input geometry");
+    assert_eq!(dy.len(), n * n_out, "matmul-grad dy geometry");
+    assert_eq!(dx.len(), n * n_in, "matmul-grad dx geometry");
+    assert_eq!(dw.len(), n_out * n_in, "matmul-grad dw geometry");
+    let threads = par::threads_for(2 * n * n_in * n_out, threads);
+    let ranges = par::shard_ranges(n, par::SHARDS);
+    let mut parts = vec![0.0f32; ranges.len() * dw.len()];
+    {
+        let dxs = par::split_rows(dx, &ranges, n_in);
+        let ctxs: Vec<_> = ranges
+            .iter()
+            .cloned()
+            .zip(dxs)
+            .zip(parts.chunks_mut(dw.len().max(1)))
+            .map(|((r, dxc), dwc)| (r, dxc, dwc))
+            .collect();
+        par::run(threads, ctxs, |_, (r, dxc, dwc)| {
+            matmul_nt_grads(
+                &x[r.start * n_in..r.end * n_in],
+                r.end - r.start,
+                n_in,
+                wts,
+                n_out,
+                &dy[r.start * n_out..r.end * n_out],
+                dxc,
+                dwc,
+            );
+        });
+    }
+    for part in parts.chunks(dw.len().max(1)) {
+        for (d, &p) in dw.iter_mut().zip(part) {
+            *d += p;
         }
     }
 }
@@ -337,6 +584,155 @@ mod tests {
         let mut dx = vec![0.0; 4];
         maxpool2_grads(&x, 1, 1, 2, 2, &out, &[5.0], &mut dx);
         assert_eq!(dx, vec![0.0, 5.0, 0.0, 0.0]); // first max wins
+    }
+
+    /// Unblocked per-element reference: same `(c_in, kh, kw)` summation
+    /// order as the production kernel, one output element at a time.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_naive(
+        x: &[f32],
+        n: usize,
+        ci: usize,
+        h: usize,
+        w: usize,
+        wts: &[f32],
+        co: usize,
+        k: usize,
+        out: &mut [f32],
+    ) {
+        let pad = (k / 2) as isize;
+        let hw = h * w;
+        for (idx, ov) in out.iter_mut().enumerate().take(n * co * hw) {
+            let img = idx / (co * hw);
+            let o = (idx / hw) % co;
+            let y = ((idx % hw) / w) as isize;
+            let xx = (idx % w) as isize;
+            let mut acc = 0.0f32;
+            for i in 0..ci {
+                for kh in 0..k {
+                    for kw in 0..k {
+                        let sy = y + kh as isize - pad;
+                        let sx = xx + kw as isize - pad;
+                        if sy < 0 || sy >= h as isize || sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let wv = wts[((o * ci + i) * k + kh) * k + kw];
+                        let xi = (img * ci + i) * hw + sy as usize * w + sx as usize;
+                        acc += wv * x[xi];
+                    }
+                }
+            }
+            *ov = acc;
+        }
+    }
+
+    fn draw(rng: &mut crate::util::rng::SplitMix64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn blocked_conv_is_bit_exact_vs_naive() {
+        let mut rng = crate::util::rng::SplitMix64::new(17);
+        for (n, ci, co, k, h, w) in [(2, 3, 7, 3, 5, 6), (1, 1, 4, 1, 4, 4), (3, 2, 5, 3, 3, 3)] {
+            let x = draw(&mut rng, n * ci * h * w);
+            let wts = draw(&mut rng, co * ci * k * k);
+            let mut a = vec![0.0f32; n * co * h * w];
+            let mut b = a.clone();
+            conv2d_same(&x, n, ci, h, w, &wts, co, k, &mut a);
+            conv_naive(&x, n, ci, h, w, &wts, co, k, &mut b);
+            assert_eq!(a, b, "blocked conv must match the naive order bitwise");
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_is_bit_exact_vs_naive() {
+        let mut rng = crate::util::rng::SplitMix64::new(23);
+        for (n, n_in, n_out) in [(3, 17, 9), (2, 8, 4), (1, 5, 3)] {
+            let x = draw(&mut rng, n * n_in);
+            let wts = draw(&mut rng, n_out * n_in);
+            let mut a = vec![0.0f32; n * n_out];
+            matmul_nt(&x, n, n_in, &wts, n_out, &mut a);
+            for r in 0..n {
+                for o in 0..n_out {
+                    let mut acc = 0.0f32;
+                    for j in 0..n_in {
+                        acc += x[r * n_in + j] * wts[o * n_in + j];
+                    }
+                    assert_eq!(a[r * n_out + o], acc, "row {r} out {o}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_grads_match_unblocked_order() {
+        // Reference: the pre-blocking loop (per row: skip zero grads,
+        // accumulate dx then dw output-by-output).
+        let mut rng = crate::util::rng::SplitMix64::new(29);
+        let (n, n_in, n_out) = (4, 11, 5);
+        let x = draw(&mut rng, n * n_in);
+        let wts = draw(&mut rng, n_out * n_in);
+        let mut dy = draw(&mut rng, n * n_out);
+        dy[2] = 0.0; // exercise the zero-skip paths
+        dy[7] = 0.0;
+        dy[8] = 0.0;
+        let mut dx = vec![0.0f32; n * n_in];
+        let mut dw = vec![0.0f32; n_out * n_in];
+        matmul_nt_grads(&x, n, n_in, &wts, n_out, &dy, &mut dx, &mut dw);
+        let mut dx_ref = vec![0.0f32; n * n_in];
+        let mut dw_ref = vec![0.0f32; n_out * n_in];
+        for r in 0..n {
+            for o in 0..n_out {
+                let g = dy[r * n_out + o];
+                if g == 0.0 {
+                    continue;
+                }
+                for j in 0..n_in {
+                    dx_ref[r * n_in + j] += g * wts[o * n_in + j];
+                    dw_ref[o * n_in + j] += g * x[r * n_in + j];
+                }
+            }
+        }
+        assert_eq!(dx, dx_ref);
+        assert_eq!(dw, dw_ref);
+    }
+
+    #[test]
+    fn mt_kernels_identical_for_every_thread_count() {
+        let mut rng = crate::util::rng::SplitMix64::new(31);
+        let (n, ci, co, k, h, w) = (9, 2, 5, 3, 4, 4);
+        let x = draw(&mut rng, n * ci * h * w);
+        let wts = draw(&mut rng, co * ci * k * k);
+        let dy = draw(&mut rng, n * co * h * w);
+        let run = |threads: usize| {
+            let mut out = vec![0.0f32; n * co * h * w];
+            conv2d_same_mt(&x, n, ci, h, w, &wts, co, k, &mut out, threads);
+            let mut dx = vec![0.0f32; x.len()];
+            let mut dw = vec![0.0f32; wts.len()];
+            conv2d_same_grads_mt(&x, n, ci, h, w, &wts, co, k, &dy, &mut dx, &mut dw, threads);
+            (out, dx, dw)
+        };
+        let base = run(1);
+        for t in [2, 3, 4, 8] {
+            assert_eq!(base, run(t), "conv results must not depend on threads={t}");
+        }
+
+        let (mn, m_in, m_out) = (10, 13, 6);
+        let mx = draw(&mut rng, mn * m_in);
+        let mw = draw(&mut rng, m_out * m_in);
+        let mdy = draw(&mut rng, mn * m_out);
+        let runm = |threads: usize| {
+            let mut out = vec![0.0f32; mn * m_out];
+            matmul_nt_mt(&mx, mn, m_in, &mw, m_out, &mut out, threads);
+            let mut dx = vec![0.0f32; mx.len()];
+            let mut dw = vec![0.0f32; mw.len()];
+            matmul_nt_grads_mt(&mx, mn, m_in, &mw, m_out, &mdy, &mut dx, &mut dw, threads);
+            (out, dx, dw)
+        };
+        let mbase = runm(1);
+        for t in [2, 4, 7] {
+            assert_eq!(mbase, runm(t), "matmul results must not depend on threads={t}");
+        }
     }
 
     #[test]

@@ -1,15 +1,32 @@
 //! Small statistics helpers shared by benchmarks, metrics and reports.
 
-/// Index of the maximum element (first on ties). Panics on empty input.
-pub fn argmax(xs: &[i64]) -> usize {
+/// Index of the maximum element under `gt` (first on ties).  The one
+/// argmax implementation behind [`argmax`] and [`argmax_f32`].
+fn argmax_by<T: Copy>(xs: &[T], gt: impl Fn(T, T) -> bool) -> usize {
     assert!(!xs.is_empty(), "argmax of empty slice");
     let mut best = 0;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if gt(x, xs[best]) {
             best = i;
         }
     }
     best
+}
+
+/// Index of the maximum element (first on ties). Panics on empty input.
+pub fn argmax(xs: &[i64]) -> usize {
+    argmax_by(xs, |a, b| a > b)
+}
+
+/// f32 argmax under the IEEE total order (first on ties).  NaN-safe:
+/// `>` on floats is false whenever either side is NaN, so a plain
+/// comparison loop silently returns index 0 for a NaN-led slice —
+/// `total_cmp` keeps the scan deterministic (positive NaN orders above
+/// +inf, negative NaN below -inf).  Callers that must reject diverged
+/// rows scan the whole row for non-finite values rather than just the
+/// selected element (see `train::count_correct`).
+pub fn argmax_f32(xs: &[f32]) -> usize {
+    argmax_by(xs, |a, b| a.total_cmp(&b).is_gt())
 }
 
 /// Arithmetic mean of f64 samples (0.0 for empty input).
@@ -90,6 +107,19 @@ mod tests {
     fn argmax_ties_prefer_first() {
         assert_eq!(argmax(&[1, 5, 5, 2]), 1);
         assert_eq!(argmax(&[-3]), 0);
+        assert_eq!(argmax_f32(&[1.0, 5.0, 5.0, 2.0]), 1);
+        assert_eq!(argmax_f32(&[-3.0]), 0);
+    }
+
+    #[test]
+    fn argmax_f32_is_nan_safe() {
+        // The old `>` loop returned 0 whenever xs[0] was NaN; under the
+        // total order the true maximum of the finite tail still loses
+        // only to NaN itself, deterministically.
+        assert_eq!(argmax_f32(&[f32::NAN, 1.0, 2.0]), 0, "NaN orders above +inf");
+        assert_eq!(argmax_f32(&[1.0, f32::NAN, 2.0]), 1);
+        assert_eq!(argmax_f32(&[1.0, 3.0, 2.0]), 1, "finite path unchanged");
+        assert_eq!(argmax_f32(&[f32::NEG_INFINITY, f32::INFINITY]), 1);
     }
 
     #[test]

@@ -1,0 +1,126 @@
+//! PR4 trainer acceptance: the rebuilt hot path against the frozen PR3
+//! scalar baseline, and byte-determinism at every `--threads`.
+//!
+//! * the PR4 forward (blocked kernels, broadcast enc psums, cached
+//!   binarized weights, sharded BN) is **bit-exact** against
+//!   `baselines::stbp_scalar` — logit for logit, spike for spike;
+//! * forward + backward produce identical bytes for every thread count
+//!   (fixed shard partition + fixed-order gradient reductions);
+//! * an end-to-end `train()` exports byte-identical artifacts at
+//!   `--threads 1` and `--threads 4` (the CLI-level twin runs in CI and
+//!   `cmp`s the release binary's artifacts).
+
+use vsa::baselines::stbp_scalar;
+use vsa::config::models;
+use vsa::data::synth;
+use vsa::train::{self, tensor, Net, SpikeMode};
+
+/// Load a synthetic batch for `spec` as (images/255, labels).
+fn batch_for(spec: &models::ModelSpec, seed: u64, count: usize) -> (Vec<f32>, Vec<usize>) {
+    let samples = synth::batch(seed, 0, count, spec.in_channels, spec.in_size);
+    let plane = spec.in_channels * spec.in_size * spec.in_size;
+    let mut images = vec![0.0f32; count * plane];
+    let mut labels = vec![0usize; count];
+    for (r, s) in samples.iter().enumerate() {
+        for (dst, &px) in images[r * plane..(r + 1) * plane].iter_mut().zip(&s.image) {
+            *dst = px as f32 / 255.0;
+        }
+        labels[r] = s.label;
+    }
+    (images, labels)
+}
+
+/// The PR4 forward must reproduce the frozen PR3 scalar forward bit for
+/// bit: the kernel blocking only interleaves independent outputs, the
+/// broadcast-psum encoding IF reads the same values the T copies held,
+/// and the cached binarized weights are the same `sign_vec` the
+/// baseline recomputes.  Checked on specs covering every layer kind, at
+/// several thread counts.
+#[test]
+fn forward_is_bit_exact_against_frozen_pr3_scalar() {
+    for (spec, batch) in [(models::tiny(3), 4), (models::micro(4), 6)] {
+        let net = Net::init(&spec, 23);
+        let (images, _) = batch_for(&spec, 23, batch);
+        let frozen = stbp_scalar::forward(&net, &images, batch);
+        for threads in [1usize, 2, 4] {
+            let cur = net.forward(&images, batch, SpikeMode::Hard, true, threads);
+            assert_eq!(
+                cur.logits, frozen.logits,
+                "{} logits diverged from the PR3 baseline (threads={threads})",
+                spec.name
+            );
+            // Every layer's spike train and membrane record, bit for bit.
+            for (li, fc) in frozen.caches.iter().enumerate() {
+                let (spikes, v_pre) = cur.layer_cache(li);
+                assert_eq!(spikes, &fc.spikes[..], "{} layer {li} spikes", spec.name);
+                assert_eq!(v_pre, &fc.v_pre[..], "{} layer {li} membranes", spec.name);
+            }
+        }
+    }
+}
+
+/// Gradients are byte-identical for every thread count: the shard
+/// partition is fixed and every cross-shard reduction (conv/fc weight
+/// gradients, BN statistics) runs in fixed shard order.
+#[test]
+fn backward_grads_identical_across_thread_counts() {
+    let spec = models::tiny(3);
+    let net = Net::init(&spec, 31);
+    let batch = 5;
+    let (images, labels) = batch_for(&spec, 31, batch);
+    let classes = net.classes();
+    let run = |threads: usize| {
+        let fwd = net.forward(&images, batch, SpikeMode::Hard, true, threads);
+        let mut dlogits = vec![0.0f32; batch * classes];
+        tensor::softmax_ce(
+            &fwd.logits,
+            batch,
+            classes,
+            &labels,
+            spec.num_steps as f32,
+            &mut dlogits,
+        );
+        (fwd.logits.clone(), net.backward(&fwd, &images, &dlogits, true, threads))
+    };
+    let base = run(1);
+    for threads in [2usize, 3, 4, 8] {
+        assert_eq!(base, run(threads), "grads must not depend on threads={threads}");
+    }
+}
+
+/// End-to-end: multi-epoch training exports byte-identical artifacts at
+/// 1, 3 and 4 threads (the in-process half of the CI `cmp` job).
+#[test]
+fn trained_artifact_bytes_independent_of_threads() {
+    let base_cfg = train::TrainConfig {
+        model: "micro".into(),
+        num_steps: 3,
+        epochs: 2,
+        batches_per_epoch: 4,
+        batch: 10,
+        seed: 13,
+        log_every: 0,
+        ..train::TrainConfig::default()
+    };
+    let reference = {
+        let cfg = train::TrainConfig { threads: 1, ..base_cfg.clone() };
+        train::deploy(&train::train(&cfg).unwrap().net).to_bytes()
+    };
+    for threads in [3usize, 4] {
+        let cfg = train::TrainConfig { threads, ..base_cfg.clone() };
+        let bytes = train::deploy(&train::train(&cfg).unwrap().net).to_bytes();
+        assert_eq!(reference, bytes, "artifact changed at --threads {threads}");
+    }
+}
+
+/// The NaN-safety fix end to end: a forward whose logits are poisoned
+/// to NaN must report zero correct rows instead of crediting label 0.
+#[test]
+fn diverged_logits_never_count_as_correct() {
+    let logits = vec![f32::NAN; 4 * 10];
+    let labels: Vec<usize> = (0..4).collect();
+    assert_eq!(train::count_correct(&logits, 10, &labels), 0);
+    // The old bug: argmax always 0, so label 0 rows counted.  Guard the
+    // specific shape too.
+    assert_eq!(train::count_correct(&logits[..10], 10, &[0]), 0);
+}

@@ -38,7 +38,7 @@ fn batch_for(spec: &ModelSpec, seed: u64, start: u64, count: usize) -> (Vec<f32>
 }
 
 fn loss_of(net: &Net, images: &[f32], batch: usize, labels: &[usize]) -> f32 {
-    let fwd = net.forward(images, batch, SpikeMode::Soft, false);
+    let fwd = net.forward(images, batch, SpikeMode::Soft, false, 1);
     let classes = net.classes();
     let mut dlogits = vec![0.0f32; batch * classes];
     tensor::softmax_ce(
@@ -78,7 +78,7 @@ fn stbp_gradients_match_finite_differences() {
     let batch = 8;
     let (images, labels) = batch_for(&spec, 11, 0, batch);
 
-    let fwd = net.forward(&images, batch, SpikeMode::Soft, false);
+    let fwd = net.forward(&images, batch, SpikeMode::Soft, false, 1);
     let classes = net.classes();
     let mut dlogits = vec![0.0f32; batch * classes];
     tensor::softmax_ce(
@@ -89,7 +89,7 @@ fn stbp_gradients_match_finite_differences() {
         spec.num_steps as f32,
         &mut dlogits,
     );
-    let grads = net.backward(&fwd, &images, &dlogits, false);
+    let grads = net.backward(&fwd, &images, &dlogits, false, 1);
 
     let eps = 3e-3f32;
     let mut rng = SplitMix64::new(1);
@@ -148,7 +148,7 @@ fn overfits_one_batch_within_50_steps() {
     let mut dlogits = vec![0.0f32; batch * classes];
     let mut reached = None;
     for step in 0..50 {
-        let fwd = net.forward(&images, batch, SpikeMode::Hard, true);
+        let fwd = net.forward(&images, batch, SpikeMode::Hard, true, 1);
         tensor::softmax_ce(
             &fwd.logits,
             batch,
@@ -166,7 +166,7 @@ fn overfits_one_batch_within_50_steps() {
             reached = Some(step);
             break;
         }
-        let grads = net.backward(&fwd, &images, &dlogits, true);
+        let grads = net.backward(&fwd, &images, &dlogits, true, 1);
         opt.step(&mut net, &grads, 0.1);
         net.apply_bn_ema(&fwd);
     }
