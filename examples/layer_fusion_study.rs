@@ -17,6 +17,13 @@ use vsa::snn::Network;
 
 fn main() -> anyhow::Result<()> {
     println!("{:<10} {:>14} {:>14} {:>9}", "model", "no-fusion KB", "fusion KB", "saved");
+    // One chip per fusion setting, reused across the model sweep (the
+    // PR5 packed-model cache makes repeat runs pack-free).
+    let chip_on = Chip::new(HwConfig::default(), SimMode::Fast);
+    let chip_off = Chip::new(
+        HwConfig { layer_fusion: false, ..HwConfig::default() },
+        SimMode::Fast,
+    );
     for name in ["tiny", "mnist", "cifar10"] {
         let path = match name {
             "tiny" => "artifacts/tiny_t4.vsaw",
@@ -26,12 +33,8 @@ fn main() -> anyhow::Result<()> {
         let net = Network::from_vsaw_file(path)?;
         let img = &synth::for_model(name, 3, 0, 1)[0].image;
 
-        let on = Chip::new(HwConfig::default(), SimMode::Fast).run(&net.model, img);
-        let off = Chip::new(
-            HwConfig { layer_fusion: false, ..HwConfig::default() },
-            SimMode::Fast,
-        )
-        .run(&net.model, img);
+        let on = chip_on.run(&net.model, img);
+        let off = chip_off.run(&net.model, img);
         let on_kb = on.dram.total() as f64 / 1024.0;
         let off_kb = off.dram.total() as f64 / 1024.0;
         println!(

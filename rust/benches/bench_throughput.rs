@@ -9,7 +9,10 @@
 //! images/sec for the golden and chip-sim engines in `BENCH_PR1.json`.
 //! The PR2 section additionally sweeps the design space (`vsa::dse`),
 //! times the chip at the Pareto-best configuration, and appends the rows
-//! to `BENCH_PR2.json`.
+//! to `BENCH_PR2.json`.  The PR5 section does for the chip simulator what
+//! PR1 did for the golden engine: stepwise (frozen in
+//! `baselines::chip_stepwise`) vs time-batched fast mode, reports
+//! asserted field-identical in-run, written to `BENCH_PR5.json`.
 //!
 //! Run: `cargo bench --bench bench_throughput` (add `-- --quick` for the
 //! CI smoke subset).
@@ -24,9 +27,11 @@ use harness::{bench, quick_mode, section, JsonReport};
 /// BENCH_PR2.json appends the DSE rows — the cross-PR trajectory file.
 const REPORT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR1.json");
 const REPORT2_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR2.json");
+const REPORT5_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR5.json");
 use std::time::Duration;
 use vsa::arch::schedule::{LayerPlan, PlanKind};
 use vsa::arch::{Chip, SimMode};
+use vsa::baselines::chip_stepwise::StepwiseChip;
 use vsa::baselines::golden_stepwise::StepwiseGolden;
 use vsa::baselines::spinalflow::{self, SpinalFlowConfig};
 use vsa::config::{models, HwConfig};
@@ -133,6 +138,80 @@ fn chip_sim_throughput(report: &mut JsonReport, quick: bool) {
     }
 }
 
+/// Chip simulator fast mode before vs after temporal batching (PR5
+/// tentpole), measured in the same run on synthesized Table-I models.
+/// The per-step engine is frozen in `baselines::chip_stepwise`; the live
+/// fast mode packs once per model (cached on the `Chip`) and drives all
+/// T steps through the shared time-batched kernels.  Reports are asserted
+/// bit-identical (logits + every headline counter) before timing.
+fn chip_before_after(report: &mut JsonReport, quick: bool) {
+    section("chip sim fast mode: time-batched vs per-step (PR5 tentpole)");
+    let cases: &[(&str, usize, usize, usize)] = if quick {
+        // (model, T, images, timing iters)
+        &[("tiny", 4, 4, 3), ("mnist", 8, 1, 2)]
+    } else {
+        &[("tiny", 4, 8, 10), ("mnist", 8, 4, 4)]
+    };
+    for &(name, t, n_images, iters) in cases {
+        let spec = models::by_name(name, t).expect("preset exists");
+        let model = DeployedModel::synthesize(&spec, 7);
+        let images: Vec<Vec<u8>> = synth::for_model(name, 3, 0, n_images)
+            .into_iter()
+            .map(|s| s.image)
+            .collect();
+        let chip = Chip::new(HwConfig::default(), SimMode::Fast);
+        let stepwise = StepwiseChip::new(HwConfig::default());
+
+        // Bit-exactness first: the refactor must not move a single
+        // counter, spike count or logit.
+        for img in &images {
+            let a = chip.run(&model, img);
+            let b = stepwise.run(&model, img);
+            assert_eq!(a.logits, b.logits, "{name}: logits diverge");
+            assert_eq!(a.cycles, b.cycles, "{name}: cycles diverge");
+            assert_eq!(a.pe_ops, b.pe_ops, "{name}: pe_ops diverge");
+            assert_eq!(a.dram.total(), b.dram.total(), "{name}: dram diverges");
+            assert_eq!(a.sram.total(), b.sram.total(), "{name}: sram diverges");
+        }
+        assert_eq!(chip.pack_count(), 1, "{name}: batch loop must pack once");
+
+        let t_base = bench(&format!("{name}: per-step chip sim (pre-refactor)"), 1, iters, || {
+            for img in &images {
+                std::hint::black_box(stepwise.run(&model, img));
+            }
+        });
+        let t_new = bench(&format!("{name}: time-batched chip sim (this PR)"), 1, iters, || {
+            for img in &images {
+                std::hint::black_box(chip.run(&model, img));
+            }
+        });
+        let ips_base = n_images as f64 / (t_base.mean_ms / 1e3);
+        let ips_new = n_images as f64 / (t_new.mean_ms / 1e3);
+        let speedup = ips_new / ips_base;
+        println!(
+            "  {name}: {ips_base:.1} -> {ips_new:.1} images/sec ({speedup:.2}x, \
+             reports bit-exact)"
+        );
+        report.throughput(
+            "chip-stepwise",
+            name,
+            ips_base,
+            "pre-refactor per-timestep fast mode (baselines::chip_stepwise)",
+        );
+        report.throughput(
+            "chip-batched",
+            name,
+            ips_new,
+            "time-batched fast mode, packed model cached per Chip (this PR)",
+        );
+        report.ratio(
+            &format!("{name}_chip_speedup"),
+            speedup,
+            "chip sim stepwise vs time-batched, same run, reports bit-exact",
+        );
+    }
+}
+
 /// Chip throughput at the DSE-selected best configuration (highest-
 /// throughput Pareto point of the mnist sweep) next to the published
 /// design point — the start of the cross-PR images/sec trajectory the
@@ -204,6 +283,11 @@ fn main() {
 
     golden_before_after(&mut report, quick);
     chip_sim_throughput(&mut report, quick);
+
+    // PR5: chip stepwise-vs-batched rows get their own trajectory file.
+    let mut report5 = JsonReport::new();
+    chip_before_after(&mut report5, quick);
+    report5.write(REPORT5_PATH);
 
     section("vectorwise utilization across layer geometries (Fig. 5/6 claim)");
     println!(

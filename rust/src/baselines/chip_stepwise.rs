@@ -1,0 +1,206 @@
+//! The pre-refactor per-time-step chip fast mode, frozen as a baseline.
+//!
+//! This is the `SimMode::Fast` datapath [`crate::arch::Chip`] shipped with
+//! before the temporal-batching rewrite (PR5): every layer re-packs its
+//! weights per image (`PackedConv::pack` / `PackedFc::pack` inside
+//! `run_layer`), spiking layers convolve one time step at a time (each
+//! step re-walks the whole weight set — the per-step re-fetch cost the
+//! paper's tick batching, §III-A, exists to remove), and psums /
+//! fired-flags / spike maps are freshly allocated `Vec`s each step.  The
+//! timing, SRAM and DRAM counters are charged by the identical schedule
+//! walk as the live simulator, so a [`RunReport`] from this engine must be
+//! field-for-field equal to one from the time-batched fast mode.
+//!
+//! It is kept (a) as the *measured baseline* for `bench_throughput`'s
+//! chip before/after rows (`BENCH_PR5.json`) and (b) as the in-test
+//! oracle of `rust/tests/chip_batched.rs`.
+//!
+//! Do not optimize this module; its value is being the fixed reference
+//! point.
+
+use crate::arch::chip::{LayerReport, RunReport};
+use crate::arch::dram::Dram;
+use crate::arch::fusion::{plan_fusion, roles};
+use crate::arch::if_unit::IfUnit;
+use crate::arch::schedule::{layer_dram, layer_sram, plan_model, LayerPlan, PlanKind, SramAccesses};
+use crate::config::HwConfig;
+use crate::snn::conv::{conv_multibit, PackedConv, PackedFc};
+use crate::snn::params::{DeployedModel, Layer};
+use crate::snn::spikemap::SpikeMap;
+
+/// The pre-refactor per-step chip fast mode.
+pub struct StepwiseChip {
+    pub hw: HwConfig,
+}
+
+impl StepwiseChip {
+    /// New stepwise chip at the given config (fast fidelity only).
+    pub fn new(hw: HwConfig) -> Self {
+        Self { hw }
+    }
+
+    /// Run one inference.  `image` is the raw u8 CHW input.
+    pub fn run(&self, model: &DeployedModel, image: &[u8]) -> RunReport {
+        let plans = plan_model(model);
+        let groups = plan_fusion(&plans, &self.hw);
+        let t_steps = model.num_steps;
+
+        let mut dram = Dram::default();
+        let mut sram = SramAccesses::default();
+        let mut layer_reports = Vec::with_capacity(plans.len());
+        let mut cycles_total = 0u64;
+        let mut pe_ops_total = 0u64;
+
+        // Inter-layer spike trains (tick batching: the full T-step train of
+        // a layer is produced before the next layer starts).
+        let mut spikes: Vec<SpikeMap> = Vec::new();
+        let mut logits = vec![0i64; 10];
+
+        for (idx, plan) in plans.iter().enumerate() {
+            let (fused_in, fused_out) = roles(&groups, idx);
+            layer_dram(plan, t_steps, fused_in, fused_out, true, &mut dram);
+            let acc = layer_sram(plan, &self.hw, t_steps);
+            sram.add(&acc);
+            let cycles = plan.cycles(&self.hw, t_steps);
+            cycles_total += cycles;
+            pe_ops_total += plan.pe_ops(&self.hw, t_steps);
+
+            let layer = &model.layers[plan.model_index];
+            let (new_spikes, fired, membrane_accesses, layer_logits) =
+                Self::run_layer(plan, layer, image, &spikes, t_steps);
+            if let Some(l) = layer_logits {
+                logits = l;
+            }
+            spikes = new_spikes;
+
+            layer_reports.push(LayerReport {
+                kind: plan.kind,
+                cycles,
+                utilization: plan.utilization(&self.hw, t_steps),
+                spikes_emitted: fired,
+                membrane_accesses,
+            });
+        }
+
+        let freq_hz = self.hw.freq_mhz * 1e6;
+        let latency_us = cycles_total as f64 / freq_hz * 1e6;
+        let gops = (2.0 * pe_ops_total as f64) / (cycles_total as f64 / freq_hz) / 1e9;
+        let utilization =
+            pe_ops_total as f64 / (cycles_total as f64 * self.hw.total_pes() as f64);
+
+        RunReport {
+            logits,
+            cycles: cycles_total,
+            layers: layer_reports,
+            dram,
+            sram,
+            pe_ops: pe_ops_total,
+            latency_us,
+            gops,
+            utilization,
+        }
+    }
+
+    /// Execute one compute layer over all time steps (the frozen per-step
+    /// fast datapath).  Returns (output spike train, spikes fired,
+    /// membrane accesses, logits if this was the readout).
+    #[allow(clippy::type_complexity)]
+    fn run_layer(
+        plan: &LayerPlan,
+        layer: &Layer,
+        image: &[u8],
+        spikes_in: &[SpikeMap],
+        t_steps: usize,
+    ) -> (Vec<SpikeMap>, u64, u64, Option<Vec<i64>>) {
+        match (plan.kind, layer) {
+            (PlanKind::EncConv, Layer::Conv { c_out, c_in, k, w, bias, theta, .. }) => {
+                let psum = conv_multibit(image, *c_in, plan.h, plan.w, w, *c_out, *k);
+                let mut ifu = IfUnit::new(*c_out, plan.h * plan.w, bias, theta);
+                let mut train = Vec::with_capacity(t_steps);
+                for _ in 0..t_steps {
+                    let fired = ifu.step(&psum);
+                    train.push(plane_to_map(&fired, *c_out, plan.h, plan.w));
+                }
+                let out = maybe_pool(train, plan.pooled);
+                let fired_total = ifu.fired;
+                let acc = ifu.accesses;
+                (out, fired_total, acc, None)
+            }
+            (PlanKind::Conv, Layer::Conv { c_out, c_in, k, w, bias, theta, .. }) => {
+                let packed = PackedConv::pack(*c_out, *c_in, *k, w);
+                let mut ifu = IfUnit::new(*c_out, plan.h * plan.w, bias, theta);
+                let mut train = Vec::with_capacity(t_steps);
+                for s in spikes_in {
+                    let psum = packed.conv(s);
+                    let fired = ifu.step(&psum);
+                    train.push(plane_to_map(&fired, *c_out, plan.h, plan.w));
+                }
+                let out = maybe_pool(train, plan.pooled);
+                (out, ifu.fired, ifu.accesses, None)
+            }
+            (PlanKind::Fc, Layer::Fc { n_out, n_in, w, bias, theta }) => {
+                let packed = PackedFc::pack(*n_out, *n_in, w);
+                let mut ifu = IfUnit::new(*n_out, 1, bias, theta);
+                let mut train = Vec::with_capacity(t_steps);
+                for s in spikes_in {
+                    let psum = packed.matvec(&s.to_flat_words());
+                    let fired = ifu.step(&psum);
+                    train.push(plane_to_map(&fired, *n_out, 1, 1));
+                }
+                (train, ifu.fired, ifu.accesses, None)
+            }
+            (PlanKind::Readout, Layer::Readout { n_out, n_in, w }) => {
+                let packed = PackedFc::pack(*n_out, *n_in, w);
+                let mut logits = vec![0i64; *n_out];
+                for s in spikes_in {
+                    let psum = packed.matvec(&s.to_flat_words());
+                    for (l, p) in logits.iter_mut().zip(&psum) {
+                        *l += *p as i64;
+                    }
+                }
+                (Vec::new(), 0, 0, Some(logits))
+            }
+            _ => unreachable!("plan/layer mismatch"),
+        }
+    }
+}
+
+fn plane_to_map(fired: &[bool], c: usize, h: usize, w: usize) -> SpikeMap {
+    let mut m = SpikeMap::zeros(c, h, w);
+    for ch in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                if fired[(ch * h + y) * w + x] {
+                    m.set(ch, y, x, true);
+                }
+            }
+        }
+    }
+    m
+}
+
+fn maybe_pool(train: Vec<SpikeMap>, pooled: bool) -> Vec<SpikeMap> {
+    if pooled {
+        train.iter().map(|s| s.maxpool2()).collect()
+    } else {
+        train
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models;
+    use crate::data::synth;
+    use crate::snn::Network;
+
+    #[test]
+    fn stepwise_chip_matches_golden_on_tiny() {
+        let model = crate::snn::params::DeployedModel::synthesize(&models::tiny(4), 11);
+        let chip = StepwiseChip::new(HwConfig::default());
+        let net = Network::new(model.clone());
+        for s in synth::tiny_like(5, 0, 3) {
+            assert_eq!(chip.run(&model, &s.image).logits, net.infer_u8(&s.image));
+        }
+    }
+}

@@ -14,8 +14,14 @@
 //! `BENCH_PR1.json`).  [`stbp_scalar`] plays the same role for the
 //! trainer: the PR3 scalar STBP hot path, frozen as `bench_train`'s
 //! baseline and the forward oracle of `rust/tests/train_parallel.rs`.
+//! [`chip_stepwise`] is the chip-simulator twin: the pre-PR5 per-step
+//! `SimMode::Fast` datapath (weights re-packed per image, one conv per
+//! time step), frozen as `bench_throughput`'s chip baseline
+//! (`BENCH_PR5.json`) and the counter-for-counter oracle of
+//! `rust/tests/chip_batched.rs`.
 
 pub mod bwsnn;
+pub mod chip_stepwise;
 pub mod golden_stepwise;
 pub mod published;
 pub mod spinalflow;

@@ -63,6 +63,10 @@ impl InferenceEngine for GoldenEngine {
 }
 
 /// Cycle-accurate chip simulator engine (reports hardware latency too).
+///
+/// The worker's [`Chip`] caches its packed model + scratch arena across
+/// requests (PR5), so steady-state batches re-pack nothing — asserted by
+/// `chip_engine_packs_once_per_model` below.
 pub struct ChipEngine {
     chip: Chip,
     net: Network,
@@ -182,5 +186,16 @@ mod tests {
         let mut c = ChipEngine::new(HwConfig::default(), net(), 4);
         let imgs = vec![vec![37; 16], vec![200; 16]];
         assert_eq!(g.infer(&imgs).unwrap(), c.infer(&imgs).unwrap());
+    }
+
+    /// Serving batches re-use the worker chip's packed model: however
+    /// many images flow through, the model is packed exactly once.
+    #[test]
+    fn chip_engine_packs_once_per_model() {
+        let mut e = ChipEngine::new(HwConfig::default(), net(), 4);
+        let imgs: Vec<Vec<u8>> = (0..4).map(|i| vec![(i * 60) as u8; 16]).collect();
+        e.infer(&imgs).unwrap();
+        e.infer(&imgs).unwrap();
+        assert_eq!(e.chip.pack_count(), 1);
     }
 }

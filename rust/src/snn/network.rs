@@ -314,8 +314,13 @@ impl Network {
 
 /// Shared fc/readout preamble: pack the spike train's flat words into the
 /// arena and run the time-batched matvec.  Psums land in
-/// `scratch.psums[t * n_out + o]`; returns the step count.
-fn flatten_and_matvec(packed: &PackedFc, cur: &[SpikeMap], scratch: &mut Scratch) -> usize {
+/// `scratch.psums[t * n_out + o]`; returns the step count.  Shared with
+/// the chip simulator's time-batched fast mode (`arch::chip`).
+pub(crate) fn flatten_and_matvec(
+    packed: &PackedFc,
+    cur: &[SpikeMap],
+    scratch: &mut Scratch,
+) -> usize {
     let steps = cur.len();
     let words = packed.words();
     scratch.ensure_fc(steps, words, packed.n_out);
@@ -328,7 +333,7 @@ fn flatten_and_matvec(packed: &PackedFc, cur: &[SpikeMap], scratch: &mut Scratch
 
 /// Resize a reusable spike train to exactly `t` maps of (c, h, w),
 /// cleared, without reallocating word buffers that already fit.
-fn reset_train(train: &mut Vec<SpikeMap>, t: usize, c: usize, h: usize, w: usize) {
+pub(crate) fn reset_train(train: &mut Vec<SpikeMap>, t: usize, c: usize, h: usize, w: usize) {
     train.truncate(t);
     for m in train.iter_mut() {
         m.reset(c, h, w);
@@ -342,9 +347,10 @@ fn reset_train(train: &mut Vec<SpikeMap>, t: usize, c: usize, h: usize, w: usize
 /// writing fired bits directly into the packed spike maps (no
 /// `Vec<bool>` round-trip).  `V += FIXED_POINT * psum - bias`, fire at
 /// `V >= theta`, hard reset.  `v` must cover `c * h * w` and is reset
-/// here.
+/// here.  Returns the number of spikes fired (the chip simulator's
+/// per-layer `spikes_emitted` counter).
 #[allow(clippy::too_many_arguments)]
-fn if_fire_t(
+pub(crate) fn if_fire_t(
     psums: &[i32],
     stride: usize,
     t_steps: usize,
@@ -355,9 +361,10 @@ fn if_fire_t(
     w: usize,
     v: &mut [i32],
     out: &mut [SpikeMap],
-) {
+) -> u64 {
     let hw = h * w;
     let n = c * hw;
+    let mut fired = 0u64;
     v[..n].fill(0);
     for t in 0..t_steps {
         let psum = &psums[t * stride..t * stride + n];
@@ -370,6 +377,7 @@ fn if_fire_t(
                     let pre = v[j] + FIXED_POINT * psum[j] - b;
                     if pre >= th {
                         v[j] = 0;
+                        fired += 1;
                         m.or_bit(ch, y, x);
                     } else {
                         v[j] = pre;
@@ -378,14 +386,17 @@ fn if_fire_t(
             }
         }
     }
+    fired
 }
 
 /// IF dynamics for ONE output channel over its T-step psum planes
 /// (`psums[t * h * w + j]`), optionally fusing the 2×2 max pool by OR-ing
 /// fired bits into the pooled map position.  `v` covers `h * w` for this
-/// channel and is reset here.
+/// channel and is reset here.  Returns the number of spikes fired
+/// (pre-pool: every fire event counts, even when several OR into the
+/// same pooled bit).
 #[allow(clippy::too_many_arguments)]
-fn if_fire_channel(
+pub(crate) fn if_fire_channel(
     psums: &[i32],
     t_steps: usize,
     bias: i32,
@@ -396,11 +407,12 @@ fn if_fire_channel(
     pooled: bool,
     v: &mut [i32],
     out: &mut [SpikeMap],
-) {
+) -> u64 {
     let hw = h * w;
     // Pooled output bounds (odd trailing rows/cols are dropped, exactly
     // like `SpikeMap::maxpool2`).
     let (oh, ow) = (h / 2, w / 2);
+    let mut fired = 0u64;
     v[..hw].fill(0);
     for t in 0..t_steps {
         let psum = &psums[t * hw..(t + 1) * hw];
@@ -411,6 +423,7 @@ fn if_fire_channel(
                 let pre = v[j] + FIXED_POINT * psum[j] - bias;
                 if pre >= theta {
                     v[j] = 0;
+                    fired += 1;
                     emit(m, ch, y, x, pooled, oh, ow);
                 } else {
                     v[j] = pre;
@@ -418,6 +431,7 @@ fn if_fire_channel(
             }
         }
     }
+    fired
 }
 
 /// IF dynamics when every step receives the SAME psum (the encoding
@@ -426,9 +440,9 @@ fn if_fire_channel(
 /// form per neuron: no fire when `d <= 0`; otherwise the neuron fires
 /// every `ceil(theta / d)` steps.  Bit-exact with stepping the plain IF
 /// recurrence (verified against the stepwise oracle), O(#spikes) instead
-/// of O(T · neurons).
+/// of O(T · neurons).  Returns the number of spikes fired (pre-pool).
 #[allow(clippy::too_many_arguments)]
-fn if_fire_constant(
+pub(crate) fn if_fire_constant(
     psum: &[i32],
     t_steps: usize,
     bias: &[i32],
@@ -439,9 +453,10 @@ fn if_fire_constant(
     pooled: bool,
     v: &mut [i32],
     out: &mut [SpikeMap],
-) {
+) -> u64 {
     let hw = h * w;
     let (oh, ow) = (h / 2, w / 2);
+    let mut fired = 0u64;
     for ch in 0..c {
         let (b, th) = (bias[ch], theta[ch]);
         for y in 0..h {
@@ -457,6 +472,7 @@ fn if_fire_constant(
                         let pre = vj + d;
                         if pre >= th {
                             vj = 0;
+                            fired += 1;
                             emit(m, ch, y, x, pooled, oh, ow);
                         } else {
                             vj = pre;
@@ -471,6 +487,7 @@ fn if_fire_constant(
                     // reaches theta: every p = ceil(theta / d) steps.
                     let p = ((th as i64 + d as i64 - 1) / d as i64) as usize;
                     let fires = t_steps / p;
+                    fired += fires as u64;
                     let mut t = p - 1;
                     for _ in 0..fires {
                         emit(&mut out[t], ch, y, x, pooled, oh, ow);
@@ -481,6 +498,7 @@ fn if_fire_constant(
             }
         }
     }
+    fired
 }
 
 #[inline]

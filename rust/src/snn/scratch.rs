@@ -8,7 +8,9 @@
 //! owned by the *caller* (one per worker thread in the coordinator), grown
 //! on first use and reused for every subsequent inference, so
 //! `Network::run` performs zero heap allocation in steady state (apart
-//! from the small returned logits vector).
+//! from the small returned logits vector).  The chip simulator's
+//! time-batched fast mode ([`crate::arch::Chip`], PR5) holds one arena in
+//! its packed-model cache and drives the same kernels through it.
 //!
 //! Buffers only ever grow; running a large model then a small one keeps
 //! the large capacity around, which is exactly what a serving worker

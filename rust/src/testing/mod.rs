@@ -9,10 +9,23 @@
 //! });
 //! ```
 //!
-//! Each case gets a deterministic per-index seed; failures report the case
-//! index so a run can be reproduced with [`check_one`].
+//! Each case gets a deterministic per-index seed; a failure panics with
+//! the case index *and* a ready-to-paste
+//! `check_one("<name>", <seed>, <index>, <property>)` line so the failing
+//! case reproduces without re-running the whole suite.
+
+pub mod models;
 
 use crate::util::rng::SplitMix64;
+
+/// Base seed [`check`] derives every case seed from.
+pub const DEFAULT_SEED: u64 = 0x5EED_0000;
+
+/// Per-case seed derivation shared by [`check`] and [`check_one`].
+#[inline]
+fn case_seed(seed: u64, index: u64) -> u64 {
+    seed ^ index.wrapping_mul(0x9E37_79B9)
+}
 
 /// Random input generator handed to property bodies.
 pub struct Gen {
@@ -69,14 +82,38 @@ impl Gen {
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.rng.next_index(xs.len())]
     }
+
+    /// Pick one element with probability proportional to its weight.
+    /// Entries with weight 0 are never chosen; the total weight must be
+    /// positive.  Consumes exactly one draw from the stream, like
+    /// [`Gen::choose`].
+    pub fn choose_weighted<'a, T>(&mut self, weighted: &'a [(T, u64)]) -> &'a T {
+        let total: u64 = weighted.iter().map(|(_, w)| *w).sum();
+        assert!(total > 0, "choose_weighted needs a positive total weight");
+        let mut r = self.rng.next_below(total);
+        for (x, w) in weighted {
+            if r < *w {
+                return x;
+            }
+            r -= w;
+        }
+        unreachable!("next_below(total) < total")
+    }
 }
 
-/// Run `cases` generated cases of a property.  Panics (with the failing
-/// case index) as soon as one case fails.
-pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
+/// Run `cases` generated cases of a property under [`DEFAULT_SEED`].
+/// Panics as soon as one case fails, reporting the failing index and the
+/// [`check_one`] call that reproduces it.
+pub fn check(name: &str, cases: u64, prop: impl FnMut(&mut Gen)) {
+    check_seeded(name, DEFAULT_SEED, cases, prop)
+}
+
+/// [`check`] under an explicit base seed (for re-rolling a suite without
+/// touching its property body).
+pub fn check_seeded(name: &str, seed: u64, cases: u64, mut prop: impl FnMut(&mut Gen)) {
     for i in 0..cases {
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let mut g = Gen::new(0x5EED_0000 ^ i.wrapping_mul(0x9E37_79B9));
+            let mut g = Gen::new(case_seed(seed, i));
             prop(&mut g);
         }));
         if let Err(payload) = result {
@@ -85,15 +122,20 @@ pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
                 .cloned()
                 .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
-            panic!("property '{name}' failed at case {i}: {msg}");
+            panic!(
+                "property '{name}' failed at case {i}: {msg}\n  \
+                 reproduce: check_one(\"{name}\", {seed:#x}, {i}, <property>)"
+            );
         }
     }
 }
 
-/// Re-run a single case (for shrinking a failure by hand).
-pub fn check_one(case: u64, mut prop: impl FnMut(&mut Gen)) {
-    let mut g = Gen::new(0x5EED_0000 ^ case.wrapping_mul(0x9E37_79B9));
+/// Re-run a single case of a property — paste the arguments straight from
+/// a [`check`] failure message (for shrinking a failure by hand).
+pub fn check_one(name: &str, seed: u64, index: u64, mut prop: impl FnMut(&mut Gen)) {
+    let mut g = Gen::new(case_seed(seed, index));
     prop(&mut g);
+    println!("property '{name}': case {index} (seed {seed:#x}) passed");
 }
 
 #[cfg(test)]
@@ -118,6 +160,37 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "reproduce: check_one(\"always fails\", 0x5eed0000, 0,")]
+    fn failure_message_is_a_pasteable_repro() {
+        check("always fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn check_one_replays_the_reported_case() {
+        // Find the first failing index the slow way, then reproduce it
+        // with check_one and confirm the generator stream is identical.
+        let mut failing = None;
+        for i in 0..50u64 {
+            let mut g = Gen::new(super::case_seed(DEFAULT_SEED, i));
+            if g.u64() % 7 == 0 {
+                failing = Some(i);
+                break;
+            }
+        }
+        let i = failing.expect("a multiple of 7 appears within 50 cases");
+        let result = std::panic::catch_unwind(|| {
+            check_one("finds multiples of 7", DEFAULT_SEED, i, |g| {
+                assert!(g.u64() % 7 != 0);
+            });
+        });
+        assert!(result.is_err(), "check_one must replay the failing draw");
+        // A passing case replays cleanly.
+        check_one("passes elsewhere", DEFAULT_SEED, i, |g| {
+            let _ = g.u64();
+        });
+    }
+
+    #[test]
     fn gen_ranges() {
         let mut g = Gen::new(1);
         for _ in 0..1000 {
@@ -126,5 +199,38 @@ mod tests {
             let w = g.i64_in(-5, 5);
             assert!((-5..=5).contains(&w));
         }
+    }
+
+    #[test]
+    fn choose_weighted_respects_weights() {
+        let mut g = Gen::new(42);
+        let table = [("never", 0u64), ("rare", 1), ("common", 9)];
+        let mut rare = 0usize;
+        let mut common = 0usize;
+        for _ in 0..2000 {
+            match *g.choose_weighted(&table) {
+                "never" => panic!("zero-weight entry chosen"),
+                "rare" => rare += 1,
+                _ => common += 1,
+            }
+        }
+        assert_eq!(rare + common, 2000);
+        // 9:1 odds: loose bounds that hold with overwhelming probability.
+        assert!(common > rare * 4, "common {common} vs rare {rare}");
+        assert!(rare > 50, "rare {rare} should still appear ~200 times");
+    }
+
+    #[test]
+    fn choose_weighted_all_mass_on_one_entry() {
+        let mut g = Gen::new(7);
+        for _ in 0..100 {
+            assert_eq!(*g.choose_weighted(&[(1u8, 0u64), (2, 5), (3, 0)]), 2);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive total weight")]
+    fn choose_weighted_rejects_zero_total() {
+        Gen::new(1).choose_weighted(&[("a", 0u64), ("b", 0)]);
     }
 }

@@ -1,0 +1,147 @@
+//! Shared randomized-model generators for the property suites.
+//!
+//! `rust/tests/sim_vs_golden.rs` and `rust/tests/chip_batched.rs` both
+//! differential-test engines on random networks; the generators live here
+//! so every suite draws from the same model distribution (and a failing
+//! case from one suite reproduces in another).
+
+use crate::snn::params::{DeployedModel, Kind, Layer};
+use crate::testing::Gen;
+use crate::util::FIXED_POINT;
+
+/// Build a random small network: enc conv -> [pool] -> conv -> fc ->
+/// readout, plus a matching random input image.  Sized for the popcount
+/// fast paths (golden engine, `SimMode::Fast`): spatial sizes up to 16,
+/// channel counts crossing no word boundary below 33.
+pub fn random_model(g: &mut Gen) -> (DeployedModel, Vec<u8>) {
+    let in_size = *g.choose(&[8usize, 12, 16]);
+    let c1 = *g.choose(&[4usize, 8, 16]);
+    let c2 = *g.choose(&[4usize, 8, 33]);
+    let t = g.usize_in(1, 6);
+    let pool = g.bool();
+    let mid = if pool { in_size / 2 } else { in_size };
+    let n_fc = g.usize_in(4, 12);
+
+    let mut layers = vec![Layer::Conv {
+        kind: Kind::EncConv,
+        c_out: c1,
+        c_in: 1,
+        k: 3,
+        w: g.weights(c1 * 9),
+        bias: (0..c1).map(|_| g.i32_in(-500, 500) * FIXED_POINT / 4).collect(),
+        theta: (0..c1)
+            .map(|_| g.i32_in(1, 300) * FIXED_POINT)
+            .collect(),
+    }];
+    if pool {
+        layers.push(Layer::MaxPool);
+    }
+    layers.push(Layer::Conv {
+        kind: Kind::Conv,
+        c_out: c2,
+        c_in: c1,
+        k: 3,
+        w: g.weights(c2 * c1 * 9),
+        bias: (0..c2).map(|_| g.i32_in(-4, 4) * FIXED_POINT).collect(),
+        theta: (0..c2).map(|_| g.i32_in(1, 12) * FIXED_POINT).collect(),
+    });
+    layers.push(Layer::Fc {
+        n_out: n_fc,
+        n_in: c2 * mid * mid,
+        w: g.weights(n_fc * c2 * mid * mid),
+        bias: (0..n_fc).map(|_| g.i32_in(-2, 2) * FIXED_POINT).collect(),
+        theta: (0..n_fc).map(|_| g.i32_in(1, 6) * FIXED_POINT).collect(),
+    });
+    layers.push(Layer::Readout {
+        n_out: 10,
+        n_in: n_fc,
+        w: g.weights(10 * n_fc),
+    });
+
+    let model = DeployedModel {
+        name: "prop".into(),
+        num_steps: t,
+        in_channels: 1,
+        in_size,
+        layers,
+    };
+    let image: Vec<u8> = (0..in_size * in_size).map(|_| g.i32_in(0, 255) as u8).collect();
+    (model, image)
+}
+
+/// [`random_model`] shrunk for the gate-level `SimMode::Exact` datapath
+/// (every PE simulated in software): tiny spatial sizes and channel
+/// counts so a 100-case differential suite stays fast in debug builds.
+/// Odd spatial sizes are weighted in so pooled layers exercise the
+/// dropped-trailing-row/col path.
+pub fn random_model_tiny(g: &mut Gen) -> (DeployedModel, Vec<u8>) {
+    let in_size = *g.choose_weighted(&[(6usize, 2u64), (7, 1), (8, 2), (9, 1)]);
+    let c1 = g.usize_in(1, 4);
+    let c2 = g.usize_in(1, 5);
+    let t = g.usize_in(1, 3);
+    let pool = g.bool();
+    let mid = if pool { in_size / 2 } else { in_size };
+    let n_fc = g.usize_in(2, 6);
+
+    let mut layers = vec![Layer::Conv {
+        kind: Kind::EncConv,
+        c_out: c1,
+        c_in: 1,
+        k: 3,
+        w: g.weights(c1 * 9),
+        bias: (0..c1).map(|_| g.i32_in(-200, 200) * FIXED_POINT / 4).collect(),
+        theta: (0..c1).map(|_| g.i32_in(1, 200) * FIXED_POINT).collect(),
+    }];
+    if pool {
+        layers.push(Layer::MaxPool);
+    }
+    layers.push(Layer::Conv {
+        kind: Kind::Conv,
+        c_out: c2,
+        c_in: c1,
+        k: 3,
+        w: g.weights(c2 * c1 * 9),
+        bias: (0..c2).map(|_| g.i32_in(-3, 3) * FIXED_POINT).collect(),
+        theta: (0..c2).map(|_| g.i32_in(1, 8) * FIXED_POINT).collect(),
+    });
+    layers.push(Layer::Fc {
+        n_out: n_fc,
+        n_in: c2 * mid * mid,
+        w: g.weights(n_fc * c2 * mid * mid),
+        bias: (0..n_fc).map(|_| g.i32_in(-2, 2) * FIXED_POINT).collect(),
+        theta: (0..n_fc).map(|_| g.i32_in(1, 4) * FIXED_POINT).collect(),
+    });
+    layers.push(Layer::Readout {
+        n_out: 10,
+        n_in: n_fc,
+        w: g.weights(10 * n_fc),
+    });
+
+    let model = DeployedModel {
+        name: "prop-tiny".into(),
+        num_steps: t,
+        in_channels: 1,
+        in_size,
+        layers,
+    };
+    let image: Vec<u8> = (0..in_size * in_size).map(|_| g.i32_in(0, 255) as u8).collect();
+    (model, image)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic_and_well_formed() {
+        for f in [random_model, random_model_tiny] {
+            let (a, img_a) = f(&mut Gen::new(123));
+            let (b, img_b) = f(&mut Gen::new(123));
+            assert_eq!(img_a, img_b);
+            assert_eq!(a.num_steps, b.num_steps);
+            assert_eq!(a.layers.len(), b.layers.len());
+            assert_eq!(img_a.len(), a.in_size * a.in_size);
+            assert!(matches!(a.layers.last(), Some(Layer::Readout { .. })));
+        }
+    }
+}

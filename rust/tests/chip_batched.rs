@@ -1,0 +1,300 @@
+//! PR5 property suite: the time-batched chip fast mode is spike-for-spike
+//! and **counter-for-counter** identical to the frozen per-step baseline
+//! (`baselines::chip_stepwise`), to the gate-level `SimMode::Exact`
+//! datapath, and to the golden engine — on randomized networks
+//! (≥100 per mode), on the edge cases the older suites skip (T=1, c_out
+//! off the u64 word boundary, odd spatial sizes with pooling, all-zero
+//! spike trains through every `PlanKind`), and across hardware configs.
+//! Also pins the per-`Chip` packed-model cache: batch loops calling
+//! `Chip::run` per image must pack exactly once per distinct model.
+
+use vsa::arch::dram::Traffic;
+use vsa::arch::{Chip, RunReport, SimMode};
+use vsa::baselines::chip_stepwise::StepwiseChip;
+use vsa::config::HwConfig;
+use vsa::snn::params::{DeployedModel, Kind, Layer};
+use vsa::snn::Network;
+use vsa::testing::models::{random_model, random_model_tiny};
+use vsa::testing::{check, Gen};
+use vsa::util::FIXED_POINT;
+
+const TRAFFIC: [Traffic; 6] = [
+    Traffic::Image,
+    Traffic::Weights,
+    Traffic::SpikesIn,
+    Traffic::SpikesOut,
+    Traffic::Membrane,
+    Traffic::Logits,
+];
+
+/// Field-for-field [`RunReport`] equality: logits, every counter, every
+/// per-layer report, and bit-equal f64 derived metrics.
+fn assert_reports_identical(a: &RunReport, b: &RunReport) {
+    assert_eq!(a.logits, b.logits, "logits");
+    assert_eq!(a.cycles, b.cycles, "cycles");
+    assert_eq!(a.pe_ops, b.pe_ops, "pe_ops");
+    for t in TRAFFIC {
+        assert_eq!(a.dram.category(t), b.dram.category(t), "dram {t:?}");
+    }
+    assert_eq!(a.dram.total(), b.dram.total(), "dram total");
+    assert_eq!(a.sram.spike_reads, b.sram.spike_reads, "sram spike_reads");
+    assert_eq!(a.sram.weight_reads, b.sram.weight_reads, "sram weight_reads");
+    assert_eq!(a.sram.membrane_rmw, b.sram.membrane_rmw, "sram membrane_rmw");
+    assert_eq!(a.sram.temp_writes, b.sram.temp_writes, "sram temp_writes");
+    assert_eq!(a.sram.boundary_ops, b.sram.boundary_ops, "sram boundary_ops");
+    assert_eq!(a.latency_us.to_bits(), b.latency_us.to_bits(), "latency_us");
+    assert_eq!(a.gops.to_bits(), b.gops.to_bits(), "gops");
+    assert_eq!(a.utilization.to_bits(), b.utilization.to_bits(), "utilization");
+    assert_eq!(a.layers.len(), b.layers.len(), "layer count");
+    for (i, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(la.kind, lb.kind, "layer {i} kind");
+        assert_eq!(la.cycles, lb.cycles, "layer {i} cycles");
+        assert_eq!(la.spikes_emitted, lb.spikes_emitted, "layer {i} spikes_emitted");
+        assert_eq!(la.membrane_accesses, lb.membrane_accesses, "layer {i} membrane");
+        assert_eq!(
+            la.utilization.to_bits(),
+            lb.utilization.to_bits(),
+            "layer {i} utilization"
+        );
+    }
+}
+
+/// Run all four engines on one case: batched fast == stepwise baseline ==
+/// exact datapath (full reports), and all match the golden logits.
+fn engines_all_agree(model: &DeployedModel, image: &[u8]) {
+    let fast = Chip::new(HwConfig::default(), SimMode::Fast).run(model, image);
+    let step = StepwiseChip::new(HwConfig::default()).run(model, image);
+    assert_reports_identical(&fast, &step);
+    let exact = Chip::new(HwConfig::default(), SimMode::Exact).run(model, image);
+    assert_reports_identical(&fast, &exact);
+    assert_eq!(fast.logits, Network::new(model.clone()).infer_u8(image), "golden");
+}
+
+/// Explicit-geometry model: enc(c1)[+pool] -> conv(c2)[+pool] ->
+/// fc(n_fc) -> readout, random weights/thresholds from `g`.
+#[allow(clippy::too_many_arguments)]
+fn layered_model(
+    g: &mut Gen,
+    in_size: usize,
+    c1: usize,
+    pool1: bool,
+    c2: usize,
+    pool2: bool,
+    n_fc: usize,
+    t: usize,
+) -> (DeployedModel, Vec<u8>) {
+    let mid = if pool1 { in_size / 2 } else { in_size };
+    let end = if pool2 { mid / 2 } else { mid };
+    let mut layers = vec![Layer::Conv {
+        kind: Kind::EncConv,
+        c_out: c1,
+        c_in: 1,
+        k: 3,
+        w: g.weights(c1 * 9),
+        bias: (0..c1).map(|_| g.i32_in(-200, 200) * FIXED_POINT / 4).collect(),
+        theta: (0..c1).map(|_| g.i32_in(1, 150) * FIXED_POINT).collect(),
+    }];
+    if pool1 {
+        layers.push(Layer::MaxPool);
+    }
+    layers.push(Layer::Conv {
+        kind: Kind::Conv,
+        c_out: c2,
+        c_in: c1,
+        k: 3,
+        w: g.weights(c2 * c1 * 9),
+        bias: (0..c2).map(|_| g.i32_in(-3, 3) * FIXED_POINT).collect(),
+        theta: (0..c2).map(|_| g.i32_in(1, 8) * FIXED_POINT).collect(),
+    });
+    if pool2 {
+        layers.push(Layer::MaxPool);
+    }
+    layers.push(Layer::Fc {
+        n_out: n_fc,
+        n_in: c2 * end * end,
+        w: g.weights(n_fc * c2 * end * end),
+        bias: (0..n_fc).map(|_| g.i32_in(-2, 2) * FIXED_POINT).collect(),
+        theta: (0..n_fc).map(|_| g.i32_in(1, 4) * FIXED_POINT).collect(),
+    });
+    layers.push(Layer::Readout { n_out: 10, n_in: n_fc, w: g.weights(10 * n_fc) });
+    let model = DeployedModel {
+        name: "edge".into(),
+        num_steps: t,
+        in_channels: 1,
+        in_size,
+        layers,
+    };
+    let image: Vec<u8> = (0..in_size * in_size).map(|_| g.i32_in(0, 255) as u8).collect();
+    (model, image)
+}
+
+/// Acceptance (fast mode, ≥100 nets): the time-batched datapath is
+/// counter-for-counter equal to the frozen per-step baseline and matches
+/// the golden engine.  One shared `Chip` across every case also soaks the
+/// packed-model cache's invalidation path (each case is a new model).
+#[test]
+fn fast_batched_equals_stepwise_and_golden_on_random_networks() {
+    let chip = Chip::new(HwConfig::default(), SimMode::Fast);
+    let stepwise = StepwiseChip::new(HwConfig::default());
+    check("chip fast: batched vs stepwise vs golden", 110, |g: &mut Gen| {
+        let (model, image) = random_model(g);
+        let fast = chip.run(&model, &image);
+        let step = stepwise.run(&model, &image);
+        assert_reports_identical(&fast, &step);
+        assert_eq!(fast.logits, Network::new(model.clone()).infer_u8(&image), "golden");
+    });
+}
+
+/// Acceptance (exact mode, ≥100 nets): the gate-level datapath, the
+/// batched fast mode, the stepwise baseline and the golden engine agree
+/// on tiny geometries (the PE-level sim is slow in debug builds).
+#[test]
+fn exact_mode_agrees_on_random_tiny_networks() {
+    check("chip exact vs batched vs stepwise vs golden", 100, |g: &mut Gen| {
+        let (model, image) = random_model_tiny(g);
+        engines_all_agree(&model, &image);
+    });
+}
+
+/// Counters must stay identical between the batched and stepwise engines
+/// under reconfigured hardware (PE geometry, fusion on/off) — the
+/// counters change, the agreement must not.
+#[test]
+fn reports_identical_across_hw_configs() {
+    check("hw sweep: batched vs stepwise", 12, |g: &mut Gen| {
+        let (model, image) = random_model(g);
+        let hw = HwConfig {
+            pe_blocks: *g.choose(&[8usize, 32, 64]),
+            rows_per_array: *g.choose(&[4usize, 8]),
+            layer_fusion: g.bool(),
+            ..HwConfig::default()
+        };
+        let fast = Chip::new(hw.clone(), SimMode::Fast).run(&model, &image);
+        let step = StepwiseChip::new(hw).run(&model, &image);
+        assert_reports_identical(&fast, &step);
+    });
+}
+
+/// Edge: T=1 (no temporal reuse to batch) across the full-size generator,
+/// fast mode against the baseline + golden.
+#[test]
+fn edge_t1_full_size() {
+    check("T=1 full size", 20, |g: &mut Gen| {
+        let (mut model, image) = random_model(g);
+        model.num_steps = 1;
+        let fast = Chip::new(HwConfig::default(), SimMode::Fast).run(&model, &image);
+        let step = StepwiseChip::new(HwConfig::default()).run(&model, &image);
+        assert_reports_identical(&fast, &step);
+        assert_eq!(fast.logits, Network::new(model.clone()).infer_u8(&image), "golden");
+    });
+}
+
+/// Edge: T=1 through the exact datapath too (tiny geometries).
+#[test]
+fn edge_t1_both_modes() {
+    for seed in [1u64, 2, 3] {
+        let g = &mut Gen::new(seed);
+        let (mut model, image) = random_model_tiny(g);
+        model.num_steps = 1;
+        engines_all_agree(&model, &image);
+    }
+}
+
+/// Edge: `c_out` off the u64 word boundary (63/65 channels pack into
+/// 1/2 words per pixel), in both sim modes.
+#[test]
+fn edge_c_out_off_word_boundary() {
+    for &c2 in &[63usize, 65] {
+        let g = &mut Gen::new(c2 as u64);
+        let (model, image) = layered_model(g, 6, 2, false, c2, false, 7, 2);
+        engines_all_agree(&model, &image);
+    }
+}
+
+/// Edge: odd spatial sizes with pooling (the pool drops the trailing
+/// row/column), pooled after the encoding layer and after a conv layer,
+/// in both sim modes.
+#[test]
+fn edge_odd_spatial_with_pooling() {
+    let g = &mut Gen::new(7);
+    // 7x7 enc output pooled -> 3x3.
+    let (m1, i1) = layered_model(g, 7, 2, true, 3, false, 5, 2);
+    engines_all_agree(&m1, &i1);
+    // 9x9 conv output pooled -> 4x4 (two row tiles in the exact schedule).
+    let (m2, i2) = layered_model(g, 9, 3, false, 2, true, 4, 3);
+    engines_all_agree(&m2, &i2);
+}
+
+/// Edge: an all-zero spike train through every `PlanKind`, in both sim
+/// modes.  Variant (a): only the encoding layer is silenced — downstream
+/// layers may still fire from negative biases (spikes out of silence);
+/// the engines must agree.  Variant (b): all biases zeroed — nothing can
+/// fire anywhere and every spike/logit must be exactly zero.
+#[test]
+fn edge_all_zero_spike_train_through_every_plan_kind() {
+    let g = &mut Gen::new(99);
+    let (mut model, image) = layered_model(g, 8, 3, true, 4, false, 5, 4);
+    for ly in &mut model.layers {
+        if let Layer::Conv { kind: Kind::EncConv, bias, theta, .. } = ly {
+            bias.fill(0);
+            theta.fill(1_000_000_000); // unreachable: enc never fires
+        }
+    }
+    engines_all_agree(&model, &image);
+
+    let mut silent = model.clone();
+    for ly in &mut silent.layers {
+        match ly {
+            Layer::Conv { kind: Kind::Conv, bias, .. } | Layer::Fc { bias, .. } => {
+                bias.fill(0)
+            }
+            _ => {}
+        }
+    }
+    let fast = Chip::new(HwConfig::default(), SimMode::Fast).run(&silent, &image);
+    assert!(
+        fast.layers.iter().all(|l| l.spikes_emitted == 0),
+        "a fully silent net must emit zero spikes"
+    );
+    assert!(fast.logits.iter().all(|&l| l == 0), "silent net logits must be zero");
+    engines_all_agree(&silent, &image);
+}
+
+/// Regression (pack-counter hook): a `vsa eval`-style scoring loop — one
+/// model, many images through `Chip::run` — must build the packed model
+/// exactly once, and produce the same logits as per-image fresh chips.
+#[test]
+fn batch_loops_pack_once_per_model() {
+    let g = &mut Gen::new(11);
+    let (model, _) = random_model(g);
+    let n_px = model.in_size * model.in_size;
+    let images: Vec<Vec<u8>> = (0..6)
+        .map(|i| (0..n_px).map(|j| ((i * 31 + j * 7) % 256) as u8).collect())
+        .collect();
+    let fresh: Vec<Vec<i64>> = images
+        .iter()
+        .map(|img| Chip::new(HwConfig::default(), SimMode::Fast).run(&model, img).logits)
+        .collect();
+    let chip = Chip::new(HwConfig::default(), SimMode::Fast);
+    for (img, want) in images.iter().zip(&fresh) {
+        assert_eq!(&chip.run(&model, img).logits, want);
+    }
+    assert_eq!(chip.pack_count(), 1, "batch loop must pack exactly once per model");
+}
+
+/// Regression: interleaving two models through one chip re-packs on each
+/// switch (single-entry cache) and never serves stale packed weights.
+#[test]
+fn interleaved_models_stay_correct() {
+    let g = &mut Gen::new(5);
+    let (ma, ia) = random_model(g);
+    let (mb, ib) = random_model(g);
+    let fa = Chip::new(HwConfig::default(), SimMode::Fast).run(&ma, &ia);
+    let fb = Chip::new(HwConfig::default(), SimMode::Fast).run(&mb, &ib);
+    let chip = Chip::new(HwConfig::default(), SimMode::Fast);
+    for _ in 0..2 {
+        assert_eq!(chip.run(&ma, &ia).logits, fa.logits);
+        assert_eq!(chip.run(&mb, &ib).logits, fb.logits);
+    }
+    assert_eq!(chip.pack_count(), 4, "A,B,A,B through a single-entry cache");
+}

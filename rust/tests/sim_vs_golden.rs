@@ -4,67 +4,9 @@
 
 use vsa::arch::{Chip, SimMode};
 use vsa::config::HwConfig;
-use vsa::snn::params::{DeployedModel, Kind, Layer};
 use vsa::snn::Network;
+use vsa::testing::models::random_model;
 use vsa::testing::{check, Gen};
-use vsa::util::FIXED_POINT;
-
-/// Build a random small network: enc conv -> [pool] -> conv -> fc -> readout.
-fn random_model(g: &mut Gen) -> (DeployedModel, Vec<u8>) {
-    let in_size = *g.choose(&[8usize, 12, 16]);
-    let c1 = *g.choose(&[4usize, 8, 16]);
-    let c2 = *g.choose(&[4usize, 8, 33]);
-    let t = g.usize_in(1, 6);
-    let pool = g.bool();
-    let mid = if pool { in_size / 2 } else { in_size };
-    let n_fc = g.usize_in(4, 12);
-
-    let mut layers = vec![Layer::Conv {
-        kind: Kind::EncConv,
-        c_out: c1,
-        c_in: 1,
-        k: 3,
-        w: g.weights(c1 * 9),
-        bias: (0..c1).map(|_| g.i32_in(-500, 500) * FIXED_POINT / 4).collect(),
-        theta: (0..c1)
-            .map(|_| g.i32_in(1, 300) * FIXED_POINT)
-            .collect(),
-    }];
-    if pool {
-        layers.push(Layer::MaxPool);
-    }
-    layers.push(Layer::Conv {
-        kind: Kind::Conv,
-        c_out: c2,
-        c_in: c1,
-        k: 3,
-        w: g.weights(c2 * c1 * 9),
-        bias: (0..c2).map(|_| g.i32_in(-4, 4) * FIXED_POINT).collect(),
-        theta: (0..c2).map(|_| g.i32_in(1, 12) * FIXED_POINT).collect(),
-    });
-    layers.push(Layer::Fc {
-        n_out: n_fc,
-        n_in: c2 * mid * mid,
-        w: g.weights(n_fc * c2 * mid * mid),
-        bias: (0..n_fc).map(|_| g.i32_in(-2, 2) * FIXED_POINT).collect(),
-        theta: (0..n_fc).map(|_| g.i32_in(1, 6) * FIXED_POINT).collect(),
-    });
-    layers.push(Layer::Readout {
-        n_out: 10,
-        n_in: n_fc,
-        w: g.weights(10 * n_fc),
-    });
-
-    let model = DeployedModel {
-        name: "prop".into(),
-        num_steps: t,
-        in_channels: 1,
-        in_size,
-        layers,
-    };
-    let image: Vec<u8> = (0..in_size * in_size).map(|_| g.i32_in(0, 255) as u8).collect();
-    (model, image)
-}
 
 #[test]
 fn fast_sim_matches_golden_on_random_networks() {
