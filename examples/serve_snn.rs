@@ -63,11 +63,21 @@ fn main() -> anyhow::Result<()> {
         .map(|s| coord.submit(s.image.clone()))
         .collect::<Result<_, _>>()?;
 
+    // Since PR6 every request resolves to a typed outcome: Ok(result) or
+    // a ServeError (shed, engine failure after retries, panic).
     let mut correct = 0usize;
+    let mut not_served = 0usize;
     for (rx, s) in rxs.into_iter().zip(&samples) {
-        let res = rx.recv()?;
-        if argmax(&res.logits) == s.label {
-            correct += 1;
+        match rx.recv()? {
+            Ok(res) => {
+                if argmax(&res.logits) == s.label {
+                    correct += 1;
+                }
+            }
+            Err(e) => {
+                eprintln!("request not served: {e}");
+                not_served += 1;
+            }
         }
     }
     let wall = t0.elapsed();
@@ -80,6 +90,13 @@ fn main() -> anyhow::Result<()> {
         "  latency ms   p50 {:.2} / p95 {:.2} / p99 {:.2}",
         stats.latency_ms_p50, stats.latency_ms_p95, stats.latency_ms_p99
     );
+    println!(
+        "  outcomes     completed {} / failed {} / shed {}",
+        stats.completed, stats.failed, stats.shed
+    );
+    if not_served > 0 {
+        println!("  ({not_served} requests got typed errors — see above)");
+    }
     println!("  accuracy     {correct}/{REQUESTS} (untrained weights: ~chance)");
     Ok(())
 }

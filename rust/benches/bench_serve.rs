@@ -1,0 +1,133 @@
+//! Serving-stack load benchmark (PR6): the coordinator under seeded
+//! fault injection at increasing fault rates.  For each rate the
+//! closed-loop generator drives the pool and the report records
+//! throughput, latency percentiles, shed/retry/fail rates into
+//! `BENCH_PR6.json` — the robustness half of the perf trajectory.
+//!
+//! The clean row doubles as a correctness gate: with injection off,
+//! every request must complete and a spot-checked result must be
+//! bit-identical to the golden model run directly.
+//!
+//! Run: `cargo bench --bench bench_serve` (add `-- --quick` for the CI
+//! smoke subset).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{quick_mode, section, JsonReport};
+use std::sync::Arc;
+use std::time::Duration;
+use vsa::config::models;
+use vsa::coordinator::{
+    run_load, Coordinator, CoordinatorConfig, FaultEngine, FaultProfile, FaultStats, GoldenEngine,
+    InferenceEngine, LoadSpec,
+};
+use vsa::data::synth;
+use vsa::snn::params::DeployedModel;
+use vsa::snn::Network;
+
+/// Written next to the other cross-PR trajectory files at the repo root.
+const REPORT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR6.json");
+
+const MODEL: &str = "tiny";
+const STEPS: usize = 4;
+const SEED: u64 = 7;
+const WORKERS: usize = 2;
+const BATCH: usize = 8;
+const SUBMITTERS: usize = 4;
+const FAULT_RATES: [f64; 3] = [0.0, 0.01, 0.10];
+
+fn tiny_net() -> Network {
+    let spec = models::by_name(MODEL, STEPS).expect("tiny model spec");
+    Network::new(DeployedModel::synthesize(&spec, 42))
+}
+
+fn start_pool(fault_rate: f64, fstats: &Arc<FaultStats>) -> Coordinator {
+    let profile = FaultProfile::mixed(fault_rate, Duration::from_millis(1));
+    let cfg = CoordinatorConfig {
+        workers: WORKERS,
+        max_batch: BATCH,
+        queue_depth: 64,
+        ..CoordinatorConfig::default()
+    };
+    Coordinator::start(cfg, {
+        let fstats = Arc::clone(fstats);
+        move |w| -> Box<dyn InferenceEngine> {
+            let inner = Box::new(GoldenEngine::new(tiny_net(), BATCH));
+            let seed_w = FaultEngine::seed_for(SEED, w);
+            Box::new(FaultEngine::with_stats(inner, profile, seed_w, Arc::clone(&fstats)))
+        }
+    })
+}
+
+fn main() {
+    let quick = quick_mode();
+    let requests = if quick { 200 } else { 4000 };
+    let samples = synth::tiny_like(SEED, 0, 32);
+    let images: Vec<Vec<u8>> = samples.into_iter().map(|s| s.image).collect();
+    let mut report = JsonReport::new();
+
+    section("serving under fault injection");
+    println!(
+        "model {MODEL} (T={STEPS}), {WORKERS} workers, batch <= {BATCH}, \
+         {SUBMITTERS} submitters, {requests} requests per rate"
+    );
+    for rate in FAULT_RATES {
+        let fstats = Arc::new(FaultStats::default());
+        let coord = start_pool(rate, &fstats);
+
+        if rate == 0.0 {
+            // Correctness gate: a served result is bit-identical to the
+            // golden model invoked directly.
+            let reference = tiny_net();
+            let direct = reference.infer_u8(&images[0]);
+            let served = coord.infer_blocking(images[0].clone()).expect("clean serve");
+            assert_eq!(served.logits, direct, "served result must be bit-identical");
+        }
+
+        let spec = LoadSpec { requests, submitters: SUBMITTERS, submit_wait: None };
+        let load = run_load(&coord, &images, &spec);
+        let stats = coord.shutdown();
+
+        assert_eq!(load.total(), requests as u64, "every request tallied exactly once");
+        assert_eq!(
+            stats.completed + stats.failed + stats.shed,
+            stats.submitted,
+            "coordinator counters balance"
+        );
+        if rate == 0.0 {
+            assert_eq!(load.ok, requests as u64, "clean run: everything completes");
+            assert_eq!(stats.failed, 0, "clean run: no failures");
+            assert_eq!(stats.shed, 0, "clean run: no shedding");
+        }
+
+        let n = requests as f64;
+        let shed_rate = stats.shed as f64 / n;
+        let fail_rate = stats.failed as f64 / n;
+        let retry_rate = stats.retries as f64 / n;
+        println!("\nfault rate {:.1}%:", rate * 100.0);
+        println!("  {}", load.render());
+        println!(
+            "  injected {} faults over {} engine calls; {} retries, {} restarts",
+            fstats.injected(),
+            fstats.calls.load(std::sync::atomic::Ordering::Relaxed),
+            stats.retries,
+            stats.worker_restarts
+        );
+        println!(
+            "  throughput {:.1} req/s   p50 {:.3} ms   p99 {:.3} ms",
+            stats.throughput_rps, stats.latency_ms_p50, stats.latency_ms_p99
+        );
+        report.serve(
+            MODEL,
+            rate,
+            stats.throughput_rps,
+            stats.latency_ms_p50,
+            stats.latency_ms_p99,
+            shed_rate,
+            retry_rate,
+            fail_rate,
+        );
+    }
+    report.write(REPORT_PATH);
+}

@@ -120,6 +120,35 @@ impl JsonReport {
         ));
     }
 
+    /// One serving load-test measurement at a given injected fault rate
+    /// (PR6: `bench_serve` / `vsa serve-bench`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn serve(
+        &mut self,
+        model: &str,
+        fault_rate: f64,
+        rps: f64,
+        p50_ms: f64,
+        p99_ms: f64,
+        shed_rate: f64,
+        retry_rate: f64,
+        fail_rate: f64,
+    ) {
+        self.rows.push(format!(
+            "{{\"kind\": \"serve\", \"model\": \"{}\", \"fault_rate\": {:.4}, \
+             \"rps\": {:.3}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \"shed_rate\": {:.4}, \
+             \"retry_rate\": {:.4}, \"fail_rate\": {:.4}}}",
+            json_escape(model),
+            fault_rate,
+            rps,
+            p50_ms,
+            p99_ms,
+            shed_rate,
+            retry_rate,
+            fail_rate
+        ));
+    }
+
     /// Write the report; the schema key lets downstream tooling evolve.
     pub fn write(&self, path: &str) {
         let mut body = String::from("{\n  \"schema\": \"vsa-bench-v1\",\n  \"results\": [\n");

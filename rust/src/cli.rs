@@ -4,6 +4,7 @@
 //! Flags may use `--key value` or `--key=value`.
 
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -93,6 +94,20 @@ impl Args {
         self.get_parsed(key, default, "a number")
     }
 
+    /// Duration flag expressed in (possibly fractional) milliseconds.
+    pub fn get_millis(&self, key: &str, default: Duration) -> anyhow::Result<Duration> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                let ms: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--{key} expects milliseconds, got '{v}'"))?;
+                anyhow::ensure!(ms.is_finite() && ms >= 0.0, "--{key} must be >= 0, got '{v}'");
+                Ok(Duration::from_secs_f64(ms / 1e3))
+            }
+        }
+    }
+
     /// Boolean switch (present or not).
     pub fn has(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key)
@@ -146,6 +161,17 @@ mod tests {
         assert_eq!(a.require("count").unwrap(), "4");
         let err = a.require("weights").unwrap_err().to_string();
         assert!(err.contains("--weights"), "error should name the flag: {err}");
+    }
+
+    #[test]
+    fn millis_flag_parses_fractional_and_rejects_junk() {
+        let a = parse("serve --deadline-ms 2.5 --bad-ms oops --neg-ms -1");
+        let d = a.get_millis("deadline-ms", Duration::ZERO).unwrap();
+        assert_eq!(d, Duration::from_micros(2500));
+        let fallback = Duration::from_millis(7);
+        assert_eq!(a.get_millis("absent-ms", fallback).unwrap(), fallback);
+        assert!(a.get_millis("bad-ms", Duration::ZERO).is_err());
+        assert!(a.get_millis("neg-ms", Duration::ZERO).is_err());
     }
 
     #[test]

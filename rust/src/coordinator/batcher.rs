@@ -39,6 +39,26 @@ pub fn next_batch<T>(
     Some(batch)
 }
 
+/// Partition a formed batch into `(live, expired)` by a per-payload
+/// deadline, preserving arrival order within each half.  Requests whose
+/// payload carries no deadline are always live.  The coordinator calls
+/// this at dequeue so expired requests are shed, never inferred.
+pub fn split_expired<T>(
+    batch: Vec<Request<T>>,
+    now: Instant,
+    deadline_of: impl Fn(&T) -> Option<Instant>,
+) -> (Vec<Request<T>>, Vec<Request<T>>) {
+    let mut live = Vec::with_capacity(batch.len());
+    let mut expired = Vec::new();
+    for req in batch {
+        match deadline_of(&req.payload) {
+            Some(d) if d <= now => expired.push(req),
+            _ => live.push(req),
+        }
+    }
+    (live, expired)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,5 +128,35 @@ mod tests {
         let batch = next_batch(&rx, 8, Duration::from_millis(50)).unwrap();
         assert_eq!(batch.len(), 2);
         assert!(next_batch(&rx, 8, Duration::from_millis(1)).is_none());
+    }
+
+    /// Payload for the split tests: the deadline itself.
+    fn dreq(id: u64, deadline: Option<Instant>) -> Request<Option<Instant>> {
+        Request { id, payload: deadline, enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn split_expired_partitions_and_keeps_order() {
+        let now = Instant::now();
+        let past = now - Duration::from_millis(5);
+        let future = now + Duration::from_secs(5);
+        let batch = vec![
+            dreq(0, Some(past)),
+            dreq(1, Some(future)),
+            dreq(2, None),
+            dreq(3, Some(past)),
+            dreq(4, Some(now)), // exactly-at-deadline counts as expired
+        ];
+        let (live, expired) = split_expired(batch, now, |d| *d);
+        assert_eq!(live.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(expired.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 3, 4]);
+    }
+
+    #[test]
+    fn split_expired_no_deadlines_all_live() {
+        let batch = vec![dreq(0, None), dreq(1, None)];
+        let (live, expired) = split_expired(batch, Instant::now(), |d| *d);
+        assert_eq!(live.len(), 2);
+        assert!(expired.is_empty());
     }
 }

@@ -10,6 +10,15 @@ use anyhow::Result;
 ///
 /// Not required to be `Send`: the coordinator constructs one engine *per
 /// worker thread* (PJRT client handles are thread-local).
+///
+/// Failure contract (PR6): `infer` may return `Err` for transient
+/// failures — the coordinator retries the batch split into singles and
+/// surfaces `ServeError::EngineFailed` with the cause once attempts are
+/// exhausted.  A *panic* in `infer` is caught by the worker
+/// (`catch_unwind`); the engine is assumed corrupted and is rebuilt via
+/// the factory passed to `Coordinator::start`, charged against the
+/// pool's restart budget.  `fault::FaultEngine` wraps any engine with
+/// seeded injections of both, plus latency spikes.
 pub trait InferenceEngine {
     /// Preferred batch size (the batcher targets this).
     fn batch_size(&self) -> usize;

@@ -1,0 +1,220 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! [`FaultEngine`] wraps any [`InferenceEngine`] and injects transient
+//! errors, panics, and latency spikes from a seeded SplitMix64 stream,
+//! so the chaos suite (`rust/tests/serve_faults.rs`) and `bench_serve`
+//! can drive the coordinator's failure paths reproducibly: one base seed
+//! plus [`FaultEngine::seed_for`] gives every worker its own fixed fault
+//! schedule, replayed identically on every run.  Faults never alter the
+//! wrapped engine's results — a request that completes under injection
+//! is bit-identical to a fault-free run on the same image.
+
+use crate::coordinator::engine::InferenceEngine;
+use crate::util::rng::SplitMix64;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Injection rates (per engine call) and the spike size.  The three
+/// rates partition one uniform draw, so at most one fault fires per
+/// call; their sum must stay <= 1.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultProfile {
+    /// P(call returns a transient `Err`) — exercises retry + splitting.
+    pub error_rate: f64,
+    /// P(call panics) — exercises `catch_unwind` + respawn.
+    pub panic_rate: f64,
+    /// P(call sleeps `spike` before running) — exercises deadlines.
+    pub spike_rate: f64,
+    /// Injected latency spike length.
+    pub spike: Duration,
+}
+
+impl FaultProfile {
+    /// No faults — the wrapper becomes a transparent pass-through.
+    pub fn clean() -> Self {
+        Self { error_rate: 0.0, panic_rate: 0.0, spike_rate: 0.0, spike: Duration::ZERO }
+    }
+
+    /// Only transient errors at `rate`.
+    pub fn errors(rate: f64) -> Self {
+        Self { error_rate: rate, ..Self::clean() }
+    }
+
+    /// Only panics at `rate`.
+    pub fn panics(rate: f64) -> Self {
+        Self { panic_rate: rate, ..Self::clean() }
+    }
+
+    /// Only latency spikes of `spike` at `rate`.
+    pub fn spikes(rate: f64, spike: Duration) -> Self {
+        Self { spike_rate: rate, spike, ..Self::clean() }
+    }
+
+    /// A mixed profile at total fault rate `rate`: 60% transient
+    /// errors, 20% panics, 20% latency spikes of `spike`.
+    pub fn mixed(rate: f64, spike: Duration) -> Self {
+        Self { error_rate: 0.6 * rate, panic_rate: 0.2 * rate, spike_rate: 0.2 * rate, spike }
+    }
+}
+
+/// Injection counters, shared across the pool's wrappers (and across
+/// respawns) so tests can assert that faults actually fired.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    pub calls: AtomicU64,
+    pub errors: AtomicU64,
+    pub panics: AtomicU64,
+    pub spikes: AtomicU64,
+}
+
+impl FaultStats {
+    /// Total injected faults of any kind.
+    pub fn injected(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+            + self.panics.load(Ordering::Relaxed)
+            + self.spikes.load(Ordering::Relaxed)
+    }
+}
+
+/// An [`InferenceEngine`] wrapper that injects seeded faults.
+pub struct FaultEngine {
+    inner: Box<dyn InferenceEngine>,
+    profile: FaultProfile,
+    rng: SplitMix64,
+    stats: Arc<FaultStats>,
+}
+
+impl FaultEngine {
+    /// Wrap `inner` with a fresh counter set.
+    pub fn new(inner: Box<dyn InferenceEngine>, profile: FaultProfile, seed: u64) -> Self {
+        Self::with_stats(inner, profile, seed, Arc::new(FaultStats::default()))
+    }
+
+    /// Wrap `inner`, sharing `stats` with other wrappers (one counter
+    /// set per pool; pass the same Arc from every `make_engine` call).
+    pub fn with_stats(
+        inner: Box<dyn InferenceEngine>,
+        profile: FaultProfile,
+        seed: u64,
+        stats: Arc<FaultStats>,
+    ) -> Self {
+        Self { inner, profile, rng: SplitMix64::new(seed), stats }
+    }
+
+    /// Derive a per-worker seed from one base seed, so each worker draws
+    /// an independent but reproducible fault schedule.
+    pub fn seed_for(base: u64, worker: usize) -> u64 {
+        base ^ (worker as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    /// The shared injection counters.
+    pub fn stats(&self) -> Arc<FaultStats> {
+        Arc::clone(&self.stats)
+    }
+}
+
+impl InferenceEngine for FaultEngine {
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+
+    fn infer(&mut self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
+        self.stats.calls.fetch_add(1, Ordering::Relaxed);
+        let u = self.rng.next_f64();
+        let p = self.profile;
+        if u < p.error_rate {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("injected transient fault (u = {u:.4})");
+        }
+        if u < p.error_rate + p.panic_rate {
+            self.stats.panics.fetch_add(1, Ordering::Relaxed);
+            panic!("injected engine panic (u = {u:.4})");
+        }
+        if u < p.error_rate + p.panic_rate + p.spike_rate {
+            self.stats.spikes.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(p.spike);
+        }
+        self.inner.infer(images)
+    }
+
+    fn name(&self) -> &'static str {
+        "fault-injected"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic inner engine: logits = [first pixel; 10].
+    struct EchoEngine;
+    impl InferenceEngine for EchoEngine {
+        fn batch_size(&self) -> usize {
+            4
+        }
+        fn infer(&mut self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
+            Ok(images.iter().map(|i| vec![i[0] as i64; 10]).collect())
+        }
+        fn name(&self) -> &'static str {
+            "echo"
+        }
+    }
+
+    /// Record which calls fail for a given (profile, seed) — panics are
+    /// not triggered here, only predicted from the same rng stream.
+    fn error_schedule(rate: f64, seed: u64, calls: usize) -> Vec<bool> {
+        let mut eng = FaultEngine::new(Box::new(EchoEngine), FaultProfile::errors(rate), seed);
+        (0..calls).map(|_| eng.infer(&[vec![1u8; 4]]).is_err()).collect()
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_per_seed() {
+        let a = error_schedule(0.3, 42, 200);
+        let b = error_schedule(0.3, 42, 200);
+        let c = error_schedule(0.3, 43, 200);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn clean_profile_is_transparent() {
+        let mut fe = FaultEngine::new(Box::new(EchoEngine), FaultProfile::clean(), 7);
+        let mut plain = EchoEngine;
+        let imgs = vec![vec![9u8; 4], vec![200u8; 4]];
+        assert_eq!(fe.infer(&imgs).unwrap(), plain.infer(&imgs).unwrap());
+        assert_eq!(fe.stats().injected(), 0);
+        assert_eq!(fe.stats().calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn error_rate_roughly_honored() {
+        let fails = error_schedule(0.25, 1234, 2000).iter().filter(|&&f| f).count();
+        // 2000 draws at p=0.25: expect ~500; 6-sigma band is ~±116.
+        assert!((380..=620).contains(&fails), "got {fails} injected errors");
+    }
+
+    #[test]
+    fn results_unchanged_on_non_faulted_calls() {
+        let mut fe = FaultEngine::new(Box::new(EchoEngine), FaultProfile::errors(0.5), 99);
+        let mut plain = EchoEngine;
+        let imgs = vec![vec![37u8; 4]];
+        for _ in 0..100 {
+            if let Ok(out) = fe.infer(&imgs) {
+                assert_eq!(out, plain.infer(&imgs).unwrap());
+            }
+        }
+        assert!(fe.stats().errors.load(Ordering::Relaxed) > 10);
+    }
+
+    #[test]
+    fn per_worker_seeds_differ() {
+        let s: Vec<u64> = (0..4).map(|w| FaultEngine::seed_for(7, w)).collect();
+        for i in 0..s.len() {
+            for j in i + 1..s.len() {
+                assert_ne!(s[i], s[j]);
+            }
+        }
+    }
+}

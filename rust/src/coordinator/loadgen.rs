@@ -1,0 +1,163 @@
+//! Closed-loop synthetic load generator for the coordinator — shared by
+//! `vsa serve-bench` and `benches/bench_serve.rs`.
+//!
+//! `submitters` threads each drive a closed loop (submit, wait for the
+//! typed outcome, repeat) over a round-robin slice of the image set, so
+//! concurrency is bounded and the tally is exact: every request lands in
+//! exactly one [`LoadReport`] bucket, which the callers cross-check
+//! against the coordinator's own counters.
+
+use crate::coordinator::server::{Coordinator, RejectReason, ServeError, ServeResult};
+use std::time::{Duration, Instant};
+
+/// How the generator drives the pool.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Total requests across all submitters.
+    pub requests: usize,
+    /// Concurrent closed-loop submitter threads.
+    pub submitters: usize,
+    /// `None` = blocking submit (backpressure); `Some(ZERO)` = fail-fast
+    /// `try_submit`; `Some(w)` = `submit_timeout(w)`.  Per-request
+    /// deadlines come from the coordinator's config, not from here.
+    pub submit_wait: Option<Duration>,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        Self { requests: 256, submitters: 4, submit_wait: None }
+    }
+}
+
+/// Terminal-outcome tally over one load run.
+#[derive(Debug, Default, Clone)]
+pub struct LoadReport {
+    pub ok: u64,
+    pub engine_failed: u64,
+    pub panicked: u64,
+    pub shed_queue: u64,
+    pub shed_deadline: u64,
+    pub shed_shutdown: u64,
+    pub wall: Duration,
+}
+
+impl LoadReport {
+    fn absorb(&mut self, outcome: &ServeResult) {
+        match outcome {
+            Ok(_) => self.ok += 1,
+            Err(ServeError::Rejected(RejectReason::QueueFull)) => self.shed_queue += 1,
+            Err(ServeError::Rejected(RejectReason::Deadline)) => self.shed_deadline += 1,
+            Err(ServeError::Rejected(RejectReason::Shutdown)) => self.shed_shutdown += 1,
+            Err(ServeError::EngineFailed { .. }) => self.engine_failed += 1,
+            Err(ServeError::WorkerPanicked) => self.panicked += 1,
+        }
+    }
+
+    fn merge(&mut self, other: &LoadReport) {
+        self.ok += other.ok;
+        self.engine_failed += other.engine_failed;
+        self.panicked += other.panicked;
+        self.shed_queue += other.shed_queue;
+        self.shed_deadline += other.shed_deadline;
+        self.shed_shutdown += other.shed_shutdown;
+    }
+
+    /// Total requests tallied (must equal the spec's request count).
+    pub fn total(&self) -> u64 {
+        self.ok
+            + self.engine_failed
+            + self.panicked
+            + self.shed_queue
+            + self.shed_deadline
+            + self.shed_shutdown
+    }
+
+    /// One-line summary for logs and bench output.
+    pub fn render(&self) -> String {
+        format!(
+            "ok {} | engine-failed {} | panicked {} | shed queue/deadline/shutdown {}/{}/{} \
+             | wall {:.1} ms",
+            self.ok,
+            self.engine_failed,
+            self.panicked,
+            self.shed_queue,
+            self.shed_deadline,
+            self.shed_shutdown,
+            self.wall.as_secs_f64() * 1e3
+        )
+    }
+}
+
+/// Drive `spec.requests` requests through `coord`, cycling over
+/// `images`, and tally every typed outcome.  Submit-time rejections
+/// (queue full, dead pool) are tallied in the same buckets as
+/// post-acceptance sheds, so the report always sums to the request
+/// count.
+pub fn run_load(coord: &Coordinator, images: &[Vec<u8>], spec: &LoadSpec) -> LoadReport {
+    assert!(!images.is_empty(), "run_load needs at least one image");
+    let t0 = Instant::now();
+    let subs = spec.submitters.max(1);
+    let n = spec.requests;
+    let mut total = LoadReport::default();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(subs);
+        for t in 0..subs {
+            handles.push(s.spawn(move || {
+                let mut tally = LoadReport::default();
+                let mut i = t;
+                while i < n {
+                    let image = images[i % images.len()].clone();
+                    let submitted = match spec.submit_wait {
+                        None => coord.submit(image),
+                        Some(w) if w.is_zero() => coord.try_submit(image),
+                        Some(w) => coord.submit_timeout(image, w),
+                    };
+                    let outcome = match submitted {
+                        Ok(rx) => rx.recv().unwrap_or(Err(ServeError::WorkerPanicked)),
+                        Err(e) => Err(e),
+                    };
+                    tally.absorb(&outcome);
+                    i += subs;
+                }
+                tally
+            }));
+        }
+        for h in handles {
+            total.merge(&h.join().expect("submitter thread panicked"));
+        }
+    });
+    total.wall = t0.elapsed();
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::models;
+    use crate::coordinator::engine::GoldenEngine;
+    use crate::coordinator::server::CoordinatorConfig;
+    use crate::data::synth;
+    use crate::snn::params::DeployedModel;
+    use crate::snn::Network;
+
+    fn tiny_net() -> Network {
+        Network::new(DeployedModel::synthesize(&models::tiny(2), 42))
+    }
+
+    #[test]
+    fn clean_load_completes_everything_and_balances() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { workers: 2, max_batch: 4, ..CoordinatorConfig::default() },
+            |_| Box::new(GoldenEngine::new(tiny_net(), 4)),
+        );
+        let samples = synth::tiny_like(3, 0, 8);
+        let images: Vec<Vec<u8>> = samples.into_iter().map(|s| s.image).collect();
+        let spec = LoadSpec { requests: 40, submitters: 4, submit_wait: None };
+        let report = run_load(&coord, &images, &spec);
+        assert_eq!(report.total(), 40);
+        assert_eq!(report.ok, 40, "clean run: everything completes");
+        let stats = coord.shutdown();
+        assert_eq!(stats.submitted, 40);
+        assert_eq!(stats.completed + stats.failed + stats.shed, stats.submitted);
+    }
+}

@@ -8,10 +8,23 @@
 //! (golden model, chip simulator, or the PJRT executable — python is never
 //! involved).  Built on std threads + channels (tokio is unavailable in
 //! this offline environment).
+//!
+//! Since PR6 the coordinator is fault-tolerant end to end: every request
+//! terminates with an [`InferResult`] or a typed [`ServeError`]
+//! (deadlines, queue-full shedding, bounded batch-splitting retries,
+//! panic isolation with budgeted respawn — see README §SERVING), and
+//! [`fault::FaultEngine`] + [`loadgen`] exist to prove it under seeded
+//! fault schedules.
 
 pub mod batcher;
 pub mod engine;
+pub mod fault;
+pub mod loadgen;
 pub mod server;
 
 pub use engine::{ChipEngine, EngineKind, GoldenEngine, InferenceEngine, PjrtEngine};
-pub use server::{Coordinator, CoordinatorConfig, ServeStats};
+pub use fault::{FaultEngine, FaultProfile, FaultStats};
+pub use loadgen::{run_load, LoadReport, LoadSpec};
+pub use server::{
+    Coordinator, CoordinatorConfig, InferResult, RejectReason, ServeError, ServeResult, ServeStats,
+};

@@ -1,19 +1,77 @@
-//! The coordinator: bounded submission queue, batcher loop, worker pool.
+//! The coordinator: bounded submission queue, batcher loop, worker pool
+//! with typed per-request failures, deadlines, bounded retry, panic
+//! isolation + budgeted respawn, and load shedding (README §SERVING).
+//!
+//! The liveness contract: every request that [`Coordinator::submit`] (or
+//! a sibling) accepts terminates with exactly one [`ServeResult`] — an
+//! [`InferResult`] or a typed [`ServeError`] — and is charged to exactly
+//! one of the `completed` / `failed` / `shed` counters, so
+//! `completed + failed + shed == submitted` once the queue drains.  The
+//! chaos suite (`rust/tests/serve_faults.rs`) drives this invariant
+//! through seeded fault schedules.
 
-use crate::coordinator::batcher::{next_batch, Request};
+use crate::coordinator::batcher::{next_batch, split_expired, Request};
 use crate::coordinator::engine::InferenceEngine;
 use crate::util::stats::Accumulator;
-use anyhow::Result;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+/// Why a request was turned away without (further) inference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded queue was full (shed at submit time by `try_submit`
+    /// or `submit_timeout`; the blocking `submit` waits instead).
+    QueueFull,
+    /// The request's deadline expired before an engine ran it.
+    Deadline,
+    /// The coordinator is shut down or every worker engine is dead.
+    Shutdown,
+}
+
+/// Typed per-request serving failure — every accepted request ends in an
+/// [`InferResult`] or exactly one of these.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Shed without inference; the reason names the gate that fired.
+    Rejected(RejectReason),
+    /// Every inference attempt returned an error; `cause` is the last.
+    EngineFailed { attempts: u32, cause: String },
+    /// The engine panicked on the final attempt (the worker respawned
+    /// its engine, or went dark once the restart budget was spent).
+    WorkerPanicked,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Rejected(RejectReason::QueueFull) => write!(f, "rejected: queue full"),
+            ServeError::Rejected(RejectReason::Deadline) => {
+                write!(f, "rejected: deadline expired")
+            }
+            ServeError::Rejected(RejectReason::Shutdown) => write!(f, "rejected: shutting down"),
+            ServeError::EngineFailed { attempts, cause } => {
+                write!(f, "engine failed after {attempts} attempt(s): {cause}")
+            }
+            ServeError::WorkerPanicked => write!(f, "engine panicked"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What every result receiver yields.
+pub type ServeResult = Result<InferResult, ServeError>;
+
 /// Coordinator tuning knobs.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Bounded queue depth — submissions beyond this block (backpressure).
+    /// Bounded queue depth — blocking submissions beyond this wait
+    /// (backpressure); `try_submit`/`submit_timeout` shed instead.
     pub queue_depth: usize,
     /// Maximum images per engine batch.
     pub max_batch: usize,
@@ -21,6 +79,22 @@ pub struct CoordinatorConfig {
     pub max_wait: Duration,
     /// Worker threads (each owns one engine instance).
     pub workers: usize,
+    /// Default per-request deadline measured from submission (`None` =
+    /// no deadline).  Expired requests are shed at dequeue and before
+    /// each retry — never inferred.
+    pub deadline: Option<Duration>,
+    /// Extra inference attempts after the first failure (0 = no retry).
+    /// A failed batch is split so each member retries alone — one
+    /// poisoned image cannot sink its batchmates.
+    pub max_retries: u32,
+    /// Deterministic linear backoff: the k-th retry of a request sleeps
+    /// `k * retry_backoff` first (truncated at its deadline).
+    pub retry_backoff: Duration,
+    /// Pool-wide respawn budget for panicked engines; once spent, a
+    /// panicking worker goes dark and the pool degrades.  When every
+    /// worker is dark, new submissions fail fast with
+    /// `Rejected(Shutdown)` and queued ones are shed — never stranded.
+    pub restart_budget: u32,
 }
 
 impl Default for CoordinatorConfig {
@@ -30,6 +104,10 @@ impl Default for CoordinatorConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             workers: 2,
+            deadline: None,
+            max_retries: 2,
+            retry_backoff: Duration::from_micros(500),
+            restart_budget: 4,
         }
     }
 }
@@ -45,7 +123,21 @@ pub struct InferResult {
 /// Aggregate serving statistics.
 #[derive(Debug, Clone)]
 pub struct ServeStats {
+    /// Requests accepted into the queue (excludes submit-time rejects).
+    pub submitted: u64,
+    /// Requests that returned logits.
     pub completed: u64,
+    /// Requests that exhausted attempts (`EngineFailed` /
+    /// `WorkerPanicked`).
+    pub failed: u64,
+    /// Requests shed after acceptance (deadline expiry, dead pool).
+    pub shed: u64,
+    /// Engine attempts beyond each request's first.
+    pub retries: u64,
+    /// Engines rebuilt after a panic.
+    pub worker_restarts: u64,
+    /// Workers whose engine is currently alive.
+    pub alive_workers: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub latency_ms_p50: f64,
@@ -56,90 +148,343 @@ pub struct ServeStats {
 
 struct Shared {
     latency: Mutex<Accumulator>,
+    submitted: AtomicU64,
     completed: AtomicU64,
+    failed: AtomicU64,
+    shed: AtomicU64,
+    retries: AtomicU64,
+    worker_restarts: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
+    /// Remaining engine respawns (pool-wide).  May briefly go negative
+    /// on the losing side of a race, which simply denies that respawn.
+    restart_budget: AtomicI64,
+    /// Workers whose engine is currently alive.
+    alive: AtomicUsize,
 }
 
-type Payload = (Vec<u8>, Sender<InferResult>);
+/// Per-request payload travelling through the queue.
+struct Job {
+    image: Vec<u8>,
+    resp: Sender<ServeResult>,
+    deadline: Option<Instant>,
+}
+
+/// A request whose image has been handed (or is about to be handed) to
+/// the engine; everything needed to deliver its terminal outcome.
+struct Pending {
+    id: u64,
+    enqueued: Instant,
+    resp: Sender<ServeResult>,
+    deadline: Option<Instant>,
+}
+
+fn into_pending(req: Request<Job>) -> (Vec<u8>, Pending) {
+    let Request { id, payload, enqueued } = req;
+    let Job { image, resp, deadline } = payload;
+    (image, Pending { id, enqueued, resp, deadline })
+}
+
+/// One guarded engine call's failure mode.
+#[derive(Clone)]
+enum AttemptError {
+    /// The engine returned `Err` (or broke the length contract); its
+    /// state is intact and it can be retried as-is.
+    Failed(String),
+    /// The engine panicked; its state may be corrupt — the caller must
+    /// respawn it before reuse.
+    Panicked,
+}
+
+type EngineBox = Box<dyn InferenceEngine>;
+type MakeEngine = dyn Fn(usize) -> EngineBox + Send + Sync;
+
+/// Per-worker knobs copied out of [`CoordinatorConfig`].
+#[derive(Clone, Copy)]
+struct WorkerCfg {
+    max_batch: usize,
+    max_wait: Duration,
+    max_retries: u32,
+    retry_backoff: Duration,
+}
+
+/// Everything one worker thread needs: its index, knobs, the shared
+/// counters, and the engine factory (for panic respawn).
+struct WorkerCtx {
+    w: usize,
+    cfg: WorkerCfg,
+    shared: Arc<Shared>,
+    make_engine: Arc<MakeEngine>,
+}
+
+impl WorkerCtx {
+    /// The worker loop.  A worker never exits before the queue closes,
+    /// even with a dead engine: a dark worker keeps pulling batches and
+    /// shedding them as `Rejected(Shutdown)`, so no request is ever
+    /// stranded in the queue and shutdown always drains.
+    fn run(&self, rx: &Mutex<Receiver<Request<Job>>>) {
+        // A panicking engine constructor counts like a panicking engine:
+        // the worker starts dark instead of taking the thread down.
+        let mut engine = match catch_unwind(AssertUnwindSafe(|| (self.make_engine)(self.w))) {
+            Ok(e) => Some(e),
+            Err(_) => {
+                eprintln!("worker {}: engine constructor panicked; worker is dark", self.w);
+                self.shared.alive.fetch_sub(1, Ordering::SeqCst);
+                None
+            }
+        };
+        let max_batch = match &engine {
+            Some(e) => self.cfg.max_batch.min(e.batch_size()).max(1),
+            None => self.cfg.max_batch.max(1),
+        };
+        loop {
+            // Only one worker holds the queue lock while *forming* a
+            // batch; inference runs outside the lock.
+            let batch = {
+                let rx = rx.lock().unwrap();
+                next_batch(&rx, max_batch, self.cfg.max_wait)
+            };
+            let Some(batch) = batch else { break };
+            self.shared.batches.fetch_add(1, Ordering::Relaxed);
+            self.shared.batched_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+            // Deadline gate at dequeue: expired requests are shed.
+            let (live, expired) = split_expired(batch, Instant::now(), |j: &Job| j.deadline);
+            for req in expired {
+                let (_, pending) = into_pending(req);
+                self.respond(pending, Err(ServeError::Rejected(RejectReason::Deadline)));
+            }
+            if live.is_empty() {
+                continue;
+            }
+            if engine.is_some() {
+                self.run_batch(&mut engine, live);
+            } else {
+                for req in live {
+                    let (_, pending) = into_pending(req);
+                    self.respond(pending, Err(ServeError::Rejected(RejectReason::Shutdown)));
+                }
+            }
+        }
+    }
+
+    /// Run one formed batch: a shared first attempt, then — on failure —
+    /// the batch is split and each member retried alone, so one poisoned
+    /// image cannot sink its batchmates.
+    fn run_batch(&self, engine: &mut Option<EngineBox>, batch: Vec<Request<Job>>) {
+        let mut images = Vec::with_capacity(batch.len());
+        let mut members = Vec::with_capacity(batch.len());
+        for req in batch {
+            // Move the payload out — the engine reads slices, no clones.
+            let (image, pending) = into_pending(req);
+            images.push(image);
+            members.push(pending);
+        }
+        let eng = engine.as_mut().expect("run_batch requires a live engine");
+        match Self::attempt(eng, &images) {
+            Ok(results) => {
+                for (pending, logits) in members.into_iter().zip(results) {
+                    self.complete(pending, logits);
+                }
+            }
+            Err(first) => {
+                if matches!(first, AttemptError::Panicked) {
+                    self.respawn(engine);
+                }
+                for (pending, image) in members.into_iter().zip(images) {
+                    self.finish_one(engine, pending, image, first.clone());
+                }
+            }
+        }
+    }
+
+    /// Drive one request to its terminal outcome after a failed shared
+    /// attempt: bounded retries with deterministic linear backoff, the
+    /// deadline re-checked before every attempt.
+    fn finish_one(
+        &self,
+        engine: &mut Option<EngineBox>,
+        pending: Pending,
+        image: Vec<u8>,
+        mut last: AttemptError,
+    ) {
+        // The shared batch attempt was this request's attempt #1.
+        let mut attempts: u32 = 1;
+        while attempts <= self.cfg.max_retries {
+            if engine.is_none() {
+                break; // dark worker: report the last failure below
+            }
+            // Deterministic linear backoff before retry k (1-based),
+            // truncated at the deadline so a shed stays a shed.
+            let mut pause = self.cfg.retry_backoff * attempts;
+            if let Some(d) = pending.deadline {
+                pause = pause.min(d.saturating_duration_since(Instant::now()));
+            }
+            if pause > Duration::ZERO {
+                std::thread::sleep(pause);
+            }
+            if let Some(d) = pending.deadline {
+                if Instant::now() >= d {
+                    self.respond(pending, Err(ServeError::Rejected(RejectReason::Deadline)));
+                    return;
+                }
+            }
+            attempts += 1;
+            self.shared.retries.fetch_add(1, Ordering::Relaxed);
+            let eng = engine.as_mut().expect("checked above");
+            match Self::attempt(eng, std::slice::from_ref(&image)) {
+                Ok(mut out) => {
+                    let logits = out.pop().expect("length checked by attempt()");
+                    self.complete(pending, logits);
+                    return;
+                }
+                Err(e) => {
+                    if matches!(e, AttemptError::Panicked) {
+                        self.respawn(engine);
+                    }
+                    last = e;
+                }
+            }
+        }
+        let err = match last {
+            AttemptError::Failed(cause) => ServeError::EngineFailed { attempts, cause },
+            AttemptError::Panicked => ServeError::WorkerPanicked,
+        };
+        self.respond(pending, Err(err));
+    }
+
+    /// One guarded engine call.  A panic is caught and reported as
+    /// [`AttemptError::Panicked`]; the caller must respawn the engine.
+    fn attempt(engine: &mut EngineBox, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>, AttemptError> {
+        match catch_unwind(AssertUnwindSafe(|| engine.infer(images))) {
+            Ok(Ok(out)) if out.len() == images.len() => Ok(out),
+            Ok(Ok(out)) => Err(AttemptError::Failed(format!(
+                "engine returned {} results for {} images",
+                out.len(),
+                images.len()
+            ))),
+            Ok(Err(e)) => Err(AttemptError::Failed(format!("{e:#}"))),
+            Err(_) => Err(AttemptError::Panicked),
+        }
+    }
+
+    /// Replace a panicked engine, spending one unit of the pool-wide
+    /// restart budget.  Leaves the slot empty (the worker goes dark)
+    /// once the budget is spent or the constructor itself panics.
+    fn respawn(&self, engine: &mut Option<EngineBox>) {
+        *engine = None;
+        if self.shared.restart_budget.fetch_sub(1, Ordering::SeqCst) <= 0 {
+            eprintln!("worker {}: engine panicked, restart budget spent; worker is dark", self.w);
+            self.shared.alive.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
+        match catch_unwind(AssertUnwindSafe(|| (self.make_engine)(self.w))) {
+            Ok(e) => {
+                *engine = Some(e);
+                self.shared.worker_restarts.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                eprintln!("worker {}: engine constructor panicked on respawn; dark", self.w);
+                self.shared.alive.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Deliver a successful result, recording latency + completion.
+    fn complete(&self, pending: Pending, logits: Vec<i64>) {
+        let latency = pending.enqueued.elapsed();
+        let res = InferResult { id: pending.id, logits, latency };
+        self.respond(pending, Ok(res));
+    }
+
+    /// Deliver the terminal outcome for one request and charge the
+    /// matching counter — the single place the completed/failed/shed
+    /// accounting lives, so the counters balance by construction.
+    fn respond(&self, pending: Pending, outcome: ServeResult) {
+        match &outcome {
+            Ok(res) => {
+                let ms = res.latency.as_secs_f64() * 1e3;
+                self.shared.latency.lock().unwrap().push(ms);
+                self.shared.completed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(ServeError::Rejected(_)) => {
+                self.shared.shed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.shared.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // The submitter may have given up on its receiver; that is fine.
+        let _ = pending.resp.send(outcome);
+    }
+}
+
+/// How a submission behaves when the bounded queue is full.
+enum SubmitMode {
+    /// Block until a slot frees (backpressure).
+    Block,
+    /// Fail immediately with `Rejected(QueueFull)`.
+    Fail,
+    /// Wait up to the limit, then fail with `Rejected(QueueFull)`.
+    Wait(Duration),
+}
+
+/// Poll interval for `submit_timeout` (std's `SyncSender` has no native
+/// timed send).
+const SUBMIT_POLL: Duration = Duration::from_micros(200);
 
 /// A running coordinator instance.
 pub struct Coordinator {
-    tx: Option<SyncSender<Request<Payload>>>,
+    tx: Option<SyncSender<Request<Job>>>,
     workers: Vec<JoinHandle<()>>,
     shared: Arc<Shared>,
     next_id: AtomicU64,
     started: Instant,
+    deadline: Option<Duration>,
 }
 
 impl Coordinator {
     /// Start the worker pool.  `make_engine` builds one engine per worker
     /// and runs *inside* that worker's thread (engines need not be `Send`
-    /// — PJRT client handles are thread-local).
+    /// — PJRT client handles are thread-local); it is also re-invoked to
+    /// respawn an engine after a caught panic.
     pub fn start(
         cfg: CoordinatorConfig,
         make_engine: impl Fn(usize) -> Box<dyn InferenceEngine> + Send + Sync + 'static,
     ) -> Self {
-        let (tx, rx) = sync_channel::<Request<Payload>>(cfg.queue_depth);
+        let (tx, rx) = sync_channel::<Request<Job>>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
-        let make_engine = Arc::new(make_engine);
+        let make_engine: Arc<MakeEngine> = Arc::new(make_engine);
         let shared = Arc::new(Shared {
             latency: Mutex::new(Accumulator::default()),
+            submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
+            restart_budget: AtomicI64::new(cfg.restart_budget as i64),
+            alive: AtomicUsize::new(cfg.workers),
         });
 
+        let wcfg = WorkerCfg {
+            max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
+            max_retries: cfg.max_retries,
+            retry_backoff: cfg.retry_backoff,
+        };
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
+            let ctx = WorkerCtx {
+                w,
+                cfg: wcfg,
+                shared: Arc::clone(&shared),
+                make_engine: Arc::clone(&make_engine),
+            };
             let rx = Arc::clone(&rx);
-            let shared = Arc::clone(&shared);
-            let make_engine = Arc::clone(&make_engine);
-            let cfg_max_batch = cfg.max_batch;
-            let max_wait = cfg.max_wait;
-            workers.push(std::thread::spawn(move || {
-                let mut engine = make_engine(w);
-                let max_batch = cfg_max_batch.min(engine.batch_size()).max(1);
-                loop {
-                    // Only one worker holds the queue lock while *forming*
-                    // a batch; inference runs outside the lock.
-                    let batch = {
-                        let rx = rx.lock().unwrap();
-                        next_batch(&rx, max_batch, max_wait)
-                    };
-                    let Some(batch) = batch else { break };
-                    shared.batches.fetch_add(1, Ordering::Relaxed);
-                    shared
-                        .batched_requests
-                        .fetch_add(batch.len() as u64, Ordering::Relaxed);
-
-                    let images: Vec<Vec<u8>> =
-                        batch.iter().map(|r| r.payload.0.clone()).collect();
-                    match engine.infer(&images) {
-                        Ok(results) => {
-                            for (req, logits) in batch.into_iter().zip(results) {
-                                let latency = req.enqueued.elapsed();
-                                shared
-                                    .latency
-                                    .lock()
-                                    .unwrap()
-                                    .push(latency.as_secs_f64() * 1e3);
-                                shared.completed.fetch_add(1, Ordering::Relaxed);
-                                let _ = req.payload.1.send(InferResult {
-                                    id: req.id,
-                                    logits,
-                                    latency,
-                                });
-                            }
-                        }
-                        Err(e) => {
-                            eprintln!("worker {w} ({}) failed: {e:#}", engine.name());
-                            // Responses dropped; submitters see a closed
-                            // channel and surface the error.
-                        }
-                    }
-                }
-            }));
+            workers.push(std::thread::spawn(move || ctx.run(&rx)));
         }
 
         Self {
@@ -148,29 +493,104 @@ impl Coordinator {
             shared,
             next_id: AtomicU64::new(0),
             started: Instant::now(),
+            deadline: cfg.deadline,
         }
     }
 
-    /// Submit one image; blocks when the queue is full (backpressure).
-    /// Returns the receiver for the result.
-    pub fn submit(&self, image: Vec<u8>) -> Result<Receiver<InferResult>> {
+    fn enqueue(
+        &self,
+        image: Vec<u8>,
+        deadline: Option<Duration>,
+        mode: SubmitMode,
+    ) -> Result<Receiver<ServeResult>, ServeError> {
+        if self.shared.alive.load(Ordering::SeqCst) == 0 {
+            return Err(ServeError::Rejected(RejectReason::Shutdown));
+        }
         let (rtx, rrx) = std::sync::mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .as_ref()
-            .expect("coordinator not shut down")
-            .send(Request { id, payload: (image, rtx), enqueued: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("coordinator is shut down"))?;
+        let job = Job { image, resp: rtx, deadline: deadline.map(|d| Instant::now() + d) };
+        let req = Request { id, payload: job, enqueued: Instant::now() };
+        let tx = self.tx.as_ref().expect("coordinator not shut down");
+        match mode {
+            SubmitMode::Block => tx
+                .send(req)
+                .map_err(|_| ServeError::Rejected(RejectReason::Shutdown))?,
+            SubmitMode::Fail => match tx.try_send(req) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) => {
+                    return Err(ServeError::Rejected(RejectReason::QueueFull));
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    return Err(ServeError::Rejected(RejectReason::Shutdown));
+                }
+            },
+            SubmitMode::Wait(limit) => {
+                let give_up = Instant::now() + limit;
+                let mut req = req;
+                loop {
+                    match tx.try_send(req) {
+                        Ok(()) => break,
+                        Err(TrySendError::Full(r)) => {
+                            if Instant::now() >= give_up {
+                                return Err(ServeError::Rejected(RejectReason::QueueFull));
+                            }
+                            req = r;
+                            std::thread::sleep(SUBMIT_POLL);
+                        }
+                        Err(TrySendError::Disconnected(_)) => {
+                            return Err(ServeError::Rejected(RejectReason::Shutdown));
+                        }
+                    }
+                }
+            }
+        }
+        self.shared.submitted.fetch_add(1, Ordering::Relaxed);
         Ok(rrx)
     }
 
-    /// Convenience: submit and wait.
-    pub fn infer_blocking(&self, image: Vec<u8>) -> Result<InferResult> {
-        let rx = self.submit(image)?;
-        rx.recv().map_err(|_| anyhow::anyhow!("worker dropped the request"))
+    /// Submit one image; blocks when the queue is full (backpressure).
+    /// Returns the receiver for the typed outcome.  Fails fast with
+    /// `Rejected(Shutdown)` when every worker engine is dead.
+    pub fn submit(&self, image: Vec<u8>) -> Result<Receiver<ServeResult>, ServeError> {
+        self.enqueue(image, self.deadline, SubmitMode::Block)
     }
 
-    /// Drain the queue and join the workers.
+    /// Submit without blocking: a full queue sheds the request with
+    /// `Rejected(QueueFull)` instead of applying backpressure.
+    pub fn try_submit(&self, image: Vec<u8>) -> Result<Receiver<ServeResult>, ServeError> {
+        self.enqueue(image, self.deadline, SubmitMode::Fail)
+    }
+
+    /// Submit, waiting at most `wait` for a queue slot before shedding
+    /// with `Rejected(QueueFull)` — the bounded-patience middle ground.
+    pub fn submit_timeout(
+        &self,
+        image: Vec<u8>,
+        wait: Duration,
+    ) -> Result<Receiver<ServeResult>, ServeError> {
+        self.enqueue(image, self.deadline, SubmitMode::Wait(wait))
+    }
+
+    /// Blocking submit with an explicit per-request deadline overriding
+    /// the configured default (`None` = no deadline for this request).
+    pub fn submit_with_deadline(
+        &self,
+        image: Vec<u8>,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<ServeResult>, ServeError> {
+        self.enqueue(image, deadline, SubmitMode::Block)
+    }
+
+    /// Convenience: submit and wait for the typed outcome.
+    pub fn infer_blocking(&self, image: Vec<u8>) -> ServeResult {
+        let rx = self.submit(image)?;
+        // A dropped sender means a worker died outside the engine guard;
+        // surface it as a panic-shaped failure rather than hanging.
+        rx.recv().unwrap_or(Err(ServeError::WorkerPanicked))
+    }
+
+    /// Drain the queue and join the workers.  Dark workers drain too
+    /// (shedding), so this never deadlocks.
     pub fn shutdown(mut self) -> ServeStats {
         drop(self.tx.take()); // close the queue; workers exit after drain
         for w in self.workers.drain(..) {
@@ -181,13 +601,19 @@ impl Coordinator {
 
     /// Current aggregate stats.
     pub fn stats(&self) -> ServeStats {
-        let completed = self.shared.completed.load(Ordering::Relaxed);
         let batches = self.shared.batches.load(Ordering::Relaxed);
         let batched = self.shared.batched_requests.load(Ordering::Relaxed);
+        let completed = self.shared.completed.load(Ordering::Relaxed);
         let lat = self.shared.latency.lock().unwrap();
         let (p50, p95, p99) = lat.percentiles();
         ServeStats {
+            submitted: self.shared.submitted.load(Ordering::Relaxed),
             completed,
+            failed: self.shared.failed.load(Ordering::Relaxed),
+            shed: self.shared.shed.load(Ordering::Relaxed),
+            retries: self.shared.retries.load(Ordering::Relaxed),
+            worker_restarts: self.shared.worker_restarts.load(Ordering::Relaxed),
+            alive_workers: self.shared.alive.load(Ordering::SeqCst) as u64,
             batches,
             mean_batch: if batches > 0 { batched as f64 / batches as f64 } else { 0.0 },
             latency_ms_p50: p50,
@@ -234,17 +660,21 @@ mod tests {
                 max_batch: 4,
                 max_wait: Duration::from_millis(5),
                 queue_depth: 64,
+                ..CoordinatorConfig::default()
             },
             |_| Box::new(GoldenEngine::new(net(), 4)),
         );
         let receivers: Vec<_> =
             (0..20).map(|i| coord.submit(vec![(i * 12) as u8; 16]).unwrap()).collect();
         for rx in receivers {
-            let res = rx.recv().unwrap();
+            let res = rx.recv().unwrap().unwrap();
             assert_eq!(res.logits.len(), 10);
         }
         let stats = coord.shutdown();
+        assert_eq!(stats.submitted, 20);
         assert_eq!(stats.completed, 20);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.shed, 0);
         assert!(stats.batches <= 20);
         assert!(stats.mean_batch >= 1.0);
     }
@@ -269,7 +699,64 @@ mod tests {
         let stats = coord.shutdown();
         assert_eq!(stats.completed, 10);
         for rx in rxs {
-            assert!(rx.recv().is_ok());
+            assert!(rx.recv().unwrap().is_ok());
         }
+    }
+
+    #[test]
+    fn serve_error_messages_name_the_cause() {
+        let msgs = [
+            ServeError::Rejected(RejectReason::QueueFull).to_string(),
+            ServeError::Rejected(RejectReason::Deadline).to_string(),
+            ServeError::Rejected(RejectReason::Shutdown).to_string(),
+            ServeError::EngineFailed { attempts: 3, cause: "boom".into() }.to_string(),
+            ServeError::WorkerPanicked.to_string(),
+        ];
+        assert!(msgs[0].contains("queue full"));
+        assert!(msgs[1].contains("deadline"));
+        assert!(msgs[2].contains("shutting down"));
+        assert!(msgs[3].contains("3 attempt(s)") && msgs[3].contains("boom"));
+        assert!(msgs[4].contains("panicked"));
+    }
+
+    /// An engine `Err` must reach every member of the failed batch as a
+    /// typed `EngineFailed` carrying the cause — never a dropped sender.
+    #[test]
+    fn engine_error_reaches_every_submitter_typed() {
+        struct FailEngine;
+        impl InferenceEngine for FailEngine {
+            fn batch_size(&self) -> usize {
+                4
+            }
+            fn infer(&mut self, _images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+                anyhow::bail!("injector offline")
+            }
+            fn name(&self) -> &'static str {
+                "fail"
+            }
+        }
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                max_batch: 4,
+                max_retries: 1,
+                retry_backoff: Duration::ZERO,
+                ..CoordinatorConfig::default()
+            },
+            |_| Box::new(FailEngine),
+        );
+        let rxs: Vec<_> = (0..4).map(|_| coord.submit(vec![1u8; 16]).unwrap()).collect();
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                Err(ServeError::EngineFailed { attempts, cause }) => {
+                    assert_eq!(attempts, 2, "1 batch attempt + 1 retry");
+                    assert!(cause.contains("injector offline"), "cause survives: {cause}");
+                }
+                other => panic!("expected EngineFailed, got {other:?}"),
+            }
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.failed, 4);
+        assert_eq!(stats.completed + stats.failed + stats.shed, stats.submitted);
     }
 }

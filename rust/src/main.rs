@@ -8,12 +8,14 @@
 //! vsa dse      --space small --workload mnist  # Pareto design sweep
 //! vsa infer    --engine golden|pjrt|chip --model mnist --count 8
 //! vsa serve    --model mnist --requests 64 --workers 2 --batch 8
+//! vsa serve-bench --model tiny --fault-rate 0.1 --requests 512
 //! vsa train    --model tiny --dataset synth --epochs 6 --seed 7
 //! vsa eval     --weights artifacts/tiny_t4_trained.vsaw [--steps T]
 //! vsa selftest                                 # cross-layer consistency
 //! ```
 
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use vsa::arch::{Chip, SimMode};
 use vsa::baselines::published;
@@ -21,7 +23,8 @@ use vsa::cli::Args;
 use vsa::config::{json, models, HwConfig};
 use vsa::dse;
 use vsa::coordinator::{
-    ChipEngine, Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine, PjrtEngine,
+    run_load, ChipEngine, Coordinator, CoordinatorConfig, FaultEngine, FaultProfile, FaultStats,
+    GoldenEngine, InferenceEngine, LoadSpec, PjrtEngine, ServeError,
 };
 use vsa::data::synth;
 use vsa::energy::{power, report};
@@ -48,6 +51,7 @@ fn main() {
         "dse" => cmd_dse(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "selftest" => cmd_selftest(&args),
@@ -74,6 +78,7 @@ commands:
   dse         sweep the reconfigurable design space, emit a Pareto report
   infer       classify synthetic samples (golden | chip | pjrt engines)
   serve       run the serving coordinator demo
+  serve-bench drive the coordinator under seeded fault injection
   train       STBP-train a binary-weight SNN, export a VSAW artifact
   eval        golden-model accuracy of an artifact (optionally at --steps T)
   selftest    cross-check golden model, simulator and PJRT runtime
@@ -94,6 +99,14 @@ train flags:  --model tiny|mnist|micro  --dataset synth|mnist  --steps T
 
 eval flags:   --weights FILE.vsaw  --dataset synth|mnist  --count N
               --seed S  --steps T (override the artifact's T)
+
+serve flags:  --engine golden|chip|pjrt  --requests N  --workers N
+              --batch B  --deadline-ms D  --retries N  --restart-budget N
+
+serve-bench:  --model tiny|mnist|cifar10  --steps T  --requests N
+              --workers N  --batch B  --submitters N  --fault-rate P
+              --spike-ms MS  --deadline-ms D  --submit-wait-ms W  --seed S
+              (weights are synthesized — no artifacts directory needed)
 ";
 
 fn load_network(args: &Args) -> anyhow::Result<(String, Network)> {
@@ -417,9 +430,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let weights_path = manifest.weights_path(&entry);
     let hlo_path = manifest.hlo_path(&entry);
 
+    let deadline = args
+        .get_opt("deadline-ms")
+        .map(|_| args.get_millis("deadline-ms", Duration::ZERO))
+        .transpose()?;
     let cfg = CoordinatorConfig {
         workers,
         max_batch: batch,
+        deadline,
+        max_retries: args.get_u64("retries", 2)? as u32,
+        restart_budget: args.get_u64("restart-budget", 4)? as u32,
         ..CoordinatorConfig::default()
     };
     let ek = engine_kind.clone();
@@ -450,10 +470,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .map(|s| coord.submit(s.image.clone()))
         .collect::<Result<_, _>>()?;
     let mut correct = 0usize;
+    let mut shed = 0usize;
+    let mut failed = 0usize;
     for (rx, s) in receivers.into_iter().zip(&samples) {
-        let res = rx.recv()?;
-        if argmax(&res.logits) == s.label {
-            correct += 1;
+        match rx.recv()? {
+            Ok(res) => {
+                if argmax(&res.logits) == s.label {
+                    correct += 1;
+                }
+            }
+            Err(ServeError::Rejected(_)) => shed += 1,
+            Err(_) => failed += 1,
         }
     }
     let stats = coord.shutdown();
@@ -469,7 +496,92 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "  latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}",
         stats.latency_ms_p50, stats.latency_ms_p95, stats.latency_ms_p99
     );
+    println!(
+        "  failed {failed}  shed {shed}  retries {}  worker restarts {}",
+        stats.retries, stats.worker_restarts
+    );
     println!("  accuracy {correct}/{requests}");
+    Ok(())
+}
+
+/// Artifact-free load benchmark: a synthesized model behind a seeded
+/// [`FaultEngine`], driven by the shared closed-loop generator.  The
+/// same code path `benches/bench_serve.rs` records into BENCH_PR6.json.
+fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
+    let model = args.get("model", "tiny");
+    let steps = args.get_usize("steps", 4)?;
+    let spec = models::by_name(&model, steps)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}' (tiny|mnist|cifar10)"))?;
+    let requests = args.get_usize("requests", 512)?;
+    let workers = args.get_usize("workers", 2)?;
+    let batch = args.get_usize("batch", 8)?;
+    let submitters = args.get_usize("submitters", 4)?;
+    let fault_rate = args.get_f64("fault-rate", 0.0)?;
+    anyhow::ensure!((0.0..=1.0).contains(&fault_rate), "--fault-rate must be in [0, 1]");
+    let seed = args.get_u64("seed", 7)?;
+    let spike = args.get_millis("spike-ms", Duration::from_millis(2))?;
+    let deadline = args
+        .get_opt("deadline-ms")
+        .map(|_| args.get_millis("deadline-ms", Duration::ZERO))
+        .transpose()?;
+    let submit_wait = args
+        .get_opt("submit-wait-ms")
+        .map(|_| args.get_millis("submit-wait-ms", Duration::ZERO))
+        .transpose()?;
+
+    let profile = FaultProfile::mixed(fault_rate, spike);
+    let fstats = Arc::new(FaultStats::default());
+    let cfg = CoordinatorConfig {
+        workers,
+        max_batch: batch,
+        deadline,
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start(cfg, {
+        let spec = spec.clone();
+        let fstats = Arc::clone(&fstats);
+        move |w| -> Box<dyn InferenceEngine> {
+            let net = Network::new(DeployedModel::synthesize(&spec, seed));
+            let inner = Box::new(GoldenEngine::new(net, batch));
+            let seed_w = FaultEngine::seed_for(seed, w);
+            Box::new(FaultEngine::with_stats(inner, profile, seed_w, Arc::clone(&fstats)))
+        }
+    });
+
+    let images: Vec<Vec<u8>> = synth::for_model(&model, seed, 0, 64.min(requests.max(1)))
+        .into_iter()
+        .map(|s| s.image)
+        .collect();
+    let load = LoadSpec { requests, submitters, submit_wait };
+    let report = run_load(&coord, &images, &load);
+    let stats = coord.shutdown();
+
+    println!(
+        "serve-bench {model} (T={steps}): {requests} requests, {workers} workers, \
+         fault rate {:.1}%",
+        fault_rate * 100.0
+    );
+    println!("  {}", report.render());
+    println!(
+        "  injected {} errors / {} panics / {} spikes over {} engine calls",
+        fstats.errors.load(std::sync::atomic::Ordering::Relaxed),
+        fstats.panics.load(std::sync::atomic::Ordering::Relaxed),
+        fstats.spikes.load(std::sync::atomic::Ordering::Relaxed),
+        fstats.calls.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    println!(
+        "  throughput {:.1} req/s   latency ms: p50 {:.2}  p99 {:.2}",
+        stats.throughput_rps, stats.latency_ms_p50, stats.latency_ms_p99
+    );
+    println!(
+        "  completed {}  failed {}  shed {}  retries {}  worker restarts {}",
+        stats.completed, stats.failed, stats.shed, stats.retries, stats.worker_restarts
+    );
+    anyhow::ensure!(report.total() == requests as u64, "load tally mismatch");
+    anyhow::ensure!(
+        stats.completed + stats.failed + stats.shed == stats.submitted,
+        "coordinator counters do not balance"
+    );
     Ok(())
 }
 

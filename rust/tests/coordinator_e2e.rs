@@ -32,6 +32,7 @@ fn concurrent_submitters_all_complete() {
             max_batch: 4,
             max_wait: Duration::from_millis(1),
             queue_depth: 16, // small: exercises backpressure blocking
+            ..CoordinatorConfig::default()
         },
         |_| Box::new(GoldenEngine::new(tiny_net(), 4)) as Box<dyn InferenceEngine>,
     ));
@@ -65,6 +66,7 @@ fn batched_results_match_unbatched() {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             queue_depth: 128,
+            ..CoordinatorConfig::default()
         },
         |_| Box::new(GoldenEngine::new(tiny_net(), 8)) as Box<dyn InferenceEngine>,
     );
@@ -75,7 +77,7 @@ fn batched_results_match_unbatched() {
         .map(|s| coord.submit(s.image.clone()).unwrap())
         .collect();
     for (rx, s) in rxs.into_iter().zip(&samples) {
-        assert_eq!(rx.recv().unwrap().logits, net.infer_u8(&s.image));
+        assert_eq!(rx.recv().unwrap().unwrap().logits, net.infer_u8(&s.image));
     }
     coord.shutdown();
 }
@@ -148,6 +150,7 @@ fn submit_blocks_at_queue_depth() {
             max_batch: 1,
             max_wait: Duration::ZERO,
             queue_depth: 2,
+            ..CoordinatorConfig::default()
         },
         {
             let gate = Arc::clone(&gate);
@@ -178,7 +181,7 @@ fn submit_blocks_at_queue_depth() {
         std::thread::spawn(move || {
             let rx = coord.submit(vec![0u8; 16]).unwrap();
             done.store(1, Ordering::SeqCst);
-            rx.recv().unwrap()
+            rx.recv().unwrap().unwrap()
         })
     };
     std::thread::sleep(Duration::from_millis(150));
@@ -197,7 +200,7 @@ fn submit_blocks_at_queue_depth() {
     assert_eq!(done.load(Ordering::SeqCst), 1);
     assert_eq!(res.logits.len(), 10);
     for rx in rxs {
-        assert_eq!(rx.recv().unwrap().logits.len(), 10);
+        assert_eq!(rx.recv().unwrap().unwrap().logits.len(), 10);
     }
     let stats = Arc::try_unwrap(coord).ok().expect("sole owner").shutdown();
     assert_eq!(stats.completed, 4);

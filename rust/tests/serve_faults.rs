@@ -1,0 +1,484 @@
+//! PR6 chaos suite: the coordinator under seeded fault injection.
+//!
+//! The property, for every seeded fault profile: each submitted request
+//! terminates with an `InferResult` or a typed `ServeError` — zero
+//! hangs, zero lost requests — the stats counters balance
+//! (`completed + failed + shed == submitted`), and every request that
+//! does complete returns logits bit-identical to a fault-free run on
+//! the same image.  Fault schedules come from `FaultEngine`'s SplitMix64
+//! stream, so each (profile, seed) test replays the same faults every
+//! run.  CI pins three fixed base seeds: 7, 0xBEEF, 0xC0FFEE.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+use vsa::config::models;
+use vsa::coordinator::{
+    Coordinator, CoordinatorConfig, FaultEngine, FaultProfile, FaultStats, GoldenEngine,
+    InferenceEngine, RejectReason, ServeError,
+};
+use vsa::data::synth;
+use vsa::snn::params::DeployedModel;
+use vsa::snn::Network;
+
+fn tiny_net() -> Network {
+    Network::new(DeployedModel::synthesize(&models::tiny(2), 42))
+}
+
+const RECV_PATIENCE: Duration = Duration::from_secs(30);
+
+/// Drive one seeded chaos run and assert the liveness + accounting +
+/// bit-exactness property.
+fn chaos_run(label: &str, profile: FaultProfile, seed: u64, deadline: Option<Duration>) {
+    const REQUESTS: usize = 48;
+    let reference = tiny_net();
+    let samples = synth::tiny_like(seed, 0, 16);
+    let images: Vec<Vec<u8>> = samples.into_iter().map(|s| s.image).collect();
+    let expected: Vec<Vec<i64>> = images.iter().map(|i| reference.infer_u8(i)).collect();
+
+    let fstats = Arc::new(FaultStats::default());
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 16,
+            deadline,
+            max_retries: 2,
+            retry_backoff: Duration::from_micros(100),
+            restart_budget: 10_000,
+        },
+        {
+            let fstats = Arc::clone(&fstats);
+            move |w| {
+                let inner = Box::new(GoldenEngine::new(tiny_net(), 4));
+                let seed_w = FaultEngine::seed_for(seed, w);
+                let fe = FaultEngine::with_stats(inner, profile, seed_w, Arc::clone(&fstats));
+                Box::new(fe) as Box<dyn InferenceEngine>
+            }
+        },
+    );
+
+    // Mixed submission modes: blocking, bounded-wait, fail-fast.
+    let mut rxs = Vec::new();
+    let mut submit_rejects = 0u64;
+    for i in 0..REQUESTS {
+        let img = images[i % images.len()].clone();
+        let sub = match i % 3 {
+            0 => coord.submit(img),
+            1 => coord.submit_timeout(img, Duration::from_millis(200)),
+            _ => coord.try_submit(img),
+        };
+        match sub {
+            Ok(rx) => rxs.push((i, rx)),
+            Err(ServeError::Rejected(_)) => submit_rejects += 1,
+            Err(e) => panic!("{label}: submit must reject typed, got {e:?}"),
+        }
+    }
+    let accepted = rxs.len() as u64;
+
+    let (mut ok, mut failed, mut shed) = (0u64, 0u64, 0u64);
+    for (i, rx) in rxs {
+        match rx.recv_timeout(RECV_PATIENCE) {
+            Ok(Ok(res)) => {
+                assert_eq!(
+                    res.logits,
+                    expected[i % expected.len()],
+                    "{label}: completed request {i} must be bit-identical to fault-free"
+                );
+                ok += 1;
+            }
+            Ok(Err(ServeError::Rejected(_))) => shed += 1,
+            Ok(Err(_)) => failed += 1,
+            Err(_) => panic!("{label}: request {i} hung — no terminal outcome"),
+        }
+    }
+
+    let stats = coord.shutdown();
+    assert_eq!(accepted + submit_rejects, REQUESTS as u64, "{label}: all accounted");
+    assert_eq!(stats.submitted, accepted, "{label}: submitted == accepted");
+    assert_eq!(stats.completed, ok, "{label}: completed counter");
+    assert_eq!(stats.failed, failed, "{label}: failed counter");
+    assert_eq!(stats.shed, shed, "{label}: shed counter");
+    assert_eq!(
+        stats.completed + stats.failed + stats.shed,
+        stats.submitted,
+        "{label}: counters balance"
+    );
+}
+
+#[test]
+fn chaos_clean_zero_faults() {
+    chaos_run("clean", FaultProfile::clean(), 7, None);
+}
+
+#[test]
+fn chaos_errors_1pct() {
+    chaos_run("errors-1%", FaultProfile::errors(0.01), 7, None);
+}
+
+#[test]
+fn chaos_errors_10pct() {
+    chaos_run("errors-10%", FaultProfile::errors(0.10), 0xBEEF, None);
+}
+
+#[test]
+fn chaos_errors_50pct() {
+    chaos_run("errors-50%", FaultProfile::errors(0.50), 0xC0FFEE, None);
+}
+
+#[test]
+fn chaos_panics_1pct() {
+    chaos_run("panics-1%", FaultProfile::panics(0.01), 7, None);
+}
+
+#[test]
+fn chaos_panics_10pct() {
+    chaos_run("panics-10%", FaultProfile::panics(0.10), 0xBEEF, None);
+}
+
+#[test]
+fn chaos_panics_50pct() {
+    chaos_run("panics-50%", FaultProfile::panics(0.50), 0xC0FFEE, None);
+}
+
+#[test]
+fn chaos_spikes_1pct() {
+    let p = FaultProfile::spikes(0.01, Duration::from_millis(40));
+    chaos_run("spikes-1%", p, 7, Some(Duration::from_millis(25)));
+}
+
+#[test]
+fn chaos_spikes_10pct() {
+    let p = FaultProfile::spikes(0.10, Duration::from_millis(40));
+    chaos_run("spikes-10%", p, 0xBEEF, Some(Duration::from_millis(25)));
+}
+
+#[test]
+fn chaos_spikes_50pct() {
+    let p = FaultProfile::spikes(0.50, Duration::from_millis(40));
+    chaos_run("spikes-50%", p, 0xC0FFEE, Some(Duration::from_millis(25)));
+}
+
+#[test]
+fn chaos_mixed_10pct_all_seeds() {
+    for seed in [7u64, 0xBEEF, 0xC0FFEE] {
+        let p = FaultProfile::mixed(0.10, Duration::from_millis(5));
+        chaos_run("mixed-10%", p, seed, None);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deterministic edge cases (gated / scripted engines)
+// ---------------------------------------------------------------------
+
+/// Engine whose infer() blocks until the test releases a gate — the
+/// PR3 edge-case pattern for freezing a single worker deterministically.
+struct GatedEngine {
+    gate: Arc<(Mutex<GateState>, Condvar)>,
+}
+
+#[derive(Default)]
+struct GateState {
+    started: usize,
+    released: bool,
+}
+
+impl InferenceEngine for GatedEngine {
+    fn batch_size(&self) -> usize {
+        1
+    }
+    fn infer(&mut self, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+        let (lock, cv) = &*self.gate;
+        let mut st = lock.lock().unwrap();
+        st.started += 1;
+        cv.notify_all();
+        while !st.released {
+            st = cv.wait(st).unwrap();
+        }
+        Ok(images.iter().map(|_| vec![0i64; 10]).collect())
+    }
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+}
+
+fn new_gate() -> Arc<(Mutex<GateState>, Condvar)> {
+    Arc::new((Mutex::new(GateState::default()), Condvar::new()))
+}
+
+fn wait_started(gate: &Arc<(Mutex<GateState>, Condvar)>, n: usize) {
+    let (lock, cv) = &**gate;
+    let mut st = lock.lock().unwrap();
+    while st.started < n {
+        st = cv.wait(st).unwrap();
+    }
+}
+
+fn release(gate: &Arc<(Mutex<GateState>, Condvar)>) {
+    let (lock, cv) = &**gate;
+    lock.lock().unwrap().released = true;
+    cv.notify_all();
+}
+
+/// A request that expires while *queued* is shed with
+/// `Rejected(Deadline)` at dequeue; one already inside the engine when
+/// its deadline passes still completes (deadlines gate dispatch, they
+/// do not abort in-flight work).
+#[test]
+fn deadline_expiry_sheds_queued_requests() {
+    let gate = new_gate();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_depth: 8,
+            deadline: Some(Duration::from_millis(40)),
+            max_retries: 0,
+            ..CoordinatorConfig::default()
+        },
+        {
+            let gate = Arc::clone(&gate);
+            move |_| Box::new(GatedEngine { gate: Arc::clone(&gate) }) as Box<dyn InferenceEngine>
+        },
+    );
+    let rx0 = coord.submit(vec![0u8; 16]).unwrap();
+    wait_started(&gate, 1); // r0 is inside infer, holding the worker
+    let rx1 = coord.submit(vec![0u8; 16]).unwrap(); // r1 waits in queue
+    std::thread::sleep(Duration::from_millis(80)); // r1's deadline passes
+    release(&gate);
+    let r0 = rx0.recv_timeout(RECV_PATIENCE).unwrap();
+    assert!(r0.is_ok(), "in-flight request completes past its deadline: {r0:?}");
+    match rx1.recv_timeout(RECV_PATIENCE).unwrap() {
+        Err(ServeError::Rejected(RejectReason::Deadline)) => {}
+        other => panic!("queued-expired request must shed, got {other:?}"),
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.submitted, 2);
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.shed, 1);
+    assert_eq!(stats.completed + stats.failed + stats.shed, stats.submitted);
+}
+
+/// `try_submit` sheds immediately on a full queue; `submit_timeout`
+/// waits its bounded patience first.  Neither counts as submitted.
+#[test]
+fn queue_full_shedding_fast_and_bounded() {
+    let gate = new_gate();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_depth: 1,
+            ..CoordinatorConfig::default()
+        },
+        {
+            let gate = Arc::clone(&gate);
+            move |_| Box::new(GatedEngine { gate: Arc::clone(&gate) }) as Box<dyn InferenceEngine>
+        },
+    );
+    let rx0 = coord.submit(vec![0u8; 16]).unwrap();
+    wait_started(&gate, 1); // worker busy; exactly one queue slot left
+    let rx1 = coord.submit(vec![0u8; 16]).unwrap(); // fills the queue
+    match coord.try_submit(vec![0u8; 16]) {
+        Err(ServeError::Rejected(RejectReason::QueueFull)) => {}
+        other => panic!("try_submit on a full queue must shed, got {other:?}"),
+    }
+    let t0 = Instant::now();
+    match coord.submit_timeout(vec![0u8; 16], Duration::from_millis(60)) {
+        Err(ServeError::Rejected(RejectReason::QueueFull)) => {}
+        other => panic!("submit_timeout must shed after its wait, got {other:?}"),
+    }
+    assert!(t0.elapsed() >= Duration::from_millis(50), "bounded wait was honored");
+    release(&gate);
+    assert!(rx0.recv_timeout(RECV_PATIENCE).unwrap().is_ok());
+    assert!(rx1.recv_timeout(RECV_PATIENCE).unwrap().is_ok());
+    let stats = coord.shutdown();
+    assert_eq!(stats.submitted, 2, "shed-at-submit requests are not 'submitted'");
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.shed, 0);
+}
+
+/// Panics on the first call of the pool's lifetime (shared counter),
+/// then behaves: exercises respawn + retry recovery.
+struct PanicOnceEngine {
+    calls: Arc<AtomicU64>,
+}
+
+impl InferenceEngine for PanicOnceEngine {
+    fn batch_size(&self) -> usize {
+        1
+    }
+    fn infer(&mut self, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) == 0 {
+            panic!("scripted first-call panic");
+        }
+        Ok(images.iter().map(|i| vec![i[0] as i64; 10]).collect())
+    }
+    fn name(&self) -> &'static str {
+        "panic-once"
+    }
+}
+
+#[test]
+fn panic_respawns_engine_and_retry_recovers() {
+    let calls = Arc::new(AtomicU64::new(0));
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_depth: 8,
+            max_retries: 2,
+            retry_backoff: Duration::ZERO,
+            restart_budget: 4,
+            ..CoordinatorConfig::default()
+        },
+        {
+            let calls = Arc::clone(&calls);
+            move |_| -> Box<dyn InferenceEngine> {
+                Box::new(PanicOnceEngine { calls: Arc::clone(&calls) })
+            }
+        },
+    );
+    let res = coord.infer_blocking(vec![5u8; 16]).expect("retry after respawn succeeds");
+    assert_eq!(res.logits, vec![5i64; 10]);
+    let stats = coord.shutdown();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.worker_restarts, 1, "exactly one respawn");
+    assert_eq!(stats.retries, 1, "exactly one retry");
+    assert_eq!(stats.alive_workers, 1, "pool fully recovered");
+}
+
+/// Always panics: with a zero restart budget the lone worker goes dark
+/// after the first attempt.  The first request fails typed, everything
+/// already queued is shed, new submissions fail fast, and shutdown
+/// still drains without deadlocking.
+struct AlwaysPanicEngine;
+
+impl InferenceEngine for AlwaysPanicEngine {
+    fn batch_size(&self) -> usize {
+        1
+    }
+    fn infer(&mut self, _images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+        panic!("scripted permanent panic");
+    }
+    fn name(&self) -> &'static str {
+        "always-panic"
+    }
+}
+
+#[test]
+fn dead_pool_rejects_new_submits_and_drains() {
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_depth: 8,
+            max_retries: 0,
+            restart_budget: 0,
+            ..CoordinatorConfig::default()
+        },
+        |_| Box::new(AlwaysPanicEngine),
+    );
+    let rx0 = coord.submit(vec![0u8; 16]).unwrap();
+    // Race-tolerant: these are either queued then shed by the dark
+    // worker, or rejected at submit once the pool registers dead —
+    // both are Rejected(Shutdown)-shaped outcomes.
+    let mut shutdown_rejects = 0;
+    for _ in 0..4 {
+        match coord.submit(vec![0u8; 16]) {
+            Ok(rx) => match rx.recv_timeout(RECV_PATIENCE).unwrap() {
+                Err(ServeError::Rejected(RejectReason::Shutdown)) => shutdown_rejects += 1,
+                other => panic!("queued request on a dead pool must shed, got {other:?}"),
+            },
+            Err(ServeError::Rejected(RejectReason::Shutdown)) => shutdown_rejects += 1,
+            other => panic!("submit on a dead pool must reject, got {other:?}"),
+        }
+    }
+    assert_eq!(shutdown_rejects, 4);
+    match rx0.recv_timeout(RECV_PATIENCE).unwrap() {
+        Err(ServeError::WorkerPanicked) => {}
+        other => panic!("first request sees the panic typed, got {other:?}"),
+    }
+    // The pool must register fully dark, then fail fast.
+    let t0 = Instant::now();
+    while coord.stats().alive_workers > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "worker never went dark");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(matches!(
+        coord.submit(vec![0u8; 16]),
+        Err(ServeError::Rejected(RejectReason::Shutdown))
+    ));
+    assert!(matches!(
+        coord.try_submit(vec![0u8; 16]),
+        Err(ServeError::Rejected(RejectReason::Shutdown))
+    ));
+    let stats = coord.shutdown(); // must not deadlock
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.completed, 0);
+    assert_eq!(stats.worker_restarts, 0);
+    assert_eq!(stats.alive_workers, 0);
+    assert_eq!(stats.completed + stats.failed + stats.shed, stats.submitted);
+}
+
+/// Fails any batch containing a poisoned image, succeeds otherwise:
+/// after the shared failure the batch is split, so batchmates complete
+/// and only the poisoned request returns `EngineFailed`.
+struct PoisonEngine;
+
+impl InferenceEngine for PoisonEngine {
+    fn batch_size(&self) -> usize {
+        8
+    }
+    fn infer(&mut self, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+        if images.iter().any(|i| i[0] == 255) {
+            anyhow::bail!("poisoned image in batch");
+        }
+        Ok(images.iter().map(|i| vec![i[0] as i64; 10]).collect())
+    }
+    fn name(&self) -> &'static str {
+        "poison"
+    }
+}
+
+#[test]
+fn poisoned_image_cannot_sink_batchmates() {
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 8,
+            // Wide batching window so the four submits co-batch.
+            max_wait: Duration::from_millis(200),
+            queue_depth: 16,
+            max_retries: 1,
+            retry_backoff: Duration::ZERO,
+            ..CoordinatorConfig::default()
+        },
+        |_| Box::new(PoisonEngine),
+    );
+    let rx_bad = coord.submit(vec![255u8; 16]).unwrap();
+    let pixels = [10u8, 20, 30];
+    let rx_good: Vec<_> = pixels.iter().map(|&p| coord.submit(vec![p; 16]).unwrap()).collect();
+    match rx_bad.recv_timeout(RECV_PATIENCE).unwrap() {
+        Err(ServeError::EngineFailed { attempts, cause }) => {
+            assert_eq!(attempts, 2, "1 shared batch attempt + 1 solo retry");
+            assert!(cause.contains("poisoned"), "cause survives: {cause}");
+        }
+        other => panic!("poisoned request must fail typed, got {other:?}"),
+    }
+    for (rx, p) in rx_good.iter().zip(pixels) {
+        let res = rx.recv_timeout(RECV_PATIENCE).unwrap().unwrap();
+        assert_eq!(res.logits, vec![p as i64; 10], "batchmate survives the poison");
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.failed, 1);
+    assert!(stats.retries >= 1);
+    assert_eq!(stats.completed + stats.failed + stats.shed, stats.submitted);
+}
