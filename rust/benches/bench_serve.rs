@@ -2,7 +2,10 @@
 //! fault injection at increasing fault rates.  For each rate the
 //! closed-loop generator drives the pool and the report records
 //! throughput, latency percentiles, shed/retry/fail rates into
-//! `BENCH_PR6.json` — the robustness half of the perf trajectory.
+//! `BENCH_PR7.json` — the robustness half of the perf trajectory.
+//! Since PR7 the percentiles come from the coordinator's mergeable
+//! log-bucketed sketch (±1.6% relative error, exact max) and the
+//! report gains the p999/max tail columns.
 //!
 //! The clean row doubles as a correctness gate: with injection off,
 //! every request must complete and a spot-checked result must be
@@ -27,7 +30,7 @@ use vsa::snn::params::DeployedModel;
 use vsa::snn::Network;
 
 /// Written next to the other cross-PR trajectory files at the repo root.
-const REPORT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR6.json");
+const REPORT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR7.json");
 
 const MODEL: &str = "tiny";
 const STEPS: usize = 4;
@@ -115,15 +118,25 @@ fn main() {
             stats.worker_restarts
         );
         println!(
-            "  throughput {:.1} req/s   p50 {:.3} ms   p99 {:.3} ms",
-            stats.throughput_rps, stats.latency_ms_p50, stats.latency_ms_p99
+            "  throughput {:.1} req/s   p50 {:.3} ms   p99 {:.3} ms   p999 {:.3} ms   \
+             max {:.3} ms",
+            stats.throughput_rps,
+            stats.latency_ms_p50,
+            stats.latency_ms_p99,
+            stats.latency_ms_p999,
+            stats.latency_ms_max
         );
+        for line in stats.stages.render().lines() {
+            println!("  {line}");
+        }
         report.serve(
             MODEL,
             rate,
             stats.throughput_rps,
             stats.latency_ms_p50,
             stats.latency_ms_p99,
+            stats.latency_ms_p999,
+            stats.latency_ms_max,
             shed_rate,
             retry_rate,
             fail_rate,

@@ -121,7 +121,8 @@ impl JsonReport {
     }
 
     /// One serving load-test measurement at a given injected fault rate
-    /// (PR6: `bench_serve` / `vsa serve-bench`).
+    /// (PR6: `bench_serve` / `vsa serve-bench`; PR7 adds the sketch-
+    /// derived p999/max tail columns).
     #[allow(clippy::too_many_arguments)]
     pub fn serve(
         &mut self,
@@ -130,19 +131,24 @@ impl JsonReport {
         rps: f64,
         p50_ms: f64,
         p99_ms: f64,
+        p999_ms: f64,
+        max_ms: f64,
         shed_rate: f64,
         retry_rate: f64,
         fail_rate: f64,
     ) {
         self.rows.push(format!(
             "{{\"kind\": \"serve\", \"model\": \"{}\", \"fault_rate\": {:.4}, \
-             \"rps\": {:.3}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \"shed_rate\": {:.4}, \
-             \"retry_rate\": {:.4}, \"fail_rate\": {:.4}}}",
+             \"rps\": {:.3}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \"p999_ms\": {:.4}, \
+             \"max_ms\": {:.4}, \"shed_rate\": {:.4}, \"retry_rate\": {:.4}, \
+             \"fail_rate\": {:.4}}}",
             json_escape(model),
             fault_rate,
             rps,
             p50_ms,
             p99_ms,
+            p999_ms,
+            max_ms,
             shed_rate,
             retry_rate,
             fail_rate

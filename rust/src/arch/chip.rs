@@ -29,6 +29,7 @@ use crate::snn::network::{
 use crate::snn::params::{DeployedModel, Kind, Layer};
 use crate::snn::scratch::Scratch;
 use crate::snn::spikemap::SpikeMap;
+use crate::telemetry::Registry;
 
 /// Simulation fidelity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,6 +69,38 @@ pub struct RunReport {
     pub gops: f64,
     /// Average PE utilization.
     pub utilization: f64,
+}
+
+impl RunReport {
+    /// Publish this run's counters into a [`Registry`] under `prefix`
+    /// (`{prefix}.cycles`, `.dram.read.{category}_bytes`,
+    /// `.sram.spike_reads`, `.spikes_emitted`, …) so the chip sim
+    /// reports through the same exporter as serve and train
+    /// (README §OBSERVABILITY).  Counter values are absolute (set, not
+    /// added), so re-exporting the same report is idempotent.
+    pub fn export_into(&self, reg: &Registry, prefix: &str) {
+        reg.set_counter(&format!("{prefix}.cycles"), self.cycles);
+        reg.set_counter(&format!("{prefix}.pe_ops"), self.pe_ops);
+        reg.set_counter(&format!("{prefix}.layers"), self.layers.len() as u64);
+        let spikes: u64 = self.layers.iter().map(|l| l.spikes_emitted).sum();
+        let membrane: u64 = self.layers.iter().map(|l| l.membrane_accesses).sum();
+        reg.set_counter(&format!("{prefix}.spikes_emitted"), spikes);
+        reg.set_counter(&format!("{prefix}.membrane_accesses"), membrane);
+        reg.set_gauge(&format!("{prefix}.latency_us"), self.latency_us);
+        reg.set_gauge(&format!("{prefix}.gops"), self.gops);
+        reg.set_gauge(&format!("{prefix}.utilization"), self.utilization);
+        for (cat, read, write) in self.dram.by_category() {
+            reg.set_counter(&format!("{prefix}.dram.read.{}_bytes", cat.name()), read);
+            reg.set_counter(&format!("{prefix}.dram.write.{}_bytes", cat.name()), write);
+        }
+        reg.set_counter(&format!("{prefix}.dram.total_bytes"), self.dram.total());
+        reg.set_counter(&format!("{prefix}.sram.spike_reads"), self.sram.spike_reads);
+        reg.set_counter(&format!("{prefix}.sram.weight_reads"), self.sram.weight_reads);
+        reg.set_counter(&format!("{prefix}.sram.membrane_rmw"), self.sram.membrane_rmw);
+        reg.set_counter(&format!("{prefix}.sram.temp_writes"), self.sram.temp_writes);
+        reg.set_counter(&format!("{prefix}.sram.boundary_ops"), self.sram.boundary_ops);
+        reg.set_counter(&format!("{prefix}.sram.total"), self.sram.total());
+    }
 }
 
 /// Weight-derived state of one model layer for the fast path, indexed by

@@ -37,6 +37,20 @@ pub struct Dram {
     write: [u64; 6],
 }
 
+impl Traffic {
+    /// Stable lowercase name used for metric keys (`telemetry`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Traffic::Image => "image",
+            Traffic::Weights => "weights",
+            Traffic::SpikesIn => "spikes_in",
+            Traffic::SpikesOut => "spikes_out",
+            Traffic::Membrane => "membrane",
+            Traffic::Logits => "logits",
+        }
+    }
+}
+
 impl Dram {
     fn idx(t: Traffic) -> usize {
         CATEGORIES.iter().position(|&c| c == t).unwrap()
@@ -60,6 +74,12 @@ impl Dram {
     /// Total bytes in one category.
     pub fn category(&self, t: Traffic) -> u64 {
         self.read[Self::idx(t)] + self.write[Self::idx(t)]
+    }
+
+    /// `(category, read bytes, written bytes)` for every category in
+    /// declaration order — the iteration the registry exporter uses.
+    pub fn by_category(&self) -> impl Iterator<Item = (Traffic, u64, u64)> + '_ {
+        CATEGORIES.iter().map(|&c| (c, self.read[Self::idx(c)], self.write[Self::idx(c)]))
     }
 
     /// Human-readable breakdown in KB.

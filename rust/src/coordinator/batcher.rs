@@ -11,18 +11,24 @@ pub struct Request<T> {
     pub id: u64,
     pub payload: T,
     pub enqueued: Instant,
+    /// When a worker pulled this request off the queue — stamped by
+    /// [`next_batch`], `None` until then.  Feeds the stage trace's
+    /// queue-wait / batch-formation split (`telemetry::Trace`).
+    pub dequeued: Option<Instant>,
 }
 
 /// Pull up to `max_batch` requests: blocks for the first one, then drains
-/// greedily, waiting up to `max_wait` total for the batch to fill.
-/// Returns `None` when the channel is closed and drained.
+/// greedily, waiting up to `max_wait` total for the batch to fill.  Each
+/// request's `dequeued` stamp is set as it is received.  Returns `None`
+/// when the channel is closed and drained.
 pub fn next_batch<T>(
     rx: &Receiver<Request<T>>,
     max_batch: usize,
     max_wait: Duration,
 ) -> Option<Vec<Request<T>>> {
     debug_assert!(max_batch > 0);
-    let first = rx.recv().ok()?;
+    let mut first = rx.recv().ok()?;
+    first.dequeued = Some(Instant::now());
     let deadline = Instant::now() + max_wait;
     let mut batch = vec![first];
     while batch.len() < max_batch {
@@ -31,7 +37,10 @@ pub fn next_batch<T>(
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(req) => batch.push(req),
+            Ok(mut req) => {
+                req.dequeued = Some(Instant::now());
+                batch.push(req);
+            }
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
         }
@@ -66,7 +75,7 @@ mod tests {
     use std::time::Duration;
 
     fn req(id: u64) -> Request<u64> {
-        Request { id, payload: id, enqueued: Instant::now() }
+        Request { id, payload: id, enqueued: Instant::now(), dequeued: None }
     }
 
     #[test]
@@ -78,6 +87,10 @@ mod tests {
         let batch = next_batch(&rx, 3, Duration::from_millis(10)).unwrap();
         assert_eq!(batch.len(), 3);
         assert_eq!(batch[0].id, 0);
+        assert!(
+            batch.iter().all(|r| r.dequeued.is_some_and(|d| d >= r.enqueued)),
+            "next_batch stamps dequeued on every request"
+        );
         let batch2 = next_batch(&rx, 3, Duration::from_millis(10)).unwrap();
         assert_eq!(batch2.len(), 2);
     }
@@ -132,7 +145,7 @@ mod tests {
 
     /// Payload for the split tests: the deadline itself.
     fn dreq(id: u64, deadline: Option<Instant>) -> Request<Option<Instant>> {
-        Request { id, payload: deadline, enqueued: Instant::now() }
+        Request { id, payload: deadline, enqueued: Instant::now(), dequeued: None }
     }
 
     #[test]

@@ -15,6 +15,10 @@
 //! panic isolation with budgeted respawn — see README §SERVING), and
 //! [`fault::FaultEngine`] + [`loadgen`] exist to prove it under seeded
 //! fault schedules.
+//!
+//! Since PR7 it is observable end to end: lock-free per-worker latency
+//! sketch shards, per-request stage traces, and a registry exporter
+//! (README §OBSERVABILITY, `crate::telemetry`).
 
 pub mod batcher;
 pub mod engine;
@@ -27,4 +31,5 @@ pub use fault::{FaultEngine, FaultProfile, FaultStats};
 pub use loadgen::{run_load, LoadReport, LoadSpec};
 pub use server::{
     Coordinator, CoordinatorConfig, InferResult, RejectReason, ServeError, ServeResult, ServeStats,
+    StageBreakdown,
 };

@@ -9,10 +9,17 @@
 //! `completed + failed + shed == submitted` once the queue drains.  The
 //! chaos suite (`rust/tests/serve_faults.rs`) drives this invariant
 //! through seeded fault schedules.
+//!
+//! Telemetry (PR7): each worker owns a lock-free [`WorkerShard`] of
+//! histogram sketches + outcome counters, so delivering a result takes
+//! no shared lock and latency memory is O(buckets) instead of
+//! per-request; every completed request carries a [`Trace`] stage
+//! breakdown, and [`Coordinator::export_into`] publishes the merged
+//! telemetry into a `telemetry::Registry`.
 
 use crate::coordinator::batcher::{next_batch, split_expired, Request};
 use crate::coordinator::engine::InferenceEngine;
-use crate::util::stats::Accumulator;
+use crate::telemetry::{AtomicSketch, HistogramSketch, LatencySummary, Registry, Stage, Trace};
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
@@ -118,6 +125,9 @@ pub struct InferResult {
     pub id: u64,
     pub logits: Vec<i64>,
     pub latency: Duration,
+    /// Stage breakdown of `latency` (queue / batch / engine / backoff /
+    /// deliver); the stages sum to `latency` by construction.
+    pub trace: Trace,
 }
 
 /// Aggregate serving statistics.
@@ -140,22 +150,108 @@ pub struct ServeStats {
     pub alive_workers: u64,
     pub batches: u64,
     pub mean_batch: f64,
+    /// Latency percentiles from the merged histogram sketch — within
+    /// `telemetry::REL_ERROR` (≤ 1.5625%) of the exact nearest-rank
+    /// percentiles of the per-request latencies (O(buckets) memory; the
+    /// old exact-but-unbounded latency vector is gone).
     pub latency_ms_p50: f64,
     pub latency_ms_p95: f64,
     pub latency_ms_p99: f64,
+    pub latency_ms_p999: f64,
+    /// Exact maximum completed-request latency (tracked outside the
+    /// buckets, no sketch error).
+    pub latency_ms_max: f64,
+    /// Per-stage latency summaries over completed requests.
+    pub stages: StageBreakdown,
     pub throughput_rps: f64,
 }
 
-struct Shared {
-    latency: Mutex<Accumulator>,
-    submitted: AtomicU64,
+/// Per-stage latency summaries of completed requests ("where did my
+/// p99 go"): each field summarizes that stage's sketch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageBreakdown {
+    pub queue: LatencySummary,
+    pub batch: LatencySummary,
+    pub engine: LatencySummary,
+    pub backoff: LatencySummary,
+    pub deliver: LatencySummary,
+}
+
+impl StageBreakdown {
+    /// The summary for one stage (for iterating [`Stage::ALL`]).
+    pub fn get(&self, s: Stage) -> &LatencySummary {
+        match s {
+            Stage::Queue => &self.queue,
+            Stage::Batch => &self.batch,
+            Stage::Engine => &self.engine,
+            Stage::Backoff => &self.backoff,
+            Stage::Deliver => &self.deliver,
+        }
+    }
+
+    /// Multi-line per-stage rows for `vsa serve` / `vsa serve-bench`.
+    pub fn render(&self) -> String {
+        Stage::ALL
+            .iter()
+            .map(|&s| format!("stage {:<8} {}", s.name(), self.get(s).render()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Lock-free per-worker telemetry shard: each worker records completed
+/// latencies, stage times and outcome counts into its own sketches and
+/// counters, so the delivery hot path takes **no shared lock**.
+/// `stats()` / `export_into()` merge the shards in fixed worker order —
+/// sketch merge is commutative `u64` arithmetic, so snapshots are
+/// byte-deterministic at any thread count.
+struct WorkerShard {
+    latency: AtomicSketch,
+    /// Indexed in [`Stage::ALL`] order.
+    stages: [AtomicSketch; 5],
     completed: AtomicU64,
     failed: AtomicU64,
     shed: AtomicU64,
     retries: AtomicU64,
-    worker_restarts: AtomicU64,
+    restarts: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
+}
+
+impl WorkerShard {
+    fn new() -> Self {
+        Self {
+            latency: AtomicSketch::new(),
+            stages: std::array::from_fn(|_| AtomicSketch::new()),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Fixed-order merge of every worker shard (an owned point-in-time
+/// aggregate; the source of `stats()` and `export_into()`).
+struct MergedShards {
+    latency: HistogramSketch,
+    stages: [HistogramSketch; 5],
+    completed: u64,
+    failed: u64,
+    shed: u64,
+    retries: u64,
+    restarts: u64,
+    batches: u64,
+    batched_requests: u64,
+}
+
+struct Shared {
+    submitted: AtomicU64,
+    /// One telemetry shard per worker, indexed by worker id.
+    shards: Vec<WorkerShard>,
     /// Remaining engine respawns (pool-wide).  May briefly go negative
     /// on the losing side of a race, which simply denies that respawn.
     restart_budget: AtomicI64,
@@ -171,18 +267,40 @@ struct Job {
 }
 
 /// A request whose image has been handed (or is about to be handed) to
-/// the engine; everything needed to deliver its terminal outcome.
+/// the engine; everything needed to deliver its terminal outcome, plus
+/// the stage-time bookkeeping its [`Trace`] is built from.
 struct Pending {
     id: u64,
     enqueued: Instant,
+    /// When a worker pulled it off the queue (ends the queue stage).
+    dequeued: Instant,
+    /// When its batch finished forming (ends the batch stage).
+    batch_ready: Instant,
+    /// Wall nanoseconds spent inside engine attempts (summed over
+    /// retries; the shared batch attempt charges each member in full —
+    /// that is the wall time the member spent waiting on the engine).
+    engine_ns: u64,
+    /// Measured retry-backoff sleep nanoseconds.
+    backoff_ns: u64,
     resp: Sender<ServeResult>,
     deadline: Option<Instant>,
 }
 
-fn into_pending(req: Request<Job>) -> (Vec<u8>, Pending) {
-    let Request { id, payload, enqueued } = req;
+fn into_pending(req: Request<Job>, batch_ready: Instant) -> (Vec<u8>, Pending) {
+    let Request { id, payload, enqueued, dequeued } = req;
     let Job { image, resp, deadline } = payload;
-    (image, Pending { id, enqueued, resp, deadline })
+    let dequeued = dequeued.unwrap_or(enqueued);
+    let pending = Pending {
+        id,
+        enqueued,
+        dequeued,
+        batch_ready,
+        engine_ns: 0,
+        backoff_ns: 0,
+        resp,
+        deadline,
+    };
+    (image, pending)
 }
 
 /// One guarded engine call's failure mode.
@@ -218,6 +336,11 @@ struct WorkerCtx {
 }
 
 impl WorkerCtx {
+    /// This worker's lock-free telemetry shard.
+    fn shard(&self) -> &WorkerShard {
+        &self.shared.shards[self.w]
+    }
+
     /// The worker loop.  A worker never exits before the queue closes,
     /// even with a dead engine: a dark worker keeps pulling batches and
     /// shedding them as `Rejected(Shutdown)`, so no request is ever
@@ -245,23 +368,24 @@ impl WorkerCtx {
                 next_batch(&rx, max_batch, self.cfg.max_wait)
             };
             let Some(batch) = batch else { break };
-            self.shared.batches.fetch_add(1, Ordering::Relaxed);
-            self.shared.batched_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            let batch_ready = Instant::now();
+            self.shard().batches.fetch_add(1, Ordering::Relaxed);
+            self.shard().batched_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
 
             // Deadline gate at dequeue: expired requests are shed.
             let (live, expired) = split_expired(batch, Instant::now(), |j: &Job| j.deadline);
             for req in expired {
-                let (_, pending) = into_pending(req);
+                let (_, pending) = into_pending(req, batch_ready);
                 self.respond(pending, Err(ServeError::Rejected(RejectReason::Deadline)));
             }
             if live.is_empty() {
                 continue;
             }
             if engine.is_some() {
-                self.run_batch(&mut engine, live);
+                self.run_batch(&mut engine, live, batch_ready);
             } else {
                 for req in live {
-                    let (_, pending) = into_pending(req);
+                    let (_, pending) = into_pending(req, batch_ready);
                     self.respond(pending, Err(ServeError::Rejected(RejectReason::Shutdown)));
                 }
             }
@@ -271,17 +395,23 @@ impl WorkerCtx {
     /// Run one formed batch: a shared first attempt, then — on failure —
     /// the batch is split and each member retried alone, so one poisoned
     /// image cannot sink its batchmates.
-    fn run_batch(&self, engine: &mut Option<EngineBox>, batch: Vec<Request<Job>>) {
+    fn run_batch(&self, engine: &mut Option<EngineBox>, batch: Vec<Request<Job>>, ready: Instant) {
         let mut images = Vec::with_capacity(batch.len());
         let mut members = Vec::with_capacity(batch.len());
         for req in batch {
             // Move the payload out — the engine reads slices, no clones.
-            let (image, pending) = into_pending(req);
+            let (image, pending) = into_pending(req, ready);
             images.push(image);
             members.push(pending);
         }
         let eng = engine.as_mut().expect("run_batch requires a live engine");
-        match Self::attempt(eng, &images) {
+        let t0 = Instant::now();
+        let outcome = Self::attempt(eng, &images);
+        let spent_ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        for pending in members.iter_mut() {
+            pending.engine_ns = pending.engine_ns.saturating_add(spent_ns);
+        }
+        match outcome {
             Ok(results) => {
                 for (pending, logits) in members.into_iter().zip(results) {
                     self.complete(pending, logits);
@@ -304,7 +434,7 @@ impl WorkerCtx {
     fn finish_one(
         &self,
         engine: &mut Option<EngineBox>,
-        pending: Pending,
+        mut pending: Pending,
         image: Vec<u8>,
         mut last: AttemptError,
     ) {
@@ -321,7 +451,10 @@ impl WorkerCtx {
                 pause = pause.min(d.saturating_duration_since(Instant::now()));
             }
             if pause > Duration::ZERO {
+                let t0 = Instant::now();
                 std::thread::sleep(pause);
+                let slept = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+                pending.backoff_ns = pending.backoff_ns.saturating_add(slept);
             }
             if let Some(d) = pending.deadline {
                 if Instant::now() >= d {
@@ -330,9 +463,13 @@ impl WorkerCtx {
                 }
             }
             attempts += 1;
-            self.shared.retries.fetch_add(1, Ordering::Relaxed);
+            self.shard().retries.fetch_add(1, Ordering::Relaxed);
             let eng = engine.as_mut().expect("checked above");
-            match Self::attempt(eng, std::slice::from_ref(&image)) {
+            let t0 = Instant::now();
+            let outcome = Self::attempt(eng, std::slice::from_ref(&image));
+            let spent = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            pending.engine_ns = pending.engine_ns.saturating_add(spent);
+            match outcome {
                 Ok(mut out) => {
                     let logits = out.pop().expect("length checked by attempt()");
                     self.complete(pending, logits);
@@ -381,7 +518,7 @@ impl WorkerCtx {
         match catch_unwind(AssertUnwindSafe(|| (self.make_engine)(self.w))) {
             Ok(e) => {
                 *engine = Some(e);
-                self.shared.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                self.shard().restarts.fetch_add(1, Ordering::Relaxed);
             }
             Err(_) => {
                 eprintln!("worker {}: engine constructor panicked on respawn; dark", self.w);
@@ -390,28 +527,42 @@ impl WorkerCtx {
         }
     }
 
-    /// Deliver a successful result, recording latency + completion.
+    /// Deliver a successful result, building its stage trace from the
+    /// accumulated stamps (the deliver stage absorbs the residual, so
+    /// the stages sum back to the end-to-end latency exactly).
     fn complete(&self, pending: Pending, logits: Vec<i64>) {
         let latency = pending.enqueued.elapsed();
-        let res = InferResult { id: pending.id, logits, latency };
+        let trace = Trace::from_parts(
+            latency,
+            pending.dequeued.saturating_duration_since(pending.enqueued),
+            pending.batch_ready.saturating_duration_since(pending.dequeued),
+            Duration::from_nanos(pending.engine_ns),
+            Duration::from_nanos(pending.backoff_ns),
+        );
+        let res = InferResult { id: pending.id, logits, latency, trace };
         self.respond(pending, Ok(res));
     }
 
     /// Deliver the terminal outcome for one request and charge the
     /// matching counter — the single place the completed/failed/shed
     /// accounting lives, so the counters balance by construction.
+    /// Everything recorded here lands in this worker's own shard:
+    /// the delivery hot path takes **no shared lock**.
     fn respond(&self, pending: Pending, outcome: ServeResult) {
+        let shard = self.shard();
         match &outcome {
             Ok(res) => {
-                let ms = res.latency.as_secs_f64() * 1e3;
-                self.shared.latency.lock().unwrap().push(ms);
-                self.shared.completed.fetch_add(1, Ordering::Relaxed);
+                shard.latency.record(res.latency);
+                for (i, &s) in Stage::ALL.iter().enumerate() {
+                    shard.stages[i].record(res.trace.stage(s));
+                }
+                shard.completed.fetch_add(1, Ordering::Relaxed);
             }
             Err(ServeError::Rejected(_)) => {
-                self.shared.shed.fetch_add(1, Ordering::Relaxed);
+                shard.shed.fetch_add(1, Ordering::Relaxed);
             }
             Err(_) => {
-                self.shared.failed.fetch_add(1, Ordering::Relaxed);
+                shard.failed.fetch_add(1, Ordering::Relaxed);
             }
         }
         // The submitter may have given up on its receiver; that is fine.
@@ -456,15 +607,8 @@ impl Coordinator {
         let rx = Arc::new(Mutex::new(rx));
         let make_engine: Arc<MakeEngine> = Arc::new(make_engine);
         let shared = Arc::new(Shared {
-            latency: Mutex::new(Accumulator::default()),
             submitted: AtomicU64::new(0),
-            completed: AtomicU64::new(0),
-            failed: AtomicU64::new(0),
-            shed: AtomicU64::new(0),
-            retries: AtomicU64::new(0),
-            worker_restarts: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            batched_requests: AtomicU64::new(0),
+            shards: (0..cfg.workers).map(|_| WorkerShard::new()).collect(),
             restart_budget: AtomicI64::new(cfg.restart_budget as i64),
             alive: AtomicUsize::new(cfg.workers),
         });
@@ -509,7 +653,7 @@ impl Coordinator {
         let (rtx, rrx) = std::sync::mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let job = Job { image, resp: rtx, deadline: deadline.map(|d| Instant::now() + d) };
-        let req = Request { id, payload: job, enqueued: Instant::now() };
+        let req = Request { id, payload: job, enqueued: Instant::now(), dequeued: None };
         let tx = self.tx.as_ref().expect("coordinator not shut down");
         match mode {
             SubmitMode::Block => tx
@@ -599,27 +743,110 @@ impl Coordinator {
         self.stats()
     }
 
+    /// Merge every worker shard in fixed worker order.  Sketch merging
+    /// is commutative/associative `u64` arithmetic, so the aggregate is
+    /// byte-deterministic at any thread count once the pool is
+    /// quiescent (and merely point-in-time mid-run).
+    fn merged(&self) -> MergedShards {
+        let mut m = MergedShards {
+            latency: HistogramSketch::new(),
+            stages: std::array::from_fn(|_| HistogramSketch::new()),
+            completed: 0,
+            failed: 0,
+            shed: 0,
+            retries: 0,
+            restarts: 0,
+            batches: 0,
+            batched_requests: 0,
+        };
+        for shard in &self.shared.shards {
+            m.latency.merge(&shard.latency.snapshot());
+            for (dst, src) in m.stages.iter_mut().zip(&shard.stages) {
+                dst.merge(&src.snapshot());
+            }
+            m.completed += shard.completed.load(Ordering::Relaxed);
+            m.failed += shard.failed.load(Ordering::Relaxed);
+            m.shed += shard.shed.load(Ordering::Relaxed);
+            m.retries += shard.retries.load(Ordering::Relaxed);
+            m.restarts += shard.restarts.load(Ordering::Relaxed);
+            m.batches += shard.batches.load(Ordering::Relaxed);
+            m.batched_requests += shard.batched_requests.load(Ordering::Relaxed);
+        }
+        m
+    }
+
     /// Current aggregate stats.
     pub fn stats(&self) -> ServeStats {
-        let batches = self.shared.batches.load(Ordering::Relaxed);
-        let batched = self.shared.batched_requests.load(Ordering::Relaxed);
-        let completed = self.shared.completed.load(Ordering::Relaxed);
-        let lat = self.shared.latency.lock().unwrap();
-        let (p50, p95, p99) = lat.percentiles();
+        let m = self.merged();
         ServeStats {
             submitted: self.shared.submitted.load(Ordering::Relaxed),
-            completed,
-            failed: self.shared.failed.load(Ordering::Relaxed),
-            shed: self.shared.shed.load(Ordering::Relaxed),
-            retries: self.shared.retries.load(Ordering::Relaxed),
-            worker_restarts: self.shared.worker_restarts.load(Ordering::Relaxed),
+            completed: m.completed,
+            failed: m.failed,
+            shed: m.shed,
+            retries: m.retries,
+            worker_restarts: m.restarts,
             alive_workers: self.shared.alive.load(Ordering::SeqCst) as u64,
-            batches,
-            mean_batch: if batches > 0 { batched as f64 / batches as f64 } else { 0.0 },
-            latency_ms_p50: p50,
-            latency_ms_p95: p95,
-            latency_ms_p99: p99,
-            throughput_rps: completed as f64 / self.started.elapsed().as_secs_f64(),
+            batches: m.batches,
+            mean_batch: if m.batches > 0 {
+                m.batched_requests as f64 / m.batches as f64
+            } else {
+                0.0
+            },
+            latency_ms_p50: m.latency.quantile_ms(0.50),
+            latency_ms_p95: m.latency.quantile_ms(0.95),
+            latency_ms_p99: m.latency.quantile_ms(0.99),
+            latency_ms_p999: m.latency.quantile_ms(0.999),
+            latency_ms_max: m.latency.max_ms(),
+            stages: StageBreakdown {
+                queue: m.stages[0].summary(),
+                batch: m.stages[1].summary(),
+                engine: m.stages[2].summary(),
+                backoff: m.stages[3].summary(),
+                deliver: m.stages[4].summary(),
+            },
+            throughput_rps: m.completed as f64 / self.started.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Export the pool's telemetry into a [`Registry`] under `prefix`:
+    /// pool-level counters/gauges, per-worker outcome counters, the
+    /// merged latency sketch, and one sketch per pipeline stage.
+    /// Sketch export is merge-additive — callers publishing periodic
+    /// snapshots should export into a fresh registry per tick.
+    pub fn export_into(&self, reg: &Registry, prefix: &str) {
+        let m = self.merged();
+        let submitted = self.shared.submitted.load(Ordering::Relaxed);
+        reg.set_counter(&format!("{prefix}.submitted"), submitted);
+        reg.set_counter(&format!("{prefix}.completed"), m.completed);
+        reg.set_counter(&format!("{prefix}.failed"), m.failed);
+        reg.set_counter(&format!("{prefix}.shed"), m.shed);
+        reg.set_counter(&format!("{prefix}.retries"), m.retries);
+        reg.set_counter(&format!("{prefix}.worker_restarts"), m.restarts);
+        reg.set_counter(&format!("{prefix}.batches"), m.batches);
+        reg.set_counter(&format!("{prefix}.batched_requests"), m.batched_requests);
+        reg.set_counter(
+            &format!("{prefix}.alive_workers"),
+            self.shared.alive.load(Ordering::SeqCst) as u64,
+        );
+        reg.set_gauge(
+            &format!("{prefix}.throughput_rps"),
+            m.completed as f64 / self.started.elapsed().as_secs_f64(),
+        );
+        reg.merge_sketch(&format!("{prefix}.latency"), &m.latency);
+        for (i, &s) in Stage::ALL.iter().enumerate() {
+            reg.merge_sketch(&format!("{prefix}.stage.{}", s.name()), &m.stages[i]);
+        }
+        for (w, shard) in self.shared.shards.iter().enumerate() {
+            for (name, v) in [
+                ("completed", shard.completed.load(Ordering::Relaxed)),
+                ("failed", shard.failed.load(Ordering::Relaxed)),
+                ("shed", shard.shed.load(Ordering::Relaxed)),
+                ("retries", shard.retries.load(Ordering::Relaxed)),
+                ("restarts", shard.restarts.load(Ordering::Relaxed)),
+                ("batches", shard.batches.load(Ordering::Relaxed)),
+            ] {
+                reg.set_counter(&format!("{prefix}.worker.{w}.{name}"), v);
+            }
         }
     }
 }
@@ -687,6 +914,8 @@ mod tests {
         let image = vec![123u8; 16];
         let served = coord.infer_blocking(image.clone()).unwrap();
         assert_eq!(served.logits, net().infer_u8(&image));
+        assert_eq!(served.trace.total(), served.latency, "stages sum to the latency exactly");
+        assert!(served.trace.engine > Duration::ZERO, "engine stage measured");
         coord.shutdown();
     }
 

@@ -33,6 +33,9 @@
 //!   request time).
 //! * [`coordinator`] — the serving layer: request queue, batcher, worker
 //!   pool, metrics and backpressure.
+//! * [`telemetry`] — mergeable latency histogram sketches, per-request
+//!   stage tracing, and the counter/gauge/sketch registry + exporters
+//!   shared by serve, the chip sim, and the trainer.
 //! * [`testing`] — a miniature property-based testing harness (the
 //!   offline environment has no proptest).
 
@@ -47,6 +50,7 @@ pub mod energy;
 pub mod metrics;
 pub mod runtime;
 pub mod snn;
+pub mod telemetry;
 pub mod testing;
 pub mod train;
 pub mod util;

@@ -14,6 +14,7 @@
 //! vsa selftest                                 # cross-layer consistency
 //! ```
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -32,6 +33,7 @@ use vsa::data::idx;
 use vsa::runtime::{Manifest, PjrtExecutor};
 use vsa::snn::params::DeployedModel;
 use vsa::snn::Network;
+use vsa::telemetry::Registry;
 use vsa::train;
 use vsa::util::stats::argmax;
 
@@ -102,11 +104,21 @@ eval flags:   --weights FILE.vsaw  --dataset synth|mnist  --count N
 
 serve flags:  --engine golden|chip|pjrt  --requests N  --workers N
               --batch B  --deadline-ms D  --retries N  --restart-budget N
+              --stats-interval MS (print a registry snapshot every MS)
+              --metrics-out FILE.json (write the final metrics snapshot)
 
 serve-bench:  --model tiny|mnist|cifar10  --steps T  --requests N
               --workers N  --batch B  --submitters N  --fault-rate P
               --spike-ms MS  --deadline-ms D  --submit-wait-ms W  --seed S
+              --metrics-out FILE.json
               (weights are synthesized — no artifacts directory needed)
+
+simulate:     --mode fast|exact  --no-fusion  --trace  --trace-out FILE
+              --metrics (print registry text)  --metrics-out FILE.json
+
+telemetry:    serve/simulate/train all export the same vsa-metrics-v1
+              JSON schema (see README OBSERVABILITY); train also takes
+              --metrics-out FILE.json
 ";
 
 fn load_network(args: &Args) -> anyhow::Result<(String, Network)> {
@@ -201,6 +213,18 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             println!("\ntrace written to {path} ({} events)", trace.len());
         } else {
             println!("\nexecution trace:\n{}", trace.render());
+        }
+    }
+    if args.has("metrics") || args.get_opt("metrics-out").is_some() {
+        let reg = Registry::new();
+        r.export_into(&reg, "sim");
+        let snap = reg.snapshot();
+        if args.has("metrics") {
+            print!("\nmetrics:\n{}", snap.render_text());
+        }
+        if let Some(path) = args.get_opt("metrics-out") {
+            std::fs::write(path, snap.to_json() + "\n")?;
+            println!("\nmetrics written to {path}");
         }
     }
     Ok(())
@@ -464,24 +488,63 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         }
     });
 
+    // Periodic observability: a reporter thread publishes a fresh
+    // registry snapshot every --stats-interval while requests drain.
+    // A fresh `Registry` per tick because sketch export is merge-
+    // additive (see `Coordinator::export_into`).
+    let stats_interval = args
+        .get_opt("stats-interval")
+        .map(|_| args.get_millis("stats-interval", Duration::ZERO))
+        .transpose()?
+        .filter(|iv| !iv.is_zero());
+
     let samples = synth::for_model(&model, 23, 0, requests);
-    let receivers: Vec<_> = samples
-        .iter()
-        .map(|s| coord.submit(s.image.clone()))
-        .collect::<Result<_, _>>()?;
     let mut correct = 0usize;
     let mut shed = 0usize;
     let mut failed = 0usize;
-    for (rx, s) in receivers.into_iter().zip(&samples) {
-        match rx.recv()? {
-            Ok(res) => {
-                if argmax(&res.logits) == s.label {
-                    correct += 1;
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        if let Some(iv) = stats_interval {
+            scope.spawn(|| {
+                let mut last = Instant::now();
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(20));
+                    if last.elapsed() < iv || stop.load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    last = Instant::now();
+                    let reg = Registry::new();
+                    coord.export_into(&reg, "serve");
+                    print!("--- serve metrics ---\n{}", reg.snapshot().render_text());
+                }
+            });
+        }
+        let run = (|| -> anyhow::Result<()> {
+            let receivers: Vec<_> = samples
+                .iter()
+                .map(|smp| coord.submit(smp.image.clone()))
+                .collect::<Result<_, _>>()?;
+            for (rx, smp) in receivers.into_iter().zip(&samples) {
+                match rx.recv()? {
+                    Ok(res) => {
+                        if argmax(&res.logits) == smp.label {
+                            correct += 1;
+                        }
+                    }
+                    Err(ServeError::Rejected(_)) => shed += 1,
+                    Err(_) => failed += 1,
                 }
             }
-            Err(ServeError::Rejected(_)) => shed += 1,
-            Err(_) => failed += 1,
-        }
+            Ok(())
+        })();
+        stop.store(true, Ordering::Relaxed);
+        run
+    })?;
+    if let Some(path) = args.get_opt("metrics-out") {
+        let reg = Registry::new();
+        coord.export_into(&reg, "serve");
+        std::fs::write(path, reg.snapshot().to_json() + "\n")?;
+        println!("metrics written to {path}");
     }
     let stats = coord.shutdown();
     println!(
@@ -493,9 +556,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         stats.throughput_rps, stats.mean_batch
     );
     println!(
-        "  latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}",
-        stats.latency_ms_p50, stats.latency_ms_p95, stats.latency_ms_p99
+        "  latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  p999 {:.2}  max {:.2}",
+        stats.latency_ms_p50,
+        stats.latency_ms_p95,
+        stats.latency_ms_p99,
+        stats.latency_ms_p999,
+        stats.latency_ms_max
     );
+    for line in stats.stages.render().lines() {
+        println!("  {line}");
+    }
     println!(
         "  failed {failed}  shed {shed}  retries {}  worker restarts {}",
         stats.retries, stats.worker_restarts
@@ -506,7 +576,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
 /// Artifact-free load benchmark: a synthesized model behind a seeded
 /// [`FaultEngine`], driven by the shared closed-loop generator.  The
-/// same code path `benches/bench_serve.rs` records into BENCH_PR6.json.
+/// same code path `benches/bench_serve.rs` records into BENCH_PR7.json.
 fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     let model = args.get("model", "tiny");
     let steps = args.get_usize("steps", 4)?;
@@ -554,6 +624,12 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         .collect();
     let load = LoadSpec { requests, submitters, submit_wait };
     let report = run_load(&coord, &images, &load);
+    if let Some(path) = args.get_opt("metrics-out") {
+        let reg = Registry::new();
+        coord.export_into(&reg, "serve");
+        std::fs::write(path, reg.snapshot().to_json() + "\n")?;
+        println!("metrics written to {path}");
+    }
     let stats = coord.shutdown();
 
     println!(
@@ -570,9 +646,16 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         fstats.calls.load(std::sync::atomic::Ordering::Relaxed)
     );
     println!(
-        "  throughput {:.1} req/s   latency ms: p50 {:.2}  p99 {:.2}",
-        stats.throughput_rps, stats.latency_ms_p50, stats.latency_ms_p99
+        "  throughput {:.1} req/s   latency ms: p50 {:.2}  p99 {:.2}  p999 {:.2}  max {:.2}",
+        stats.throughput_rps,
+        stats.latency_ms_p50,
+        stats.latency_ms_p99,
+        stats.latency_ms_p999,
+        stats.latency_ms_max
     );
+    for line in stats.stages.render().lines() {
+        println!("  {line}");
+    }
     println!(
         "  completed {}  failed {}  shed {}  retries {}  worker restarts {}",
         stats.completed, stats.failed, stats.shed, stats.retries, stats.worker_restarts
@@ -622,6 +705,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         outcome.final_batch_acc
     );
     println!("artifact: {out_path} ({} bytes)", deployed.to_bytes().len());
+    println!("  phases: {}", outcome.phases.render());
+    if let Some(path) = args.get_opt("metrics-out") {
+        let reg = Registry::new();
+        outcome.phases.export_into(&reg, "train");
+        reg.set_counter("train.steps", outcome.steps as u64);
+        reg.set_gauge("train.final_loss", outcome.final_loss as f64);
+        std::fs::write(path, reg.snapshot().to_json() + "\n")?;
+        println!("metrics written to {path}");
+    }
 
     let count = args.get_usize("eval-count", 256)?;
     let samples = match cfg.dataset {

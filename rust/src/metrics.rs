@@ -1,72 +1,24 @@
-//! Shared counters for the simulator and the serving coordinator.
+//! Back-compat shim: the counter map that lived here grew into the
+//! full [`crate::telemetry`] subsystem (PR7) — counters, gauges,
+//! latency sketches, and stable-ordered text/JSON exporters.  Existing
+//! `metrics::{Counter, Registry}` paths keep working; new code should
+//! import from `telemetry` directly.
 
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-
-/// A monotonically increasing counter (thread-safe).
-#[derive(Debug, Default)]
-pub struct Counter(AtomicU64);
-
-impl Counter {
-    /// Add `n`.
-    pub fn add(&self, n: u64) {
-        self.0.fetch_add(n, Ordering::Relaxed);
-    }
-
-    /// Increment by one.
-    pub fn inc(&self) {
-        self.add(1);
-    }
-
-    /// Current value.
-    pub fn get(&self) -> u64 {
-        self.0.load(Ordering::Relaxed)
-    }
-}
-
-/// A named collection of counters with stable ordering (for reports).
-#[derive(Debug, Default)]
-pub struct Registry {
-    counters: BTreeMap<String, Counter>,
-}
-
-impl Registry {
-    /// Get or create a counter.
-    pub fn counter(&mut self, name: &str) -> &Counter {
-        self.counters.entry(name.to_string()).or_default()
-    }
-
-    /// Snapshot all counters.
-    pub fn snapshot(&self) -> BTreeMap<String, u64> {
-        self.counters
-            .iter()
-            .map(|(k, v)| (k.clone(), v.get()))
-            .collect()
-    }
-
-    /// Render a compact single-line report.
-    pub fn render(&self) -> String {
-        self.snapshot()
-            .iter()
-            .map(|(k, v)| format!("{k}={v}"))
-            .collect::<Vec<_>>()
-            .join(" ")
-    }
-}
+pub use crate::telemetry::registry::{Counter, Gauge, Registry, Snapshot};
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn counter_and_registry() {
-        let mut reg = Registry::default();
+    fn shim_paths_still_work() {
+        let reg = Registry::new();
         reg.counter("a").add(3);
         reg.counter("a").inc();
         reg.counter("b").inc();
         let snap = reg.snapshot();
-        assert_eq!(snap["a"], 4);
-        assert_eq!(snap["b"], 1);
-        assert_eq!(reg.render(), "a=4 b=1");
+        assert_eq!(snap.counters["a"], 4);
+        assert_eq!(snap.counters["b"], 1);
+        assert_eq!(snap.render_text(), "# counters\na 4\nb 1\n");
     }
 }

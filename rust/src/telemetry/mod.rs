@@ -1,0 +1,26 @@
+//! End-to-end telemetry (PR7): mergeable latency sketches, per-request
+//! stage tracing, and a unified counter/gauge/sketch registry with
+//! stable-ordered text + JSON exporters.
+//!
+//! Three pieces (README §OBSERVABILITY):
+//!
+//! * [`sketch`] — `HistogramSketch` / `AtomicSketch`: dependency-free
+//!   log-bucketed latency histograms with a proven ≤ 1.5625% relative
+//!   error bound, O(buckets) memory, lock-free per-worker shards, and
+//!   deterministic merge (replaces the coordinator's unbounded latency
+//!   vector).
+//! * [`trace`] — `Trace` / `Stage`: queue / batch / engine / backoff /
+//!   deliver breakdown carried by every served request; stage times sum
+//!   to the end-to-end latency by construction.
+//! * [`registry`] — `Registry` / `Snapshot`: named metrics shared by
+//!   the serve path (`vsa serve --stats-interval`), the chip simulator
+//!   (DRAM/SRAM/spike counters) and the trainer (per-epoch phase
+//!   timings), exported as sorted text or `vsa-metrics-v1` JSON.
+
+pub mod registry;
+pub mod sketch;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, Registry, Snapshot, SCHEMA};
+pub use sketch::{AtomicSketch, HistogramSketch, LatencySummary, BUCKETS, REL_ERROR, SUB};
+pub use trace::{Stage, Trace};

@@ -1,0 +1,263 @@
+//! Unified metrics registry: named counters, gauges and latency
+//! sketches with stable-ordered text and JSON snapshot formats (PR7).
+//!
+//! Grown out of the old `metrics.rs` counter map (which is now a shim
+//! over this module).  The taxonomy (README §OBSERVABILITY):
+//!
+//! * **counter** — monotone `u64` event count (`serve.completed`,
+//!   `sim.dram.read.weights_bytes`);
+//! * **gauge** — last-written `f64` level (`serve.throughput_rps`,
+//!   `train.loss`);
+//! * **sketch** — a mergeable [`HistogramSketch`] of latency samples,
+//!   snapshotted as its percentile summary.
+//!
+//! Handles are `Arc`-shared and lock-free to update; the registry's
+//! internal maps are `BTreeMap`s behind a mutex that is only taken on
+//! registration and snapshot, never on the metric hot path.  Snapshots
+//! iterate the sorted maps, so both `render_text()` and `to_json()` are
+//! byte-deterministic for a given set of metric values.
+
+use super::sketch::{AtomicSketch, HistogramSketch};
+use crate::config::json::{self, Json};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Snapshot schema tag written into the JSON export.
+pub const SCHEMA: &str = "vsa-metrics-v1";
+
+/// A monotonically increasing counter (thread-safe, lock-free).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Overwrite with an absolute value (used when exporting an
+    /// already-aggregated count into a registry).
+    pub fn store(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+}
+
+/// A last-value-wins `f64` level (bits in an `AtomicU64`).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Set the level.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current level.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// A named collection of counters, gauges and sketches.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    sketches: Mutex<BTreeMap<String, Arc<AtomicSketch>>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create a counter handle.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Get or create a gauge handle.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Get or create a sketch handle.
+    pub fn sketch(&self, name: &str) -> Arc<AtomicSketch> {
+        let mut map = self.sketches.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_insert_with(|| Arc::new(AtomicSketch::new())))
+    }
+
+    /// Set a counter to an absolute value (exporter convenience).
+    pub fn set_counter(&self, name: &str, v: u64) {
+        self.counter(name).store(v);
+    }
+
+    /// Set a gauge (exporter convenience).
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.gauge(name).set(v);
+    }
+
+    /// Merge an owned sketch into the named sketch.  NOTE: merging is
+    /// additive — exporters that publish a cumulative sketch should
+    /// merge into a *fresh* registry per snapshot tick, not re-merge
+    /// into a long-lived one.
+    pub fn merge_sketch(&self, name: &str, s: &HistogramSketch) {
+        self.sketch(name).merge_from(s);
+    }
+
+    /// Consistent point-in-time copy of every metric.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            counters: self
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            sketches: self
+                .sketches
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+/// An owned, stable-ordered snapshot of a [`Registry`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub sketches: BTreeMap<String, HistogramSketch>,
+}
+
+impl Snapshot {
+    /// Multi-line `name value` text format, sections sorted and keys
+    /// sorted within each section (byte-deterministic).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        if !self.counters.is_empty() {
+            out.push_str("# counters\n");
+            for (k, v) in &self.counters {
+                out.push_str(&format!("{k} {v}\n"));
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push_str("# gauges\n");
+            for (k, v) in &self.gauges {
+                out.push_str(&format!("{k} {v:.6}\n"));
+            }
+        }
+        if !self.sketches.is_empty() {
+            out.push_str("# sketches (ms)\n");
+            for (k, s) in &self.sketches {
+                out.push_str(&format!("{k} {}\n", s.summary().render()));
+            }
+        }
+        out
+    }
+
+    /// Compact JSON document (schema [`SCHEMA`]), keys sorted — the
+    /// artifact format uploaded by CI next to the bench trajectory.
+    pub fn to_json(&self) -> String {
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), Json::Str(SCHEMA.to_string()));
+        root.insert(
+            "counters".to_string(),
+            Json::Obj(
+                self.counters.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect(),
+            ),
+        );
+        root.insert(
+            "gauges".to_string(),
+            Json::Obj(self.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect()),
+        );
+        let sketches = self
+            .sketches
+            .iter()
+            .map(|(k, s)| {
+                let sum = s.summary();
+                let mut o = BTreeMap::new();
+                o.insert("count".to_string(), Json::Num(sum.count as f64));
+                o.insert("mean_ms".to_string(), Json::Num(sum.mean_ms));
+                o.insert("p50_ms".to_string(), Json::Num(sum.p50_ms));
+                o.insert("p95_ms".to_string(), Json::Num(sum.p95_ms));
+                o.insert("p99_ms".to_string(), Json::Num(sum.p99_ms));
+                o.insert("p999_ms".to_string(), Json::Num(sum.p999_ms));
+                o.insert("max_ms".to_string(), Json::Num(sum.max_ms));
+                (k.clone(), Json::Obj(o))
+            })
+            .collect();
+        root.insert("sketches".to_string(), Json::Obj(sketches));
+        json::to_string(&Json::Obj(root))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn handles_are_shared_and_lock_free_to_update() {
+        let reg = Registry::new();
+        let a = reg.counter("serve.completed");
+        let b = reg.counter("serve.completed");
+        a.add(3);
+        b.inc();
+        assert_eq!(reg.counter("serve.completed").get(), 4);
+        reg.gauge("train.loss").set(0.25);
+        assert_eq!(reg.gauge("train.loss").get(), 0.25);
+        reg.sketch("serve.latency").record(Duration::from_millis(2));
+        assert_eq!(reg.sketch("serve.latency").count(), 1);
+    }
+
+    #[test]
+    fn snapshot_formats_are_stable_ordered() {
+        let reg = Registry::new();
+        // Register deliberately out of order; output must sort.
+        reg.set_counter("b.two", 2);
+        reg.set_counter("a.one", 1);
+        reg.set_gauge("z.level", 1.5);
+        reg.sketch("m.lat").record(Duration::from_millis(1));
+        let snap = reg.snapshot();
+        let text = snap.render_text();
+        let a = text.find("a.one 1").unwrap();
+        let b = text.find("b.two 2").unwrap();
+        assert!(a < b, "counters sorted");
+        assert!(text.contains("z.level 1.500000"));
+        assert!(text.contains("m.lat n 1"));
+        assert_eq!(text, reg.snapshot().render_text(), "re-snapshot is byte-identical");
+
+        let parsed = Json::parse(&snap.to_json()).expect("snapshot JSON parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some(SCHEMA));
+        assert_eq!(parsed.get("counters").unwrap().get("a.one").unwrap().as_i64(), Some(1));
+        let lat = parsed.get("sketches").unwrap().get("m.lat").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_i64(), Some(1));
+        assert!(lat.get("p50_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

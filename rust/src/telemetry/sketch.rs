@@ -1,0 +1,403 @@
+//! Log-bucketed latency histogram sketch (hdrhistogram-style, PR7).
+//!
+//! Replaces the coordinator's unbounded per-request latency vector with
+//! O([`BUCKETS`]) memory and a **proven relative-error bound**.  Values
+//! are nanosecond ticks placed into a fixed log-linear bucket layout:
+//! each power-of-two octave is cut into [`SUB`] equal sub-buckets, so a
+//! bucket at scale `2^g` has width `2^g` and lower bound `>= SUB * 2^g`.
+//! The quantile estimate is the midpoint of the bucket holding the
+//! nearest-rank sample (same `round((n-1)*q)` rank convention as
+//! [`crate::util::stats::quantile_sorted`]), hence
+//!
+//! > |estimate − exact| / exact ≤ 1 / (2·SUB) = [`REL_ERROR`] (1.5625%)
+//!
+//! unconditionally: width-1 buckets (values below `2*SUB` ns) are exact,
+//! and wider buckets start at `SUB` times their width.  Estimates are
+//! additionally clamped to the tracked exact `[min, max]`, so a
+//! single-sample sketch reports that sample exactly and `quantile(1.0)`
+//! is the true maximum.
+//!
+//! Sketches are **mergeable**: bucket counts are `u64`, so merging is
+//! associative, commutative, and byte-deterministic however samples were
+//! sharded across workers — the property the coordinator's fixed-order
+//! shard merge relies on (README §OBSERVABILITY).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// log2 of the sub-buckets per power-of-two octave.
+pub const SUB_BITS: u32 = 5;
+/// Sub-buckets per octave (32).
+pub const SUB: u64 = 1 << SUB_BITS;
+/// Fixed bucket count covering the full `u64` nanosecond range.
+pub const BUCKETS: usize = (64 - SUB_BITS as usize + 1) * SUB as usize;
+/// Worst-case relative error of a quantile estimate vs the exact
+/// nearest-rank sample: half a bucket width over the bucket's lower
+/// bound, `1 / (2 * SUB)`.
+pub const REL_ERROR: f64 = 1.0 / (2 * SUB) as f64;
+
+/// Bucket index of a nanosecond value (monotone non-decreasing in `v`).
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v < SUB {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros();
+        let shift = msb - SUB_BITS;
+        let top = (v >> shift) as usize - SUB as usize;
+        (shift as usize + 1) * SUB as usize + top
+    }
+}
+
+/// `[lo, hi)` nanosecond bounds of bucket `i` (inverse of [`bucket_of`]).
+#[inline]
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i < SUB as usize {
+        (i as u64, i as u64 + 1)
+    } else {
+        let shift = (i / SUB as usize - 1) as u32;
+        let top = (i % SUB as usize) as u64;
+        let lo = (SUB + top) << shift;
+        (lo, lo + (1u64 << shift))
+    }
+}
+
+/// Representative value of bucket `i`: exact for width-1 buckets, the
+/// midpoint otherwise.
+#[inline]
+fn bucket_mid(i: usize) -> f64 {
+    let (lo, hi) = bucket_bounds(i);
+    if hi - lo == 1 {
+        lo as f64
+    } else {
+        lo as f64 + (hi - lo) as f64 / 2.0
+    }
+}
+
+#[inline]
+fn ns_of(d: Duration) -> u64 {
+    d.as_nanos().min(u64::MAX as u128) as u64
+}
+
+/// A merged / owned histogram sketch (see the module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSketch {
+    counts: Vec<u64>,
+    count: u64,
+    sum_ns: u64,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for HistogramSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HistogramSketch {
+    /// An empty sketch (fixed [`BUCKETS`]-slot layout).
+    pub fn new() -> Self {
+        Self { counts: vec![0; BUCKETS], count: 0, sum_ns: 0, min_ns: u64::MAX, max_ns: 0 }
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when no sample has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Record one nanosecond sample.
+    pub fn record_ns(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(v);
+        self.min_ns = self.min_ns.min(v);
+        self.max_ns = self.max_ns.max(v);
+    }
+
+    /// Record a duration (saturating at `u64::MAX` ns ≈ 584 years).
+    pub fn record(&mut self, d: Duration) {
+        self.record_ns(ns_of(d));
+    }
+
+    /// Record a millisecond sample given as `f64`.  NaN-safe: non-finite
+    /// samples are ignored (a NaN latency carries no information) and
+    /// negative ones clamp to zero — no panic on any input.
+    pub fn record_ms(&mut self, ms: f64) {
+        if !ms.is_finite() {
+            return;
+        }
+        self.record_ns((ms.max(0.0) * 1e6).round().min(u64::MAX as f64) as u64);
+    }
+
+    /// Merge another sketch's samples into this one.  Associative and
+    /// commutative (pure `u64` arithmetic): any merge order over the same
+    /// shards yields an identical sketch.
+    pub fn merge(&mut self, other: &HistogramSketch) {
+        debug_assert_eq!(self.counts.len(), other.counts.len(), "fixed layout");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// Nearest-rank `q`-quantile estimate in nanoseconds (0.0 when
+    /// empty).  `q` is clamped to `[0, 1]`; a NaN `q` reads as 0.  The
+    /// estimate is within [`REL_ERROR`] of the exact quantile of the
+    /// recorded samples and clamped to the exact `[min, max]`.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
+        let rank = ((self.count - 1) as f64 * q).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen > rank {
+                return bucket_mid(i).clamp(self.min_ns as f64, self.max_ns as f64);
+            }
+        }
+        self.max_ns as f64
+    }
+
+    /// [`Self::quantile_ns`] in milliseconds.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        self.quantile_ns(q) / 1e6
+    }
+
+    /// Mean of the recorded samples in milliseconds (0.0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.count as f64 / 1e6
+    }
+
+    /// Exact maximum recorded sample in milliseconds (0.0 when empty).
+    pub fn max_ms(&self) -> f64 {
+        self.max_ns as f64 / 1e6
+    }
+
+    /// Exact minimum recorded sample in milliseconds (0.0 when empty).
+    pub fn min_ms(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.min_ns as f64 / 1e6
+    }
+
+    /// The standard percentile summary of this sketch.
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.count,
+            mean_ms: self.mean_ms(),
+            p50_ms: self.quantile_ms(0.50),
+            p95_ms: self.quantile_ms(0.95),
+            p99_ms: self.quantile_ms(0.99),
+            p999_ms: self.quantile_ms(0.999),
+            max_ms: self.max_ms(),
+        }
+    }
+}
+
+/// Percentile summary derived from one [`HistogramSketch`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    /// One-line rendering used by `vsa serve` / `vsa serve-bench`.
+    pub fn render(&self) -> String {
+        format!(
+            "n {} mean {:.3} p50 {:.3} p95 {:.3} p99 {:.3} p999 {:.3} max {:.3}",
+            self.count, self.mean_ms, self.p50_ms, self.p95_ms, self.p99_ms, self.p999_ms,
+            self.max_ms
+        )
+    }
+}
+
+/// Lock-free shard of a [`HistogramSketch`]: relaxed atomic bucket
+/// counters a single writer (or several) can record into without any
+/// shared lock, snapshotted into an owned sketch for merging.  The
+/// coordinator gives each worker its own shard, so the delivery hot
+/// path never contends (README §OBSERVABILITY).
+#[derive(Debug)]
+pub struct AtomicSketch {
+    counts: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for AtomicSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicSketch {
+    /// An empty shard.
+    pub fn new() -> Self {
+        Self {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one nanosecond sample (relaxed atomics, no lock).
+    pub fn record_ns(&self, v: u64) {
+        self.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(v, Ordering::Relaxed);
+        self.min_ns.fetch_min(v, Ordering::Relaxed);
+        self.max_ns.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration.
+    pub fn record(&self, d: Duration) {
+        self.record_ns(ns_of(d));
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Merge an owned sketch into this shard (used by registry export).
+    pub fn merge_from(&self, other: &HistogramSketch) {
+        for (a, &b) in self.counts.iter().zip(&other.counts) {
+            if b > 0 {
+                a.fetch_add(b, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count, Ordering::Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(other.min_ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(other.max_ns, Ordering::Relaxed);
+    }
+
+    /// Owned snapshot of this shard.  Quiescent shards (workers joined,
+    /// or a single-threaded writer) snapshot exactly; a snapshot taken
+    /// mid-run may lag in-flight samples but never tears a counter.
+    pub fn snapshot(&self) -> HistogramSketch {
+        let mut out = HistogramSketch::new();
+        for (dst, src) in out.counts.iter_mut().zip(self.counts.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        out.count = self.count.load(Ordering::Relaxed);
+        out.sum_ns = self.sum_ns.load(Ordering::Relaxed);
+        out.min_ns = self.min_ns.load(Ordering::Relaxed);
+        out.max_ns = self.max_ns.load(Ordering::Relaxed);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_monotone_and_self_inverse() {
+        // Exhaustive near the origin, sampled across every octave.
+        let mut prev = 0usize;
+        for v in 0u64..4096 {
+            let b = bucket_of(v);
+            assert!(b >= prev, "monotone at {v}");
+            prev = b;
+            let (lo, hi) = bucket_bounds(b);
+            assert!(lo <= v && v < hi, "v={v} in [{lo},{hi})");
+        }
+        for shift in 0..58u32 {
+            for &v in &[SUB << shift, (SUB << shift) + 1, ((2 * SUB) << shift) - 1] {
+                let (lo, hi) = bucket_bounds(bucket_of(v));
+                assert!(lo <= v && v < hi, "v={v} in [{lo},{hi})");
+                assert!(lo >= SUB * (hi - lo), "rel-width invariant at {v}");
+            }
+        }
+        assert!(bucket_of(u64::MAX) < BUCKETS);
+    }
+
+    #[test]
+    fn empty_and_single_sample_edges() {
+        let mut s = HistogramSketch::new();
+        assert!(s.is_empty());
+        for q in [0.0, 0.5, 0.999, 1.0, -2.0, f64::NAN] {
+            assert_eq!(s.quantile_ns(q), 0.0);
+        }
+        assert_eq!(s.mean_ms(), 0.0);
+        assert_eq!(s.max_ms(), 0.0);
+        assert_eq!(s.min_ms(), 0.0);
+        // One sample: every quantile is exactly that sample (clamped to
+        // the tracked min == max).
+        s.record(Duration::from_nanos(123_456_789));
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(s.quantile_ns(q), 123_456_789.0);
+        }
+        assert_eq!(s.summary().count, 1);
+    }
+
+    #[test]
+    fn record_ms_is_nan_safe() {
+        let mut s = HistogramSketch::new();
+        s.record_ms(f64::NAN);
+        s.record_ms(f64::INFINITY);
+        s.record_ms(f64::NEG_INFINITY);
+        assert!(s.is_empty(), "non-finite samples are ignored");
+        s.record_ms(-3.0);
+        assert_eq!(s.quantile_ms(0.5), 0.0, "negative clamps to zero");
+        s.record_ms(2.5);
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.quantile_ms(1.0), 2.5);
+    }
+
+    #[test]
+    fn quantile_clamps_q_instead_of_panicking() {
+        let mut s = HistogramSketch::new();
+        for v in [10_000u64, 20_000, 30_000] {
+            s.record_ns(v);
+        }
+        assert_eq!(s.quantile_ns(-0.5), 10_000.0);
+        assert_eq!(s.quantile_ns(1.5), 30_000.0);
+        assert_eq!(s.quantile_ns(f64::NAN), 10_000.0, "NaN q reads as 0");
+    }
+
+    #[test]
+    fn atomic_shard_snapshot_matches_owned() {
+        let shard = AtomicSketch::new();
+        let mut owned = HistogramSketch::new();
+        for v in [5u64, 77, 1 << 20, 1 << 40, 999_999] {
+            shard.record_ns(v);
+            owned.record_ns(v);
+        }
+        assert_eq!(shard.snapshot(), owned);
+        assert_eq!(shard.count(), 5);
+        // merge_from doubles every moment.
+        shard.merge_from(&owned);
+        let doubled = shard.snapshot();
+        assert_eq!(doubled.count(), 10);
+        assert_eq!(doubled.quantile_ns(1.0), owned.quantile_ns(1.0));
+    }
+}

@@ -1,0 +1,132 @@
+//! Per-request stage tracing for the serving coordinator (PR7).
+//!
+//! Every request that reaches a terminal outcome carries a [`Trace`]
+//! splitting its end-to-end latency into the pipeline stages below, so
+//! "where did my p99 go" is answerable from per-stage sketches instead
+//! of a single opaque latency number:
+//!
+//! * **queue** — submit (`enqueued`) until a worker dequeued it;
+//! * **batch** — dequeued until its batch was formed and handed to the
+//!   engine path;
+//! * **engine** — wall time inside engine attempts (summed over
+//!   retries);
+//! * **backoff** — measured retry-backoff sleeps;
+//! * **deliver** — the residual: batch bookkeeping, response delivery,
+//!   and waiting while *earlier batchmates'* retries ran (computed as
+//!   `total − others`, saturating, so [`Trace::total`] reconstructs the
+//!   end-to-end latency exactly by construction).
+
+use std::time::Duration;
+
+/// Pipeline stages of one request (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Queue,
+    Batch,
+    Engine,
+    Backoff,
+    Deliver,
+}
+
+impl Stage {
+    /// All stages, in pipeline order (the order stats and exports use).
+    pub const ALL: [Stage; 5] =
+        [Stage::Queue, Stage::Batch, Stage::Engine, Stage::Backoff, Stage::Deliver];
+
+    /// Stable lowercase name used for metric keys and report rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Batch => "batch",
+            Stage::Engine => "engine",
+            Stage::Backoff => "backoff",
+            Stage::Deliver => "deliver",
+        }
+    }
+}
+
+/// Stage-time breakdown of one served request.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub queue: Duration,
+    pub batch: Duration,
+    pub engine: Duration,
+    pub backoff: Duration,
+    pub deliver: Duration,
+}
+
+impl Trace {
+    /// Build a trace from measured stage times plus the end-to-end
+    /// latency; `deliver` absorbs the unattributed residual so the
+    /// stages always sum back to `total` exactly.
+    pub fn from_parts(
+        total: Duration,
+        queue: Duration,
+        batch: Duration,
+        engine: Duration,
+        backoff: Duration,
+    ) -> Self {
+        let accounted = queue + batch + engine + backoff;
+        Trace { queue, batch, engine, backoff, deliver: total.saturating_sub(accounted) }
+    }
+
+    /// Sum of all stage times (== the request's end-to-end latency for
+    /// traces built via [`Trace::from_parts`]).
+    pub fn total(&self) -> Duration {
+        self.queue + self.batch + self.engine + self.backoff + self.deliver
+    }
+
+    /// The stage's duration (for iterating [`Stage::ALL`]).
+    pub fn stage(&self, s: Stage) -> Duration {
+        match s {
+            Stage::Queue => self.queue,
+            Stage::Batch => self.batch,
+            Stage::Engine => self.engine,
+            Stage::Backoff => self.backoff,
+            Stage::Deliver => self.deliver,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_parts_reconstructs_total_exactly() {
+        let t = Trace::from_parts(
+            Duration::from_micros(1000),
+            Duration::from_micros(100),
+            Duration::from_micros(50),
+            Duration::from_micros(700),
+            Duration::from_micros(25),
+        );
+        assert_eq!(t.total(), Duration::from_micros(1000));
+        assert_eq!(t.deliver, Duration::from_micros(125));
+        // Over-accounted parts (clock skew between stamps) saturate
+        // rather than panic; total then reflects the accounted sum.
+        let t = Trace::from_parts(
+            Duration::from_micros(10),
+            Duration::from_micros(100),
+            Duration::ZERO,
+            Duration::ZERO,
+            Duration::ZERO,
+        );
+        assert_eq!(t.deliver, Duration::ZERO);
+        assert_eq!(t.total(), Duration::from_micros(100));
+    }
+
+    #[test]
+    fn stage_accessor_matches_fields() {
+        let t = Trace {
+            queue: Duration::from_nanos(1),
+            batch: Duration::from_nanos(2),
+            engine: Duration::from_nanos(3),
+            backoff: Duration::from_nanos(4),
+            deliver: Duration::from_nanos(5),
+        };
+        let sum: Duration = Stage::ALL.iter().map(|&s| t.stage(s)).sum();
+        assert_eq!(sum, t.total());
+        assert_eq!(Stage::Engine.name(), "engine");
+    }
+}

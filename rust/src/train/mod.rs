@@ -43,6 +43,8 @@ use crate::config::models::{self, ModelSpec};
 use crate::data::{idx, synth, Sample};
 use crate::snn::params::DeployedModel;
 use crate::snn::{Network, Scratch};
+use crate::telemetry::Registry;
+use std::time::{Duration, Instant};
 
 /// Training data source.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -104,6 +106,61 @@ pub struct TrainOutcome {
     pub final_loss: f32,
     /// Training-batch accuracy of the last step.
     pub final_batch_acc: f64,
+    /// Whole-run wall-time phase breakdown (telemetry, PR7).
+    pub phases: PhaseTimes,
+}
+
+/// Wall-time phase breakdown of a training run: where the steps spend
+/// their time (README §OBSERVABILITY).  Printed per epoch when
+/// `log_every > 0` and exportable into a `telemetry::Registry`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseTimes {
+    /// Batch assembly (`load_batch`).
+    pub load: Duration,
+    /// Forward pass including the softmax-CE loss.
+    pub forward: Duration,
+    /// Backward pass (surrogate-gradient STBP).
+    pub backward: Duration,
+    /// Fixed-order gradient reduction inside the `_mt` kernels — a
+    /// *subset* of forward/backward wall time sampled from
+    /// [`par::take_reduce_ns`], and best-effort when several `train()`
+    /// calls share the process (the counter is global).
+    pub reduce: Duration,
+    /// Optimizer step + BN EMA fold.
+    pub optim: Duration,
+}
+
+impl PhaseTimes {
+    fn add(&mut self, o: &PhaseTimes) {
+        self.load += o.load;
+        self.forward += o.forward;
+        self.backward += o.backward;
+        self.reduce += o.reduce;
+        self.optim += o.optim;
+    }
+
+    /// One-line rendering in milliseconds.
+    pub fn render(&self) -> String {
+        let ms = |d: Duration| d.as_secs_f64() * 1e3;
+        format!(
+            "load {:.1} fwd {:.1} bwd {:.1} (reduce {:.1}) optim {:.1} ms",
+            ms(self.load),
+            ms(self.forward),
+            ms(self.backward),
+            ms(self.reduce),
+            ms(self.optim)
+        )
+    }
+
+    /// Publish the phase totals as `{prefix}.phase.*_ms` gauges.
+    pub fn export_into(&self, reg: &Registry, prefix: &str) {
+        let ms = |d: Duration| d.as_secs_f64() * 1e3;
+        reg.set_gauge(&format!("{prefix}.phase.load_ms"), ms(self.load));
+        reg.set_gauge(&format!("{prefix}.phase.forward_ms"), ms(self.forward));
+        reg.set_gauge(&format!("{prefix}.phase.backward_ms"), ms(self.backward));
+        reg.set_gauge(&format!("{prefix}.phase.reduce_ms"), ms(self.reduce));
+        reg.set_gauge(&format!("{prefix}.phase.optim_ms"), ms(self.optim));
+    }
 }
 
 /// Re-exported from `util::stats` (one definition since PR4): f32
@@ -176,8 +233,14 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
     let mut labels = vec![0usize; cfg.batch];
     let mut dlogits = vec![0.0f32; cfg.batch * classes];
     let (mut final_loss, mut final_acc) = (f32::NAN, 0.0f64);
+    let mut phases = PhaseTimes::default();
+    let mut epoch_phases = PhaseTimes::default();
+    // Clear residue another in-process run may have left in the global
+    // reduce counter (observational attribution only).
+    par::take_reduce_ns();
 
     for step in 0..total_steps {
+        let t0 = Instant::now();
         let count = load_batch(
             &spec,
             cfg,
@@ -187,6 +250,7 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
             &mut images,
             &mut labels,
         );
+        let t1 = Instant::now();
         let fwd = net.forward(&images[..count * plane], count, SpikeMode::Hard, true, threads);
         let loss = tensor::softmax_ce(
             &fwd.logits,
@@ -196,6 +260,7 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
             spec.num_steps as f32,
             &mut dlogits[..count * classes],
         );
+        let t2 = Instant::now();
         let grads = net.backward(
             &fwd,
             &images[..count * plane],
@@ -203,8 +268,20 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
             true,
             threads,
         );
+        let t3 = Instant::now();
+        let reduce = Duration::from_nanos(par::take_reduce_ns());
         opt.step(&mut net, &grads, optim::cosine_lr(cfg.lr, step, total_steps));
         net.apply_bn_ema(&fwd);
+        let t4 = Instant::now();
+        let step_phases = PhaseTimes {
+            load: t1 - t0,
+            forward: t2 - t1,
+            backward: t3 - t2,
+            reduce,
+            optim: t4 - t3,
+        };
+        phases.add(&step_phases);
+        epoch_phases.add(&step_phases);
 
         let correct = count_correct(&fwd.logits, classes, &labels[..count]);
         final_loss = loss;
@@ -215,8 +292,18 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
                 spec.name, spec.num_steps, step, total_steps, loss, final_acc
             );
         }
+        if cfg.log_every > 0 && (step + 1) % batches_per_epoch == 0 {
+            let epoch = step / batches_per_epoch;
+            println!(
+                "[train:{} T={}] epoch {epoch} {}",
+                spec.name,
+                spec.num_steps,
+                epoch_phases.render()
+            );
+            epoch_phases = PhaseTimes::default();
+        }
     }
-    Ok(TrainOutcome { net, steps: total_steps, final_loss, final_batch_acc: final_acc })
+    Ok(TrainOutcome { net, steps: total_steps, final_loss, final_batch_acc: final_acc, phases })
 }
 
 /// Fill `images`/`labels` with the samples of `step`; returns the count.
@@ -308,6 +395,16 @@ mod tests {
         assert_eq!(a.steps, 3);
         assert_eq!(deploy(&a.net).to_bytes(), deploy(&b.net).to_bytes());
         assert!(a.final_loss.is_finite());
+        // Phase telemetry is populated (no cross-phase inequalities
+        // here: the reduce counter is process-global and tests run
+        // concurrently).
+        assert!(a.phases.forward > Duration::ZERO, "forward time measured");
+        assert!(a.phases.optim > Duration::ZERO, "optim time measured");
+        let reg = Registry::new();
+        a.phases.export_into(&reg, "train");
+        let snap = reg.snapshot();
+        assert!(snap.gauges["train.phase.forward_ms"] > 0.0);
+        assert!(snap.gauges.contains_key("train.phase.reduce_ms"));
     }
 
     /// Hand-built "MNIST" split in micro geometry for load_batch tests.

@@ -27,6 +27,25 @@
 //! (`std::thread::scope` is the only synchronization primitive used).
 
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Wall nanoseconds spent in the fixed-order gradient reductions of the
+/// `_mt` kernels since the last [`take_reduce_ns`] — the trainer's
+/// per-epoch "reduce" phase (telemetry, PR7).  Process-global and
+/// observational only: concurrent `train()` calls (e.g. parallel tests)
+/// share it, so consumers must treat it as a best-effort attribution,
+/// never an invariant.  It cannot affect training arithmetic.
+static REDUCE_NS: AtomicU64 = AtomicU64::new(0);
+
+/// Charge reduction wall time (called by `tensor::*_grads_mt`).
+pub fn add_reduce_ns(ns: u64) {
+    REDUCE_NS.fetch_add(ns, Ordering::Relaxed);
+}
+
+/// Read and reset the accumulated reduction nanoseconds.
+pub fn take_reduce_ns() -> u64 {
+    REDUCE_NS.swap(0, Ordering::Relaxed)
+}
 
 /// Fixed shard count — a constant so the work partition (and therefore
 /// every reduction order) is independent of `--threads`.  Sixteen keeps

@@ -230,12 +230,14 @@ pub fn conv2d_same_grads_mt(
             );
         });
     }
+    let t_reduce = std::time::Instant::now();
     dw.fill(0.0);
     for part in parts.chunks(dw.len().max(1)) {
         for (d, &p) in dw.iter_mut().zip(part) {
             *d += p;
         }
     }
+    par::add_reduce_ns(t_reduce.elapsed().as_nanos() as u64);
 }
 
 /// Dense layer forward: `x` is `(n, n_in)`, `wts` is `(n_out, n_in)`;
@@ -408,11 +410,13 @@ pub fn matmul_nt_grads_mt(
             );
         });
     }
+    let t_reduce = std::time::Instant::now();
     for part in parts.chunks(dw.len().max(1)) {
         for (d, &p) in dw.iter_mut().zip(part) {
             *d += p;
         }
     }
+    par::add_reduce_ns(t_reduce.elapsed().as_nanos() as u64);
 }
 
 /// 2x2/stride-2 max pool over `(n, c, h, w)` maps; writes

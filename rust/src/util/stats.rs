@@ -57,12 +57,20 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
 /// Nearest-rank quantile of an already-sorted (ascending) slice — use
 /// when several quantiles come from one sort (see
 /// [`Accumulator::percentiles`]).
+///
+/// Conventions shared with `telemetry::HistogramSketch::quantile_ns`
+/// (cross-checked in `tests/telemetry.rs` so reports can't mix two
+/// percentile definitions): empty input returns 0.0, rank is
+/// `round((len-1) * q)`, and `q` is clamped to `[0, 1]` with NaN
+/// reading as 0 — an out-of-range `q` used to index out of bounds and
+/// panic.
 pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
+    let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
     let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[idx]
+    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// Online latency/throughput accumulator used by the coordinator metrics.
@@ -134,6 +142,14 @@ mod tests {
         assert_eq!(quantile(&xs, 0.0), 1.0);
         assert_eq!(quantile(&xs, 1.0), 100.0);
         assert_eq!(quantile(&xs, 0.5), 51.0); // round(49.5) -> index 50
+    }
+
+    #[test]
+    fn quantile_clamps_out_of_range_q() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(quantile(&xs, 1.5), 3.0, "q > 1 used to panic");
+        assert_eq!(quantile(&xs, -0.5), 1.0);
+        assert_eq!(quantile(&xs, f64::NAN), 1.0, "NaN q reads as 0");
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! PR7 stage-trace suite: every served request carries a [`Trace`]
+//! whose stages sum exactly to the end-to-end latency (deliver is the
+//! residual by construction), and the coordinator's sketch-derived
+//! percentiles agree with an exact client-side oracle within the
+//! documented `REL_ERROR` bound — the acceptance criterion for
+//! replacing the per-request latency vector.
+
+use std::time::Duration;
+
+use vsa::coordinator::{Coordinator, CoordinatorConfig, InferenceEngine, ServeError};
+use vsa::telemetry::{Registry, Stage, REL_ERROR};
+use vsa::util::stats::quantile;
+
+/// Engine with a known minimum service time: sleeps `delay` per batch,
+/// then returns deterministic logits.
+struct SleepEngine {
+    batch: usize,
+    delay: Duration,
+}
+
+impl InferenceEngine for SleepEngine {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+    fn infer(&mut self, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+        std::thread::sleep(self.delay);
+        Ok(images.iter().map(|img| vec![img.len() as i64, 0, 1]).collect())
+    }
+    fn name(&self) -> &'static str {
+        "sleep"
+    }
+}
+
+/// Engine that fails its first `fail_first` calls, then succeeds —
+/// drives the retry/backoff path deterministically.
+struct FlakyEngine {
+    inner: SleepEngine,
+    fail_first: u32,
+    calls: u32,
+}
+
+impl InferenceEngine for FlakyEngine {
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+    fn infer(&mut self, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+        self.calls += 1;
+        if self.calls <= self.fail_first {
+            anyhow::bail!("injected transient failure #{}", self.calls);
+        }
+        self.inner.infer(images)
+    }
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+}
+
+const IMG: usize = 32;
+
+#[test]
+fn trace_stages_sum_to_latency_and_percentiles_match_exact() {
+    const REQUESTS: usize = 64;
+    let delay = Duration::from_millis(2);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_depth: REQUESTS,
+            ..CoordinatorConfig::default()
+        },
+        move |_| Box::new(SleepEngine { batch: 4, delay }) as Box<dyn InferenceEngine>,
+    );
+
+    let rxs: Vec<_> = (0..REQUESTS)
+        .map(|i| coord.submit(vec![i as u8; IMG]).expect("accepted"))
+        .collect();
+    let mut exact_ms: Vec<f64> = Vec::with_capacity(REQUESTS);
+    for rx in rxs {
+        let res = rx.recv().expect("worker alive").expect("no faults injected");
+        // Deliver is the residual, so the stage times sum *exactly* to
+        // the end-to-end latency — no drift, no double counting.
+        assert_eq!(res.trace.total(), res.latency, "stages must sum to latency");
+        assert!(
+            res.trace.engine >= delay,
+            "engine stage {:?} must cover the batch attempt ({delay:?})",
+            res.trace.engine
+        );
+        assert_eq!(res.trace.backoff, Duration::ZERO, "clean run never backs off");
+        exact_ms.push(res.latency.as_secs_f64() * 1e3);
+    }
+
+    // Registry export before shutdown: per-stage sketches carry every
+    // completed request.
+    let reg = Registry::new();
+    coord.export_into(&reg, "serve");
+    let snap = reg.snapshot();
+    assert_eq!(snap.counters["serve.completed"], REQUESTS as u64);
+    for s in Stage::ALL {
+        let key = format!("serve.stage.{}", s.name());
+        let sk = snap.sketches.get(&key).expect("stage sketch exported");
+        assert_eq!(sk.count(), REQUESTS as u64, "{key} records every request");
+    }
+
+    let stats = coord.shutdown();
+    assert_eq!(stats.completed, REQUESTS as u64);
+    for s in Stage::ALL {
+        assert_eq!(stats.stages.get(s).count, REQUESTS as u64, "{s:?} summary count");
+    }
+
+    // Acceptance criterion: the sketch quantiles agree with the exact
+    // per-request latencies (same nearest-rank convention) within the
+    // documented relative-error bound.
+    for (est, q) in [
+        (stats.latency_ms_p50, 0.50),
+        (stats.latency_ms_p95, 0.95),
+        (stats.latency_ms_p99, 0.99),
+        (stats.latency_ms_p999, 0.999),
+    ] {
+        let truth = quantile(&exact_ms, q);
+        let tol = truth * REL_ERROR + 1e-6;
+        assert!(
+            (est - truth).abs() <= tol,
+            "p{q}: sketch {est} vs exact {truth} (tol {tol})"
+        );
+    }
+    let exact_max = exact_ms.iter().cloned().fold(0.0f64, f64::max);
+    assert!(
+        (stats.latency_ms_max - exact_max).abs() <= 1e-6,
+        "max is tracked exactly: {} vs {exact_max}",
+        stats.latency_ms_max
+    );
+    assert!(stats.latency_ms_p50 <= stats.latency_ms_p95);
+    assert!(stats.latency_ms_p95 <= stats.latency_ms_p99);
+    assert!(stats.latency_ms_p99 <= stats.latency_ms_p999);
+    assert!(stats.latency_ms_p999 <= stats.latency_ms_max + 1e-9);
+}
+
+#[test]
+fn retry_path_charges_backoff_and_still_sums_exactly() {
+    let backoff = Duration::from_millis(1);
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 8,
+            max_retries: 3,
+            retry_backoff: backoff,
+            ..CoordinatorConfig::default()
+        },
+        move |_| {
+            Box::new(FlakyEngine {
+                inner: SleepEngine { batch: 2, delay: Duration::from_micros(200) },
+                fail_first: 1,
+                calls: 0,
+            }) as Box<dyn InferenceEngine>
+        },
+    );
+
+    let res = match coord.infer_blocking(vec![7u8; IMG]) {
+        Ok(res) => res,
+        Err(e) => panic!("one failure then success must be retried, got {e:?}"),
+    };
+    assert_eq!(res.trace.total(), res.latency, "retried request still sums exactly");
+    assert!(
+        res.trace.backoff >= backoff,
+        "backoff stage {:?} must cover the retry sleep ({backoff:?})",
+        res.trace.backoff
+    );
+
+    // A second request on the now-healthy engine completes cleanly.
+    match coord.infer_blocking(vec![8u8; IMG]) {
+        Ok(res) => assert_eq!(res.trace.backoff, Duration::ZERO, "healthy engine: no backoff"),
+        Err(ServeError::Rejected(r)) => panic!("unexpected shed: {r:?}"),
+        Err(e) => panic!("unexpected failure: {e:?}"),
+    }
+
+    let stats = coord.shutdown();
+    assert_eq!(stats.completed, 2);
+    assert!(stats.retries >= 1, "the injected failure must be counted as a retry");
+    assert!(
+        stats.stages.backoff.max_ms >= backoff.as_secs_f64() * 1e3,
+        "backoff sketch saw the retry sleep"
+    );
+}

@@ -1,0 +1,175 @@
+//! Property suite for the PR7 telemetry stack: the log-bucketed
+//! latency sketch's error bound against an exact oracle, merge algebra,
+//! cross-thread determinism of sharded recording, the shared quantile
+//! conventions between `util::stats` and the sketch, and registry
+//! snapshot stability.
+
+use std::time::Duration;
+
+use vsa::config::json::Json;
+use vsa::telemetry::{AtomicSketch, HistogramSketch, Registry, REL_ERROR, SCHEMA, SUB};
+use vsa::testing::{check, Gen};
+use vsa::util::stats::quantile;
+
+/// Random nanosecond sample spanning many octaves (sub-bucket-exact
+/// values through multi-second latencies).
+fn gen_ns(g: &mut Gen) -> u64 {
+    let bits = g.usize_in(1, 40) as u32;
+    g.u64() % (1u64 << bits)
+}
+
+const QS: [f64; 7] = [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0];
+
+#[test]
+fn sketch_quantiles_match_exact_within_documented_bound() {
+    check("sketch vs exact quantile", 200, |g: &mut Gen| {
+        let n = g.usize_in(1, 300);
+        let mut sketch = HistogramSketch::new();
+        let mut exact: Vec<f64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = gen_ns(g);
+            sketch.record_ns(v);
+            exact.push(v as f64);
+        }
+        for q in QS {
+            let est = sketch.quantile_ns(q);
+            let truth = quantile(&exact, q);
+            // The documented bound, plus half-a-tick absolute slack for
+            // the integer-ns oracle at tiny values.
+            let tol = truth * REL_ERROR + 0.5;
+            assert!(
+                (est - truth).abs() <= tol,
+                "q={q}: estimate {est} vs exact {truth} (tol {tol}, n={n})"
+            );
+        }
+        assert_eq!(sketch.quantile_ns(1.0), quantile(&exact, 1.0), "max is exact");
+    });
+}
+
+#[test]
+fn merge_is_associative_commutative_and_matches_sequential() {
+    check("sketch merge algebra", 100, |g: &mut Gen| {
+        let draw = |g: &mut Gen| -> Vec<u64> {
+            let n = g.usize_in(0, 60);
+            (0..n).map(|_| gen_ns(g)).collect()
+        };
+        let (xs, ys, zs) = (draw(g), draw(g), draw(g));
+        let sk = |vals: &[u64]| {
+            let mut s = HistogramSketch::new();
+            for &v in vals {
+                s.record_ns(v);
+            }
+            s
+        };
+        let (a, b, c) = (sk(&xs), sk(&ys), sk(&zs));
+
+        // Commutativity: a + b == b + a.
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge commutes");
+
+        // Associativity: (a + b) + c == a + (b + c).
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "merge associates");
+
+        // Sharded recording == sequential recording of the union.
+        let all: Vec<u64> = xs.iter().chain(&ys).chain(&zs).copied().collect();
+        assert_eq!(ab_c, sk(&all), "merge of shards == one-stream sketch");
+    });
+}
+
+#[test]
+fn sharded_recording_is_deterministic_at_any_thread_count() {
+    // The coordinator's per-worker shards merged in fixed order must
+    // produce a byte-identical sketch no matter how many threads did
+    // the recording — the property `Coordinator::stats()` relies on.
+    let values: Vec<u64> = {
+        let mut g = Gen::new(0xC0FFEE);
+        (0..4096).map(|_| gen_ns(&mut g)).collect()
+    };
+    let run = |threads: usize| -> HistogramSketch {
+        let shards: Vec<AtomicSketch> = (0..threads).map(|_| AtomicSketch::new()).collect();
+        std::thread::scope(|scope| {
+            for (t, shard) in shards.iter().enumerate() {
+                let values = &values;
+                scope.spawn(move || {
+                    for v in values.iter().skip(t).step_by(threads) {
+                        shard.record_ns(*v);
+                    }
+                });
+            }
+        });
+        let mut merged = HistogramSketch::new();
+        for shard in &shards {
+            merged.merge(&shard.snapshot());
+        }
+        merged
+    };
+    let base = run(1);
+    assert_eq!(base.count(), 4096);
+    for threads in [2, 3, 4, 7] {
+        assert_eq!(base, run(threads), "threads={threads} must match threads=1");
+    }
+}
+
+#[test]
+fn sketch_and_util_stats_share_one_quantile_convention() {
+    // Values below 2*SUB ns land in width-1 buckets, so the sketch is
+    // *exact* there — any disagreement with `util::stats::quantile` on
+    // such inputs is a rank-convention mismatch, not approximation.
+    check("rank conventions agree", 200, |g: &mut Gen| {
+        let n = g.usize_in(1, 50);
+        let mut sketch = HistogramSketch::new();
+        let mut exact = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = g.u64() % (2 * SUB);
+            sketch.record_ns(v);
+            exact.push(v as f64);
+        }
+        for q in [0.0, 0.1, 0.5, 0.77, 0.95, 1.0, 1.5, -0.5, f64::NAN] {
+            assert_eq!(
+                sketch.quantile_ns(q),
+                quantile(&exact, q),
+                "q={q} must agree exactly on width-1 buckets (n={n})"
+            );
+        }
+    });
+    // Empty-input convention matches too.
+    assert_eq!(HistogramSketch::new().quantile_ns(0.5), quantile(&[], 0.5));
+}
+
+#[test]
+fn registry_snapshot_round_trips_and_is_stable() {
+    let build = || {
+        let reg = Registry::new();
+        reg.set_counter("serve.completed", 41);
+        reg.counter("serve.completed").inc();
+        reg.set_gauge("serve.throughput_rps", 123.5);
+        let lat = reg.sketch("serve.latency");
+        for ms in [1u64, 2, 3, 40] {
+            lat.record(Duration::from_millis(ms));
+        }
+        reg.snapshot()
+    };
+    let snap = build();
+    assert_eq!(snap, build(), "identical inputs give identical snapshots");
+    assert_eq!(snap.render_text(), build().render_text(), "text is byte-deterministic");
+
+    let doc = Json::parse(&snap.to_json()).expect("snapshot JSON parses");
+    assert_eq!(doc.get("schema").unwrap().as_str(), Some(SCHEMA));
+    let counters = doc.get("counters").unwrap();
+    assert_eq!(counters.get("serve.completed").unwrap().as_i64(), Some(42));
+    let lat = doc.get("sketches").unwrap().get("serve.latency").unwrap();
+    assert_eq!(lat.get("count").unwrap().as_i64(), Some(4));
+    let p50 = lat.get("p50_ms").unwrap().as_f64().unwrap();
+    let max = lat.get("max_ms").unwrap().as_f64().unwrap();
+    assert!((p50 - 2.0).abs() <= 2.0 * REL_ERROR, "p50 ~ 2ms, got {p50}");
+    assert_eq!(max, 40.0, "max is exact");
+}
