@@ -19,7 +19,7 @@ mod harness;
 
 use harness::{quick_mode, section, JsonReport};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use vsa::config::models;
 use vsa::coordinator::{
     run_load, Coordinator, CoordinatorConfig, FaultEngine, FaultProfile, FaultStats, GoldenEngine,
@@ -28,6 +28,7 @@ use vsa::coordinator::{
 use vsa::data::synth;
 use vsa::snn::params::DeployedModel;
 use vsa::snn::Network;
+use vsa::telemetry::SpanCollector;
 
 /// Written next to the other cross-PR trajectory files at the repo root.
 const REPORT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR7.json");
@@ -45,7 +46,11 @@ fn tiny_net() -> Network {
     Network::new(DeployedModel::synthesize(&spec, 42))
 }
 
-fn start_pool(fault_rate: f64, fstats: &Arc<FaultStats>) -> Coordinator {
+fn start_pool(
+    fault_rate: f64,
+    fstats: &Arc<FaultStats>,
+    spans: Option<Arc<SpanCollector>>,
+) -> Coordinator {
     let profile = FaultProfile::mixed(fault_rate, Duration::from_millis(1));
     let cfg = CoordinatorConfig {
         workers: WORKERS,
@@ -53,7 +58,7 @@ fn start_pool(fault_rate: f64, fstats: &Arc<FaultStats>) -> Coordinator {
         queue_depth: 64,
         ..CoordinatorConfig::default()
     };
-    Coordinator::start(cfg, {
+    Coordinator::start_with_spans(cfg, spans, {
         let fstats = Arc::clone(fstats);
         move |w| -> Box<dyn InferenceEngine> {
             let inner = Box::new(GoldenEngine::new(tiny_net(), BATCH));
@@ -77,7 +82,7 @@ fn main() {
     );
     for rate in FAULT_RATES {
         let fstats = Arc::new(FaultStats::default());
-        let coord = start_pool(rate, &fstats);
+        let coord = start_pool(rate, &fstats, None);
 
         if rate == 0.0 {
             // Correctness gate: a served result is bit-identical to the
@@ -140,6 +145,36 @@ fn main() {
             shed_rate,
             retry_rate,
             fail_rate,
+        );
+    }
+
+    // Span-tracing overhead (PR8): the same clean load with per-request
+    // span trees on — throughput should be indistinguishable (recording
+    // is a ring write; the mutex is only taken at flush).
+    section("span tracing overhead (clean run)");
+    {
+        let spans = SpanCollector::new();
+        let fstats = Arc::new(FaultStats::default());
+        let coord = start_pool(0.0, &fstats, Some(Arc::clone(&spans)));
+        let spec = LoadSpec { requests, submitters: SUBMITTERS, submit_wait: None };
+        let t0 = Instant::now();
+        let load = run_load(&coord, &images, &spec);
+        let stats = coord.shutdown();
+        let wall = t0.elapsed();
+        assert_eq!(load.ok, requests as u64, "traced clean run: everything completes");
+        let sheet = spans.sheet();
+        sheet.check_nesting().expect("request trees nest");
+        let export = sheet.to_chrome_json();
+        println!(
+            "  {requests} requests in {:.1} ms with tracing on ({:.1} req/s)",
+            wall.as_secs_f64() * 1e3,
+            stats.throughput_rps
+        );
+        println!(
+            "  {} spans recorded ({} dropped), Chrome export {:.1} KB",
+            sheet.len(),
+            sheet.dropped,
+            export.len() as f64 / 1024.0
         );
     }
     report.write(REPORT_PATH);

@@ -51,6 +51,14 @@ pub struct LayerReport {
     pub utilization: f64,
     pub spikes_emitted: u64,
     pub membrane_accesses: u64,
+    /// Useful PE ops charged to this layer (MAC = 2 ops).
+    pub pe_ops: u64,
+    /// DRAM bytes moved for this layer (both directions; shrinks for
+    /// fused pairs — the intermediate spike train never travels).
+    pub dram_bytes: u64,
+    /// SRAM access breakdown for this layer (feeds the per-layer
+    /// energy attribution in the utilization report).
+    pub sram: SramAccesses,
 }
 
 /// Whole-inference outcome.
@@ -317,19 +325,24 @@ impl Chip {
 
         for (idx, plan) in plans.iter().enumerate() {
             let (fused_in, fused_out) = roles(&groups, idx);
+            let dram_before = dram.total();
             layer_dram(plan, t_steps, fused_in, fused_out, true, &mut dram);
             let acc = layer_sram(plan, &self.hw, t_steps);
+            sram.add(&acc);
             let cycles = plan.cycles(&self.hw, t_steps);
             cycles_total += cycles;
-            pe_ops_total += plan.pe_ops(&self.hw, t_steps);
+            let pe_ops = plan.pe_ops(&self.hw, t_steps);
+            pe_ops_total += pe_ops;
             layer_reports.push(LayerReport {
                 kind: plan.kind,
                 cycles,
                 utilization: plan.utilization(&self.hw, t_steps),
                 spikes_emitted: 0,
                 membrane_accesses: acc.membrane_rmw,
+                pe_ops,
+                dram_bytes: dram.total() - dram_before,
+                sram: acc,
             });
-            sram.add(&acc);
         }
 
         let freq_hz = self.hw.freq_mhz * 1e6;
@@ -403,30 +416,31 @@ impl Chip {
             cur.clear();
         }
 
-        if let Some(tr) = trace.as_deref_mut() {
-            for g in cache.groups.iter().filter(|g| g.len == 2) {
-                tr.push(Event::Fused { first: g.start, second: g.start + 1 });
-            }
-        }
-
         for (idx, plan) in cache.plans.iter().enumerate() {
             let (fused_in, fused_out) = roles(&cache.groups, idx);
+            // Per-category attribution is only needed when tracing; the
+            // clone is off the untraced hot path.
+            let dram_snapshot = if trace.is_some() { Some(dram.clone()) } else { None };
             let dram_before = dram.total();
             layer_dram(plan, t_steps, fused_in, fused_out, true, &mut dram);
             let acc = layer_sram(plan, &self.hw, t_steps);
             sram.add(&acc);
             let cycles = plan.cycles(&self.hw, t_steps);
             if let Some(tr) = trace.as_deref_mut() {
-                tr.push(Event::LayerStart { layer: idx, kind: plan.kind, cycle: cycles_total });
-                tr.push(Event::DramTransfer {
-                    layer: idx,
-                    bytes: dram.total() - dram_before,
-                    write: !fused_out,
-                    what: "layer io",
-                });
+                push_layer_events(
+                    tr,
+                    idx,
+                    plan,
+                    &cache.groups,
+                    cycles_total,
+                    cycles_total + cycles,
+                    dram_snapshot.as_ref().unwrap(),
+                    &dram,
+                );
             }
             cycles_total += cycles;
-            pe_ops_total += plan.pe_ops(&self.hw, t_steps);
+            let pe_ops = plan.pe_ops(&self.hw, t_steps);
+            pe_ops_total += pe_ops;
 
             let scratch = &mut cache.scratch;
             let layer = &model.layers[plan.model_index];
@@ -547,6 +561,9 @@ impl Chip {
                 utilization: plan.utilization(&self.hw, t_steps),
                 spikes_emitted: fired,
                 membrane_accesses,
+                pe_ops,
+                dram_bytes: dram.total() - dram_before,
+                sram: acc,
             });
         }
 
@@ -597,30 +614,29 @@ impl Chip {
         let mut spikes: Vec<SpikeMap> = Vec::new();
         let mut logits = vec![0i64; 10];
 
-        if let Some(tr) = trace.as_deref_mut() {
-            for g in groups.iter().filter(|g| g.len == 2) {
-                tr.push(Event::Fused { first: g.start, second: g.start + 1 });
-            }
-        }
-
         for (idx, plan) in plans.iter().enumerate() {
             let (fused_in, fused_out) = roles(&groups, idx);
+            let dram_snapshot = if trace.is_some() { Some(dram.clone()) } else { None };
             let dram_before = dram.total();
             layer_dram(plan, t_steps, fused_in, fused_out, true, &mut dram);
             let acc = layer_sram(plan, &self.hw, t_steps);
             sram.add(&acc);
             let cycles = plan.cycles(&self.hw, t_steps);
             if let Some(tr) = trace.as_deref_mut() {
-                tr.push(Event::LayerStart { layer: idx, kind: plan.kind, cycle: cycles_total });
-                tr.push(Event::DramTransfer {
-                    layer: idx,
-                    bytes: dram.total() - dram_before,
-                    write: !fused_out,
-                    what: "layer io",
-                });
+                push_layer_events(
+                    tr,
+                    idx,
+                    plan,
+                    &groups,
+                    cycles_total,
+                    cycles_total + cycles,
+                    dram_snapshot.as_ref().unwrap(),
+                    &dram,
+                );
             }
             cycles_total += cycles;
-            pe_ops_total += plan.pe_ops(&self.hw, t_steps);
+            let pe_ops = plan.pe_ops(&self.hw, t_steps);
+            pe_ops_total += pe_ops;
 
             let layer = &model.layers[plan.model_index];
             let (new_spikes, fired, membrane_accesses, layer_logits) =
@@ -639,6 +655,9 @@ impl Chip {
                 utilization: plan.utilization(&self.hw, t_steps),
                 spikes_emitted: fired,
                 membrane_accesses,
+                pe_ops,
+                dram_bytes: dram.total() - dram_before,
+                sram: acc,
             });
         }
 
@@ -853,6 +872,49 @@ impl Chip {
     }
 }
 
+/// Emit one layer's trace events (PR8): the fusion decision when this
+/// layer opens a fused pair, the layer start, then per-category DRAM
+/// transfers — reads stamped at the layer's start cycle, writes at its
+/// end cycle, so a fused pair's skipped spike round-trip shows up as a
+/// literal gap in the DRAM track.
+#[allow(clippy::too_many_arguments)]
+fn push_layer_events(
+    tr: &mut crate::arch::trace::Trace,
+    idx: usize,
+    plan: &LayerPlan,
+    groups: &[FusionGroup],
+    start_cycle: u64,
+    end_cycle: u64,
+    dram_before: &Dram,
+    dram_after: &Dram,
+) {
+    use crate::arch::trace::Event;
+    if groups.iter().any(|g| g.len == 2 && g.start == idx) {
+        tr.push(Event::Fused { first: idx, second: idx + 1, cycle: start_cycle });
+    }
+    tr.push(Event::LayerStart { layer: idx, kind: plan.kind, cycle: start_cycle });
+    for (cat, read, write) in dram_after.delta(dram_before) {
+        if read > 0 {
+            tr.push(Event::DramTransfer {
+                layer: idx,
+                bytes: read,
+                write: false,
+                what: cat.name(),
+                cycle: start_cycle,
+            });
+        }
+        if write > 0 {
+            tr.push(Event::DramTransfer {
+                layer: idx,
+                bytes: write,
+                write: true,
+                what: cat.name(),
+                cycle: end_cycle,
+            });
+        }
+    }
+}
+
 fn plane_to_map(fired: &[bool], c: usize, h: usize, w: usize) -> SpikeMap {
     let mut m = SpikeMap::zeros(c, h, w);
     for ch in 0..c {
@@ -948,7 +1010,7 @@ pub(crate) mod tests {
         });
     }
 
-    pub(super) fn micro_model(t: usize) -> DeployedModel {
+    pub(crate) fn micro_model(t: usize) -> DeployedModel {
         DeployedModel {
             name: "micro".into(),
             num_steps: t,
@@ -1150,7 +1212,8 @@ mod trace_tests {
         let (traced, trace) = chip.run_traced(&model, &image);
         assert_eq!(plain.logits, traced.logits);
         assert_eq!(plain.cycles, traced.cycles);
-        // 4 compute layers -> 4 starts + 4 ends + 4 dram + fusion events
+        // 4 compute layers -> 4 starts + 4 ends + per-category dram +
+        // fusion events
         let starts = trace
             .events()
             .iter()
@@ -1159,5 +1222,108 @@ mod trace_tests {
         assert_eq!(starts, 4);
         assert_eq!(trace.span_cycles(), traced.cycles);
         assert!(trace.render().contains("EncConv start"));
+    }
+
+    /// Every DRAM transfer is stamped inside its layer's cycle window
+    /// (PR8 satellite: the events are placeable on a timeline).
+    #[test]
+    fn dram_events_fall_inside_their_layer_window() {
+        let model = micro_model(3);
+        let image: Vec<u8> = (0..64).map(|i| (i * 11 % 256) as u8).collect();
+        let chip = Chip::new(HwConfig::default(), SimMode::Fast);
+        let (_, trace) = chip.run_traced(&model, &image);
+        let mut window = std::collections::HashMap::new();
+        let mut open = std::collections::HashMap::new();
+        for e in trace.events() {
+            match e {
+                Event::LayerStart { layer, cycle, .. } => {
+                    open.insert(*layer, *cycle);
+                }
+                Event::LayerEnd { layer, cycle, .. } => {
+                    window.insert(*layer, (open[layer], *cycle));
+                }
+                _ => {}
+            }
+        }
+        let mut dram_events = 0;
+        for e in trace.events() {
+            if let Event::DramTransfer { layer, cycle, .. } = e {
+                let (start, end) = window[layer];
+                assert!(
+                    *cycle >= start && *cycle <= end,
+                    "L{layer} transfer at {cycle} outside [{start},{end}]"
+                );
+                dram_events += 1;
+            }
+        }
+        assert!(dram_events > 0);
+    }
+
+    /// A fused pair leaves a gap in the DRAM timeline: the first layer
+    /// writes no spike train out, the second reads none in (§IV-B made
+    /// visible per-event, not just as a byte total).
+    #[test]
+    fn fused_pair_skips_the_spike_round_trip() {
+        let model = micro_model(4);
+        let image = vec![128u8; 64];
+        let chip = Chip::new(HwConfig::default(), SimMode::Fast);
+        let (_, trace) = chip.run_traced(&model, &image);
+        let fused: Vec<(usize, usize)> = trace
+            .events()
+            .iter()
+            .filter_map(|e| match e {
+                Event::Fused { first, second, .. } => Some((*first, *second)),
+                _ => None,
+            })
+            .collect();
+        assert!(!fused.is_empty(), "micro model must fuse at least one pair");
+        for &(first, second) in &fused {
+            for e in trace.events() {
+                if let Event::DramTransfer { layer, write, what, .. } = e {
+                    assert!(
+                        !(*layer == first && *write && *what == "spikes_out"),
+                        "fused L{first} must not write its spike train"
+                    );
+                    assert!(
+                        !(*layer == second && !*write && *what == "spikes_in"),
+                        "fused L{second} must not read a spike train"
+                    );
+                }
+            }
+        }
+        // And the fusion event itself is stamped at its pair's start.
+        let unfused_chip = Chip::new(
+            HwConfig { layer_fusion: false, ..HwConfig::default() },
+            SimMode::Fast,
+        );
+        let (_, off) = unfused_chip.run_traced(&model, &image);
+        let (first, second) = fused[0];
+        let has = |tr: &crate::arch::trace::Trace, layer: usize, write: bool, what: &str| {
+            tr.events().iter().any(|e| {
+                matches!(e, Event::DramTransfer { layer: l, write: w, what: c, .. }
+                    if *l == layer && *w == write && *c == what)
+            })
+        };
+        assert!(has(&off, first, true, "spikes_out"), "unfused run writes the train");
+        assert!(has(&off, second, false, "spikes_in"), "unfused run reads it back");
+    }
+
+    /// Per-layer report fields (PR8) reconcile with the run totals.
+    #[test]
+    fn layer_reports_sum_to_run_totals() {
+        let model = micro_model(4);
+        let image = vec![128u8; 64];
+        for mode in [SimMode::Fast, SimMode::Exact] {
+            let r = Chip::new(HwConfig::default(), mode).run(&model, &image);
+            let pe: u64 = r.layers.iter().map(|l| l.pe_ops).sum();
+            assert_eq!(pe, r.pe_ops);
+            let dram: u64 = r.layers.iter().map(|l| l.dram_bytes).sum();
+            assert_eq!(dram, r.dram.total());
+            let mut sram = SramAccesses::default();
+            for l in &r.layers {
+                sram.add(&l.sram);
+            }
+            assert_eq!(sram.total(), r.sram.total());
+        }
     }
 }

@@ -82,6 +82,19 @@ impl Dram {
         CATEGORIES.iter().map(|&c| (c, self.read[Self::idx(c)], self.write[Self::idx(c)]))
     }
 
+    /// Per-category traffic accumulated since `before` (a clone of this
+    /// counter taken earlier): `(category, read delta, write delta)` in
+    /// declaration order.  Lets the tracer attribute one layer's DRAM
+    /// traffic by category without a second set of counters.
+    pub fn delta<'a>(
+        &'a self,
+        before: &'a Dram,
+    ) -> impl Iterator<Item = (Traffic, u64, u64)> + 'a {
+        self.by_category().zip(before.by_category()).map(|((c, r_now, w_now), (_, r0, w0))| {
+            (c, r_now - r0, w_now - w0)
+        })
+    }
+
     /// Human-readable breakdown in KB.
     pub fn report(&self) -> String {
         let mut lines = Vec::new();
@@ -110,6 +123,18 @@ mod tests {
         assert_eq!(d.category(Traffic::Weights), 100);
         assert_eq!(d.category(Traffic::SpikesIn), 50);
         assert_eq!(d.category(Traffic::Membrane), 0);
+    }
+
+    #[test]
+    fn delta_attributes_per_category() {
+        let mut d = Dram::default();
+        d.read(Traffic::Weights, 100);
+        let before = d.clone();
+        d.read(Traffic::Weights, 20);
+        d.write(Traffic::SpikesOut, 50);
+        let changed: Vec<_> =
+            d.delta(&before).filter(|&(_, r, w)| r + w > 0).collect();
+        assert_eq!(changed, vec![(Traffic::Weights, 20, 0), (Traffic::SpikesOut, 0, 50)]);
     }
 
     #[test]

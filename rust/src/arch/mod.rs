@@ -27,6 +27,7 @@ pub mod if_unit;
 pub mod pe;
 pub mod schedule;
 pub mod sram;
+pub mod timeline;
 pub mod trace;
 
 pub use chip::{Chip, RunReport, SimMode};

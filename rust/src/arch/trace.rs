@@ -15,10 +15,12 @@ pub enum Event {
     LayerStart { layer: usize, kind: PlanKind, cycle: u64 },
     /// A compute layer finished at `cycle` having fired `spikes`.
     LayerEnd { layer: usize, cycle: u64, spikes: u64 },
-    /// Two layers were fused (no DRAM round-trip between them).
-    Fused { first: usize, second: usize },
-    /// A DRAM transfer of `bytes` (negative direction = write).
-    DramTransfer { layer: usize, bytes: u64, write: bool, what: &'static str },
+    /// Two layers were fused (no DRAM round-trip between them); stamped
+    /// with the cycle the pair's first layer begins at.
+    Fused { first: usize, second: usize, cycle: u64 },
+    /// A DRAM transfer of `bytes` at `cycle`; `write` gives the
+    /// direction (true = chip → DRAM, false = DRAM → chip).
+    DramTransfer { layer: usize, bytes: u64, write: bool, what: &'static str, cycle: u64 },
 }
 
 /// An ordered event log.
@@ -61,12 +63,12 @@ impl Trace {
                         "@{cycle:>10}  L{layer} end ({spikes} spikes)\n"
                     ));
                 }
-                Event::Fused { first, second } => {
-                    out.push_str(&format!("            L{first}+L{second} fused\n"));
+                Event::Fused { first, second, cycle } => {
+                    out.push_str(&format!("@{cycle:>10}  L{first}+L{second} fused\n"));
                 }
-                Event::DramTransfer { layer, bytes, write, what } => {
+                Event::DramTransfer { layer, bytes, write, what, cycle } => {
                     out.push_str(&format!(
-                        "            L{layer} DRAM {} {bytes} B ({what})\n",
+                        "@{cycle:>10}  L{layer} DRAM {} {bytes} B ({what})\n",
                         if *write { "<-" } else { "->" }
                     ));
                 }
@@ -86,12 +88,12 @@ impl Trace {
                 Event::LayerEnd { layer, cycle, spikes } => {
                     out.push_str(&format!("end\t{layer}\t{cycle}\t{spikes}\n"));
                 }
-                Event::Fused { first, second } => {
-                    out.push_str(&format!("fused\t{first}\t\t{second}\n"));
+                Event::Fused { first, second, cycle } => {
+                    out.push_str(&format!("fused\t{first}\t{cycle}\t{second}\n"));
                 }
-                Event::DramTransfer { layer, bytes, write, what } => {
+                Event::DramTransfer { layer, bytes, write, what, cycle } => {
                     out.push_str(&format!(
-                        "dram\t{layer}\t\t{}{bytes}B:{what}\n",
+                        "dram\t{layer}\t{cycle}\t{}{bytes}B:{what}\n",
                         if *write { "w" } else { "r" }
                     ));
                 }
@@ -124,9 +126,9 @@ mod tests {
     fn sample() -> Trace {
         let mut t = Trace::default();
         t.push(Event::LayerStart { layer: 0, kind: PlanKind::EncConv, cycle: 0 });
-        t.push(Event::DramTransfer { layer: 0, bytes: 784, write: false, what: "image" });
+        t.push(Event::DramTransfer { layer: 0, bytes: 784, write: false, what: "image", cycle: 0 });
         t.push(Event::LayerEnd { layer: 0, cycle: 1000, spikes: 42 });
-        t.push(Event::Fused { first: 0, second: 1 });
+        t.push(Event::Fused { first: 0, second: 1, cycle: 1000 });
         t.push(Event::LayerStart { layer: 1, kind: PlanKind::Conv, cycle: 1000 });
         t.push(Event::LayerEnd { layer: 1, cycle: 5000, spikes: 17 });
         t
@@ -153,6 +155,12 @@ mod tests {
         let tsv = sample().to_tsv();
         assert!(tsv.starts_with("event\tlayer\tcycle\tdetail\n"));
         assert_eq!(tsv.lines().count(), 7);
+        // Every row carries its cycle stamp (PR8): no empty cycle column.
+        for row in tsv.lines().skip(1) {
+            assert!(!row.split('\t').nth(2).unwrap().is_empty(), "no cycle in {row:?}");
+        }
+        assert!(tsv.contains("fused\t0\t1000\t1"));
+        assert!(tsv.contains("dram\t0\t0\tr784B:image"));
     }
 
     #[test]

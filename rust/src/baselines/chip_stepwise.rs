@@ -58,12 +58,14 @@ impl StepwiseChip {
 
         for (idx, plan) in plans.iter().enumerate() {
             let (fused_in, fused_out) = roles(&groups, idx);
+            let dram_before = dram.total();
             layer_dram(plan, t_steps, fused_in, fused_out, true, &mut dram);
             let acc = layer_sram(plan, &self.hw, t_steps);
             sram.add(&acc);
             let cycles = plan.cycles(&self.hw, t_steps);
             cycles_total += cycles;
-            pe_ops_total += plan.pe_ops(&self.hw, t_steps);
+            let pe_ops = plan.pe_ops(&self.hw, t_steps);
+            pe_ops_total += pe_ops;
 
             let layer = &model.layers[plan.model_index];
             let (new_spikes, fired, membrane_accesses, layer_logits) =
@@ -79,6 +81,9 @@ impl StepwiseChip {
                 utilization: plan.utilization(&self.hw, t_steps),
                 spikes_emitted: fired,
                 membrane_accesses,
+                pe_ops,
+                dram_bytes: dram.total() - dram_before,
+                sram: acc,
             });
         }
 

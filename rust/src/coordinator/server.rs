@@ -16,10 +16,20 @@
 //! per-request; every completed request carries a [`Trace`] stage
 //! breakdown, and [`Coordinator::export_into`] publishes the merged
 //! telemetry into a `telemetry::Registry`.
+//!
+//! Span tracing (PR8): [`Coordinator::start_with_spans`] attaches a
+//! [`SpanCollector`]; each worker then records flat spans on its own
+//! track (form-batch / engine / backoff) and, at delivery, rebuilds a
+//! per-request span *tree* (queue → batch → engine/backoff → deliver)
+//! from the very same stamps the request's [`Trace`] is built from —
+//! the two views agree by construction, and `rust/tests/spans.rs`
+//! asserts it.
 
 use crate::coordinator::batcher::{next_batch, split_expired, Request};
 use crate::coordinator::engine::InferenceEngine;
+use crate::telemetry::spans::{pids, SpanCollector, SpanRecorder};
 use crate::telemetry::{AtomicSketch, HistogramSketch, LatencySummary, Registry, Stage, Trace};
+use std::cell::RefCell;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
@@ -248,8 +258,18 @@ struct MergedShards {
     batched_requests: u64,
 }
 
+/// Ring capacity per worker span recorder — deep enough that smoke
+/// runs never drop; overflow keeps the latest and is counted.
+const SPAN_RING_CAP: usize = 1 << 15;
+
+/// Mark kinds stored in [`Pending::marks`].
+const MARK_ENGINE: u8 = 0;
+const MARK_BACKOFF: u8 = 1;
+
 struct Shared {
     submitted: AtomicU64,
+    /// Span sink when tracing is on (see [`Coordinator::start_with_spans`]).
+    spans: Option<Arc<SpanCollector>>,
     /// One telemetry shard per worker, indexed by worker id.
     shards: Vec<WorkerShard>,
     /// Remaining engine respawns (pool-wide).  May briefly go negative
@@ -282,6 +302,11 @@ struct Pending {
     engine_ns: u64,
     /// Measured retry-backoff sleep nanoseconds.
     backoff_ns: u64,
+    /// Span marks on the collector clock — `(kind, start_ns, dur_ns)`
+    /// per engine attempt / backoff sleep, pushed only when tracing and
+    /// from the *same* measurements as `engine_ns` / `backoff_ns`, so
+    /// the span tree and the [`Trace`] stages agree exactly.
+    marks: Vec<(u8, u64, u64)>,
     resp: Sender<ServeResult>,
     deadline: Option<Instant>,
 }
@@ -297,6 +322,7 @@ fn into_pending(req: Request<Job>, batch_ready: Instant) -> (Vec<u8>, Pending) {
         batch_ready,
         engine_ns: 0,
         backoff_ns: 0,
+        marks: Vec::new(),
         resp,
         deadline,
     };
@@ -333,6 +359,10 @@ struct WorkerCtx {
     cfg: WorkerCfg,
     shared: Arc<Shared>,
     make_engine: Arc<MakeEngine>,
+    /// This worker's span recorder when tracing is on (created at the
+    /// top of [`run`](WorkerCtx::run); the `RefCell` is fine because
+    /// the ctx never leaves its own thread).
+    rec: RefCell<Option<SpanRecorder>>,
 }
 
 impl WorkerCtx {
@@ -341,11 +371,34 @@ impl WorkerCtx {
         &self.shared.shards[self.w]
     }
 
+    /// Nanosecond stamp on the collector clock — `Some` iff tracing.
+    fn span_now(&self) -> Option<u64> {
+        self.shared.spans.as_ref().map(|s| s.now_ns())
+    }
+
+    /// Run `f` against this worker's recorder when tracing is on.
+    fn with_rec(&self, f: impl FnOnce(&mut SpanRecorder)) {
+        if let Some(rec) = self.rec.borrow_mut().as_mut() {
+            f(rec);
+        }
+    }
+
+    /// Record a flat span on this worker's own track.
+    fn worker_span(&self, name: &str, start_ns: u64, dur_ns: u64, args: &[(&'static str, f64)]) {
+        let (pid, tid) = (pids::SERVE_WORKERS, self.w as u64);
+        self.with_rec(|rec| rec.span_at(pid, tid, name, start_ns, dur_ns, args, None));
+    }
+
     /// The worker loop.  A worker never exits before the queue closes,
     /// even with a dead engine: a dark worker keeps pulling batches and
     /// shedding them as `Rejected(Shutdown)`, so no request is ever
     /// stranded in the queue and shutdown always drains.
     fn run(&self, rx: &Mutex<Receiver<Request<Job>>>) {
+        if let Some(spans) = &self.shared.spans {
+            let rec =
+                spans.recorder(self.w as u32, pids::SERVE_WORKERS, self.w as u64, SPAN_RING_CAP);
+            *self.rec.borrow_mut() = Some(rec);
+        }
         // A panicking engine constructor counts like a panicking engine:
         // the worker starts dark instead of taking the thread down.
         let mut engine = match catch_unwind(AssertUnwindSafe(|| (self.make_engine)(self.w))) {
@@ -363,12 +416,18 @@ impl WorkerCtx {
         loop {
             // Only one worker holds the queue lock while *forming* a
             // batch; inference runs outside the lock.
+            let t_form = self.span_now();
             let batch = {
                 let rx = rx.lock().unwrap();
                 next_batch(&rx, max_batch, self.cfg.max_wait)
             };
             let Some(batch) = batch else { break };
             let batch_ready = Instant::now();
+            if let Some(start) = t_form {
+                let end = self.span_now().unwrap_or(start);
+                let args = [("requests", batch.len() as f64)];
+                self.worker_span("form-batch", start, end.saturating_sub(start), &args);
+            }
             self.shard().batches.fetch_add(1, Ordering::Relaxed);
             self.shard().batched_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
 
@@ -405,11 +464,18 @@ impl WorkerCtx {
             members.push(pending);
         }
         let eng = engine.as_mut().expect("run_batch requires a live engine");
+        let span_start = self.span_now();
         let t0 = Instant::now();
         let outcome = Self::attempt(eng, &images);
         let spent_ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
         for pending in members.iter_mut() {
             pending.engine_ns = pending.engine_ns.saturating_add(spent_ns);
+            if let Some(start) = span_start {
+                pending.marks.push((MARK_ENGINE, start, spent_ns));
+            }
+        }
+        if let Some(start) = span_start {
+            self.worker_span("engine", start, spent_ns, &[("images", images.len() as f64)]);
         }
         match outcome {
             Ok(results) => {
@@ -451,10 +517,15 @@ impl WorkerCtx {
                 pause = pause.min(d.saturating_duration_since(Instant::now()));
             }
             if pause > Duration::ZERO {
+                let span_start = self.span_now();
                 let t0 = Instant::now();
                 std::thread::sleep(pause);
                 let slept = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
                 pending.backoff_ns = pending.backoff_ns.saturating_add(slept);
+                if let Some(start) = span_start {
+                    pending.marks.push((MARK_BACKOFF, start, slept));
+                    self.worker_span("backoff", start, slept, &[]);
+                }
             }
             if let Some(d) = pending.deadline {
                 if Instant::now() >= d {
@@ -465,10 +536,15 @@ impl WorkerCtx {
             attempts += 1;
             self.shard().retries.fetch_add(1, Ordering::Relaxed);
             let eng = engine.as_mut().expect("checked above");
+            let span_start = self.span_now();
             let t0 = Instant::now();
             let outcome = Self::attempt(eng, std::slice::from_ref(&image));
             let spent = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
             pending.engine_ns = pending.engine_ns.saturating_add(spent);
+            if let Some(start) = span_start {
+                pending.marks.push((MARK_ENGINE, start, spent));
+                self.worker_span("engine", start, spent, &[("images", 1.0)]);
+            }
             match outcome {
                 Ok(mut out) => {
                     let logits = out.pop().expect("length checked by attempt()");
@@ -565,8 +641,48 @@ impl WorkerCtx {
                 shard.failed.fetch_add(1, Ordering::Relaxed);
             }
         }
+        if self.shared.spans.is_some() {
+            self.record_request_tree(&pending, &outcome);
+        }
         // The submitter may have given up on its receiver; that is fine.
         let _ = pending.resp.send(outcome);
+    }
+
+    /// Rebuild this request's span tree on the per-request track
+    /// (pid [`pids::SERVE_REQUESTS`], tid = request id) from the same
+    /// stamps and attempt measurements its [`Trace`] is built from.
+    /// Stage spans are named exactly by [`Stage::name`], the deliver
+    /// span absorbs the residual, and every child is clamped inside
+    /// the `request` parent so the nesting invariant holds.
+    fn record_request_tree(&self, pending: &Pending, outcome: &ServeResult) {
+        let Some(spans) = &self.shared.spans else { return };
+        let (pid, tid) = (pids::SERVE_REQUESTS, pending.id);
+        let enq = spans.ns_of(pending.enqueued);
+        let deq = spans.ns_of(pending.dequeued).max(enq);
+        let ready = spans.ns_of(pending.batch_ready).max(deq);
+        let end = spans.now_ns().max(ready);
+        let note = match outcome {
+            Ok(_) => "ok",
+            Err(ServeError::Rejected(_)) => "shed",
+            Err(_) => "failed",
+        };
+        self.with_rec(|rec| {
+            rec.span_at(pid, tid, "request", enq, end - enq, &[], Some(note));
+            rec.span_at(pid, tid, Stage::Queue.name(), enq, deq - enq, &[], None);
+            rec.span_at(pid, tid, Stage::Batch.name(), deq, ready - deq, &[], None);
+            let mut cursor = ready;
+            for &(kind, start, dur) in &pending.marks {
+                let name = match kind {
+                    MARK_BACKOFF => Stage::Backoff.name(),
+                    _ => Stage::Engine.name(),
+                };
+                let start = start.clamp(ready, end);
+                let dur = dur.min(end - start);
+                rec.span_at(pid, tid, name, start, dur, &[], None);
+                cursor = cursor.max(start + dur);
+            }
+            rec.span_at(pid, tid, Stage::Deliver.name(), cursor, end - cursor, &[], None);
+        });
     }
 }
 
@@ -603,11 +719,32 @@ impl Coordinator {
         cfg: CoordinatorConfig,
         make_engine: impl Fn(usize) -> Box<dyn InferenceEngine> + Send + Sync + 'static,
     ) -> Self {
+        Self::start_with_spans(cfg, None, make_engine)
+    }
+
+    /// [`start`](Coordinator::start) with span tracing attached: each
+    /// worker records onto `spans` (worker tracks + per-request trees;
+    /// see the module docs).  Worker recorders flush when their thread
+    /// joins, so take [`SpanCollector::sheet`] after
+    /// [`shutdown`](Coordinator::shutdown) for a complete export.
+    pub fn start_with_spans(
+        cfg: CoordinatorConfig,
+        spans: Option<Arc<SpanCollector>>,
+        make_engine: impl Fn(usize) -> Box<dyn InferenceEngine> + Send + Sync + 'static,
+    ) -> Self {
+        if let Some(sp) = &spans {
+            sp.name_process(pids::SERVE_WORKERS, "serve workers");
+            sp.name_process(pids::SERVE_REQUESTS, "serve requests");
+            for w in 0..cfg.workers {
+                sp.name_track(pids::SERVE_WORKERS, w as u64, &format!("worker-{w}"));
+            }
+        }
         let (tx, rx) = sync_channel::<Request<Job>>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let make_engine: Arc<MakeEngine> = Arc::new(make_engine);
         let shared = Arc::new(Shared {
             submitted: AtomicU64::new(0),
+            spans,
             shards: (0..cfg.workers).map(|_| WorkerShard::new()).collect(),
             restart_budget: AtomicI64::new(cfg.restart_budget as i64),
             alive: AtomicUsize::new(cfg.workers),
@@ -626,6 +763,7 @@ impl Coordinator {
                 cfg: wcfg,
                 shared: Arc::clone(&shared),
                 make_engine: Arc::clone(&make_engine),
+                rec: RefCell::new(None),
             };
             let rx = Arc::clone(&rx);
             workers.push(std::thread::spawn(move || ctx.run(&rx)));
@@ -946,6 +1084,56 @@ mod tests {
         assert!(msgs[2].contains("shutting down"));
         assert!(msgs[3].contains("3 attempt(s)") && msgs[3].contains("boom"));
         assert!(msgs[4].contains("panicked"));
+    }
+
+    /// With a collector attached, every completed request leaves a
+    /// properly nested span tree on its own track, and the worker
+    /// tracks carry the flat form-batch/engine spans.
+    #[test]
+    fn span_trees_cover_every_completed_request() {
+        let spans = SpanCollector::new();
+        let coord = Coordinator::start_with_spans(
+            CoordinatorConfig {
+                workers: 2,
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+                ..CoordinatorConfig::default()
+            },
+            Some(Arc::clone(&spans)),
+            |_| Box::new(GoldenEngine::new(net(), 4)),
+        );
+        let rxs: Vec<_> = (0..12).map(|i| coord.submit(vec![i as u8; 16]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 12);
+
+        let sheet = spans.sheet();
+        sheet.check_nesting().expect("request trees nest");
+        let count = |pid: u32, name: &str| {
+            sheet.records().iter().filter(|r| r.pid == pid && r.name == name).count()
+        };
+        assert_eq!(count(pids::SERVE_REQUESTS, "request"), 12);
+        assert_eq!(count(pids::SERVE_REQUESTS, "queue"), 12);
+        assert_eq!(count(pids::SERVE_REQUESTS, "deliver"), 12);
+        assert!(count(pids::SERVE_REQUESTS, "engine") >= 12, "≥1 engine attempt per request");
+        assert!(count(pids::SERVE_WORKERS, "engine") >= 1);
+        assert!(count(pids::SERVE_WORKERS, "form-batch") >= 1);
+        assert_eq!(sheet.dropped, 0);
+    }
+
+    /// Without a collector the hot path records nothing (marks stay
+    /// empty, no recorder exists) and behaviour is unchanged.
+    #[test]
+    fn tracing_off_leaves_no_sheet() {
+        let spans = SpanCollector::new();
+        let coord = Coordinator::start(CoordinatorConfig::default(), |_| {
+            Box::new(GoldenEngine::new(net(), 8))
+        });
+        coord.infer_blocking(vec![9u8; 16]).unwrap();
+        coord.shutdown();
+        assert!(spans.sheet().is_empty());
     }
 
     /// An engine `Err` must reach every member of the failed batch as a

@@ -7,7 +7,7 @@
 //! `rust/tests/sim_vs_golden.rs` and `benches/bench_table3_perf.rs`);
 //! SRAM energies use standard 40 nm per-access figures.
 
-use crate::arch::chip::RunReport;
+use crate::arch::chip::{LayerReport, RunReport};
 use crate::config::HwConfig;
 use crate::energy::tech;
 
@@ -44,6 +44,23 @@ pub fn core_power_mw(hw: &HwConfig, report: &RunReport) -> f64 {
         + report.sram.temp_writes as f64 * E_TEMP_WRITE_PJ
         + report.sram.boundary_ops as f64 * E_BOUNDARY_PJ;
     LEAKAGE_MW + pj * scale * 1e-12 / runtime_s * 1e3
+}
+
+/// Dynamic core energy attributed to one layer, pJ (PR8: feeds the
+/// per-layer energy column of the simulate utilization report).  The
+/// same per-event charges as [`core_power_mw`] against the layer's own
+/// counters, so summing over `report.layers` recovers the run's total
+/// dynamic energy exactly (leakage is a whole-run cost and is excluded
+/// here).
+pub fn layer_energy_pj(hw: &HwConfig, l: &LayerReport) -> f64 {
+    let scale = tech::energy_scale(40.0, 0.9, hw.tech_nm, hw.voltage);
+    let pj = l.pe_ops as f64 * E_PE_PJ
+        + l.sram.spike_reads as f64 * E_SPIKE_READ_PJ
+        + l.sram.weight_reads as f64 * E_WEIGHT_READ_PJ
+        + l.sram.membrane_rmw as f64 * E_MEMBRANE_RMW_PJ
+        + l.sram.temp_writes as f64 * E_TEMP_WRITE_PJ
+        + l.sram.boundary_ops as f64 * E_BOUNDARY_PJ;
+    pj * scale
 }
 
 /// DRAM energy for a run, mJ (off-chip; not part of core power, reported
@@ -104,6 +121,23 @@ mod tests {
         // paper: 2304 GOPS / 88.968 mW = 25.897 TOPS/W
         let eff = power_efficiency_tops_w(&hw, 88.968);
         assert!((eff - 25.9).abs() < 0.05, "got {eff}");
+    }
+
+    /// Per-layer dynamic energy sums back to the run total implied by
+    /// `core_power_mw` minus leakage (same charges, different slicing).
+    #[test]
+    fn layer_energy_sums_to_dynamic_total() {
+        let hw = HwConfig::default();
+        let report = Chip::new(hw.clone(), SimMode::Fast).run(&small_model(), &[128; 64]);
+        let per_layer: f64 = report.layers.iter().map(|l| layer_energy_pj(&hw, l)).sum();
+        let runtime_s = report.cycles as f64 / (hw.freq_mhz * 1e6);
+        let dynamic_mw = core_power_mw(&hw, &report) - LEAKAGE_MW;
+        let total_pj = dynamic_mw * 1e-3 * runtime_s * 1e12;
+        assert!(per_layer > 0.0);
+        assert!(
+            (per_layer - total_pj).abs() <= 1e-6 * total_pj.max(1.0),
+            "per-layer {per_layer} pJ vs run {total_pj} pJ"
+        );
     }
 
     #[test]

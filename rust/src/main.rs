@@ -11,6 +11,7 @@
 //! vsa serve-bench --model tiny --fault-rate 0.1 --requests 512
 //! vsa train    --model tiny --dataset synth --epochs 6 --seed 7
 //! vsa eval     --weights artifacts/tiny_t4_trained.vsaw [--steps T]
+//! vsa metrics-diff base.json now.json --max-regress 20
 //! vsa selftest                                 # cross-layer consistency
 //! ```
 
@@ -18,10 +19,12 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use vsa::arch::{Chip, SimMode};
+use vsa::arch::schedule::plan_model;
+use vsa::arch::{timeline, Chip, SimMode};
 use vsa::baselines::published;
 use vsa::cli::Args;
-use vsa::config::{json, models, HwConfig};
+use vsa::config::json::{self, Json};
+use vsa::config::{models, HwConfig};
 use vsa::dse;
 use vsa::coordinator::{
     run_load, ChipEngine, Coordinator, CoordinatorConfig, FaultEngine, FaultProfile, FaultStats,
@@ -33,7 +36,7 @@ use vsa::data::idx;
 use vsa::runtime::{Manifest, PjrtExecutor};
 use vsa::snn::params::DeployedModel;
 use vsa::snn::Network;
-use vsa::telemetry::Registry;
+use vsa::telemetry::{diff_snapshots, Registry, SpanCollector};
 use vsa::train;
 use vsa::util::stats::argmax;
 
@@ -56,6 +59,7 @@ fn main() {
         "serve-bench" => cmd_serve_bench(&args),
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
+        "metrics-diff" => cmd_metrics_diff(&args),
         "selftest" => cmd_selftest(&args),
         "" | "help" => {
             print!("{HELP}");
@@ -83,6 +87,7 @@ commands:
   serve-bench drive the coordinator under seeded fault injection
   train       STBP-train a binary-weight SNN, export a VSAW artifact
   eval        golden-model accuracy of an artifact (optionally at --steps T)
+  metrics-diff compare two vsa-metrics-v1 snapshots, gate on regressions
   selftest    cross-check golden model, simulator and PJRT runtime
 
 common flags: --model tiny|mnist|cifar10  --artifacts DIR  --steps T
@@ -113,8 +118,18 @@ serve-bench:  --model tiny|mnist|cifar10  --steps T  --requests N
               --metrics-out FILE.json
               (weights are synthesized — no artifacts directory needed)
 
-simulate:     --mode fast|exact  --no-fusion  --trace  --trace-out FILE
+simulate:     --mode fast|exact  --no-fusion  --trace  --trace-tsv FILE
               --metrics (print registry text)  --metrics-out FILE.json
+              (falls back to a synthesized model when no artifacts exist)
+
+metrics-diff: vsa metrics-diff A.json B.json [--max-regress PCT]
+              per-key deltas of two vsa-metrics-v1 snapshots; exits
+              nonzero when a key regresses beyond PCT percent
+
+tracing:      serve/serve-bench/train/simulate all take --trace-out
+              FILE.json — a Chrome trace-event export (vsa-trace-v1,
+              open in https://ui.perfetto.dev or chrome://tracing);
+              simulate also prints a per-layer utilization report
 
 telemetry:    serve/simulate/train all export the same vsa-metrics-v1
               JSON schema (see README OBSERVABILITY); train also takes
@@ -161,7 +176,21 @@ fn cmd_models() -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let (model, net) = load_network(args)?;
+    // Trained artifact when one exists, synthesized weights otherwise —
+    // cycle/traffic behaviour is weight-independent, so smoke runs need
+    // no artifacts directory.
+    let (model, net) = match load_network(args) {
+        Ok(ok) => ok,
+        Err(e) => {
+            let model = args.get("model", "mnist");
+            let steps = args.get_usize("steps", 4)?;
+            let spec = models::by_name(&model, steps)
+                .ok_or_else(|| anyhow::anyhow!("no artifact and no preset for '{model}': {e:#}"))?;
+            let seed = args.get_u64("seed", 7)?;
+            eprintln!("note: no artifact for '{model}' ({e:#}); synthesizing weights");
+            (model, Network::new(DeployedModel::synthesize(&spec, seed)))
+        }
+    };
     let hw = hw_from_args(args)?;
     let mode = match args.get("mode", "fast").as_str() {
         "exact" => SimMode::Exact,
@@ -169,10 +198,13 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     };
     let seed = args.get_u64("seed", 7)?;
     let sample = &synth::for_model(&model, seed, 0, 1)[0];
+    let tracing = args.has("trace")
+        || args.get_opt("trace-out").is_some()
+        || args.get_opt("trace-tsv").is_some();
 
     let t0 = Instant::now();
     let chip = Chip::new(hw.clone(), mode);
-    let (r, trace) = if args.has("trace") || args.get_opt("trace-out").is_some() {
+    let (r, trace) = if tracing {
         let (r, t) = chip.run_traced(&net.model, &sample.image);
         (r, Some(t))
     } else {
@@ -208,10 +240,18 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         );
     }
     if let Some(trace) = trace {
+        println!("\nutilization report:\n{}", timeline::render_utilization(&r, &hw));
         if let Some(path) = args.get_opt("trace-out") {
+            let plans = plan_model(&net.model);
+            let sheet = timeline::chip_span_sheet(&r, &trace, &hw, &plans);
+            std::fs::write(path, sheet.to_chrome_json() + "\n")?;
+            println!("timeline written to {path} ({} events) — open in Perfetto", sheet.len());
+        }
+        if let Some(path) = args.get_opt("trace-tsv") {
             std::fs::write(path, trace.to_tsv())?;
-            println!("\ntrace written to {path} ({} events)", trace.len());
-        } else {
+            println!("trace TSV written to {path} ({} events)", trace.len());
+        }
+        if args.has("trace") {
             println!("\nexecution trace:\n{}", trace.render());
         }
     }
@@ -466,8 +506,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         restart_budget: args.get_u64("restart-budget", 4)? as u32,
         ..CoordinatorConfig::default()
     };
+    let spans = args.get_opt("trace-out").map(|_| SpanCollector::new());
     let ek = engine_kind.clone();
-    let coord = Coordinator::start(cfg, move |w| -> Box<dyn InferenceEngine> {
+    let make_engine = move |w: usize| -> Box<dyn InferenceEngine> {
         let net = Network::from_vsaw_file(&weights_path).expect("weights load");
         match ek.as_str() {
             "pjrt" => {
@@ -486,7 +527,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             "chip" => Box::new(ChipEngine::new(HwConfig::default(), net, batch)),
             _ => Box::new(GoldenEngine::new(net, batch)),
         }
-    });
+    };
+    let coord = Coordinator::start_with_spans(cfg, spans.clone(), make_engine);
 
     // Periodic observability: a reporter thread publishes a fresh
     // registry snapshot every --stats-interval while requests drain.
@@ -571,6 +613,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         stats.retries, stats.worker_restarts
     );
     println!("  accuracy {correct}/{requests}");
+    write_trace(args, spans.as_ref())?;
+    Ok(())
+}
+
+/// Write the Chrome trace-event export to `--trace-out` (call only
+/// after `Coordinator::shutdown` — worker recorders flush at join).
+fn write_trace(args: &Args, spans: Option<&Arc<SpanCollector>>) -> anyhow::Result<()> {
+    if let (Some(spans), Some(path)) = (spans, args.get_opt("trace-out")) {
+        let sheet = spans.sheet();
+        std::fs::write(path, sheet.to_chrome_json() + "\n")?;
+        println!("trace written to {path} ({} spans) — open in Perfetto", sheet.len());
+    }
     Ok(())
 }
 
@@ -607,7 +661,8 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         deadline,
         ..CoordinatorConfig::default()
     };
-    let coord = Coordinator::start(cfg, {
+    let spans = args.get_opt("trace-out").map(|_| SpanCollector::new());
+    let coord = Coordinator::start_with_spans(cfg, spans.clone(), {
         let spec = spec.clone();
         let fstats = Arc::clone(&fstats);
         move |w| -> Box<dyn InferenceEngine> {
@@ -665,6 +720,7 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         stats.completed + stats.failed + stats.shed == stats.submitted,
         "coordinator counters do not balance"
     );
+    write_trace(args, spans.as_ref())?;
     Ok(())
 }
 
@@ -692,9 +748,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let out_path =
         args.get("out", &format!("artifacts/{model}_t{num_steps}_trained.vsaw"));
 
+    let spans = args.get_opt("trace-out").map(|_| SpanCollector::new());
     let t0 = Instant::now();
-    let outcome = train::train(&cfg)?;
+    let outcome = train::train_traced(&cfg, spans.as_ref())?;
     let wall = t0.elapsed();
+    write_trace(args, spans.as_ref())?;
     let deployed = train::write_artifact(&outcome.net, &out_path)?;
     println!(
         "trained {model} (T={num_steps}) for {} steps in {:.1} s: final loss {:.4}, \
@@ -761,6 +819,34 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
         model.name,
         100.0 * correct as f64 / total.max(1) as f64,
         t0.elapsed().as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
+/// Compare two `vsa-metrics-v1` snapshots and gate on regressions:
+/// `vsa metrics-diff baseline.json current.json [--max-regress PCT]`.
+/// Exits nonzero when any shared key moved in its worse direction by
+/// more than PCT percent (default: report-only, never gate).
+fn cmd_metrics_diff(args: &Args) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        args.positional.len() == 2,
+        "usage: vsa metrics-diff <a.json> <b.json> [--max-regress PCT]"
+    );
+    let max_regress = args.get_f64("max-regress", f64::INFINITY)?;
+    let read = |path: &str| -> anyhow::Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+    };
+    let a = read(&args.positional[0])?;
+    let b = read(&args.positional[1])?;
+    let report = diff_snapshots(&a, &b, max_regress).map_err(|e| anyhow::anyhow!(e))?;
+    print!("{}", report.render());
+    anyhow::ensure!(
+        !report.has_regressions(),
+        "{} key(s) regressed beyond {max_regress}%: {}",
+        report.regressions.len(),
+        report.regressions.join(", ")
     );
     Ok(())
 }

@@ -1,0 +1,217 @@
+//! `vsa-metrics-v1` snapshot comparison (PR8): per-key deltas and a
+//! regression gate for CI.
+//!
+//! [`diff_snapshots`] flattens two registry snapshots (counters,
+//! gauges, and every exported sketch column) into one sorted key
+//! space, reports the delta for every key present in both, and flags
+//! regressions past a relative threshold.  Most metrics are
+//! lower-is-better (latencies, failure counts); a small suffix list
+//! marks the higher-is-better ones (throughput, completions).  Keys
+//! present on only one side are listed informationally but never gate
+//! — adding a metric must not break CI.
+
+use std::collections::BTreeMap;
+
+use crate::config::json::Json;
+
+/// Sketch columns exported by `Snapshot::to_json`, flattened as
+/// `sketches.<name>.<column>`.
+const SKETCH_COLS: [&str; 7] =
+    ["count", "mean_ms", "p50_ms", "p95_ms", "p99_ms", "p999_ms", "max_ms"];
+
+/// Key suffixes where a *decrease* is the regression.
+const HIGHER_IS_BETTER: [&str; 6] =
+    ["throughput_rps", "completed", "alive_workers", "gops", "utilization", "accuracy"];
+
+/// One compared key.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    pub key: String,
+    pub a: f64,
+    pub b: f64,
+    /// Relative change in the *worse* direction (0 when b improved).
+    pub regress_frac: f64,
+}
+
+/// Full comparison result.
+#[derive(Debug, Default)]
+pub struct DiffReport {
+    pub deltas: Vec<Delta>,
+    pub only_a: Vec<String>,
+    pub only_b: Vec<String>,
+    /// Keys whose `regress_frac` exceeded the threshold.
+    pub regressions: Vec<String>,
+}
+
+impl DiffReport {
+    pub fn has_regressions(&self) -> bool {
+        !self.regressions.is_empty()
+    }
+
+    /// Human-readable table, one key per line, regressions marked.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let width = self.deltas.iter().map(|d| d.key.len()).max().unwrap_or(0);
+        for d in &self.deltas {
+            let rel = if d.a.abs() > 1e-9 { (d.b - d.a) / d.a.abs() * 100.0 } else { 0.0 };
+            let mark = if self.regressions.contains(&d.key) { "  REGRESSION" } else { "" };
+            out.push_str(&format!(
+                "{:width$}  {:>14.4} -> {:>14.4}  ({:+.1}%){mark}\n",
+                d.key, d.a, d.b, rel
+            ));
+        }
+        for k in &self.only_a {
+            out.push_str(&format!("{k:width$}  only in A\n"));
+        }
+        for k in &self.only_b {
+            out.push_str(&format!("{k:width$}  only in B\n"));
+        }
+        out
+    }
+}
+
+/// Flatten a snapshot into `counters.* / gauges.* / sketches.*.*`.
+fn flatten(doc: &Json) -> Result<BTreeMap<String, f64>, String> {
+    let schema = doc.get("schema").and_then(Json::as_str);
+    if schema != Some(crate::telemetry::SCHEMA) {
+        return Err(format!(
+            "expected schema {:?}, got {:?}",
+            crate::telemetry::SCHEMA,
+            schema
+        ));
+    }
+    let mut flat = BTreeMap::new();
+    for section in ["counters", "gauges"] {
+        if let Some(Json::Obj(map)) = doc.get(section) {
+            for (k, v) in map {
+                let n = v.as_f64().ok_or_else(|| format!("{section}.{k}: not a number"))?;
+                flat.insert(format!("{section}.{k}"), n);
+            }
+        }
+    }
+    if let Some(Json::Obj(map)) = doc.get("sketches") {
+        for (k, sk) in map {
+            for col in SKETCH_COLS {
+                if let Some(n) = sk.get(col).and_then(Json::as_f64) {
+                    flat.insert(format!("sketches.{k}.{col}"), n);
+                }
+            }
+        }
+    }
+    Ok(flat)
+}
+
+/// Compare two parsed `vsa-metrics-v1` documents.  `max_regress_pct`
+/// is the allowed worse-direction relative change in percent
+/// (`f64::INFINITY` = report-only, never gate).
+pub fn diff_snapshots(a: &Json, b: &Json, max_regress_pct: f64) -> Result<DiffReport, String> {
+    let fa = flatten(a)?;
+    let fb = flatten(b)?;
+    let mut report = DiffReport::default();
+    for (key, &va) in &fa {
+        let Some(&vb) = fb.get(key) else {
+            report.only_a.push(key.clone());
+            continue;
+        };
+        // Worse direction: up for most metrics, down for the
+        // higher-is-better suffixes.
+        let higher_better = HIGHER_IS_BETTER.iter().any(|s| key.ends_with(s));
+        let worse = if higher_better { va - vb } else { vb - va };
+        let regress_frac = if va.abs() < 1e-9 && vb.abs() < 1e-9 {
+            0.0 // both effectively zero: no signal either way
+        } else {
+            (worse / va.abs().max(1e-9)).max(0.0)
+        };
+        if regress_frac * 100.0 > max_regress_pct {
+            report.regressions.push(key.clone());
+        }
+        report.deltas.push(Delta { key: key.clone(), a: va, b: vb, regress_frac });
+    }
+    for key in fb.keys() {
+        if !fa.contains_key(key) {
+            report.only_b.push(key.clone());
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Registry;
+    use std::time::Duration;
+
+    fn snapshot_json(completed: u64, fail: u64, lat_ms: u64, rps: f64) -> Json {
+        let reg = Registry::new();
+        reg.counter("serve.completed").add(completed);
+        reg.counter("serve.failed").add(fail);
+        reg.gauge("serve.throughput_rps").set(rps);
+        reg.sketch("serve.latency").record(Duration::from_millis(lat_ms));
+        Json::parse(&reg.snapshot().to_json()).expect("snapshot parses")
+    }
+
+    #[test]
+    fn identical_snapshots_never_regress() {
+        let a = snapshot_json(100, 0, 5, 800.0);
+        let b = snapshot_json(100, 0, 5, 800.0);
+        let r = diff_snapshots(&a, &b, 0.0).unwrap();
+        assert!(!r.has_regressions(), "{:?}", r.regressions);
+        assert!(r.only_a.is_empty() && r.only_b.is_empty());
+        assert!(!r.deltas.is_empty());
+    }
+
+    #[test]
+    fn latency_increase_and_throughput_drop_both_gate() {
+        let a = snapshot_json(100, 0, 5, 800.0);
+        let slow = snapshot_json(100, 0, 20, 800.0);
+        let r = diff_snapshots(&a, &slow, 50.0).unwrap();
+        assert!(r.regressions.iter().any(|k| k.starts_with("sketches.serve.latency")));
+
+        let choked = snapshot_json(100, 0, 5, 100.0);
+        let r = diff_snapshots(&a, &choked, 50.0).unwrap();
+        assert_eq!(r.regressions, vec!["gauges.serve.throughput_rps".to_string()]);
+
+        // Improvements in the same columns never gate.
+        let fast = snapshot_json(100, 0, 1, 2000.0);
+        let r = diff_snapshots(&a, &fast, 0.0).unwrap();
+        assert!(!r.has_regressions(), "{:?}", r.regressions);
+    }
+
+    #[test]
+    fn zero_to_nonzero_failure_is_a_regression_at_any_threshold() {
+        let clean = snapshot_json(100, 0, 5, 800.0);
+        let broken = snapshot_json(100, 3, 5, 800.0);
+        // 0 -> 3 failures: relative change is huge, so even a very
+        // generous percentage threshold trips.
+        let r = diff_snapshots(&clean, &broken, 1000.0).unwrap();
+        assert_eq!(r.regressions, vec!["counters.serve.failed".to_string()]);
+    }
+
+    #[test]
+    fn one_sided_keys_inform_but_never_gate() {
+        let a = snapshot_json(100, 0, 5, 800.0);
+        let reg = Registry::new();
+        reg.counter("serve.completed").add(100);
+        reg.counter("serve.new_metric").add(7);
+        let b = Json::parse(&reg.snapshot().to_json()).unwrap();
+        let r = diff_snapshots(&a, &b, 0.0).unwrap();
+        assert!(r.only_a.iter().any(|k| k.contains("latency")));
+        assert_eq!(r.only_b, vec!["counters.serve.new_metric".to_string()]);
+        assert!(!r.regressions.iter().any(|k| k.contains("new_metric")));
+    }
+
+    #[test]
+    fn schema_mismatch_is_an_error() {
+        let bogus = Json::parse(r#"{"schema":"nope","counters":{}}"#).unwrap();
+        let a = snapshot_json(1, 0, 1, 1.0);
+        assert!(diff_snapshots(&a, &bogus, 0.0).is_err());
+    }
+
+    #[test]
+    fn render_mentions_regressions() {
+        let a = snapshot_json(100, 0, 5, 800.0);
+        let b = snapshot_json(100, 5, 5, 800.0);
+        let r = diff_snapshots(&a, &b, 10.0).unwrap();
+        assert!(r.render().contains("REGRESSION"));
+    }
+}

@@ -16,11 +16,24 @@
 //!   the serve path (`vsa serve --stats-interval`), the chip simulator
 //!   (DRAM/SRAM/spike counters) and the trainer (per-epoch phase
 //!   timings), exported as sorted text or `vsa-metrics-v1` JSON.
+//!
+//! PR8 adds two more:
+//!
+//! * [`spans`] — `SpanCollector` / `SpanRecorder` / `SpanSheet`:
+//!   hierarchical span tracing with per-thread ring buffers and
+//!   deterministic Chrome trace-event export (`vsa-trace-v1`,
+//!   `--trace-out` on serve / train / simulate).
+//! * [`diff`] — `vsa metrics-diff`: per-key snapshot comparison with a
+//!   relative regression gate for CI.
 
+pub mod diff;
 pub mod registry;
 pub mod sketch;
+pub mod spans;
 pub mod trace;
 
+pub use diff::{diff_snapshots, DiffReport};
 pub use registry::{Counter, Gauge, Registry, Snapshot, SCHEMA};
 pub use sketch::{AtomicSketch, HistogramSketch, LatencySummary, BUCKETS, REL_ERROR, SUB};
+pub use spans::{SpanCollector, SpanRecord, SpanRecorder, SpanSheet, TRACE_SCHEMA};
 pub use trace::{Stage, Trace};

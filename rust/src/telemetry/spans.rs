@@ -1,0 +1,607 @@
+//! Hierarchical span tracing (PR8): per-thread ring buffers with a
+//! deterministic flush order and Chrome trace-event JSON export.
+//!
+//! Aggregates (PR7's sketches and counters) answer "how much"; spans
+//! answer "where did it go".  A [`SpanCollector`] hands out one
+//! [`SpanRecorder`] per thread; each recorder owns its ring buffer
+//! outright, so recording is plain memory writes — no locks, no
+//! atomics, no allocation beyond the ring itself (the hot-path cost is
+//! one `Instant` read and a slot write).  Rings keep the latest
+//! `capacity` records and count what they overwrote.  On flush (or
+//! recorder drop) the ring moves into the collector under a mutex once
+//! per thread; [`SpanCollector::sheet`] then orders lanes by their
+//! caller-assigned lane id, so the exported byte stream is identical
+//! at any thread count or join order.
+//!
+//! The export is the Chrome trace-event format (`vsa-trace-v1`): load
+//! it in Perfetto (<https://ui.perfetto.dev>) or `chrome://tracing`.
+//! Span `pid`s name coarse tracks-groups (see [`pids`]), `tid`s name
+//! tracks within them; see README §OBSERVABILITY.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::json::{self, Json};
+
+/// Schema tag written into `otherData.schema` of every export.
+pub const TRACE_SCHEMA: &str = "vsa-trace-v1";
+
+/// Well-known process ids — Perfetto groups tracks by pid, so each
+/// instrumented subsystem gets one.
+pub mod pids {
+    /// Coordinator worker threads (tid = worker index).
+    pub const SERVE_WORKERS: u32 = 0;
+    /// Per-request span trees (tid = request id).
+    pub const SERVE_REQUESTS: u32 = 1;
+    /// Trainer step/phase spans.
+    pub const TRAIN: u32 = 2;
+    /// Chip-simulator cycle timeline (layers, PE groups, DRAM).
+    pub const CHIP: u32 = 3;
+}
+
+/// What a [`SpanRecord`] renders as.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// A complete span (`ph: "X"`): `ts_ns` .. `ts_ns + dur_ns`.
+    Span,
+    /// A point event (`ph: "i"`): `dur_ns` is ignored.
+    Instant,
+    /// A counter sample (`ph: "C"`): `args` holds the series values.
+    Counter,
+}
+
+/// One recorded event.  Timestamps are nanoseconds since the
+/// collector's epoch (or any caller-chosen zero for synthetic sheets).
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    pub kind: SpanKind,
+    pub pid: u32,
+    pub tid: u64,
+    pub name: String,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    /// Numeric key/values exported under `args`.
+    pub args: Vec<(&'static str, f64)>,
+    /// Free-form annotation exported as `args.what`.
+    pub note: Option<String>,
+}
+
+/// Fixed-capacity keep-latest ring.  Chronological order is restored
+/// on drain; `seq` counts every push so drops are exact.
+struct Ring {
+    slots: Vec<SpanRecord>,
+    cap: usize,
+    head: usize,
+    seq: u64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { slots: Vec::new(), cap: cap.max(1), head: 0, seq: 0 }
+    }
+
+    fn push(&mut self, r: SpanRecord) {
+        self.seq += 1;
+        if self.slots.len() < self.cap {
+            self.slots.push(r);
+        } else {
+            self.slots[self.head] = r;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Records overwritten since the last drain.
+    fn dropped(&self) -> u64 {
+        self.seq - self.slots.len() as u64
+    }
+
+    /// Take all records in chronological order and reset.
+    fn drain(&mut self) -> Vec<SpanRecord> {
+        let head = self.head;
+        let mut v = std::mem::take(&mut self.slots);
+        v.rotate_left(head);
+        self.head = 0;
+        self.seq = 0;
+        v
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Flushed lanes: (lane id, records, dropped count).
+    lanes: Vec<(u32, Vec<SpanRecord>, u64)>,
+    track_names: BTreeMap<(u32, u64), String>,
+    process_names: BTreeMap<u32, String>,
+}
+
+/// Shared sink for every thread's recorder.  Cheap to clone via `Arc`;
+/// the mutex is taken only on flush, naming, and [`sheet`].
+///
+/// [`sheet`]: SpanCollector::sheet
+pub struct SpanCollector {
+    epoch: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl SpanCollector {
+    pub fn new() -> Arc<SpanCollector> {
+        Arc::new(SpanCollector { epoch: Instant::now(), inner: Mutex::new(Inner::default()) })
+    }
+
+    /// Nanoseconds since the collector was created.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Map an `Instant` onto the collector's clock (pre-epoch → 0).
+    pub fn ns_of(&self, t: Instant) -> u64 {
+        match t.checked_duration_since(self.epoch) {
+            Some(d) => d.as_nanos() as u64,
+            None => 0,
+        }
+    }
+
+    /// Hand out a recorder.  `lane` fixes this recorder's position in
+    /// the flush order (use the worker index); `pid`/`tid` are the
+    /// default track for the stack API ([`SpanRecorder::begin`]).
+    pub fn recorder(self: &Arc<Self>, lane: u32, pid: u32, tid: u64, cap: usize) -> SpanRecorder {
+        SpanRecorder {
+            lane,
+            pid,
+            tid,
+            collector: Arc::clone(self),
+            ring: Ring::new(cap),
+            stack: Vec::new(),
+        }
+    }
+
+    /// Label a pid in the trace UI.
+    pub fn name_process(&self, pid: u32, name: &str) {
+        self.inner.lock().unwrap().process_names.insert(pid, name.to_string());
+    }
+
+    /// Label a (pid, tid) track in the trace UI.
+    pub fn name_track(&self, pid: u32, tid: u64, name: &str) {
+        self.inner.lock().unwrap().track_names.insert((pid, tid), name.to_string());
+    }
+
+    /// Collect every flushed lane into one sheet, ordered by lane id
+    /// (stable for ties), so export bytes don't depend on thread join
+    /// order.  Lanes flushed after this call go into the next sheet.
+    pub fn sheet(&self) -> SpanSheet {
+        let mut inner = self.inner.lock().unwrap();
+        let mut lanes = std::mem::take(&mut inner.lanes);
+        lanes.sort_by_key(|(lane, _, _)| *lane);
+        let mut sheet = SpanSheet::new();
+        sheet.track_names = inner.track_names.clone();
+        sheet.process_names = inner.process_names.clone();
+        for (_, records, dropped) in lanes {
+            sheet.dropped += dropped;
+            sheet.records.extend(records);
+        }
+        sheet
+    }
+}
+
+/// Per-thread recorder.  NOT `Sync` — each thread owns exactly one, so
+/// recording needs no synchronization at all.  Flushes its ring into
+/// the collector on [`flush`] and on drop.
+///
+/// [`flush`]: SpanRecorder::flush
+pub struct SpanRecorder {
+    lane: u32,
+    pid: u32,
+    tid: u64,
+    collector: Arc<SpanCollector>,
+    ring: Ring,
+    /// Open spans for the stack API: (name, start ns).
+    stack: Vec<(String, u64)>,
+}
+
+impl SpanRecorder {
+    /// Nanoseconds since the collector's epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.collector.now_ns()
+    }
+
+    /// Map an `Instant` onto the collector's clock.
+    pub fn ns_of(&self, t: Instant) -> u64 {
+        self.collector.ns_of(t)
+    }
+
+    /// Open a span on this recorder's own track, timed now.
+    pub fn begin(&mut self, name: &str) {
+        self.stack.push((name.to_string(), self.now_ns()));
+    }
+
+    /// Close the innermost open span, timed now.
+    pub fn end(&mut self) {
+        self.end_with(&[]);
+    }
+
+    /// Close the innermost open span with `args` attached.
+    pub fn end_with(&mut self, args: &[(&'static str, f64)]) {
+        if let Some((name, start)) = self.stack.pop() {
+            let now = self.now_ns();
+            self.ring.push(SpanRecord {
+                kind: SpanKind::Span,
+                pid: self.pid,
+                tid: self.tid,
+                name,
+                ts_ns: start,
+                dur_ns: now.saturating_sub(start),
+                args: args.to_vec(),
+                note: None,
+            });
+        }
+    }
+
+    /// Record a complete span on an explicit track with explicit
+    /// timestamps (for reconstructing trees from measurements taken
+    /// elsewhere, e.g. the coordinator's per-request accounting).
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_at(
+        &mut self,
+        pid: u32,
+        tid: u64,
+        name: &str,
+        ts_ns: u64,
+        dur_ns: u64,
+        args: &[(&'static str, f64)],
+        note: Option<&str>,
+    ) {
+        self.ring.push(SpanRecord {
+            kind: SpanKind::Span,
+            pid,
+            tid,
+            name: name.to_string(),
+            ts_ns,
+            dur_ns,
+            args: args.to_vec(),
+            note: note.map(str::to_string),
+        });
+    }
+
+    /// Record a point event.
+    pub fn instant(
+        &mut self,
+        pid: u32,
+        tid: u64,
+        name: &str,
+        ts_ns: u64,
+        args: &[(&'static str, f64)],
+        note: Option<&str>,
+    ) {
+        self.ring.push(SpanRecord {
+            kind: SpanKind::Instant,
+            pid,
+            tid,
+            name: name.to_string(),
+            ts_ns,
+            dur_ns: 0,
+            args: args.to_vec(),
+            note: note.map(str::to_string),
+        });
+    }
+
+    /// Record a counter sample (one series named `value`).
+    pub fn counter(&mut self, pid: u32, tid: u64, name: &str, ts_ns: u64, value: f64) {
+        self.ring.push(SpanRecord {
+            kind: SpanKind::Counter,
+            pid,
+            tid,
+            name: name.to_string(),
+            ts_ns,
+            dur_ns: 0,
+            args: vec![("value", value)],
+            note: None,
+        });
+    }
+
+    /// Move the ring's contents into the collector.  Called
+    /// automatically on drop; safe to call repeatedly.
+    pub fn flush(&mut self) {
+        let dropped = self.ring.dropped();
+        let records = self.ring.drain();
+        if records.is_empty() && dropped == 0 {
+            return;
+        }
+        self.collector.inner.lock().unwrap().lanes.push((self.lane, records, dropped));
+    }
+}
+
+impl Drop for SpanRecorder {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// A finished, ordered set of records plus track metadata — the unit
+/// of export.  Built by [`SpanCollector::sheet`] or assembled directly
+/// (the chip timeline synthesizes one from cycle stamps).
+#[derive(Default)]
+pub struct SpanSheet {
+    records: Vec<SpanRecord>,
+    /// Records lost to ring overwrites (exported in `otherData`).
+    pub dropped: u64,
+    track_names: BTreeMap<(u32, u64), String>,
+    process_names: BTreeMap<u32, String>,
+}
+
+impl SpanSheet {
+    pub fn new() -> SpanSheet {
+        SpanSheet::default()
+    }
+
+    pub fn push(&mut self, r: SpanRecord) {
+        self.records.push(r);
+    }
+
+    pub fn name_process(&mut self, pid: u32, name: &str) {
+        self.process_names.insert(pid, name.to_string());
+    }
+
+    pub fn name_track(&mut self, pid: u32, tid: u64, name: &str) {
+        self.track_names.insert((pid, tid), name.to_string());
+    }
+
+    pub fn records(&self) -> &[SpanRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Serialize as Chrome trace-event JSON (`vsa-trace-v1`).
+    ///
+    /// Metadata events (process/thread names, sorted) come first, then
+    /// every record in sheet order.  Timestamps are microseconds
+    /// (fractional — Chrome's native unit).  Output is byte-identical
+    /// for identical sheets: key order comes from `BTreeMap`, number
+    /// formatting from the shared [`json`] writer.
+    pub fn to_chrome_json(&self) -> String {
+        let mut events = Vec::new();
+        for (pid, name) in &self.process_names {
+            events.push(meta_event(*pid, 0, "process_name", name));
+        }
+        for ((pid, tid), name) in &self.track_names {
+            events.push(meta_event(*pid, *tid, "thread_name", name));
+        }
+        for r in &self.records {
+            let mut e = BTreeMap::new();
+            e.insert("pid".to_string(), Json::Num(r.pid as f64));
+            e.insert("tid".to_string(), Json::Num(r.tid as f64));
+            e.insert("name".to_string(), Json::Str(r.name.clone()));
+            e.insert("cat".to_string(), Json::Str("vsa".to_string()));
+            e.insert("ts".to_string(), Json::Num(r.ts_ns as f64 / 1000.0));
+            let ph = match r.kind {
+                SpanKind::Span => {
+                    e.insert("dur".to_string(), Json::Num(r.dur_ns as f64 / 1000.0));
+                    "X"
+                }
+                SpanKind::Instant => {
+                    // scope "t": thread-scoped tick mark.
+                    e.insert("s".to_string(), Json::Str("t".to_string()));
+                    "i"
+                }
+                SpanKind::Counter => "C",
+            };
+            e.insert("ph".to_string(), Json::Str(ph.to_string()));
+            if !r.args.is_empty() || r.note.is_some() {
+                let mut args = BTreeMap::new();
+                for (k, v) in &r.args {
+                    args.insert(k.to_string(), Json::Num(*v));
+                }
+                if let Some(note) = &r.note {
+                    args.insert("what".to_string(), Json::Str(note.clone()));
+                }
+                e.insert("args".to_string(), Json::Obj(args));
+            }
+            events.push(Json::Obj(e));
+        }
+
+        let mut other = BTreeMap::new();
+        other.insert("schema".to_string(), Json::Str(TRACE_SCHEMA.to_string()));
+        other.insert("dropped".to_string(), Json::Num(self.dropped as f64));
+        let mut doc = BTreeMap::new();
+        doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        doc.insert("otherData".to_string(), Json::Obj(other));
+        doc.insert("traceEvents".to_string(), Json::Arr(events));
+        json::to_string(&Json::Obj(doc))
+    }
+
+    /// Verify the structural invariant behind the export: on every
+    /// (pid, tid) track, spans either nest (child fully inside parent)
+    /// or are disjoint — no partial overlap.  Returns the first
+    /// violation found.
+    pub fn check_nesting(&self) -> Result<(), String> {
+        let mut tracks: BTreeMap<(u32, u64), Vec<(u64, u64, &str)>> = BTreeMap::new();
+        for r in &self.records {
+            if r.kind == SpanKind::Span {
+                let end = r.ts_ns.saturating_add(r.dur_ns);
+                tracks.entry((r.pid, r.tid)).or_default().push((r.ts_ns, end, &r.name));
+            }
+        }
+        for ((pid, tid), mut spans) in tracks {
+            // Parent-before-child order: by start, widest first on ties.
+            spans.sort_by_key(|&(ts, end, _)| (ts, std::cmp::Reverse(end)));
+            let mut open: Vec<(u64, &str)> = Vec::new();
+            for (ts, end, name) in spans {
+                while let Some(&(top_end, _)) = open.last() {
+                    if top_end <= ts {
+                        open.pop();
+                    } else {
+                        break;
+                    }
+                }
+                if let Some(&(top_end, top_name)) = open.last() {
+                    if end > top_end {
+                        return Err(format!(
+                            "track ({pid},{tid}): span '{name}' [{ts},{end}) ends past \
+                             enclosing '{top_name}' [..,{top_end})"
+                        ));
+                    }
+                }
+                open.push((end, name));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn meta_event(pid: u32, tid: u64, kind: &str, name: &str) -> Json {
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::Str(name.to_string()));
+    let mut e = BTreeMap::new();
+    e.insert("ph".to_string(), Json::Str("M".to_string()));
+    e.insert("pid".to_string(), Json::Num(pid as f64));
+    e.insert("tid".to_string(), Json::Num(tid as f64));
+    e.insert("name".to_string(), Json::Str(kind.to_string()));
+    e.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(ts: u64, dur: u64, name: &str) -> SpanRecord {
+        SpanRecord {
+            kind: SpanKind::Span,
+            pid: 0,
+            tid: 0,
+            name: name.to_string(),
+            ts_ns: ts,
+            dur_ns: dur,
+            args: Vec::new(),
+            note: None,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_latest_and_counts_drops() {
+        let mut ring = Ring::new(4);
+        for i in 0..10u64 {
+            ring.push(rec(i, 1, "r"));
+        }
+        assert_eq!(ring.dropped(), 6);
+        let drained = ring.drain();
+        let ts: Vec<u64> = drained.iter().map(|r| r.ts_ns).collect();
+        assert_eq!(ts, vec![6, 7, 8, 9], "chronological, latest kept");
+        assert_eq!(ring.dropped(), 0, "drain resets the drop count");
+    }
+
+    #[test]
+    fn stack_api_nests_and_flushes_on_drop() {
+        let col = SpanCollector::new();
+        {
+            let mut r = col.recorder(0, 7, 1, 64);
+            r.begin("outer");
+            r.begin("inner");
+            r.end();
+            r.end_with(&[("n", 2.0)]);
+        } // drop flushes
+        let sheet = col.sheet();
+        assert_eq!(sheet.len(), 2);
+        // Ring order is end order: inner closed first.
+        assert_eq!(sheet.records()[0].name, "inner");
+        assert_eq!(sheet.records()[1].name, "outer");
+        let inner = &sheet.records()[0];
+        let outer = &sheet.records()[1];
+        assert!(outer.ts_ns <= inner.ts_ns);
+        assert!(inner.ts_ns + inner.dur_ns <= outer.ts_ns + outer.dur_ns);
+        sheet.check_nesting().expect("proper nesting");
+    }
+
+    #[test]
+    fn nesting_check_rejects_partial_overlap() {
+        let mut sheet = SpanSheet::new();
+        sheet.push(rec(0, 100, "a"));
+        sheet.push(rec(50, 100, "b")); // ends at 150 > a's 100
+        assert!(sheet.check_nesting().is_err());
+
+        let mut ok = SpanSheet::new();
+        ok.push(rec(0, 100, "a"));
+        ok.push(rec(50, 50, "b")); // ends exactly with a: contained
+        ok.push(rec(100, 20, "c")); // disjoint
+        ok.check_nesting().expect("containment and disjoint both fine");
+    }
+
+    #[test]
+    fn chrome_export_parses_and_carries_schema() {
+        let mut sheet = SpanSheet::new();
+        sheet.name_process(3, "chip");
+        sheet.name_track(3, 0, "layers");
+        sheet.push(rec(1000, 500, "L0"));
+        sheet.push(SpanRecord {
+            kind: SpanKind::Counter,
+            pid: 3,
+            tid: 50,
+            name: "dram".to_string(),
+            ts_ns: 1000,
+            dur_ns: 0,
+            args: vec![("value", 2.5)],
+            note: None,
+        });
+        sheet.push(SpanRecord {
+            kind: SpanKind::Instant,
+            pid: 3,
+            tid: 50,
+            name: "xfer".to_string(),
+            ts_ns: 1200,
+            dur_ns: 0,
+            args: vec![("bytes", 784.0)],
+            note: Some("image".to_string()),
+        });
+        let text = sheet.to_chrome_json();
+        let doc = Json::parse(&text).expect("valid JSON");
+        let schema = doc.get("otherData").and_then(|o| o.get("schema"));
+        assert_eq!(schema.and_then(Json::as_str), Some(TRACE_SCHEMA));
+        let events = doc.get("traceEvents").and_then(Json::as_arr).expect("events");
+        // 2 metadata + 3 records.
+        assert_eq!(events.len(), 5);
+        assert_eq!(events[0].get("ph").and_then(Json::as_str), Some("M"));
+        let span = &events[2];
+        assert_eq!(span.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(span.get("ts").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(span.get("dur").and_then(Json::as_f64), Some(0.5));
+        let inst = &events[4];
+        let what = inst.get("args").and_then(|a| a.get("what"));
+        assert_eq!(what.and_then(Json::as_str), Some("image"));
+    }
+
+    #[test]
+    fn flush_order_is_lane_order_not_flush_order() {
+        let col = SpanCollector::new();
+        let mut late = col.recorder(1, 0, 1, 8);
+        let mut early = col.recorder(0, 0, 0, 8);
+        late.span_at(0, 1, "lane1", 10, 5, &[], None);
+        early.span_at(0, 0, "lane0", 20, 5, &[], None);
+        late.flush(); // lane 1 flushes first...
+        early.flush();
+        let sheet = col.sheet();
+        // ...but lane 0 still exports first.
+        assert_eq!(sheet.records()[0].name, "lane0");
+        assert_eq!(sheet.records()[1].name, "lane1");
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let build = || {
+            let col = SpanCollector::new();
+            col.name_process(0, "p");
+            let mut r = col.recorder(0, 0, 0, 8);
+            r.span_at(0, 0, "a", 100, 50, &[("k", 1.5)], Some("note"));
+            r.counter(0, 9, "c", 120, 3.0);
+            drop(r);
+            col.sheet().to_chrome_json()
+        };
+        assert_eq!(build(), build());
+    }
+}

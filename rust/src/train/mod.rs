@@ -43,8 +43,14 @@ use crate::config::models::{self, ModelSpec};
 use crate::data::{idx, synth, Sample};
 use crate::snn::params::DeployedModel;
 use crate::snn::{Network, Scratch};
+use crate::telemetry::spans::{pids, SpanCollector};
 use crate::telemetry::Registry;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Span-ring capacity for the trainer recorder (~6 records per step;
+/// overflow keeps the latest and is counted in the export).
+const TRAIN_RING_CAP: usize = 1 << 16;
 
 /// Training data source.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -186,6 +192,17 @@ pub fn count_correct(logits: &[f32], classes: usize, labels: &[usize]) -> usize 
 
 /// Resolve the spec and run STBP training to completion.
 pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
+    train_traced(cfg, None)
+}
+
+/// [`train`] with span tracing (PR8): when a [`SpanCollector`] is
+/// attached, every step leaves an `epoch → step → load/forward/
+/// backward/optim` span tree on the trainer track, built from the very
+/// same `Instant` stamps as [`PhaseTimes`] — the two views agree.
+pub fn train_traced(
+    cfg: &TrainConfig,
+    spans: Option<&Arc<SpanCollector>>,
+) -> anyhow::Result<TrainOutcome> {
     let spec = models::by_name(&cfg.model, cfg.num_steps).ok_or_else(|| {
         anyhow::anyhow!("unknown model '{}' (tiny|mnist|cifar10|micro)", cfg.model)
     })?;
@@ -238,6 +255,13 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
     // Clear residue another in-process run may have left in the global
     // reduce counter (observational attribution only).
     par::take_reduce_ns();
+    let mut rec = spans.map(|sp| {
+        sp.name_process(pids::TRAIN, "train");
+        sp.name_track(pids::TRAIN, 0, "steps");
+        sp.recorder(0, pids::TRAIN, 0, TRAIN_RING_CAP)
+    });
+    // Start of the current epoch's first step on the collector clock.
+    let mut epoch_start: Option<u64> = None;
 
     for step in 0..total_steps {
         let t0 = Instant::now();
@@ -282,6 +306,29 @@ pub fn train(cfg: &TrainConfig) -> anyhow::Result<TrainOutcome> {
         };
         phases.add(&step_phases);
         epoch_phases.add(&step_phases);
+        if let Some(rec) = rec.as_mut() {
+            let (pid, tid) = (pids::TRAIN, 0u64);
+            let s0 = rec.ns_of(t0);
+            let s1 = rec.ns_of(t1);
+            let s2 = rec.ns_of(t2);
+            let s3 = rec.ns_of(t3);
+            let s4 = rec.ns_of(t4);
+            if step % batches_per_epoch == 0 {
+                epoch_start = Some(s0);
+            }
+            let args = [("step", step as f64), ("reduce_ns", reduce.as_nanos() as f64)];
+            rec.span_at(pid, tid, "step", s0, s4.saturating_sub(s0), &args, None);
+            rec.span_at(pid, tid, "load", s0, s1.saturating_sub(s0), &[], None);
+            rec.span_at(pid, tid, "forward", s1, s2.saturating_sub(s1), &[], None);
+            rec.span_at(pid, tid, "backward", s2, s3.saturating_sub(s2), &[], None);
+            rec.span_at(pid, tid, "optim", s3, s4.saturating_sub(s3), &[], None);
+            if (step + 1) % batches_per_epoch == 0 {
+                let e0 = epoch_start.take().unwrap_or(s0);
+                let epoch = (step / batches_per_epoch) as f64;
+                let dur = s4.saturating_sub(e0);
+                rec.span_at(pid, tid, "epoch", e0, dur, &[("epoch", epoch)], None);
+            }
+        }
 
         let correct = count_correct(&fwd.logits, classes, &labels[..count]);
         final_loss = loss;
@@ -405,6 +452,38 @@ mod tests {
         let snap = reg.snapshot();
         assert!(snap.gauges["train.phase.forward_ms"] > 0.0);
         assert!(snap.gauges.contains_key("train.phase.reduce_ms"));
+    }
+
+    /// With a collector attached, training leaves a nested
+    /// epoch/step/phase span tree whose durations reconcile with the
+    /// `PhaseTimes` aggregate (same stamps, ≤ 1 µs rounding per step).
+    #[test]
+    fn train_spans_nest_and_reconcile_with_phases() {
+        let cfg = TrainConfig {
+            model: "micro".into(),
+            num_steps: 2,
+            epochs: 2,
+            batches_per_epoch: 3,
+            batch: 4,
+            log_every: 0,
+            ..TrainConfig::default()
+        };
+        let spans = SpanCollector::new();
+        let out = train_traced(&cfg, Some(&spans)).unwrap();
+        let sheet = spans.sheet();
+        sheet.check_nesting().expect("epoch/step/phase spans nest");
+        let named = |n: &str| sheet.records().iter().filter(|r| r.name == n);
+        assert_eq!(named("step").count(), 6);
+        assert_eq!(named("epoch").count(), 2);
+        for phase in ["load", "forward", "backward", "optim"] {
+            assert_eq!(named(phase).count(), 6, "one {phase} span per step");
+        }
+        let fwd_ns: u64 = named("forward").map(|r| r.dur_ns).sum();
+        let agg_ns = out.phases.forward.as_nanos() as u64;
+        assert!(
+            fwd_ns.abs_diff(agg_ns) <= 6_000,
+            "span forward {fwd_ns} ns vs PhaseTimes {agg_ns} ns"
+        );
     }
 
     /// Hand-built "MNIST" split in micro geometry for load_batch tests.

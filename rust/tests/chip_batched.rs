@@ -51,6 +51,9 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport) {
         assert_eq!(la.cycles, lb.cycles, "layer {i} cycles");
         assert_eq!(la.spikes_emitted, lb.spikes_emitted, "layer {i} spikes_emitted");
         assert_eq!(la.membrane_accesses, lb.membrane_accesses, "layer {i} membrane");
+        assert_eq!(la.pe_ops, lb.pe_ops, "layer {i} pe_ops");
+        assert_eq!(la.dram_bytes, lb.dram_bytes, "layer {i} dram_bytes");
+        assert_eq!(la.sram.total(), lb.sram.total(), "layer {i} sram");
         assert_eq!(
             la.utilization.to_bits(),
             lb.utilization.to_bits(),

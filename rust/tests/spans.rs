@@ -1,0 +1,194 @@
+//! Span-tracing invariants (PR8): nesting, parent containment, serve
+//! reconciliation against the PR7 stage traces, and byte-deterministic
+//! export at any thread count.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use vsa::config::json::Json;
+use vsa::coordinator::{Coordinator, CoordinatorConfig, GoldenEngine};
+use vsa::snn::params::{DeployedModel, Kind, Layer};
+use vsa::snn::Network;
+use vsa::telemetry::spans::pids;
+use vsa::telemetry::{SpanCollector, Stage, TRACE_SCHEMA};
+
+fn net() -> Network {
+    Network::new(DeployedModel {
+        name: "s".into(),
+        num_steps: 2,
+        in_channels: 1,
+        in_size: 4,
+        layers: vec![
+            Layer::Conv {
+                kind: Kind::EncConv,
+                c_out: 2,
+                c_in: 1,
+                k: 1,
+                w: vec![1, -1],
+                bias: vec![0, 0],
+                theta: vec![256 * 10, 256 * 10],
+            },
+            Layer::Readout { n_out: 10, n_in: 32, w: vec![1; 320] },
+        ],
+    })
+}
+
+/// Stack-API spans recorded concurrently from several threads keep
+/// proper per-track nesting, with every child contained in its parent.
+#[test]
+fn concurrent_stack_spans_nest_per_thread() {
+    let col = SpanCollector::new();
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let col = &col;
+            s.spawn(move || {
+                let mut rec = col.recorder(t as u32, 0, t, 64);
+                for _ in 0..5 {
+                    rec.begin("outer");
+                    rec.begin("inner");
+                    std::hint::black_box(0u64);
+                    rec.end();
+                    rec.end();
+                }
+            });
+        }
+    });
+    let sheet = col.sheet();
+    sheet.check_nesting().expect("per-thread nesting holds");
+    assert_eq!(sheet.records().len(), 4 * 5 * 2);
+    for tid in 0..4u64 {
+        let track: Vec<_> = sheet.records().iter().filter(|r| r.tid == tid).collect();
+        assert_eq!(track.len(), 10, "each thread's spans land on its own track");
+        let outers: Vec<_> = track.iter().filter(|r| r.name == "outer").collect();
+        for inner in track.iter().filter(|r| r.name == "inner") {
+            assert!(
+                outers.iter().any(|o| o.ts_ns <= inner.ts_ns
+                    && inner.ts_ns + inner.dur_ns <= o.ts_ns + o.dur_ns),
+                "every inner span sits inside an outer span"
+            );
+        }
+    }
+}
+
+/// The per-request span trees the coordinator emits reconcile with the
+/// request's own `Trace` stage breakdown within 1 ms, and the export
+/// is valid Chrome trace JSON carrying the nested spans.
+#[test]
+fn serve_span_trees_reconcile_with_stage_traces() {
+    const TOL_NS: u64 = 1_000_000; // 1 ms
+    let spans = SpanCollector::new();
+    let coord = Coordinator::start_with_spans(
+        CoordinatorConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            ..CoordinatorConfig::default()
+        },
+        Some(Arc::clone(&spans)),
+        |_| Box::new(GoldenEngine::new(net(), 4)),
+    );
+    let rxs: Vec<_> = (0..24).map(|i| coord.submit(vec![(i * 11) as u8; 16]).unwrap()).collect();
+    let results: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    coord.shutdown();
+
+    let sheet = spans.sheet();
+    sheet.check_nesting().expect("request trees nest");
+    for res in &results {
+        let track: Vec<_> = sheet
+            .records()
+            .iter()
+            .filter(|r| r.pid == pids::SERVE_REQUESTS && r.tid == res.id)
+            .collect();
+        let request = track.iter().find(|r| r.name == "request").expect("request span");
+        let lat_ns = res.latency.as_nanos() as u64;
+        assert!(
+            request.dur_ns.abs_diff(lat_ns) <= TOL_NS,
+            "request {} span {} ns vs latency {lat_ns} ns",
+            res.id,
+            request.dur_ns
+        );
+        for stage in Stage::ALL {
+            let span_ns: u64 =
+                track.iter().filter(|r| r.name == stage.name()).map(|r| r.dur_ns).sum();
+            let trace_ns = res.trace.stage(stage).as_nanos() as u64;
+            assert!(
+                span_ns.abs_diff(trace_ns) <= TOL_NS,
+                "request {} stage {}: spans {span_ns} ns vs trace {trace_ns} ns",
+                res.id,
+                stage.name()
+            );
+            for r in track.iter().filter(|r| r.name == stage.name()) {
+                assert!(r.ts_ns >= request.ts_ns, "child starts inside the request span");
+                assert!(
+                    r.ts_ns + r.dur_ns <= request.ts_ns + request.dur_ns,
+                    "child ends inside the request span"
+                );
+            }
+        }
+    }
+
+    let text = sheet.to_chrome_json();
+    let doc = Json::parse(&text).expect("export parses as JSON");
+    let schema = doc.get("otherData").and_then(|o| o.get("schema")).and_then(Json::as_str);
+    assert_eq!(schema, Some(TRACE_SCHEMA));
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+    let complete = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .count();
+    assert!(complete >= 24 * 4, "nested coordinator spans exported, got {complete}");
+}
+
+/// The exported bytes depend only on what was recorded and its lane
+/// assignment — never on how many threads recorded it or the order
+/// their recorders flushed.
+#[test]
+fn export_bytes_identical_at_1_2_4_threads() {
+    fn export_with_threads(n: usize) -> String {
+        let col = SpanCollector::new();
+        col.name_process(0, "det");
+        std::thread::scope(|s| {
+            for t in 0..n {
+                let col = &col;
+                s.spawn(move || {
+                    // Fixed job → lane mapping; only the job → thread
+                    // mapping varies with n.
+                    for job in (t..8).step_by(n) {
+                        let mut rec = col.recorder(job as u32, 0, job as u64, 64);
+                        for k in 0..3u64 {
+                            let ts = 1_000 * job as u64 + 100 * k;
+                            let name = format!("job{job}-{k}");
+                            rec.span_at(0, job as u64, &name, ts, 50, &[("k", k as f64)], None);
+                        }
+                    }
+                });
+            }
+        });
+        col.sheet().to_chrome_json()
+    }
+    let one = export_with_threads(1);
+    let two = export_with_threads(2);
+    let four = export_with_threads(4);
+    assert_eq!(one, two, "1 vs 2 threads");
+    assert_eq!(two, four, "2 vs 4 threads");
+    assert!(one.contains("job7-2"), "all jobs exported");
+}
+
+/// Ring overflow keeps the latest records and reports an exact drop
+/// count all the way into the export.
+#[test]
+fn overflow_is_counted_in_the_export() {
+    let col = SpanCollector::new();
+    let mut rec = col.recorder(0, 0, 0, 4);
+    for k in 0..10u64 {
+        rec.span_at(0, 0, "s", 100 * k, 10, &[], None);
+    }
+    drop(rec);
+    let sheet = col.sheet();
+    assert_eq!(sheet.records().len(), 4, "ring keeps the latest cap records");
+    assert_eq!(sheet.dropped, 6);
+    assert_eq!(sheet.records()[0].ts_ns, 600, "oldest survivor is record #6");
+    let doc = Json::parse(&sheet.to_chrome_json()).unwrap();
+    let dropped = doc.get("otherData").and_then(|o| o.get("dropped")).and_then(Json::as_i64);
+    assert_eq!(dropped, Some(6));
+}
