@@ -14,10 +14,13 @@
 //! make train && cargo run --release --example e2e_train_deploy
 //! ```
 
+use std::sync::Arc;
 use vsa::arch::{Chip, SimMode};
 use vsa::config::json::Json;
 use vsa::config::HwConfig;
-use vsa::coordinator::{Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine};
+use vsa::coordinator::{
+    Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine, ModelRegistry,
+};
 use vsa::data::synth;
 use vsa::snn::Network;
 use vsa::util::stats::argmax;
@@ -82,16 +85,15 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- 4. serve it ---------------------------------------------------------
-    let coord = Coordinator::start(CoordinatorConfig::default(), move |_| {
-        Box::new(GoldenEngine::new(
-            Network::from_vsaw_file("artifacts/tiny_trained.vsaw").unwrap(),
-            8,
-        )) as Box<dyn InferenceEngine>
+    let (reg, m) = ModelRegistry::single(trained.model.clone());
+    let regc = Arc::clone(&reg);
+    let coord = Coordinator::start(CoordinatorConfig::default(), reg, move |_| {
+        Box::new(GoldenEngine::new(Arc::clone(&regc), 8)) as Box<dyn InferenceEngine>
     });
     let samples = synth::tiny_like(EVAL_SEED, EVAL_START, 64);
     let rxs: Vec<_> = samples
         .iter()
-        .map(|s| coord.submit(s.image.clone()))
+        .map(|s| coord.submit(m, s.image.clone()))
         .collect::<Result<_, _>>()?;
     let correct = rxs
         .into_iter()

@@ -1,5 +1,5 @@
 //! Quickstart: load a deployed model and classify synthetic samples with
-//! the pure-rust golden engine — no python, no PJRT, no simulator.
+//! the pure-rust golden engine — no python, no simulator.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart

@@ -1,76 +1,82 @@
-//! Serving demo: the rust coordinator batches concurrent classification
-//! requests onto PJRT workers running the AOT-compiled JAX/Pallas module.
-//! Python never runs here — the HLO artifact is loaded and executed
-//! natively.  Falls back to the golden engine if artifacts are missing.
+//! Multi-model serving demo: two models deployed in one registry, a
+//! heterogeneous worker pool (golden + chip-sim) draining one queue,
+//! mixed traffic that never shares a batch across models, and per-model
+//! / per-backend telemetry read back from the metrics registry.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_snn
+//! cargo run --release --example serve_snn
 //! ```
 
+use std::sync::Arc;
 use std::time::Instant;
+use vsa::config::{models, HwConfig};
 use vsa::coordinator::{
-    Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine, PjrtEngine,
+    parse_pool, ChipEngine, Coordinator, CoordinatorConfig, EngineKind, GoldenEngine,
+    InferenceEngine, ModelRegistry,
 };
 use vsa::data::synth;
-use vsa::runtime::{Manifest, PjrtExecutor};
-use vsa::snn::Network;
+use vsa::snn::params::DeployedModel;
+use vsa::telemetry::Registry;
 use vsa::util::stats::argmax;
 
 const REQUESTS: usize = 96;
 
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load("artifacts")?;
-    let entry = manifest
-        .find("mnist", 8)
-        .ok_or_else(|| anyhow::anyhow!("mnist artifact missing — run `make artifacts`"))?
-        .clone();
-    let hlo = manifest.hlo_path(&entry);
-    let weights = manifest.weights_path(&entry);
+    // Deploy two models (synthesized weights — no artifacts needed).
+    let mut registry = ModelRegistry::new();
+    let tiny = registry.register("tiny", synthesize("tiny", 11)?)?;
+    let mnist = registry.register("mnist", synthesize("mnist", 12)?)?;
+    let registry = Arc::new(registry);
 
+    // Heterogeneous pool from the same spec grammar `vsa serve --pool`
+    // accepts: two golden workers plus one cycle-accurate chip-sim.
+    let pool = parse_pool("golden:2,chip-sim:1")?;
     let cfg = CoordinatorConfig {
-        workers: 2,
-        max_batch: entry.batch,
+        workers: pool.len(),
+        max_batch: 8,
         queue_depth: 64, // small queue => visible backpressure under load
         ..CoordinatorConfig::default()
     };
     println!(
-        "starting coordinator: {} workers, batch <= {}, queue {}",
+        "starting coordinator: {} workers (golden:2,chip-sim:1), batch <= {}, queue {}",
         cfg.workers, cfg.max_batch, cfg.queue_depth
     );
 
-    let coord = Coordinator::start(cfg, move |w| -> Box<dyn InferenceEngine> {
-        match PjrtExecutor::load(&hlo, entry.batch, entry.in_channels, entry.in_size) {
-            Ok(exe) => {
-                if w == 0 {
-                    println!("worker engines: PJRT ({})", exe.platform());
-                }
-                Box::new(PjrtEngine::new(exe))
+    let reg = Arc::clone(&registry);
+    let mut coord = Coordinator::start(cfg, Arc::clone(&registry), move |w| {
+        let engine: Box<dyn InferenceEngine> = match pool[w] {
+            EngineKind::Golden => Box::new(GoldenEngine::new(Arc::clone(&reg), 8)),
+            EngineKind::ChipSim => {
+                Box::new(ChipEngine::new(HwConfig::default(), Arc::clone(&reg), 8))
             }
-            Err(e) => {
-                eprintln!("worker {w}: PJRT unavailable ({e:#}); using golden engine");
-                let net = Network::from_vsaw_file(&weights).expect("weights");
-                Box::new(GoldenEngine::new(net, entry.batch))
-            }
-        }
+        };
+        engine
     });
 
-    // Fire a burst of concurrent requests (the submission queue applies
-    // backpressure if we outrun the workers).
-    let samples = synth::mnist_like(5, 0, REQUESTS);
+    // Fire a burst of interleaved requests: even indices classify tiny
+    // images, odd indices mnist images.  The batcher partitions by
+    // model, so the two streams never share a batch.
+    let tiny_samples = synth::tiny_like(5, 0, REQUESTS / 2);
+    let mnist_samples = synth::mnist_like(5, 0, REQUESTS - REQUESTS / 2);
     let t0 = Instant::now();
-    let rxs: Vec<_> = samples
-        .iter()
-        .map(|s| coord.submit(s.image.clone()))
-        .collect::<Result<_, _>>()?;
+    let mut rxs = Vec::with_capacity(REQUESTS);
+    for i in 0..REQUESTS {
+        let (model, s) = if i % 2 == 0 {
+            (tiny, &tiny_samples[i / 2])
+        } else {
+            (mnist, &mnist_samples[i / 2])
+        };
+        rxs.push((s.label, coord.submit(model, s.image.clone())?));
+    }
 
-    // Since PR6 every request resolves to a typed outcome: Ok(result) or
-    // a ServeError (shed, engine failure after retries, panic).
+    // Every request resolves to a typed outcome: Ok(result) or a
+    // ServeError (shed, engine failure after retries, panic).
     let mut correct = 0usize;
     let mut not_served = 0usize;
-    for (rx, s) in rxs.into_iter().zip(&samples) {
+    for (label, rx) in rxs {
         match rx.recv()? {
             Ok(res) => {
-                if argmax(&res.logits) == s.label {
+                if argmax(&res.logits) == label {
                     correct += 1;
                 }
             }
@@ -81,11 +87,18 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let wall = t0.elapsed();
+
+    // Quiesce, then read the per-model / per-backend / cache telemetry.
+    coord.drain();
+    let treg = Registry::new();
+    coord.export_into(&treg, "serve");
+    let snap = treg.snapshot();
+    let cache = coord.cache_totals();
     let stats = coord.shutdown();
 
     println!("\nserved {REQUESTS} requests in {:.1} ms", wall.as_secs_f64() * 1e3);
     println!("  throughput   {:.1} req/s", REQUESTS as f64 / wall.as_secs_f64());
-    println!("  mean batch   {:.2} (of {} max)", stats.mean_batch, entry.batch);
+    println!("  mean batch   {:.2} (of 8 max)", stats.mean_batch);
     println!(
         "  latency ms   p50 {:.2} / p95 {:.2} / p99 {:.2}",
         stats.latency_ms_p50, stats.latency_ms_p95, stats.latency_ms_p99
@@ -94,9 +107,27 @@ fn main() -> anyhow::Result<()> {
         "  outcomes     completed {} / failed {} / shed {}",
         stats.completed, stats.failed, stats.shed
     );
+    for name in ["tiny", "mnist"] {
+        let done = snap.counters.get(&format!("serve.model.{name}.completed")).unwrap_or(&0);
+        println!("  model {name:<6} completed {done}");
+    }
+    for backend in ["golden", "chip-sim"] {
+        let done = snap.counters.get(&format!("serve.backend.{backend}.completed")).unwrap_or(&0);
+        let n = snap.counters.get(&format!("serve.backend.{backend}.workers")).unwrap_or(&0);
+        println!("  backend {backend:<8} {n} worker(s), completed {done}");
+    }
+    println!(
+        "  model cache  {} lookups / {} hits / {} packs / {} evictions",
+        cache.lookups, cache.hits, cache.packs, cache.evictions
+    );
     if not_served > 0 {
         println!("  ({not_served} requests got typed errors — see above)");
     }
     println!("  accuracy     {correct}/{REQUESTS} (untrained weights: ~chance)");
     Ok(())
+}
+
+fn synthesize(name: &str, seed: u64) -> anyhow::Result<DeployedModel> {
+    let spec = models::by_name(name, 4).ok_or_else(|| anyhow::anyhow!("unknown preset {name}"))?;
+    Ok(DeployedModel::synthesize(&spec, seed))
 }

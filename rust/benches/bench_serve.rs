@@ -11,6 +11,10 @@
 //! every request must complete and a spot-checked result must be
 //! bit-identical to the golden model run directly.
 //!
+//! PR9 adds a two-model mixed-traffic section on a heterogeneous
+//! golden + chip-sim pool: per-model latency percentiles and the
+//! packed-model cache hit rate land in `BENCH_PR9.json`.
+//!
 //! Run: `cargo bench --bench bench_serve` (add `-- --quick` for the CI
 //! smoke subset).
 
@@ -21,17 +25,20 @@ use harness::{quick_mode, section, JsonReport};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use vsa::config::models;
+use vsa::config::HwConfig;
 use vsa::coordinator::{
-    run_load, Coordinator, CoordinatorConfig, FaultEngine, FaultProfile, FaultStats, GoldenEngine,
-    InferenceEngine, LoadSpec,
+    parse_pool, run_load, run_load_single, ChipEngine, Coordinator, CoordinatorConfig, EngineKind,
+    FaultEngine, FaultProfile, FaultStats, GoldenEngine, InferenceEngine, LoadSpec, ModelId,
+    ModelRegistry, ModelTraffic,
 };
 use vsa::data::synth;
 use vsa::snn::params::DeployedModel;
 use vsa::snn::Network;
-use vsa::telemetry::SpanCollector;
+use vsa::telemetry::{Registry, SpanCollector};
 
 /// Written next to the other cross-PR trajectory files at the repo root.
 const REPORT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR7.json");
+const REPORT_PATH_PR9: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR9.json");
 
 const MODEL: &str = "tiny";
 const STEPS: usize = 4;
@@ -41,16 +48,16 @@ const BATCH: usize = 8;
 const SUBMITTERS: usize = 4;
 const FAULT_RATES: [f64; 3] = [0.0, 0.01, 0.10];
 
-fn tiny_net() -> Network {
+fn tiny_model() -> DeployedModel {
     let spec = models::by_name(MODEL, STEPS).expect("tiny model spec");
-    Network::new(DeployedModel::synthesize(&spec, 42))
+    DeployedModel::synthesize(&spec, 42)
 }
 
 fn start_pool(
     fault_rate: f64,
     fstats: &Arc<FaultStats>,
     spans: Option<Arc<SpanCollector>>,
-) -> Coordinator {
+) -> (Coordinator, ModelId) {
     let profile = FaultProfile::mixed(fault_rate, Duration::from_millis(1));
     let cfg = CoordinatorConfig {
         workers: WORKERS,
@@ -58,14 +65,17 @@ fn start_pool(
         queue_depth: 64,
         ..CoordinatorConfig::default()
     };
-    Coordinator::start_with_spans(cfg, spans, {
+    let (reg, m) = ModelRegistry::single(tiny_model());
+    let regc = Arc::clone(&reg);
+    let coord = Coordinator::start_with_spans(cfg, reg, spans, {
         let fstats = Arc::clone(fstats);
         move |w| -> Box<dyn InferenceEngine> {
-            let inner = Box::new(GoldenEngine::new(tiny_net(), BATCH));
+            let inner = Box::new(GoldenEngine::new(Arc::clone(&regc), BATCH));
             let seed_w = FaultEngine::seed_for(SEED, w);
             Box::new(FaultEngine::with_stats(inner, profile, seed_w, Arc::clone(&fstats)))
         }
-    })
+    });
+    (coord, m)
 }
 
 fn main() {
@@ -82,19 +92,19 @@ fn main() {
     );
     for rate in FAULT_RATES {
         let fstats = Arc::new(FaultStats::default());
-        let coord = start_pool(rate, &fstats, None);
+        let (coord, m) = start_pool(rate, &fstats, None);
 
         if rate == 0.0 {
             // Correctness gate: a served result is bit-identical to the
             // golden model invoked directly.
-            let reference = tiny_net();
+            let reference = Network::new(tiny_model());
             let direct = reference.infer_u8(&images[0]);
-            let served = coord.infer_blocking(images[0].clone()).expect("clean serve");
+            let served = coord.infer_blocking(m, images[0].clone()).expect("clean serve");
             assert_eq!(served.logits, direct, "served result must be bit-identical");
         }
 
         let spec = LoadSpec { requests, submitters: SUBMITTERS, submit_wait: None };
-        let load = run_load(&coord, &images, &spec);
+        let load = run_load_single(&coord, m, &images, &spec);
         let stats = coord.shutdown();
 
         assert_eq!(load.total(), requests as u64, "every request tallied exactly once");
@@ -155,10 +165,10 @@ fn main() {
     {
         let spans = SpanCollector::new();
         let fstats = Arc::new(FaultStats::default());
-        let coord = start_pool(0.0, &fstats, Some(Arc::clone(&spans)));
+        let (coord, m) = start_pool(0.0, &fstats, Some(Arc::clone(&spans)));
         let spec = LoadSpec { requests, submitters: SUBMITTERS, submit_wait: None };
         let t0 = Instant::now();
-        let load = run_load(&coord, &images, &spec);
+        let load = run_load_single(&coord, m, &images, &spec);
         let stats = coord.shutdown();
         let wall = t0.elapsed();
         assert_eq!(load.ok, requests as u64, "traced clean run: everything completes");
@@ -178,4 +188,106 @@ fn main() {
         );
     }
     report.write(REPORT_PATH);
+
+    // Two-model mixed traffic on a heterogeneous pool (PR9): tiny and
+    // mnist interleave through the same queue, models never share a
+    // batch, and each worker's bounded LRU keeps both models packed.
+    section("multi-model mixed traffic (golden + chip-sim pool)");
+    let mut report9 = JsonReport::new();
+    {
+        const POOL_SPEC: &str = "golden:3,chip-sim:1";
+        let mix_requests = if quick { 200 } else { 2000 };
+        let mut registry = ModelRegistry::new();
+        let tiny_id = registry.register("tiny", tiny_model()).unwrap();
+        let mnist =
+            DeployedModel::synthesize(&models::by_name("mnist", 2).expect("mnist spec"), 43);
+        let mnist_id = registry.register("mnist", mnist).unwrap();
+        let registry = Arc::new(registry);
+
+        let pool = parse_pool(POOL_SPEC).unwrap();
+        let cfg = CoordinatorConfig {
+            workers: pool.len(),
+            max_batch: BATCH,
+            queue_depth: 64,
+            ..CoordinatorConfig::default()
+        };
+        let regc = Arc::clone(&registry);
+        let mut coord = Coordinator::start(cfg, Arc::clone(&registry), move |w| {
+            let e: Box<dyn InferenceEngine> = match pool[w] {
+                EngineKind::Golden => Box::new(GoldenEngine::new(Arc::clone(&regc), BATCH)),
+                EngineKind::ChipSim => {
+                    Box::new(ChipEngine::new(HwConfig::default(), Arc::clone(&regc), BATCH))
+                }
+            };
+            e
+        });
+
+        let traffic = vec![
+            ModelTraffic { model: tiny_id, weight: 1, images: images.clone() },
+            ModelTraffic {
+                model: mnist_id,
+                weight: 1,
+                images: synth::mnist_like(SEED, 0, 32).into_iter().map(|s| s.image).collect(),
+            },
+        ];
+        let spec = LoadSpec { requests: mix_requests, submitters: SUBMITTERS, submit_wait: None };
+        let t0 = Instant::now();
+        let load = run_load(&coord, &traffic, &spec);
+        let wall = t0.elapsed();
+        coord.drain();
+
+        let treg = Registry::new();
+        coord.export_into(&treg, "serve");
+        let snap = treg.snapshot();
+        let cache = coord.cache_totals();
+        let hit_rate = if cache.lookups > 0 {
+            cache.hits as f64 / cache.lookups as f64
+        } else {
+            0.0
+        };
+        assert_eq!(load.ok, mix_requests as u64, "clean mixed run: everything completes");
+        assert_eq!(cache.hits + cache.misses, cache.lookups, "cache counters balance");
+
+        println!(
+            "  {} requests over 2 models on pool [{}] in {:.1} ms ({:.1} req/s)",
+            mix_requests,
+            POOL_SPEC,
+            wall.as_secs_f64() * 1e3,
+            mix_requests as f64 / wall.as_secs_f64()
+        );
+        for name in ["tiny", "mnist"] {
+            let done = snap.counters[&format!("serve.model.{name}.completed")];
+            let sk = &snap.sketches[&format!("serve.model.{name}.latency")];
+            println!(
+                "  {:<6} completed {:>5}   p50 {:.3} ms   p99 {:.3} ms",
+                name,
+                done,
+                sk.quantile_ms(0.50),
+                sk.quantile_ms(0.99)
+            );
+            report9.serve_model(
+                name,
+                POOL_SPEC,
+                done,
+                sk.quantile_ms(0.50),
+                sk.quantile_ms(0.99),
+                hit_rate,
+            );
+        }
+        println!(
+            "  model cache: {} lookups, {} hits, {} misses, {} evictions ({:.1}% hit)",
+            cache.lookups,
+            cache.hits,
+            cache.misses,
+            cache.evictions,
+            hit_rate * 100.0
+        );
+        let stats = coord.shutdown();
+        assert_eq!(
+            stats.completed + stats.failed + stats.shed,
+            stats.submitted,
+            "mixed-run counters balance"
+        );
+    }
+    report9.write(REPORT_PATH_PR9);
 }

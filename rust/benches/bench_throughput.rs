@@ -28,6 +28,7 @@ use harness::{bench, quick_mode, section, JsonReport};
 const REPORT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR1.json");
 const REPORT2_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR2.json");
 const REPORT5_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR5.json");
+use std::sync::Arc;
 use std::time::Duration;
 use vsa::arch::schedule::{LayerPlan, PlanKind};
 use vsa::arch::{Chip, SimMode};
@@ -35,7 +36,9 @@ use vsa::baselines::chip_stepwise::StepwiseChip;
 use vsa::baselines::golden_stepwise::StepwiseGolden;
 use vsa::baselines::spinalflow::{self, SpinalFlowConfig};
 use vsa::config::{models, HwConfig};
-use vsa::coordinator::{Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine};
+use vsa::coordinator::{
+    Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine, ModelRegistry,
+};
 use vsa::data::synth;
 use vsa::dse::{self, Candidate, SearchSpace};
 use vsa::snn::params::DeployedModel;
@@ -380,23 +383,26 @@ fn main() {
         println!("  {:>6} {:>12} {:>10}", "batch", "req/s", "p50 ms");
         let mut best_rps = 0.0f64;
         for batch in [1usize, 4, 8, 16] {
-            let model = model.clone();
+            let (reg, m) = ModelRegistry::single(model.clone());
+            let regc = Arc::clone(&reg);
             let coord = Coordinator::start(
                 CoordinatorConfig {
                     workers: 2,
                     max_batch: batch,
                     max_wait: Duration::from_micros(500),
                     queue_depth: 256,
+                    ..CoordinatorConfig::default()
                 },
+                reg,
                 move |_| {
-                    Box::new(GoldenEngine::new(Network::new(model.clone()), batch))
+                    Box::new(GoldenEngine::new(Arc::clone(&regc), batch))
                         as Box<dyn InferenceEngine>
                 },
             );
             let samples = synth::tiny_like(5, 0, 256);
             let rxs: Vec<_> = samples
                 .iter()
-                .map(|s| coord.submit(s.image.clone()).unwrap())
+                .map(|s| coord.submit(m, s.image.clone()).unwrap())
                 .collect();
             for rx in rxs {
                 rx.recv().unwrap();

@@ -155,6 +155,32 @@ impl JsonReport {
         ));
     }
 
+    /// One per-model row of the multi-model mixed-traffic load test
+    /// (PR9: `bench_serve` two-model section): per-model latency
+    /// percentiles from the coordinator's exported sketches plus the
+    /// pool-wide packed-model cache hit rate for the whole run.
+    pub fn serve_model(
+        &mut self,
+        model: &str,
+        pool: &str,
+        completed: u64,
+        p50_ms: f64,
+        p99_ms: f64,
+        cache_hit_rate: f64,
+    ) {
+        self.rows.push(format!(
+            "{{\"kind\": \"serve_model\", \"model\": \"{}\", \"pool\": \"{}\", \
+             \"completed\": {}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \
+             \"cache_hit_rate\": {:.4}}}",
+            json_escape(model),
+            json_escape(pool),
+            completed,
+            p50_ms,
+            p99_ms,
+            cache_hit_rate
+        ));
+    }
+
     /// Write the report; the schema key lets downstream tooling evolve.
     pub fn write(&self, path: &str) {
         let mut body = String::from("{\n  \"schema\": \"vsa-bench-v1\",\n  \"results\": [\n");

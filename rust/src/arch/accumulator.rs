@@ -19,19 +19,28 @@ pub const PIPELINE_DEPTH: u64 = 4;
 /// is the left-shift applied at stage 1 (bitplane weight in encoding mode,
 /// all zeros for spiking layers).
 pub fn reduce_blocks(block_psums: &[Vec<i32>], shifts: &[u32]) -> Vec<i32> {
+    let mut out = Vec::new();
+    reduce_blocks_into(block_psums, shifts, &mut out);
+    out
+}
+
+/// [`reduce_blocks`] into a caller-owned buffer (cleared and re-sized
+/// here), so the Exact-mode schedule walk reuses one column buffer for
+/// every reduction instead of allocating per cycle.
+pub fn reduce_blocks_into(block_psums: &[Vec<i32>], shifts: &[u32], out: &mut Vec<i32>) {
     assert_eq!(block_psums.len(), shifts.len());
+    out.clear();
     if block_psums.is_empty() {
-        return Vec::new();
+        return;
     }
     let d = block_psums[0].len();
-    let mut out = vec![0i32; d];
+    out.resize(d, 0);
     for (psum, &sh) in block_psums.iter().zip(shifts) {
         assert_eq!(psum.len(), d, "ragged block outputs");
         for (o, &v) in out.iter_mut().zip(psum) {
             *o += v << sh;
         }
     }
-    out
 }
 
 /// Boundary accumulator: carries tile-seam partial sums between vertical

@@ -15,7 +15,7 @@
 
 use std::cell::RefCell;
 
-use crate::arch::accumulator::{reduce_blocks, BoundaryBuffer};
+use crate::arch::accumulator::{reduce_blocks_into, BoundaryBuffer};
 use crate::arch::dram::Dram;
 use crate::arch::fusion::{plan_fusion, roles, FusionGroup};
 use crate::arch::if_unit::IfUnit;
@@ -214,28 +214,94 @@ impl ModelKey {
     }
 }
 
-/// Single-entry packed-model cache + scratch arena of the fast path.
-#[derive(Default)]
-struct FastCache {
-    key: Option<ModelKey>,
+/// Packed-model cache counters.  Invariants (asserted by the LRU tests):
+/// `hits + misses == lookups` and `packs == misses` — every miss packs
+/// exactly one model, every eviction makes room for exactly one pack.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub packs: u64,
+}
+
+impl CacheStats {
+    /// Fold another cache's counters in (per-worker engines each own a
+    /// cache; the pool total is the sum).
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.lookups += other.lookups;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.packs += other.packs;
+    }
+
+    /// Publish the counters into a [`Registry`] under `prefix`
+    /// (`{prefix}.lookups`, `.hits`, `.misses`, `.evictions`, `.packs`).
+    /// Values are absolute (set, not added) so re-export is idempotent.
+    pub fn export_into(&self, reg: &Registry, prefix: &str) {
+        reg.set_counter(&format!("{prefix}.lookups"), self.lookups);
+        reg.set_counter(&format!("{prefix}.hits"), self.hits);
+        reg.set_counter(&format!("{prefix}.misses"), self.misses);
+        reg.set_counter(&format!("{prefix}.evictions"), self.evictions);
+        reg.set_counter(&format!("{prefix}.packs"), self.packs);
+    }
+}
+
+/// Default packed-model cache capacity (models per chip).
+pub const DEFAULT_MODEL_CACHE: usize = 4;
+
+/// One resident packed model of the fast path.
+struct FastEntry {
+    key: ModelKey,
     plans: Vec<LayerPlan>,
-    groups: Vec<FusionGroup>,
     packed: Vec<PackedLayer>,
+}
+
+/// Bounded LRU packed-model cache + shared scratch arena of the fast
+/// path.  PR5's single-entry fingerprint cache generalized for
+/// multi-model serving (PR9): up to `capacity` distinct models stay
+/// packed, most-recently-used first; the scratch arena is shared across
+/// entries (its buffers grow to the largest resident model and are
+/// re-sized per run by the kernels).
+struct FastCache {
+    /// Resident entries, most-recently-used first.
+    entries: Vec<FastEntry>,
+    capacity: usize,
+    groups: Vec<FusionGroup>,
     scratch: Scratch,
-    packs: u64,
+    stats: CacheStats,
 }
 
 impl FastCache {
-    /// Make the cache current for `model`: on a key hit this costs one
-    /// fingerprint walk over the weight bytes (plus the O(layers) fusion
-    /// re-plan); on a miss the plans and packed weight masks are rebuilt
-    /// — exactly once per distinct model, however many images a batch
-    /// loop pushes through [`Chip::run`].
+    fn with_capacity(capacity: usize) -> Self {
+        Self {
+            entries: Vec::new(),
+            capacity: capacity.max(1),
+            groups: Vec::new(),
+            scratch: Scratch::default(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Make the front entry current for `model`: on a key hit this costs
+    /// one fingerprint walk over the weight bytes (plus the O(layers)
+    /// fusion re-plan); on a miss the plans and packed weight masks are
+    /// rebuilt — once per distinct model while it stays resident — and
+    /// the least-recently-used entry is evicted when the cache is full.
     fn prepare(&mut self, model: &DeployedModel, hw: &HwConfig) {
         let key = ModelKey::of(model);
-        if self.key.as_ref() != Some(&key) {
-            self.plans = plan_model(model);
-            self.packed = model
+        self.stats.lookups += 1;
+        if let Some(pos) = self.entries.iter().position(|e| e.key == key) {
+            self.stats.hits += 1;
+            let hit = self.entries.remove(pos);
+            self.entries.insert(0, hit);
+        } else {
+            self.stats.misses += 1;
+            self.stats.packs += 1;
+            let plans = plan_model(model);
+            let packed = model
                 .layers
                 .iter()
                 .map(|ly| match ly {
@@ -252,14 +318,17 @@ impl FastCache {
                     }
                 })
                 .collect();
-            self.packs += 1;
-            self.key = Some(key);
+            if self.entries.len() >= self.capacity {
+                self.entries.pop();
+                self.stats.evictions += 1;
+            }
+            self.entries.insert(0, FastEntry { key, plans, packed });
         }
         // The fusion plan depends on the live hw config (`Chip::hw` is a
         // pub field and `layer_fusion`/`weight_sram_kb` may be flipped
         // between runs) and is O(layers) cheap: re-derive it every run,
         // exactly like the stepwise engine does.
-        self.groups = plan_fusion(&self.plans, hw);
+        self.groups = plan_fusion(&self.entries[0].plans, hw);
     }
 }
 
@@ -268,23 +337,41 @@ pub struct Chip {
     pub hw: HwConfig,
     pub mode: SimMode,
     /// Packed-model cache + scratch arena of the time-batched fast path
-    /// (single entry, fingerprint-keyed; see [`FastCache::prepare`]).
+    /// (bounded LRU, fingerprint-keyed; see [`FastCache::prepare`]).
     fast: RefCell<FastCache>,
 }
 
 impl Chip {
-    /// New chip at the given config and fidelity.
+    /// New chip at the given config and fidelity, with the default
+    /// packed-model cache capacity ([`DEFAULT_MODEL_CACHE`]).
     pub fn new(hw: HwConfig, mode: SimMode) -> Self {
-        Self { hw, mode, fast: RefCell::new(FastCache::default()) }
+        Self::with_cache_capacity(hw, mode, DEFAULT_MODEL_CACHE)
     }
 
-    /// How many times this chip (re)built its packed-model cache.  A
-    /// batch loop calling [`Chip::run`] per image must see this stay at
-    /// 1 per distinct model — the pack-counter regression hook of
+    /// New chip whose fast path keeps up to `capacity` distinct models
+    /// packed (LRU-evicted beyond that; clamped to at least 1).
+    pub fn with_cache_capacity(hw: HwConfig, mode: SimMode, capacity: usize) -> Self {
+        Self { hw, mode, fast: RefCell::new(FastCache::with_capacity(capacity)) }
+    }
+
+    /// How many times this chip (re)built a packed model.  A batch loop
+    /// calling [`Chip::run`] per image must see this stay at 1 per
+    /// distinct resident model — the pack-counter regression hook of
     /// `rust/tests/chip_batched.rs`.  Always 0 in `Exact` mode (the
     /// gate-level datapath packs nothing).
     pub fn pack_count(&self) -> u64 {
-        self.fast.borrow().packs
+        self.fast.borrow().stats.packs
+    }
+
+    /// Packed-model cache counters (lookups/hits/misses/evictions/packs).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.fast.borrow().stats
+    }
+
+    /// Publish the cache counters into a [`Registry`] under
+    /// `{prefix}.model_cache.*`.
+    pub fn export_cache_into(&self, reg: &Registry, prefix: &str) {
+        self.cache_stats().export_into(reg, &format!("{prefix}.model_cache"));
     }
 
     /// Run one inference.  `image` is the raw u8 CHW input.
@@ -394,12 +481,15 @@ impl Chip {
         use crate::arch::trace::Event;
         let mut guard = self.fast.borrow_mut();
         guard.prepare(model, &self.hw);
-        let cache = &mut *guard;
+        // Split borrows: the front (just-prepared) entry is read-only,
+        // the scratch arena is mutable, and both live in the cache.
+        let FastCache { entries, groups, scratch, .. } = &mut *guard;
+        let entry = &entries[0];
         let t_steps = model.num_steps;
 
         let mut dram = Dram::default();
         let mut sram = SramAccesses::default();
-        let mut layer_reports = Vec::with_capacity(cache.plans.len());
+        let mut layer_reports = Vec::with_capacity(entry.plans.len());
         let mut cycles_total = 0u64;
         let mut pe_ops_total = 0u64;
         let mut logits = vec![0i64; 10];
@@ -410,14 +500,14 @@ impl Chip {
         // `cur` and overwrites `nxt`; any other first layer must start
         // from the empty train the stepwise engine starts from, not a
         // previous run's leftovers.
-        let mut cur = std::mem::take(&mut cache.scratch.train_in);
-        let mut nxt = std::mem::take(&mut cache.scratch.train_out);
-        if cache.plans.first().map_or(true, |p| p.kind != PlanKind::EncConv) {
+        let mut cur = std::mem::take(&mut scratch.train_in);
+        let mut nxt = std::mem::take(&mut scratch.train_out);
+        if entry.plans.first().map_or(true, |p| p.kind != PlanKind::EncConv) {
             cur.clear();
         }
 
-        for (idx, plan) in cache.plans.iter().enumerate() {
-            let (fused_in, fused_out) = roles(&cache.groups, idx);
+        for (idx, plan) in entry.plans.iter().enumerate() {
+            let (fused_in, fused_out) = roles(groups, idx);
             // Per-category attribution is only needed when tracing; the
             // clone is off the untraced hot path.
             let dram_snapshot = if trace.is_some() { Some(dram.clone()) } else { None };
@@ -431,7 +521,7 @@ impl Chip {
                     tr,
                     idx,
                     plan,
-                    &cache.groups,
+                    groups,
                     cycles_total,
                     cycles_total + cycles,
                     dram_snapshot.as_ref().unwrap(),
@@ -442,9 +532,8 @@ impl Chip {
             let pe_ops = plan.pe_ops(&self.hw, t_steps);
             pe_ops_total += pe_ops;
 
-            let scratch = &mut cache.scratch;
             let layer = &model.layers[plan.model_index];
-            let (fired, membrane_accesses) = match (&cache.packed[plan.model_index], layer) {
+            let (fired, membrane_accesses) = match (&entry.packed[plan.model_index], layer) {
                 (PackedLayer::Enc, Layer::Conv { c_out, c_in, k, w, bias, theta, .. }) => {
                     let (h, w_px) = (plan.h, plan.w);
                     let plane = c_out * h * w_px;
@@ -568,8 +657,8 @@ impl Chip {
         }
 
         // Hand the ping-pong buffers back for the next inference.
-        cache.scratch.train_in = cur;
-        cache.scratch.train_out = nxt;
+        scratch.train_in = cur;
+        scratch.train_out = nxt;
 
         let freq_hz = self.hw.freq_mhz * 1e6;
         let latency_us = cycles_total as f64 / freq_hz * 1e6;
@@ -773,14 +862,24 @@ impl Chip {
 
         let mut psum = vec![0i32; plan.c_out * h * w];
 
+        // Arena: every per-cycle buffer of the schedule walk is allocated
+        // once here and reused — O(c_out * groups * tiles * w) cycles run
+        // allocation-free, which makes Exact-mode pool workers viable.
+        let mut block_psums: Vec<Vec<i32>> =
+            (0..hw.pe_blocks).map(|_| vec![0i32; diag]).collect();
+        let mut shifts: Vec<u32> = Vec::with_capacity(hw.pe_blocks);
+        let mut columns: Vec<Vec<bool>> = (0..k).map(|_| vec![false; rows]).collect();
+        let mut w_neg: Vec<Vec<bool>> = (0..k).map(|_| vec![false; k]).collect();
+        let mut col: Vec<i32> = Vec::with_capacity(diag);
+
         for o in 0..plan.c_out {
             for g in 0..groups {
                 let mut boundary = BoundaryBuffer::new(w);
                 for tile in 0..tiles {
                     let y0 = tile * rows;
                     for x in 0..w {
-                        let mut block_psums = Vec::new();
-                        let mut shifts = Vec::new();
+                        shifts.clear();
+                        let mut used = 0;
                         for b in 0..hw.pe_blocks {
                             let ch_eff = g * hw.pe_blocks + b;
                             if ch_eff >= c_in_eff {
@@ -790,38 +889,32 @@ impl Chip {
                             // their source channel (Fig. 7).
                             let wch = if is_enc { ch_eff / planes } else { ch_eff };
                             // input columns consumed by the k arrays
-                            let columns: Vec<Vec<bool>> = (0..k)
-                                .map(|a| {
-                                    let xi = x as isize + a as isize - pad as isize;
-                                    (0..rows)
-                                        .map(|r| {
-                                            let yi = y0 + r;
-                                            if xi < 0 || xi >= w as isize || yi >= h {
-                                                false
-                                            } else {
-                                                spike(ch_eff, yi, xi as usize)
-                                            }
-                                        })
-                                        .collect()
-                                })
-                                .collect();
+                            for (a, column) in columns.iter_mut().enumerate() {
+                                let xi = x as isize + a as isize - pad as isize;
+                                for (r, slot) in column.iter_mut().enumerate() {
+                                    let yi = y0 + r;
+                                    *slot = if xi < 0 || xi >= w as isize || yi >= h {
+                                        false
+                                    } else {
+                                        spike(ch_eff, yi, xi as usize)
+                                    };
+                                }
+                            }
                             // weight sign columns: array a = kernel col kw=a,
                             // array row c = kernel row kh = k-1-c.
-                            let w_neg: Vec<Vec<bool>> = (0..k)
-                                .map(|a| {
-                                    (0..k)
-                                        .map(|c| {
-                                            let kh = k - 1 - c;
-                                            weights[((o * plan.c_in + wch) * k + kh) * k + a]
-                                                < 0
-                                        })
-                                        .collect()
-                                })
-                                .collect();
-                            block_psums.push(block.cycle(&columns, &w_neg));
+                            for (a, wn) in w_neg.iter_mut().enumerate() {
+                                for (c, slot) in wn.iter_mut().enumerate() {
+                                    let kh = k - 1 - c;
+                                    *slot = weights
+                                        [((o * plan.c_in + wch) * k + kh) * k + a]
+                                        < 0;
+                                }
+                            }
+                            block.cycle_into(&columns, &w_neg, &mut block_psums[used]);
                             shifts.push(if is_enc { (ch_eff % planes) as u32 } else { 0 });
+                            used += 1;
                         }
-                        let col = reduce_blocks(&block_psums, &shifts);
+                        reduce_blocks_into(&block_psums[..used], &shifts, &mut col);
                         debug_assert_eq!(col.len(), diag);
                         // scatter diagonals to output rows:
                         // oy = y0 + d - (k - 1) + pad
@@ -854,18 +947,28 @@ impl Chip {
         let array = PeArray::new(1, 1);
         let block = PeBlock::new(array, 1);
         let mut out = vec![0i32; n_out];
+        // Arena: one block-psum slot per PE block plus single-bit in/weight
+        // columns, reused for every (output, group) cycle of the walk.
+        let mut block_psums: Vec<Vec<i32>> =
+            (0..self.hw.pe_blocks).map(|_| vec![0i32]).collect();
+        let shifts = vec![0u32; self.hw.pe_blocks];
+        let mut in_col = [vec![false]];
+        let mut wn_col = [vec![false]];
+        let mut col: Vec<i32> = Vec::with_capacity(1);
         for (o, out_o) in out.iter_mut().enumerate() {
             for (g, chunk) in dense.chunks(self.hw.pe_blocks).enumerate() {
-                let mut block_psums = Vec::new();
                 for (b, &bit) in chunk.iter().enumerate() {
                     let i = g * self.hw.pe_blocks + b;
-                    block_psums.push(block.cycle(
-                        &[vec![bit == 1]],
-                        &[vec![w[o * n_in + i] < 0]],
-                    ));
+                    in_col[0][0] = bit == 1;
+                    wn_col[0][0] = w[o * n_in + i] < 0;
+                    block.cycle_into(&in_col, &wn_col, &mut block_psums[b]);
                 }
-                let shifts = vec![0u32; block_psums.len()];
-                *out_o += reduce_blocks(&block_psums, &shifts)[0];
+                reduce_blocks_into(
+                    &block_psums[..chunk.len()],
+                    &shifts[..chunk.len()],
+                    &mut col,
+                );
+                *out_o += col[0];
             }
         }
         out
@@ -1194,6 +1297,93 @@ pub(crate) mod tests {
         assert_eq!(unfused.logits, fresh.logits);
         assert!(fused.dram.total() < unfused.dram.total());
         assert_eq!(chip.pack_count(), 1, "an hw change needs no re-pack");
+    }
+
+    /// Two distinct tiny models + matching images for the LRU tests.
+    fn two_models() -> (DeployedModel, Vec<u8>, DeployedModel, Vec<u8>) {
+        use crate::testing::{models, Gen};
+        let (a, img_a) = models::random_model_tiny(&mut Gen::new(0xA11C_E));
+        let (b, img_b) = models::random_model_tiny(&mut Gen::new(0xB0B_5EED));
+        (a, img_a, b, img_b)
+    }
+
+    /// Interleaved A/B/A traffic under capacity 2: both models stay
+    /// resident, so the whole interleave packs exactly twice, and the
+    /// counters balance (`hits + misses == lookups`, `packs == misses`).
+    #[test]
+    fn lru_capacity_two_holds_interleaved_models() {
+        let (a, img_a, b, img_b) = two_models();
+        let chip = Chip::with_cache_capacity(HwConfig::default(), SimMode::Fast, 2);
+        let first_a = chip.run(&a, &img_a).logits;
+        let first_b = chip.run(&b, &img_b).logits;
+        for _ in 0..3 {
+            assert_eq!(chip.run(&a, &img_a).logits, first_a);
+            assert_eq!(chip.run(&b, &img_b).logits, first_b);
+        }
+        let s = chip.cache_stats();
+        assert_eq!(s.packs, 2, "A/B/A under capacity 2 must pack twice total");
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.lookups, 8);
+        assert_eq!(s.hits + s.misses, s.lookups);
+        assert_eq!(s.packs, s.misses);
+    }
+
+    /// Capacity 1 thrashes on the same interleave: every switch is a
+    /// miss+evict, with exact counts.
+    #[test]
+    fn lru_capacity_one_thrashes_with_exact_evictions() {
+        let (a, img_a, b, img_b) = two_models();
+        let chip = Chip::with_cache_capacity(HwConfig::default(), SimMode::Fast, 1);
+        for _ in 0..3 {
+            chip.run(&a, &img_a);
+            chip.run(&b, &img_b);
+        }
+        let s = chip.cache_stats();
+        assert_eq!(s.lookups, 6);
+        assert_eq!(s.hits, 0, "capacity 1 never hits on an A/B interleave");
+        assert_eq!(s.misses, 6);
+        assert_eq!(s.packs, 6);
+        assert_eq!(s.evictions, 5, "every pack after the first evicts");
+    }
+
+    /// A cached (LRU-hit) run is bit-identical to a fresh chip — eviction
+    /// and re-pack never change results, across a randomized model pair.
+    #[test]
+    fn lru_cached_logits_bit_identical_to_fresh() {
+        use crate::testing::{check, models, Gen};
+        check("lru cached vs fresh", 10, |g: &mut Gen| {
+            let (a, img_a) = models::random_model_tiny(g);
+            let (b, img_b) = models::random_model_tiny(g);
+            let chip = Chip::with_cache_capacity(HwConfig::default(), SimMode::Fast, 2);
+            // Warm both, then hit both again out of the cache.
+            chip.run(&a, &img_a);
+            chip.run(&b, &img_b);
+            let cached_a = chip.run(&a, &img_a);
+            let cached_b = chip.run(&b, &img_b);
+            let fresh_a = Chip::new(HwConfig::default(), SimMode::Fast).run(&a, &img_a);
+            let fresh_b = Chip::new(HwConfig::default(), SimMode::Fast).run(&b, &img_b);
+            assert_eq!(cached_a.logits, fresh_a.logits);
+            assert_eq!(cached_b.logits, fresh_b.logits);
+            assert_eq!(cached_a.cycles, fresh_a.cycles);
+            assert_eq!(cached_b.cycles, fresh_b.cycles);
+        });
+    }
+
+    /// The cache counters export through the telemetry registry.
+    #[test]
+    fn cache_counters_export_into_registry() {
+        let (a, img_a, b, img_b) = two_models();
+        let chip = Chip::with_cache_capacity(HwConfig::default(), SimMode::Fast, 1);
+        chip.run(&a, &img_a);
+        chip.run(&b, &img_b);
+        chip.run(&a, &img_a);
+        let reg = Registry::new();
+        chip.export_cache_into(&reg, "sim");
+        let snap = reg.snapshot();
+        let text = snap.render_text();
+        assert!(text.contains("sim.model_cache.lookups 3"), "got:\n{text}");
+        assert!(text.contains("sim.model_cache.packs 3"), "got:\n{text}");
+        assert!(text.contains("sim.model_cache.evictions 2"), "got:\n{text}");
     }
 }
 

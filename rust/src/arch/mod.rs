@@ -30,4 +30,4 @@ pub mod sram;
 pub mod timeline;
 pub mod trace;
 
-pub use chip::{Chip, RunReport, SimMode};
+pub use chip::{CacheStats, Chip, RunReport, SimMode, DEFAULT_MODEL_CACHE};

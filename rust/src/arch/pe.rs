@@ -56,9 +56,18 @@ impl PeArray {
     /// contribution of this filter column to output rows
     /// `y - (cols-1) .. y + rows - 1` of the current output column.
     pub fn cycle(&self, spikes: &[bool], w_neg: &[bool]) -> Vec<i32> {
+        let mut out = vec![0i32; self.diag_outputs()];
+        self.cycle_into(spikes, w_neg, &mut out);
+        out
+    }
+
+    /// [`cycle`](Self::cycle) accumulating into a caller-owned buffer of
+    /// `diag_outputs()` sums (not zeroed — the block sums its arrays in
+    /// place), so a schedule walk allocates nothing per cycle.
+    pub fn cycle_into(&self, spikes: &[bool], w_neg: &[bool], out: &mut [i32]) {
         debug_assert_eq!(spikes.len(), self.rows);
         debug_assert_eq!(w_neg.len(), self.cols);
-        let mut out = vec![0i32; self.diag_outputs()];
+        debug_assert_eq!(out.len(), self.diag_outputs());
         for (r, &s) in spikes.iter().enumerate() {
             if !s {
                 continue; // AND gate: zero contribution without a spike
@@ -67,7 +76,6 @@ impl PeArray {
                 out[r + c] += pe_multiply(true, wn);
             }
         }
-        out
     }
 }
 
@@ -93,15 +101,21 @@ impl PeBlock {
     /// contribution of this input channel to one output column
     /// (accumulator stage 1, Fig. 4).
     pub fn cycle(&self, columns: &[Vec<bool>], w_neg: &[Vec<bool>]) -> Vec<i32> {
+        let mut acc = vec![0i32; self.array.diag_outputs()];
+        self.cycle_into(columns, w_neg, &mut acc);
+        acc
+    }
+
+    /// [`cycle`](Self::cycle) into a caller-owned buffer of
+    /// `array.diag_outputs()` sums (zeroed here) — the allocation-free
+    /// entry used by the Exact-mode schedule walk.
+    pub fn cycle_into(&self, columns: &[Vec<bool>], w_neg: &[Vec<bool>], acc: &mut [i32]) {
         debug_assert_eq!(columns.len(), self.arrays);
         debug_assert_eq!(w_neg.len(), self.arrays);
-        let mut acc = vec![0i32; self.array.diag_outputs()];
+        acc.fill(0);
         for a in 0..self.arrays {
-            for (d, v) in self.array.cycle(&columns[a], &w_neg[a]).iter().enumerate() {
-                acc[d] += v;
-            }
+            self.array.cycle_into(&columns[a], &w_neg[a], acc);
         }
-        acc
     }
 }
 

@@ -11,6 +11,9 @@ use std::time::Duration;
 pub struct Args {
     pub command: String,
     flags: BTreeMap<String, String>,
+    /// Every flag occurrence in argv order — `flags` keeps only the last
+    /// value per key, this keeps them all (PR9: repeatable `--model`).
+    occurrences: Vec<(String, String)>,
     switches: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -33,8 +36,11 @@ impl Args {
                 }
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
+                    out.occurrences.push((k.to_string(), v.to_string()));
                 } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
-                    out.flags.insert(stripped.to_string(), it.next().unwrap());
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v.clone());
+                    out.occurrences.push((stripped.to_string(), v));
                 } else {
                     out.switches.push(stripped.to_string());
                 }
@@ -53,6 +59,12 @@ impl Args {
     /// Optional string flag.
     pub fn get_opt(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(String::as_str)
+    }
+
+    /// Every occurrence of a repeatable flag, in argv order (empty when
+    /// the flag never appears).  `get`/`get_opt` see only the last one.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.occurrences.iter().filter(|(k, _)| k == key).map(|(_, v)| v.as_str()).collect()
     }
 
     /// Mandatory string flag — errors with the flag name when absent.
@@ -177,5 +189,14 @@ mod tests {
     #[test]
     fn flag_as_command_rejected() {
         assert!(Args::parse(vec!["--oops".to_string()]).is_err());
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_occurrence_in_order() {
+        let a = parse("serve --model a=x.vsaw --workers 2 --model b=y.vsaw --model tiny");
+        assert_eq!(a.get_all("model"), vec!["a=x.vsaw", "b=y.vsaw", "tiny"]);
+        assert_eq!(a.get("model", "-"), "tiny", "get() sees the last occurrence");
+        assert_eq!(a.get_all("workers"), vec!["2"]);
+        assert!(a.get_all("absent").is_empty());
     }
 }

@@ -68,6 +68,31 @@ pub fn split_expired<T>(
     (live, expired)
 }
 
+/// Partition a formed batch by a per-payload batch key, preserving both
+/// the arrival order of the groups (keyed by first appearance) and the
+/// arrival order within each group.  PR9: the coordinator keys on
+/// `(ModelId, deadline-class)` so requests for different models — or
+/// deadline'd vs. best-effort traffic — never share an engine batch, even
+/// though they drain one queue.
+pub fn partition_by_key<T, K: PartialEq>(
+    batch: Vec<Request<T>>,
+    key_of: impl Fn(&T) -> K,
+) -> Vec<Vec<Request<T>>> {
+    let mut keys: Vec<K> = Vec::new();
+    let mut groups: Vec<Vec<Request<T>>> = Vec::new();
+    for req in batch {
+        let key = key_of(&req.payload);
+        match keys.iter().position(|k| *k == key) {
+            Some(i) => groups[i].push(req),
+            None => {
+                keys.push(key);
+                groups.push(vec![req]);
+            }
+        }
+    }
+    groups
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,5 +196,30 @@ mod tests {
         let (live, expired) = split_expired(batch, Instant::now(), |d| *d);
         assert_eq!(live.len(), 2);
         assert!(expired.is_empty());
+    }
+
+    /// Payload for the partition tests: the batch key itself.
+    fn kreq(id: u64, key: u32) -> Request<u32> {
+        Request { id, payload: key, enqueued: Instant::now(), dequeued: None }
+    }
+
+    #[test]
+    fn partition_by_key_groups_and_keeps_order() {
+        let batch =
+            vec![kreq(0, 7), kreq(1, 9), kreq(2, 7), kreq(3, 8), kreq(4, 9), kreq(5, 7)];
+        let groups = partition_by_key(batch, |k| *k);
+        let ids: Vec<Vec<u64>> =
+            groups.iter().map(|g| g.iter().map(|r| r.id).collect()).collect();
+        // groups ordered by first appearance, members in arrival order
+        assert_eq!(ids, vec![vec![0, 2, 5], vec![1, 4], vec![3]]);
+        assert!(groups.iter().all(|g| g.iter().all(|r| r.payload == g[0].payload)));
+    }
+
+    #[test]
+    fn partition_by_key_single_key_is_one_group() {
+        let batch = vec![kreq(0, 1), kreq(1, 1), kreq(2, 1)];
+        let groups = partition_by_key(batch, |k| *k);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].len(), 3);
     }
 }

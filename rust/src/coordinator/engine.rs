@@ -1,56 +1,179 @@
 //! Inference engines the workers can run batches on.
 
-use crate::arch::{Chip, SimMode};
-use crate::config::HwConfig;
-use crate::runtime::PjrtExecutor;
-use crate::snn::{Network, Scratch};
-use anyhow::Result;
+use std::sync::Arc;
 
-/// A batch-capable inference backend.
+use crate::arch::{CacheStats, Chip, SimMode, DEFAULT_MODEL_CACHE};
+use crate::config::HwConfig;
+use crate::coordinator::registry::{ModelId, ModelRegistry};
+use crate::snn::{Network, Scratch};
+use anyhow::{bail, Result};
+
+/// A batch-capable, multi-model inference backend.
 ///
 /// Not required to be `Send`: the coordinator constructs one engine *per
-/// worker thread* (PJRT client handles are thread-local).
+/// worker thread* via the factory passed to `Coordinator::start`.
+///
+/// Model contract (PR9): every call names the [`ModelId`] the batch
+/// belongs to — the batcher guarantees a batch never mixes models, and
+/// the engine resolves the id against its shared [`ModelRegistry`]
+/// (packing resolved models into a bounded LRU cache so steady-state
+/// multi-model traffic re-packs nothing).
 ///
 /// Failure contract (PR6): `infer` may return `Err` for transient
 /// failures — the coordinator retries the batch split into singles and
 /// surfaces `ServeError::EngineFailed` with the cause once attempts are
 /// exhausted.  A *panic* in `infer` is caught by the worker
 /// (`catch_unwind`); the engine is assumed corrupted and is rebuilt via
-/// the factory passed to `Coordinator::start`, charged against the
-/// pool's restart budget.  `fault::FaultEngine` wraps any engine with
-/// seeded injections of both, plus latency spikes.
+/// the factory, charged against the pool's restart budget.
+/// `fault::FaultEngine` wraps any engine with seeded injections of both,
+/// plus latency spikes.
 pub trait InferenceEngine {
     /// Preferred batch size (the batcher targets this).
     fn batch_size(&self) -> usize;
-    /// Classify a batch of raw u8 CHW images into integer logits.
-    fn infer(&mut self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>>;
+    /// Classify a batch of raw u8 CHW images for `model` into integer
+    /// logits.  Images whose pixel count does not match the model's
+    /// geometry are a typed `Err` (→ `EngineFailed`), never a panic.
+    fn infer(&mut self, model: ModelId, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>>;
     /// Human-readable backend name for logs/metrics.
     fn name(&self) -> &'static str;
+    /// Packed-model cache counters, if this backend multiplexes models.
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats::default()
+    }
 }
 
-/// Engine selector used by the CLI.
+/// Engine selector used by the CLI and pool specs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
     Golden,
     ChipSim,
-    Pjrt,
+}
+
+impl EngineKind {
+    /// Parse a backend name (`golden`, `chip-sim`/`chip`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "golden" => Ok(Self::Golden),
+            "chip-sim" | "chip" => Ok(Self::ChipSim),
+            other => bail!("unknown engine {other:?} (expected golden|chip-sim)"),
+        }
+    }
+
+    /// Canonical backend name (matches `InferenceEngine::name`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Golden => "golden",
+            Self::ChipSim => "chip-sim",
+        }
+    }
+}
+
+/// Parse a heterogeneous pool spec like `golden:3,chip-sim:1` into one
+/// [`EngineKind`] per worker slot (a bare name counts as `:1`).
+pub fn parse_pool(spec: &str) -> Result<Vec<EngineKind>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (kind, count) = match part.split_once(':') {
+            Some((k, c)) => {
+                let n: usize = c
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad worker count {c:?} in {part:?}"))?;
+                (EngineKind::parse(k.trim())?, n)
+            }
+            None => (EngineKind::parse(part)?, 1),
+        };
+        out.extend(std::iter::repeat(kind).take(count));
+    }
+    if out.is_empty() {
+        bail!("empty pool spec {spec:?}");
+    }
+    Ok(out)
+}
+
+/// The geometry gate every engine runs before touching a batch: a pixel
+/// count that doesn't match the model is a typed error (→
+/// `ServeError::EngineFailed`), never a downstream panic or garbage
+/// logits.
+fn check_geometry(registry: &ModelRegistry, model: ModelId, images: &[Vec<u8>]) -> Result<()> {
+    let m = registry.get(model);
+    let want = m.in_channels * m.in_size * m.in_size;
+    for (i, img) in images.iter().enumerate() {
+        if img.len() != want {
+            bail!(
+                "image {i}: {} pixels, but model {:?} expects {} ({}x{}x{})",
+                img.len(),
+                registry.name(model),
+                want,
+                m.in_channels,
+                m.in_size,
+                m.in_size
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Golden functional model engine (pure rust, any batch size).
 ///
 /// Owns a [`Scratch`] arena reused across every request the worker
-/// serves, so steady-state inference allocates nothing — the worker
-/// thread's analogue of the chip's fixed SRAM working set.
+/// serves plus a bounded LRU of packed [`Network`]s (capacity-K, keyed
+/// by [`ModelId`]), so steady-state multi-model inference allocates and
+/// packs nothing — the worker thread's analogue of the chip's fixed SRAM
+/// working set.
 pub struct GoldenEngine {
-    net: Network,
+    registry: Arc<ModelRegistry>,
     batch: usize,
     scratch: Scratch,
+    /// Packed networks, most-recently-used first.
+    cache: Vec<(ModelId, Network)>,
+    capacity: usize,
+    stats: CacheStats,
 }
 
 impl GoldenEngine {
-    /// Wrap a loaded network; `batch` is the batcher's grouping target.
-    pub fn new(net: Network, batch: usize) -> Self {
-        Self { net, batch, scratch: Scratch::new() }
+    /// Engine over `registry`; `batch` is the batcher's grouping target.
+    pub fn new(registry: Arc<ModelRegistry>, batch: usize) -> Self {
+        Self::with_cache_capacity(registry, batch, DEFAULT_MODEL_CACHE)
+    }
+
+    /// Engine keeping up to `capacity` models packed (clamped to ≥ 1).
+    pub fn with_cache_capacity(
+        registry: Arc<ModelRegistry>,
+        batch: usize,
+        capacity: usize,
+    ) -> Self {
+        Self {
+            registry,
+            batch,
+            scratch: Scratch::new(),
+            cache: Vec::new(),
+            capacity: capacity.max(1),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Move `model`'s packed network to the cache front, packing it on a
+    /// miss (evicting the LRU entry when full).
+    fn prepare(&mut self, model: ModelId) {
+        self.stats.lookups += 1;
+        if let Some(pos) = self.cache.iter().position(|(id, _)| *id == model) {
+            self.stats.hits += 1;
+            let hit = self.cache.remove(pos);
+            self.cache.insert(0, hit);
+        } else {
+            self.stats.misses += 1;
+            self.stats.packs += 1;
+            let net = Network::new(self.registry.get(model).as_ref().clone());
+            if self.cache.len() >= self.capacity {
+                self.cache.pop();
+                self.stats.evictions += 1;
+            }
+            self.cache.insert(0, (model, net));
+        }
     }
 }
 
@@ -59,26 +182,32 @@ impl InferenceEngine for GoldenEngine {
         self.batch
     }
 
-    fn infer(&mut self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
-        Ok(images
-            .iter()
-            .map(|img| self.net.infer_u8_with(img, &mut self.scratch))
-            .collect())
+    fn infer(&mut self, model: ModelId, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
+        check_geometry(&self.registry, model, images)?;
+        self.prepare(model);
+        let net = &self.cache[0].1;
+        let scratch = &mut self.scratch;
+        Ok(images.iter().map(|img| net.infer_u8_with(img, scratch)).collect())
     }
 
     fn name(&self) -> &'static str {
         "golden"
     }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.stats
+    }
 }
 
 /// Cycle-accurate chip simulator engine (reports hardware latency too).
 ///
-/// The worker's [`Chip`] caches its packed model + scratch arena across
-/// requests (PR5), so steady-state batches re-pack nothing — asserted by
+/// The worker's [`Chip`] carries the bounded LRU packed-model cache +
+/// scratch arena (PR5 generalized in PR9), so steady-state multi-model
+/// batches re-pack nothing while resident — asserted by
 /// `chip_engine_packs_once_per_model` below.
 pub struct ChipEngine {
     chip: Chip,
-    net: Network,
+    registry: Arc<ModelRegistry>,
     batch: usize,
     /// Simulated chip latency accumulated across batches (us).
     pub simulated_us: f64,
@@ -86,8 +215,34 @@ pub struct ChipEngine {
 
 impl ChipEngine {
     /// Fast-mode chip engine on the given hardware config.
-    pub fn new(hw: HwConfig, net: Network, batch: usize) -> Self {
-        Self { chip: Chip::new(hw, SimMode::Fast), net, batch, simulated_us: 0.0 }
+    pub fn new(hw: HwConfig, registry: Arc<ModelRegistry>, batch: usize) -> Self {
+        Self::with_mode(hw, SimMode::Fast, registry, batch)
+    }
+
+    /// Chip engine at an explicit fidelity — Exact-mode workers are
+    /// viable pool members since the Exact datapath was arena-ized.
+    pub fn with_mode(
+        hw: HwConfig,
+        mode: SimMode,
+        registry: Arc<ModelRegistry>,
+        batch: usize,
+    ) -> Self {
+        Self { chip: Chip::new(hw, mode), registry, batch, simulated_us: 0.0 }
+    }
+
+    /// Fast-mode engine keeping up to `capacity` models packed.
+    pub fn with_cache_capacity(
+        hw: HwConfig,
+        registry: Arc<ModelRegistry>,
+        batch: usize,
+        capacity: usize,
+    ) -> Self {
+        Self {
+            chip: Chip::with_cache_capacity(hw, SimMode::Fast, capacity),
+            registry,
+            batch,
+            simulated_us: 0.0,
+        }
     }
 }
 
@@ -96,10 +251,12 @@ impl InferenceEngine for ChipEngine {
         self.batch
     }
 
-    fn infer(&mut self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
+    fn infer(&mut self, model: ModelId, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
+        check_geometry(&self.registry, model, images)?;
+        let m = Arc::clone(self.registry.get(model));
         let mut out = Vec::with_capacity(images.len());
         for img in images {
-            let report = self.chip.run(&self.net.model, img);
+            let report = self.chip.run(&m, img);
             self.simulated_us += report.latency_us;
             out.push(report.logits);
         }
@@ -109,40 +266,9 @@ impl InferenceEngine for ChipEngine {
     fn name(&self) -> &'static str {
         "chip-sim"
     }
-}
 
-/// PJRT engine: runs the AOT-compiled JAX/Pallas module.  Batches smaller
-/// than the compiled size are padded with zero images and the padding
-/// results dropped.
-pub struct PjrtEngine {
-    exe: PjrtExecutor,
-}
-
-impl PjrtEngine {
-    /// Wrap a compiled executable.
-    pub fn new(exe: PjrtExecutor) -> Self {
-        Self { exe }
-    }
-}
-
-impl InferenceEngine for PjrtEngine {
-    fn batch_size(&self) -> usize {
-        self.exe.batch
-    }
-
-    fn infer(&mut self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
-        let pixels = self.exe.channels * self.exe.size * self.exe.size;
-        let n = images.len();
-        anyhow::ensure!(n <= self.exe.batch, "batch overflow");
-        let mut padded: Vec<Vec<u8>> = images.to_vec();
-        padded.resize(self.exe.batch, vec![0u8; pixels]);
-        let mut logits = self.exe.infer(&padded)?;
-        logits.truncate(n);
-        Ok(logits)
-    }
-
-    fn name(&self) -> &'static str {
-        "pjrt"
+    fn cache_stats(&self) -> CacheStats {
+        self.chip.cache_stats()
     }
 }
 
@@ -151,8 +277,8 @@ mod tests {
     use super::*;
     use crate::snn::params::{DeployedModel, Kind, Layer};
 
-    fn net() -> Network {
-        Network::new(DeployedModel {
+    fn model() -> DeployedModel {
+        DeployedModel {
             name: "e".into(),
             num_steps: 2,
             in_channels: 1,
@@ -169,42 +295,117 @@ mod tests {
                 },
                 Layer::Readout { n_out: 10, n_in: 32, w: vec![1; 320] },
             ],
-        })
+        }
+    }
+
+    fn single() -> (Arc<ModelRegistry>, ModelId) {
+        ModelRegistry::single(model())
     }
 
     #[test]
     fn golden_engine_batches() {
-        let mut e = GoldenEngine::new(net(), 4);
-        let out = e.infer(&[vec![100; 16], vec![255; 16]]).unwrap();
+        let (reg, id) = single();
+        let mut e = GoldenEngine::new(reg, 4);
+        let out = e.infer(id, &[vec![100; 16], vec![255; 16]]).unwrap();
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].len(), 10);
     }
 
     #[test]
     fn chip_engine_accumulates_latency() {
-        let mut e = ChipEngine::new(HwConfig::default(), net(), 2);
-        e.infer(&[vec![100; 16]]).unwrap();
+        let (reg, id) = single();
+        let mut e = ChipEngine::new(HwConfig::default(), reg, 2);
+        e.infer(id, &[vec![100; 16]]).unwrap();
         let after_one = e.simulated_us;
-        e.infer(&[vec![100; 16], vec![9; 16]]).unwrap();
+        e.infer(id, &[vec![100; 16], vec![9; 16]]).unwrap();
         assert!(e.simulated_us > after_one);
     }
 
     #[test]
     fn engines_agree() {
-        let mut g = GoldenEngine::new(net(), 4);
-        let mut c = ChipEngine::new(HwConfig::default(), net(), 4);
+        let (reg, id) = single();
+        let mut g = GoldenEngine::new(Arc::clone(&reg), 4);
+        let mut c = ChipEngine::new(HwConfig::default(), reg, 4);
         let imgs = vec![vec![37; 16], vec![200; 16]];
-        assert_eq!(g.infer(&imgs).unwrap(), c.infer(&imgs).unwrap());
+        assert_eq!(g.infer(id, &imgs).unwrap(), c.infer(id, &imgs).unwrap());
     }
 
     /// Serving batches re-use the worker chip's packed model: however
-    /// many images flow through, the model is packed exactly once.
+    /// many images flow through, a resident model is packed exactly once.
     #[test]
     fn chip_engine_packs_once_per_model() {
-        let mut e = ChipEngine::new(HwConfig::default(), net(), 4);
+        let (reg, id) = single();
+        let mut e = ChipEngine::new(HwConfig::default(), reg, 4);
         let imgs: Vec<Vec<u8>> = (0..4).map(|i| vec![(i * 60) as u8; 16]).collect();
-        e.infer(&imgs).unwrap();
-        e.infer(&imgs).unwrap();
+        e.infer(id, &imgs).unwrap();
+        e.infer(id, &imgs).unwrap();
         assert_eq!(e.chip.pack_count(), 1);
+        let s = e.cache_stats();
+        assert_eq!((s.lookups, s.hits, s.misses), (8, 7, 1));
+    }
+
+    /// Regression (PR9 satellite): a pixel-count mismatch is a typed
+    /// error from both engines, not a panic or garbage logits.
+    #[test]
+    fn geometry_mismatch_is_a_typed_error() {
+        let (reg, id) = single();
+        let mut g = GoldenEngine::new(Arc::clone(&reg), 4);
+        let mut c = ChipEngine::new(HwConfig::default(), reg, 4);
+        // model wants 1x4x4 = 16 pixels; send 15 and 17.
+        for bad in [vec![0u8; 15], vec![0u8; 17]] {
+            let ge = g.infer(id, &[bad.clone()]).unwrap_err();
+            assert!(ge.to_string().contains("expects 16"), "golden: {ge}");
+            let ce = c.infer(id, &[bad]).unwrap_err();
+            assert!(ce.to_string().contains("expects 16"), "chip: {ce}");
+        }
+        // A good batch with one bad member fails as a unit (the
+        // coordinator then splits and retries per PR6).
+        let e = g.infer(id, &[vec![1; 16], vec![2; 3]]).unwrap_err();
+        assert!(e.to_string().contains("image 1"), "{e}");
+        // And the engines still serve well-formed traffic afterwards.
+        assert_eq!(g.infer(id, &[vec![7; 16]]).unwrap().len(), 1);
+    }
+
+    /// The golden engine's LRU mirrors the chip's: A/B/A under capacity 2
+    /// packs twice, capacity 1 thrashes, counters balance.
+    #[test]
+    fn golden_engine_lru_counters_balance() {
+        use crate::testing::{models, Gen};
+        let (a, img_a) = models::random_model_tiny(&mut Gen::new(11));
+        let (b, img_b) = models::random_model_tiny(&mut Gen::new(22));
+        let mut reg = ModelRegistry::new();
+        let ia = reg.register("a", a).unwrap();
+        let ib = reg.register("b", b).unwrap();
+        let reg = Arc::new(reg);
+
+        let mut two = GoldenEngine::with_cache_capacity(Arc::clone(&reg), 4, 2);
+        for _ in 0..3 {
+            two.infer(ia, &[img_a.clone()]).unwrap();
+            two.infer(ib, &[img_b.clone()]).unwrap();
+        }
+        let s = two.cache_stats();
+        assert_eq!((s.packs, s.evictions, s.lookups), (2, 0, 6));
+        assert_eq!(s.hits + s.misses, s.lookups);
+        assert_eq!(s.packs, s.misses);
+
+        let mut one = GoldenEngine::with_cache_capacity(reg, 4, 1);
+        for _ in 0..3 {
+            one.infer(ia, &[img_a.clone()]).unwrap();
+            one.infer(ib, &[img_b.clone()]).unwrap();
+        }
+        let s = one.cache_stats();
+        assert_eq!((s.packs, s.evictions, s.hits), (6, 5, 0));
+    }
+
+    #[test]
+    fn pool_spec_parses() {
+        use EngineKind::*;
+        let mixed = parse_pool("golden:3,chip-sim:1").unwrap();
+        assert_eq!(mixed, vec![Golden, Golden, Golden, ChipSim]);
+        assert_eq!(parse_pool("golden").unwrap(), vec![Golden]);
+        assert_eq!(parse_pool("chip:2").unwrap(), vec![ChipSim, ChipSim]);
+        assert!(parse_pool("pjrt:1").is_err());
+        assert!(parse_pool("").is_err());
+        assert!(parse_pool("golden:x").is_err());
     }
 }

@@ -9,7 +9,9 @@
 //! wrapped engine's results — a request that completes under injection
 //! is bit-identical to a fault-free run on the same image.
 
+use crate::arch::CacheStats;
 use crate::coordinator::engine::InferenceEngine;
+use crate::coordinator::registry::ModelId;
 use crate::util::rng::SplitMix64;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -120,7 +122,7 @@ impl InferenceEngine for FaultEngine {
         self.inner.batch_size()
     }
 
-    fn infer(&mut self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
+    fn infer(&mut self, model: ModelId, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
         self.stats.calls.fetch_add(1, Ordering::Relaxed);
         let u = self.rng.next_f64();
         let p = self.profile;
@@ -136,11 +138,17 @@ impl InferenceEngine for FaultEngine {
             self.stats.spikes.fetch_add(1, Ordering::Relaxed);
             std::thread::sleep(p.spike);
         }
-        self.inner.infer(images)
+        self.inner.infer(model, images)
     }
 
     fn name(&self) -> &'static str {
-        "fault-injected"
+        // Transparent middleware: report the wrapped backend so the
+        // coordinator's per-backend telemetry rows stay meaningful.
+        self.inner.name()
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.inner.cache_stats()
     }
 }
 
@@ -154,7 +162,7 @@ mod tests {
         fn batch_size(&self) -> usize {
             4
         }
-        fn infer(&mut self, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
+        fn infer(&mut self, _m: ModelId, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>> {
             Ok(images.iter().map(|i| vec![i[0] as i64; 10]).collect())
         }
         fn name(&self) -> &'static str {
@@ -162,11 +170,13 @@ mod tests {
         }
     }
 
+    const M: ModelId = ModelId(0);
+
     /// Record which calls fail for a given (profile, seed) — panics are
     /// not triggered here, only predicted from the same rng stream.
     fn error_schedule(rate: f64, seed: u64, calls: usize) -> Vec<bool> {
         let mut eng = FaultEngine::new(Box::new(EchoEngine), FaultProfile::errors(rate), seed);
-        (0..calls).map(|_| eng.infer(&[vec![1u8; 4]]).is_err()).collect()
+        (0..calls).map(|_| eng.infer(M, &[vec![1u8; 4]]).is_err()).collect()
     }
 
     #[test]
@@ -183,7 +193,7 @@ mod tests {
         let mut fe = FaultEngine::new(Box::new(EchoEngine), FaultProfile::clean(), 7);
         let mut plain = EchoEngine;
         let imgs = vec![vec![9u8; 4], vec![200u8; 4]];
-        assert_eq!(fe.infer(&imgs).unwrap(), plain.infer(&imgs).unwrap());
+        assert_eq!(fe.infer(M, &imgs).unwrap(), plain.infer(M, &imgs).unwrap());
         assert_eq!(fe.stats().injected(), 0);
         assert_eq!(fe.stats().calls.load(Ordering::Relaxed), 1);
     }
@@ -201,8 +211,8 @@ mod tests {
         let mut plain = EchoEngine;
         let imgs = vec![vec![37u8; 4]];
         for _ in 0..100 {
-            if let Ok(out) = fe.infer(&imgs) {
-                assert_eq!(out, plain.infer(&imgs).unwrap());
+            if let Ok(out) = fe.infer(M, &imgs) {
+                assert_eq!(out, plain.infer(M, &imgs).unwrap());
             }
         }
         assert!(fe.stats().errors.load(Ordering::Relaxed) > 10);

@@ -2,13 +2,30 @@
 //! `vsa serve-bench` and `benches/bench_serve.rs`.
 //!
 //! `submitters` threads each drive a closed loop (submit, wait for the
-//! typed outcome, repeat) over a round-robin slice of the image set, so
-//! concurrency is bounded and the tally is exact: every request lands in
-//! exactly one [`LoadReport`] bucket, which the callers cross-check
-//! against the coordinator's own counters.
+//! typed outcome, repeat) over a weighted model mix, so concurrency is
+//! bounded and the tally is exact: every request lands in exactly one
+//! [`LoadReport`] bucket, which the callers cross-check against the
+//! coordinator's own counters.
+//!
+//! Multi-model (PR9): traffic is a weighted set of [`ModelTraffic`]
+//! entries.  The model for global request `i` is picked by a
+//! deterministic hash of `i` (no RNG state, no clock), so the same spec
+//! replays the same interleaving on every run and across submitter
+//! counts.
 
+use crate::coordinator::registry::ModelId;
 use crate::coordinator::server::{Coordinator, RejectReason, ServeError, ServeResult};
 use std::time::{Duration, Instant};
+
+/// One model's share of the generated traffic.
+#[derive(Debug, Clone)]
+pub struct ModelTraffic {
+    pub model: ModelId,
+    /// Relative weight of this model in the mix (picked per request).
+    pub weight: u32,
+    /// Images cycled round-robin for this model's requests.
+    pub images: Vec<Vec<u8>>,
+}
 
 /// How the generator drives the pool.
 #[derive(Debug, Clone)]
@@ -88,13 +105,35 @@ impl LoadReport {
     }
 }
 
-/// Drive `spec.requests` requests through `coord`, cycling over
-/// `images`, and tally every typed outcome.  Submit-time rejections
-/// (queue full, dead pool) are tallied in the same buckets as
-/// post-acceptance sheds, so the report always sums to the request
-/// count.
-pub fn run_load(coord: &Coordinator, images: &[Vec<u8>], spec: &LoadSpec) -> LoadReport {
-    assert!(!images.is_empty(), "run_load needs at least one image");
+/// Which traffic entry serves global request `i`: a SplitMix-style hash
+/// of the request index walks the cumulative weights — deterministic,
+/// stateless, and independent of the submitter thread that issues it.
+pub fn pick_traffic(traffic: &[ModelTraffic], i: usize) -> usize {
+    let total: u64 = traffic.iter().map(|t| t.weight as u64).sum();
+    debug_assert!(total > 0, "traffic weights must not all be zero");
+    let h = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut r = (h >> 33) % total;
+    for (t, tr) in traffic.iter().enumerate() {
+        if r < tr.weight as u64 {
+            return t;
+        }
+        r -= tr.weight as u64;
+    }
+    unreachable!("cumulative weight walk covers the draw range")
+}
+
+/// Drive `spec.requests` requests through `coord` over the weighted
+/// model mix, cycling each model's image set, and tally every typed
+/// outcome.  Submit-time rejections (queue full, dead pool) are tallied
+/// in the same buckets as post-acceptance sheds, so the report always
+/// sums to the request count.
+pub fn run_load(coord: &Coordinator, traffic: &[ModelTraffic], spec: &LoadSpec) -> LoadReport {
+    assert!(!traffic.is_empty(), "run_load needs at least one traffic entry");
+    assert!(
+        traffic.iter().all(|t| !t.images.is_empty()),
+        "every traffic entry needs at least one image"
+    );
+    assert!(traffic.iter().any(|t| t.weight > 0), "at least one weight must be positive");
     let t0 = Instant::now();
     let subs = spec.submitters.max(1);
     let n = spec.requests;
@@ -106,11 +145,12 @@ pub fn run_load(coord: &Coordinator, images: &[Vec<u8>], spec: &LoadSpec) -> Loa
                 let mut tally = LoadReport::default();
                 let mut i = t;
                 while i < n {
-                    let image = images[i % images.len()].clone();
+                    let tr = &traffic[pick_traffic(traffic, i)];
+                    let image = tr.images[i % tr.images.len()].clone();
                     let submitted = match spec.submit_wait {
-                        None => coord.submit(image),
-                        Some(w) if w.is_zero() => coord.try_submit(image),
-                        Some(w) => coord.submit_timeout(image, w),
+                        None => coord.submit(tr.model, image),
+                        Some(w) if w.is_zero() => coord.try_submit(tr.model, image),
+                        Some(w) => coord.submit_timeout(tr.model, image, w),
                     };
                     let outcome = match submitted {
                         Ok(rx) => rx.recv().unwrap_or(Err(ServeError::WorkerPanicked)),
@@ -130,34 +170,98 @@ pub fn run_load(coord: &Coordinator, images: &[Vec<u8>], spec: &LoadSpec) -> Loa
     total
 }
 
+/// Single-model convenience: all requests go to `model`.
+pub fn run_load_single(
+    coord: &Coordinator,
+    model: ModelId,
+    images: &[Vec<u8>],
+    spec: &LoadSpec,
+) -> LoadReport {
+    let traffic = [ModelTraffic { model, weight: 1, images: images.to_vec() }];
+    run_load(coord, &traffic, spec)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::models;
     use crate::coordinator::engine::GoldenEngine;
+    use crate::coordinator::registry::ModelRegistry;
     use crate::coordinator::server::CoordinatorConfig;
     use crate::data::synth;
     use crate::snn::params::DeployedModel;
-    use crate::snn::Network;
+    use crate::telemetry::Registry;
+    use std::sync::Arc;
 
-    fn tiny_net() -> Network {
-        Network::new(DeployedModel::synthesize(&models::tiny(2), 42))
+    fn tiny(seed: u64) -> DeployedModel {
+        DeployedModel::synthesize(&models::tiny(2), seed)
+    }
+
+    fn images() -> Vec<Vec<u8>> {
+        synth::tiny_like(3, 0, 8).into_iter().map(|s| s.image).collect()
     }
 
     #[test]
     fn clean_load_completes_everything_and_balances() {
+        let (reg, m) = ModelRegistry::single(tiny(42));
+        let regc = Arc::clone(&reg);
         let coord = Coordinator::start(
             CoordinatorConfig { workers: 2, max_batch: 4, ..CoordinatorConfig::default() },
-            |_| Box::new(GoldenEngine::new(tiny_net(), 4)),
+            reg,
+            move |_| Box::new(GoldenEngine::new(Arc::clone(&regc), 4)),
         );
-        let samples = synth::tiny_like(3, 0, 8);
-        let images: Vec<Vec<u8>> = samples.into_iter().map(|s| s.image).collect();
         let spec = LoadSpec { requests: 40, submitters: 4, submit_wait: None };
-        let report = run_load(&coord, &images, &spec);
+        let report = run_load_single(&coord, m, &images(), &spec);
         assert_eq!(report.total(), 40);
         assert_eq!(report.ok, 40, "clean run: everything completes");
         let stats = coord.shutdown();
         assert_eq!(stats.submitted, 40);
         assert_eq!(stats.completed + stats.failed + stats.shed, stats.submitted);
+    }
+
+    #[test]
+    fn pick_traffic_is_deterministic_and_roughly_weighted() {
+        let mut reg = ModelRegistry::new();
+        let a = reg.register("a", tiny(1)).unwrap();
+        let b = reg.register("b", tiny(2)).unwrap();
+        let traffic = [
+            ModelTraffic { model: a, weight: 3, images: vec![vec![0u8; 4]] },
+            ModelTraffic { model: b, weight: 1, images: vec![vec![0u8; 4]] },
+        ];
+        let picks: Vec<usize> = (0..4000).map(|i| pick_traffic(&traffic, i)).collect();
+        let again: Vec<usize> = (0..4000).map(|i| pick_traffic(&traffic, i)).collect();
+        assert_eq!(picks, again, "same index, same pick — replayable");
+        let heavy = picks.iter().filter(|&&p| p == 0).count();
+        // 4000 draws at p=0.75: expect ~3000; allow a wide 6-sigma band.
+        assert!((2800..=3200).contains(&heavy), "got {heavy} picks of the 3-weight model");
+    }
+
+    #[test]
+    fn mixed_load_reaches_both_models() {
+        let mut reg = ModelRegistry::new();
+        let a = reg.register("a", tiny(1)).unwrap();
+        let b = reg.register("b", tiny(2)).unwrap();
+        let reg = Arc::new(reg);
+        let regc = Arc::clone(&reg);
+        let mut coord = Coordinator::start(
+            CoordinatorConfig { workers: 2, max_batch: 4, ..CoordinatorConfig::default() },
+            Arc::clone(&reg),
+            move |_| Box::new(GoldenEngine::new(Arc::clone(&regc), 4)),
+        );
+        let traffic = [
+            ModelTraffic { model: a, weight: 1, images: images() },
+            ModelTraffic { model: b, weight: 1, images: images() },
+        ];
+        let spec = LoadSpec { requests: 48, submitters: 4, submit_wait: None };
+        let report = run_load(&coord, &traffic, &spec);
+        assert_eq!(report.ok, 48);
+        coord.drain();
+        let treg = Registry::new();
+        coord.export_into(&treg, "serve");
+        let snap = treg.snapshot();
+        let ca = snap.counters["serve.model.a.completed"];
+        let cb = snap.counters["serve.model.b.completed"];
+        assert_eq!(ca + cb, 48, "per-model completions sum to the request count");
+        assert!(ca > 0 && cb > 0, "both models saw traffic (got {ca}/{cb})");
     }
 }

@@ -5,9 +5,8 @@
 //! requests: a bounded submission queue applies backpressure, a batcher
 //! groups requests up to the compiled batch size with a small timeout, and
 //! worker threads run the batches on an [`engine::InferenceEngine`]
-//! (golden model, chip simulator, or the PJRT executable — python is never
-//! involved).  Built on std threads + channels (tokio is unavailable in
-//! this offline environment).
+//! (golden model or chip simulator).  Built on std threads + channels
+//! (tokio is unavailable in this offline environment).
 //!
 //! Since PR6 the coordinator is fault-tolerant end to end: every request
 //! terminates with an [`InferResult`] or a typed [`ServeError`]
@@ -19,16 +18,24 @@
 //! Since PR7 it is observable end to end: lock-free per-worker latency
 //! sketch shards, per-request stage traces, and a registry exporter
 //! (README §OBSERVABILITY, `crate::telemetry`).
+//!
+//! Since PR9 the model is a per-request property: a [`registry::ModelRegistry`]
+//! holds the deployed models, every submit names a [`registry::ModelId`],
+//! batches are partitioned so models never mix, engines keep bounded LRU
+//! caches of packed models, and heterogeneous pools (`golden:3,chip-sim:1`)
+//! drain one queue with per-model/per-backend telemetry.
 
 pub mod batcher;
 pub mod engine;
 pub mod fault;
 pub mod loadgen;
+pub mod registry;
 pub mod server;
 
-pub use engine::{ChipEngine, EngineKind, GoldenEngine, InferenceEngine, PjrtEngine};
+pub use engine::{parse_pool, ChipEngine, EngineKind, GoldenEngine, InferenceEngine};
 pub use fault::{FaultEngine, FaultProfile, FaultStats};
-pub use loadgen::{run_load, LoadReport, LoadSpec};
+pub use loadgen::{run_load, run_load_single, LoadReport, LoadSpec, ModelTraffic};
+pub use registry::{ModelId, ModelRegistry};
 pub use server::{
     Coordinator, CoordinatorConfig, InferResult, RejectReason, ServeError, ServeResult, ServeStats,
     StageBreakdown,

@@ -1,0 +1,173 @@
+//! Model registry: named [`DeployedModel`]s behind stable [`ModelId`]s.
+//!
+//! PR9 makes the model a *per-request* property instead of a per-process
+//! constant: the coordinator is started with an `Arc<ModelRegistry>`,
+//! every submit names a [`ModelId`], and the engines resolve the id to a
+//! shared [`DeployedModel`] on demand (packing it into their bounded LRU
+//! caches — see [`crate::arch::Chip`] and
+//! [`crate::coordinator::GoldenEngine`]).  The registry is immutable
+//! after startup, so workers share it without locks.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::snn::params::DeployedModel;
+use anyhow::{anyhow, bail, Result};
+
+/// Stable per-registry model handle.  Ids are dense indices assigned in
+/// registration order, so they double as array indices for per-model
+/// telemetry slots (`ModelId::index`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId(pub u32);
+
+impl ModelId {
+    /// Dense index into per-model slot arrays.
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "m{}", self.0)
+    }
+}
+
+/// Immutable set of deployed models shared across the worker pool.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: Vec<Arc<DeployedModel>>,
+    names: Vec<String>,
+}
+
+impl ModelRegistry {
+    /// Empty registry; add models with [`register`](Self::register) /
+    /// [`load_file`](Self::load_file), then wrap in an `Arc`.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Convenience for the single-model case: a one-entry registry (named
+    /// after the model) already wrapped in an `Arc`, plus its id.
+    pub fn single(model: DeployedModel) -> (Arc<Self>, ModelId) {
+        let mut reg = Self::new();
+        let name = model.name.clone();
+        let id = reg.register(&name, model).expect("fresh registry");
+        (Arc::new(reg), id)
+    }
+
+    /// Register a model under `name`.  Names must be unique.
+    pub fn register(&mut self, name: &str, model: DeployedModel) -> Result<ModelId> {
+        if name.is_empty() {
+            bail!("model name must be non-empty");
+        }
+        if self.names.iter().any(|n| n == name) {
+            bail!("duplicate model name {name:?}");
+        }
+        let id = ModelId(self.models.len() as u32);
+        self.models.push(Arc::new(model));
+        self.names.push(name.to_string());
+        Ok(id)
+    }
+
+    /// Load a `.vsaw` artifact from `path` and register it under `name`.
+    pub fn load_file(&mut self, name: &str, path: &str) -> Result<ModelId> {
+        let model =
+            DeployedModel::from_file(path).map_err(|e| anyhow!("loading {path}: {e}"))?;
+        self.register(name, model)
+    }
+
+    /// Resolve an id to its model.  Panics on a foreign id — ids are only
+    /// minted by this registry, so that is a caller bug, not a request
+    /// error.
+    pub fn get(&self, id: ModelId) -> &Arc<DeployedModel> {
+        &self.models[id.index()]
+    }
+
+    /// Look a model up by registration name.
+    pub fn by_name(&self, name: &str) -> Option<ModelId> {
+        self.names.iter().position(|n| n == name).map(|i| ModelId(i as u32))
+    }
+
+    /// The registration name of `id`.
+    pub fn name(&self, id: ModelId) -> &str {
+        &self.names[id.index()]
+    }
+
+    /// Expected input size of `id` in pixels (`C*H*W`) — the request
+    /// geometry every engine validates before running a batch.
+    pub fn pixels(&self, id: ModelId) -> usize {
+        let m = self.get(id);
+        m.in_channels * m.in_size * m.in_size
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    /// True when no model is registered.
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// All ids in registration order.
+    pub fn ids(&self) -> impl Iterator<Item = ModelId> {
+        (0..self.models.len() as u32).map(ModelId)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{models, Gen};
+
+    #[test]
+    fn register_lookup_roundtrip() {
+        let (a, _) = models::random_model_tiny(&mut Gen::new(1));
+        let (b, _) = models::random_model_tiny(&mut Gen::new(2));
+        let mut reg = ModelRegistry::new();
+        let ia = reg.register("a", a.clone()).unwrap();
+        let ib = reg.register("b", b).unwrap();
+        assert_ne!(ia, ib);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.by_name("a"), Some(ia));
+        assert_eq!(reg.by_name("b"), Some(ib));
+        assert_eq!(reg.by_name("c"), None);
+        assert_eq!(reg.name(ia), "a");
+        assert_eq!(reg.pixels(ia), a.in_channels * a.in_size * a.in_size);
+        assert_eq!(reg.ids().collect::<Vec<_>>(), vec![ia, ib]);
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let (m, _) = models::random_model_tiny(&mut Gen::new(3));
+        let mut reg = ModelRegistry::new();
+        reg.register("m", m.clone()).unwrap();
+        assert!(reg.register("m", m).is_err());
+    }
+
+    #[test]
+    fn single_wraps_one_model() {
+        let (m, _) = models::random_model_tiny(&mut Gen::new(4));
+        let name = m.name.clone();
+        let (reg, id) = ModelRegistry::single(m);
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.by_name(&name), Some(id));
+    }
+
+    #[test]
+    fn load_file_roundtrips_vsaw_bytes() {
+        let (m, _) = models::random_model_tiny(&mut Gen::new(5));
+        let dir = std::env::temp_dir().join("vsa_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.vsaw");
+        std::fs::write(&path, m.to_bytes()).unwrap();
+        let mut reg = ModelRegistry::new();
+        let id = reg.load_file("disk", path.to_str().unwrap()).unwrap();
+        assert_eq!(reg.get(id).num_steps, m.num_steps);
+        assert_eq!(reg.pixels(id), m.in_channels * m.in_size * m.in_size);
+        assert!(reg.load_file("bad", "/nonexistent/x.vsaw").is_err());
+    }
+}

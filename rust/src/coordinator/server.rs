@@ -24,9 +24,21 @@
 //! from the very same stamps the request's [`Trace`] is built from —
 //! the two views agree by construction, and `rust/tests/spans.rs`
 //! asserts it.
+//!
+//! Multi-model serving (PR9): the pool is started against an
+//! `Arc<ModelRegistry>` and every submit names a [`ModelId`].  All
+//! models drain one queue, but a formed batch is partitioned by
+//! `(ModelId, deadline-class)` before it reaches an engine — requests
+//! for different models never share an engine batch.  Workers may run
+//! heterogeneous backends (one engine factory per slot — e.g.
+//! `golden:3,chip-sim:1`), and the telemetry export gains per-model
+//! latency sketches/counters, per-backend rows, and the pool-wide
+//! packed-model LRU cache counters.
 
-use crate::coordinator::batcher::{next_batch, split_expired, Request};
+use crate::arch::CacheStats;
+use crate::coordinator::batcher::{next_batch, partition_by_key, split_expired, Request};
 use crate::coordinator::engine::InferenceEngine;
+use crate::coordinator::registry::{ModelId, ModelRegistry};
 use crate::telemetry::spans::{pids, SpanCollector, SpanRecorder};
 use crate::telemetry::{AtomicSketch, HistogramSketch, LatencySummary, Registry, Stage, Trace};
 use std::cell::RefCell;
@@ -219,6 +231,10 @@ struct WorkerShard {
     latency: AtomicSketch,
     /// Indexed in [`Stage::ALL`] order.
     stages: [AtomicSketch; 5],
+    /// Per-model latency sketch, indexed by `ModelId::index()` (PR9).
+    models: Vec<AtomicSketch>,
+    /// Per-model completion counter, indexed by `ModelId::index()`.
+    model_completed: Vec<AtomicU64>,
     completed: AtomicU64,
     failed: AtomicU64,
     shed: AtomicU64,
@@ -226,13 +242,26 @@ struct WorkerShard {
     restarts: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
+    /// This worker's engine backend name (`"-"` until the engine is
+    /// built; set off the hot path at engine (re)construction).
+    backend: Mutex<&'static str>,
+    /// Absolute packed-model cache counters mirrored from the worker's
+    /// engine after each batch (stored, not added — the engine owns the
+    /// running totals; see [`CacheStats`]).
+    cache_lookups: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_evictions: AtomicU64,
+    cache_packs: AtomicU64,
 }
 
 impl WorkerShard {
-    fn new() -> Self {
+    fn new(n_models: usize) -> Self {
         Self {
             latency: AtomicSketch::new(),
             stages: std::array::from_fn(|_| AtomicSketch::new()),
+            models: (0..n_models).map(|_| AtomicSketch::new()).collect(),
+            model_completed: (0..n_models).map(|_| AtomicU64::new(0)).collect(),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             shed: AtomicU64::new(0),
@@ -240,6 +269,23 @@ impl WorkerShard {
             restarts: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_requests: AtomicU64::new(0),
+            backend: Mutex::new("-"),
+            cache_lookups: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            cache_evictions: AtomicU64::new(0),
+            cache_packs: AtomicU64::new(0),
+        }
+    }
+
+    /// This shard's mirrored packed-model cache counters.
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            lookups: self.cache_lookups.load(Ordering::Relaxed),
+            hits: self.cache_hits.load(Ordering::Relaxed),
+            misses: self.cache_misses.load(Ordering::Relaxed),
+            evictions: self.cache_evictions.load(Ordering::Relaxed),
+            packs: self.cache_packs.load(Ordering::Relaxed),
         }
     }
 }
@@ -267,6 +313,8 @@ const MARK_ENGINE: u8 = 0;
 const MARK_BACKOFF: u8 = 1;
 
 struct Shared {
+    /// The deployed models every submit names a [`ModelId`] into.
+    registry: Arc<ModelRegistry>,
     submitted: AtomicU64,
     /// Span sink when tracing is on (see [`Coordinator::start_with_spans`]).
     spans: Option<Arc<SpanCollector>>,
@@ -281,6 +329,7 @@ struct Shared {
 
 /// Per-request payload travelling through the queue.
 struct Job {
+    model: ModelId,
     image: Vec<u8>,
     resp: Sender<ServeResult>,
     deadline: Option<Instant>,
@@ -291,6 +340,7 @@ struct Job {
 /// the stage-time bookkeeping its [`Trace`] is built from.
 struct Pending {
     id: u64,
+    model: ModelId,
     enqueued: Instant,
     /// When a worker pulled it off the queue (ends the queue stage).
     dequeued: Instant,
@@ -313,10 +363,11 @@ struct Pending {
 
 fn into_pending(req: Request<Job>, batch_ready: Instant) -> (Vec<u8>, Pending) {
     let Request { id, payload, enqueued, dequeued } = req;
-    let Job { image, resp, deadline } = payload;
+    let Job { model, image, resp, deadline } = payload;
     let dequeued = dequeued.unwrap_or(enqueued);
     let pending = Pending {
         id,
+        model,
         enqueued,
         dequeued,
         batch_ready,
@@ -409,6 +460,9 @@ impl WorkerCtx {
                 None
             }
         };
+        if let Some(e) = &engine {
+            *self.shard().backend.lock().unwrap() = e.name();
+        }
         let max_batch = match &engine {
             Some(e) => self.cfg.max_batch.min(e.batch_size()).max(1),
             None => self.cfg.max_batch.max(1),
@@ -441,7 +495,21 @@ impl WorkerCtx {
                 continue;
             }
             if engine.is_some() {
-                self.run_batch(&mut engine, live, batch_ready);
+                // One queue, many models: split the formed batch by
+                // `(ModelId, deadline-class)` — requests for different
+                // models never share an engine batch (PR9).
+                for group in partition_by_key(live, |j: &Job| (j.model, j.deadline.is_some())) {
+                    if engine.is_some() {
+                        self.run_batch(&mut engine, group, batch_ready);
+                    } else {
+                        for req in group {
+                            let (_, pending) = into_pending(req, batch_ready);
+                            let err = ServeError::Rejected(RejectReason::Shutdown);
+                            self.respond(pending, Err(err));
+                        }
+                    }
+                }
+                self.sync_cache_counters(&engine);
             } else {
                 for req in live {
                     let (_, pending) = into_pending(req, batch_ready);
@@ -451,10 +519,26 @@ impl WorkerCtx {
         }
     }
 
-    /// Run one formed batch: a shared first attempt, then — on failure —
-    /// the batch is split and each member retried alone, so one poisoned
-    /// image cannot sink its batchmates.
+    /// Mirror the engine's packed-model cache counters into this
+    /// worker's shard (absolute store — the engine owns the totals).
+    fn sync_cache_counters(&self, engine: &Option<EngineBox>) {
+        let Some(e) = engine else { return };
+        let c = e.cache_stats();
+        let shard = self.shard();
+        shard.cache_lookups.store(c.lookups, Ordering::Relaxed);
+        shard.cache_hits.store(c.hits, Ordering::Relaxed);
+        shard.cache_misses.store(c.misses, Ordering::Relaxed);
+        shard.cache_evictions.store(c.evictions, Ordering::Relaxed);
+        shard.cache_packs.store(c.packs, Ordering::Relaxed);
+    }
+
+    /// Run one formed single-model batch: a shared first attempt, then —
+    /// on failure — the batch is split and each member retried alone, so
+    /// one poisoned image cannot sink its batchmates.  The caller has
+    /// already partitioned by model, so `batch` is homogeneous.
     fn run_batch(&self, engine: &mut Option<EngineBox>, batch: Vec<Request<Job>>, ready: Instant) {
+        let model = batch[0].payload.model;
+        debug_assert!(batch.iter().all(|r| r.payload.model == model), "mixed-model batch");
         let mut images = Vec::with_capacity(batch.len());
         let mut members = Vec::with_capacity(batch.len());
         for req in batch {
@@ -466,7 +550,7 @@ impl WorkerCtx {
         let eng = engine.as_mut().expect("run_batch requires a live engine");
         let span_start = self.span_now();
         let t0 = Instant::now();
-        let outcome = Self::attempt(eng, &images);
+        let outcome = Self::attempt(eng, model, &images);
         let spent_ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
         for pending in members.iter_mut() {
             pending.engine_ns = pending.engine_ns.saturating_add(spent_ns);
@@ -538,7 +622,7 @@ impl WorkerCtx {
             let eng = engine.as_mut().expect("checked above");
             let span_start = self.span_now();
             let t0 = Instant::now();
-            let outcome = Self::attempt(eng, std::slice::from_ref(&image));
+            let outcome = Self::attempt(eng, pending.model, std::slice::from_ref(&image));
             let spent = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
             pending.engine_ns = pending.engine_ns.saturating_add(spent);
             if let Some(start) = span_start {
@@ -568,8 +652,12 @@ impl WorkerCtx {
 
     /// One guarded engine call.  A panic is caught and reported as
     /// [`AttemptError::Panicked`]; the caller must respawn the engine.
-    fn attempt(engine: &mut EngineBox, images: &[Vec<u8>]) -> Result<Vec<Vec<i64>>, AttemptError> {
-        match catch_unwind(AssertUnwindSafe(|| engine.infer(images))) {
+    fn attempt(
+        engine: &mut EngineBox,
+        model: ModelId,
+        images: &[Vec<u8>],
+    ) -> Result<Vec<Vec<i64>>, AttemptError> {
+        match catch_unwind(AssertUnwindSafe(|| engine.infer(model, images))) {
             Ok(Ok(out)) if out.len() == images.len() => Ok(out),
             Ok(Ok(out)) => Err(AttemptError::Failed(format!(
                 "engine returned {} results for {} images",
@@ -593,6 +681,7 @@ impl WorkerCtx {
         }
         match catch_unwind(AssertUnwindSafe(|| (self.make_engine)(self.w))) {
             Ok(e) => {
+                *self.shard().backend.lock().unwrap() = e.name();
                 *engine = Some(e);
                 self.shard().restarts.fetch_add(1, Ordering::Relaxed);
             }
@@ -633,6 +722,9 @@ impl WorkerCtx {
                     shard.stages[i].record(res.trace.stage(s));
                 }
                 shard.completed.fetch_add(1, Ordering::Relaxed);
+                let m = pending.model.index();
+                shard.models[m].record(res.latency);
+                shard.model_completed[m].fetch_add(1, Ordering::Relaxed);
             }
             Err(ServeError::Rejected(_)) => {
                 shard.shed.fetch_add(1, Ordering::Relaxed);
@@ -711,15 +803,18 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the worker pool.  `make_engine` builds one engine per worker
-    /// and runs *inside* that worker's thread (engines need not be `Send`
-    /// — PJRT client handles are thread-local); it is also re-invoked to
-    /// respawn an engine after a caught panic.
+    /// Start the worker pool against a model registry.  `make_engine`
+    /// builds one engine per worker slot and runs *inside* that worker's
+    /// thread (engines need not be `Send`); it is also re-invoked to
+    /// respawn an engine after a caught panic.  Heterogeneous pools hand
+    /// a factory that dispatches on the worker index (see
+    /// [`parse_pool`](crate::coordinator::engine::parse_pool)).
     pub fn start(
         cfg: CoordinatorConfig,
+        registry: Arc<ModelRegistry>,
         make_engine: impl Fn(usize) -> Box<dyn InferenceEngine> + Send + Sync + 'static,
     ) -> Self {
-        Self::start_with_spans(cfg, None, make_engine)
+        Self::start_with_spans(cfg, registry, None, make_engine)
     }
 
     /// [`start`](Coordinator::start) with span tracing attached: each
@@ -729,9 +824,11 @@ impl Coordinator {
     /// [`shutdown`](Coordinator::shutdown) for a complete export.
     pub fn start_with_spans(
         cfg: CoordinatorConfig,
+        registry: Arc<ModelRegistry>,
         spans: Option<Arc<SpanCollector>>,
         make_engine: impl Fn(usize) -> Box<dyn InferenceEngine> + Send + Sync + 'static,
     ) -> Self {
+        assert!(!registry.is_empty(), "coordinator needs at least one deployed model");
         if let Some(sp) = &spans {
             sp.name_process(pids::SERVE_WORKERS, "serve workers");
             sp.name_process(pids::SERVE_REQUESTS, "serve requests");
@@ -742,10 +839,12 @@ impl Coordinator {
         let (tx, rx) = sync_channel::<Request<Job>>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let make_engine: Arc<MakeEngine> = Arc::new(make_engine);
+        let n_models = registry.len();
         let shared = Arc::new(Shared {
+            registry,
             submitted: AtomicU64::new(0),
             spans,
-            shards: (0..cfg.workers).map(|_| WorkerShard::new()).collect(),
+            shards: (0..cfg.workers).map(|_| WorkerShard::new(n_models)).collect(),
             restart_budget: AtomicI64::new(cfg.restart_budget as i64),
             alive: AtomicUsize::new(cfg.workers),
         });
@@ -781,18 +880,27 @@ impl Coordinator {
 
     fn enqueue(
         &self,
+        model: ModelId,
         image: Vec<u8>,
         deadline: Option<Duration>,
         mode: SubmitMode,
     ) -> Result<Receiver<ServeResult>, ServeError> {
+        assert!(
+            model.index() < self.shared.registry.len(),
+            "{model} is not from this coordinator's registry ({} models)",
+            self.shared.registry.len()
+        );
         if self.shared.alive.load(Ordering::SeqCst) == 0 {
             return Err(ServeError::Rejected(RejectReason::Shutdown));
         }
         let (rtx, rrx) = std::sync::mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let job = Job { image, resp: rtx, deadline: deadline.map(|d| Instant::now() + d) };
+        let job = Job { model, image, resp: rtx, deadline: deadline.map(|d| Instant::now() + d) };
         let req = Request { id, payload: job, enqueued: Instant::now(), dequeued: None };
-        let tx = self.tx.as_ref().expect("coordinator not shut down");
+        let Some(tx) = self.tx.as_ref() else {
+            // `drain()` already closed the queue.
+            return Err(ServeError::Rejected(RejectReason::Shutdown));
+        };
         match mode {
             SubmitMode::Block => tx
                 .send(req)
@@ -830,54 +938,89 @@ impl Coordinator {
         Ok(rrx)
     }
 
-    /// Submit one image; blocks when the queue is full (backpressure).
-    /// Returns the receiver for the typed outcome.  Fails fast with
-    /// `Rejected(Shutdown)` when every worker engine is dead.
-    pub fn submit(&self, image: Vec<u8>) -> Result<Receiver<ServeResult>, ServeError> {
-        self.enqueue(image, self.deadline, SubmitMode::Block)
+    /// Submit one image for `model`; blocks when the queue is full
+    /// (backpressure).  Returns the receiver for the typed outcome.
+    /// Fails fast with `Rejected(Shutdown)` when every worker engine is
+    /// dead.  Panics if `model` is not from this coordinator's registry.
+    pub fn submit(
+        &self,
+        model: ModelId,
+        image: Vec<u8>,
+    ) -> Result<Receiver<ServeResult>, ServeError> {
+        self.enqueue(model, image, self.deadline, SubmitMode::Block)
     }
 
     /// Submit without blocking: a full queue sheds the request with
     /// `Rejected(QueueFull)` instead of applying backpressure.
-    pub fn try_submit(&self, image: Vec<u8>) -> Result<Receiver<ServeResult>, ServeError> {
-        self.enqueue(image, self.deadline, SubmitMode::Fail)
+    pub fn try_submit(
+        &self,
+        model: ModelId,
+        image: Vec<u8>,
+    ) -> Result<Receiver<ServeResult>, ServeError> {
+        self.enqueue(model, image, self.deadline, SubmitMode::Fail)
     }
 
     /// Submit, waiting at most `wait` for a queue slot before shedding
     /// with `Rejected(QueueFull)` — the bounded-patience middle ground.
     pub fn submit_timeout(
         &self,
+        model: ModelId,
         image: Vec<u8>,
         wait: Duration,
     ) -> Result<Receiver<ServeResult>, ServeError> {
-        self.enqueue(image, self.deadline, SubmitMode::Wait(wait))
+        self.enqueue(model, image, self.deadline, SubmitMode::Wait(wait))
     }
 
     /// Blocking submit with an explicit per-request deadline overriding
     /// the configured default (`None` = no deadline for this request).
     pub fn submit_with_deadline(
         &self,
+        model: ModelId,
         image: Vec<u8>,
         deadline: Option<Duration>,
     ) -> Result<Receiver<ServeResult>, ServeError> {
-        self.enqueue(image, deadline, SubmitMode::Block)
+        self.enqueue(model, image, deadline, SubmitMode::Block)
     }
 
     /// Convenience: submit and wait for the typed outcome.
-    pub fn infer_blocking(&self, image: Vec<u8>) -> ServeResult {
-        let rx = self.submit(image)?;
+    pub fn infer_blocking(&self, model: ModelId, image: Vec<u8>) -> ServeResult {
+        let rx = self.submit(model, image)?;
         // A dropped sender means a worker died outside the engine guard;
         // surface it as a panic-shaped failure rather than hanging.
         rx.recv().unwrap_or(Err(ServeError::WorkerPanicked))
     }
 
-    /// Drain the queue and join the workers.  Dark workers drain too
-    /// (shedding), so this never deadlocks.
-    pub fn shutdown(mut self) -> ServeStats {
+    /// The registry this pool serves from.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.shared.registry
+    }
+
+    /// Pool-wide packed-model cache counters: the sum of every worker
+    /// engine's [`CacheStats`], as last mirrored after a batch.
+    pub fn cache_totals(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for shard in &self.shared.shards {
+            total.merge(&shard.cache_stats());
+        }
+        total
+    }
+
+    /// Close the queue and join the workers, leaving the coordinator
+    /// readable: after `drain` returns, `stats()`, `export_into()` and
+    /// `cache_totals()` are exact (the cache counters are mirrored from
+    /// the engines once per batch, so mid-run reads lag by at most one
+    /// batch).  Dark workers drain too (shedding), so this never
+    /// deadlocks.  Idempotent.
+    pub fn drain(&mut self) {
         drop(self.tx.take()); // close the queue; workers exit after drain
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+
+    /// Drain the queue, join the workers and return the final stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.drain();
         self.stats()
     }
 
@@ -948,7 +1091,11 @@ impl Coordinator {
 
     /// Export the pool's telemetry into a [`Registry`] under `prefix`:
     /// pool-level counters/gauges, per-worker outcome counters, the
-    /// merged latency sketch, and one sketch per pipeline stage.
+    /// merged latency sketch, one sketch per pipeline stage, and (PR9)
+    /// per-model latency sketches + completion counters
+    /// (`{prefix}.model.{name}.*`), per-backend rows
+    /// (`{prefix}.backend.{name}.*`), and the pool-wide packed-model
+    /// LRU cache counters (`{prefix}.model_cache.*`).
     /// Sketch export is merge-additive — callers publishing periodic
     /// snapshots should export into a fresh registry per tick.
     pub fn export_into(&self, reg: &Registry, prefix: &str) {
@@ -986,6 +1133,46 @@ impl Coordinator {
                 reg.set_counter(&format!("{prefix}.worker.{w}.{name}"), v);
             }
         }
+        // Per-model rows: merged latency sketch + completion counter
+        // keyed by the registry name (fixed iteration order — the
+        // registry is append-only, so snapshots stay deterministic).
+        for id in self.shared.registry.ids() {
+            let (mi, name) = (id.index(), self.shared.registry.name(id));
+            let mut sketch = HistogramSketch::new();
+            let mut done = 0u64;
+            for shard in &self.shared.shards {
+                sketch.merge(&shard.models[mi].snapshot());
+                done += shard.model_completed[mi].load(Ordering::Relaxed);
+            }
+            reg.set_counter(&format!("{prefix}.model.{name}.completed"), done);
+            reg.merge_sketch(&format!("{prefix}.model.{name}.latency"), &sketch);
+        }
+        // Per-backend rows: shards grouped by the engine name each
+        // worker reported at engine (re)construction ("-" = dark or
+        // never built, skipped).
+        let mut backends: Vec<(&'static str, HistogramSketch, u64, u64)> = Vec::new();
+        for shard in &self.shared.shards {
+            let b = *shard.backend.lock().unwrap();
+            if b == "-" {
+                continue;
+            }
+            let slot = match backends.iter().position(|(name, ..)| *name == b) {
+                Some(i) => &mut backends[i],
+                None => {
+                    backends.push((b, HistogramSketch::new(), 0, 0));
+                    backends.last_mut().expect("just pushed")
+                }
+            };
+            slot.1.merge(&shard.latency.snapshot());
+            slot.2 += shard.completed.load(Ordering::Relaxed);
+            slot.3 += 1;
+        }
+        for (b, sketch, done, workers) in &backends {
+            reg.set_counter(&format!("{prefix}.backend.{b}.completed"), *done);
+            reg.set_counter(&format!("{prefix}.backend.{b}.workers"), *workers);
+            reg.merge_sketch(&format!("{prefix}.backend.{b}.latency"), sketch);
+        }
+        self.cache_totals().export_into(reg, &format!("{prefix}.model_cache"));
     }
 }
 
@@ -996,9 +1183,12 @@ mod tests {
     use crate::snn::params::{DeployedModel, Kind, Layer};
     use crate::snn::Network;
 
-    fn net() -> Network {
-        Network::new(DeployedModel {
-            name: "s".into(),
+    /// A 2-step 1x4x4 model whose readout weight is a knob — different
+    /// weights give bit-distinguishable logits (theta 1 guarantees the
+    /// positive encoder channel spikes on any nonzero pixel).
+    fn toy(name: &str, readout_w: i8) -> DeployedModel {
+        DeployedModel {
+            name: name.into(),
             num_steps: 2,
             in_channels: 1,
             in_size: 4,
@@ -1010,16 +1200,30 @@ mod tests {
                     k: 1,
                     w: vec![1, -1],
                     bias: vec![0, 0],
-                    theta: vec![256 * 10, 256 * 10],
+                    theta: vec![1, 1],
                 },
-                Layer::Readout { n_out: 10, n_in: 32, w: vec![1; 320] },
+                Layer::Readout { n_out: 10, n_in: 32, w: vec![readout_w; 320] },
             ],
-        })
+        }
+    }
+
+    fn model() -> DeployedModel {
+        toy("s", 1)
+    }
+
+    /// A one-model registry + the coordinator serving it (golden pool).
+    fn start_single(cfg: CoordinatorConfig, batch: usize) -> (Coordinator, ModelId) {
+        let (reg, m) = ModelRegistry::single(model());
+        let regc = Arc::clone(&reg);
+        let coord = Coordinator::start(cfg, reg, move |_| {
+            Box::new(GoldenEngine::new(Arc::clone(&regc), batch))
+        });
+        (coord, m)
     }
 
     #[test]
     fn serves_requests_and_batches() {
-        let coord = Coordinator::start(
+        let (coord, m) = start_single(
             CoordinatorConfig {
                 workers: 2,
                 max_batch: 4,
@@ -1027,10 +1231,10 @@ mod tests {
                 queue_depth: 64,
                 ..CoordinatorConfig::default()
             },
-            |_| Box::new(GoldenEngine::new(net(), 4)),
+            4,
         );
         let receivers: Vec<_> =
-            (0..20).map(|i| coord.submit(vec![(i * 12) as u8; 16]).unwrap()).collect();
+            (0..20).map(|i| coord.submit(m, vec![(i * 12) as u8; 16]).unwrap()).collect();
         for rx in receivers {
             let res = rx.recv().unwrap().unwrap();
             assert_eq!(res.logits.len(), 10);
@@ -1046,12 +1250,10 @@ mod tests {
 
     #[test]
     fn results_match_direct_inference() {
-        let coord = Coordinator::start(CoordinatorConfig::default(), |_| {
-            Box::new(GoldenEngine::new(net(), 8))
-        });
+        let (coord, m) = start_single(CoordinatorConfig::default(), 8);
         let image = vec![123u8; 16];
-        let served = coord.infer_blocking(image.clone()).unwrap();
-        assert_eq!(served.logits, net().infer_u8(&image));
+        let served = coord.infer_blocking(m, image.clone()).unwrap();
+        assert_eq!(served.logits, Network::new(model()).infer_u8(&image));
         assert_eq!(served.trace.total(), served.latency, "stages sum to the latency exactly");
         assert!(served.trace.engine > Duration::ZERO, "engine stage measured");
         coord.shutdown();
@@ -1059,15 +1261,69 @@ mod tests {
 
     #[test]
     fn shutdown_drains_inflight() {
-        let coord = Coordinator::start(CoordinatorConfig::default(), |_| {
-            Box::new(GoldenEngine::new(net(), 8))
-        });
-        let rxs: Vec<_> = (0..10).map(|_| coord.submit(vec![50; 16]).unwrap()).collect();
+        let (coord, m) = start_single(CoordinatorConfig::default(), 8);
+        let rxs: Vec<_> = (0..10).map(|_| coord.submit(m, vec![50; 16]).unwrap()).collect();
         let stats = coord.shutdown();
         assert_eq!(stats.completed, 10);
         for rx in rxs {
             assert!(rx.recv().unwrap().is_ok());
         }
+    }
+
+    /// The PR9 core contract in miniature: two models with
+    /// bit-distinguishable logits share one queue and one golden pool —
+    /// every interleaved request gets exactly its own model's logits,
+    /// and the export carries per-model, per-backend and model-cache
+    /// rows whose counters balance once the pool is drained.
+    #[test]
+    fn multi_model_traffic_never_mixes_and_exports_per_model_rows() {
+        let mut reg = ModelRegistry::new();
+        let a = reg.register("alpha", toy("alpha", 1)).unwrap();
+        let b = reg.register("beta", toy("beta", 3)).unwrap();
+        let reg = Arc::new(reg);
+        let regc = Arc::clone(&reg);
+        let mut coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 2,
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+                ..CoordinatorConfig::default()
+            },
+            Arc::clone(&reg),
+            move |_| Box::new(GoldenEngine::new(Arc::clone(&regc), 4)),
+        );
+        let image = vec![200u8; 16];
+        let want_a = Network::new(toy("alpha", 1)).infer_u8(&image);
+        let want_b = Network::new(toy("beta", 3)).infer_u8(&image);
+        assert_ne!(want_a, want_b, "the two models must be distinguishable");
+        let rxs: Vec<_> = (0..16)
+            .map(|i| {
+                let m = if i % 2 == 0 { a } else { b };
+                (m, coord.submit(m, image.clone()).unwrap())
+            })
+            .collect();
+        for (m, rx) in rxs {
+            let res = rx.recv().unwrap().unwrap();
+            let want = if m == a { &want_a } else { &want_b };
+            assert_eq!(&res.logits, want, "request for {m} got another model's logits");
+        }
+        coord.drain();
+        let cache = coord.cache_totals();
+        assert_eq!(cache.hits + cache.misses, cache.lookups, "cache counters balance");
+        assert_eq!(cache.packs, cache.misses, "every miss packs exactly once");
+        assert!(cache.lookups >= 2, "both models looked up");
+        let treg = Registry::new();
+        coord.export_into(&treg, "serve");
+        let snap = treg.snapshot();
+        assert_eq!(snap.counters["serve.model.alpha.completed"], 8);
+        assert_eq!(snap.counters["serve.model.beta.completed"], 8);
+        assert!(snap.sketches.contains_key("serve.model.alpha.latency"));
+        assert!(snap.sketches.contains_key("serve.model.beta.latency"));
+        assert_eq!(snap.counters["serve.backend.golden.workers"], 2);
+        assert_eq!(snap.counters["serve.backend.golden.completed"], 16);
+        assert_eq!(snap.counters["serve.model_cache.lookups"], cache.lookups);
+        let stats = coord.stats();
+        assert_eq!(stats.completed, 16);
     }
 
     #[test]
@@ -1092,6 +1348,8 @@ mod tests {
     #[test]
     fn span_trees_cover_every_completed_request() {
         let spans = SpanCollector::new();
+        let (reg, m) = ModelRegistry::single(model());
+        let regc = Arc::clone(&reg);
         let coord = Coordinator::start_with_spans(
             CoordinatorConfig {
                 workers: 2,
@@ -1099,10 +1357,11 @@ mod tests {
                 max_wait: Duration::from_millis(2),
                 ..CoordinatorConfig::default()
             },
+            reg,
             Some(Arc::clone(&spans)),
-            |_| Box::new(GoldenEngine::new(net(), 4)),
+            move |_| Box::new(GoldenEngine::new(Arc::clone(&regc), 4)),
         );
-        let rxs: Vec<_> = (0..12).map(|i| coord.submit(vec![i as u8; 16]).unwrap()).collect();
+        let rxs: Vec<_> = (0..12).map(|i| coord.submit(m, vec![i as u8; 16]).unwrap()).collect();
         for rx in rxs {
             rx.recv().unwrap().unwrap();
         }
@@ -1128,10 +1387,8 @@ mod tests {
     #[test]
     fn tracing_off_leaves_no_sheet() {
         let spans = SpanCollector::new();
-        let coord = Coordinator::start(CoordinatorConfig::default(), |_| {
-            Box::new(GoldenEngine::new(net(), 8))
-        });
-        coord.infer_blocking(vec![9u8; 16]).unwrap();
+        let (coord, m) = start_single(CoordinatorConfig::default(), 8);
+        coord.infer_blocking(m, vec![9u8; 16]).unwrap();
         coord.shutdown();
         assert!(spans.sheet().is_empty());
     }
@@ -1145,13 +1402,14 @@ mod tests {
             fn batch_size(&self) -> usize {
                 4
             }
-            fn infer(&mut self, _images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+            fn infer(&mut self, _m: ModelId, _images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
                 anyhow::bail!("injector offline")
             }
             fn name(&self) -> &'static str {
                 "fail"
             }
         }
+        let (reg, m) = ModelRegistry::single(model());
         let coord = Coordinator::start(
             CoordinatorConfig {
                 workers: 1,
@@ -1160,9 +1418,10 @@ mod tests {
                 retry_backoff: Duration::ZERO,
                 ..CoordinatorConfig::default()
             },
+            reg,
             |_| Box::new(FailEngine),
         );
-        let rxs: Vec<_> = (0..4).map(|_| coord.submit(vec![1u8; 16]).unwrap()).collect();
+        let rxs: Vec<_> = (0..4).map(|_| coord.submit(m, vec![1u8; 16]).unwrap()).collect();
         for rx in rxs {
             match rx.recv().unwrap() {
                 Err(ServeError::EngineFailed { attempts, cause }) => {

@@ -28,11 +28,8 @@
 //! * [`energy`] — area (KGE) / power / energy model and the technology
 //!   normalization used by paper Table III.
 //! * [`baselines`] — SpinalFlow-style and BW-SNN-style comparison models.
-//! * [`runtime`] — PJRT executor: loads `artifacts/*.hlo.txt` produced by
-//!   the python AOT path and runs them natively (python never runs at
-//!   request time).
-//! * [`coordinator`] — the serving layer: request queue, batcher, worker
-//!   pool, metrics and backpressure.
+//! * [`coordinator`] — the serving layer: model registry, request queue,
+//!   batcher, heterogeneous worker pools, metrics and backpressure.
 //! * [`telemetry`] — mergeable latency histogram sketches, per-request
 //!   stage tracing, and the counter/gauge/sketch registry + exporters
 //!   shared by serve, the chip sim, and the trainer.
@@ -48,7 +45,6 @@ pub mod data;
 pub mod dse;
 pub mod energy;
 pub mod metrics;
-pub mod runtime;
 pub mod snn;
 pub mod telemetry;
 pub mod testing;

@@ -6,8 +6,8 @@
 //! vsa table3   [--model cifar10]               # Table III report
 //! vsa fusion   [--model cifar10]               # §IV-B DRAM study
 //! vsa dse      --space small --workload mnist  # Pareto design sweep
-//! vsa infer    --engine golden|pjrt|chip --model mnist --count 8
-//! vsa serve    --model mnist --requests 64 --workers 2 --batch 8
+//! vsa infer    --engine golden|chip --model mnist --count 8
+//! vsa serve    --model mnist --model tiny --pool golden:2,chip-sim:1
 //! vsa serve-bench --model tiny --fault-rate 0.1 --requests 512
 //! vsa train    --model tiny --dataset synth --epochs 6 --seed 7
 //! vsa eval     --weights artifacts/tiny_t4_trained.vsaw [--steps T]
@@ -20,20 +20,20 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use vsa::arch::schedule::plan_model;
-use vsa::arch::{timeline, Chip, SimMode};
+use vsa::arch::{timeline, Chip, SimMode, DEFAULT_MODEL_CACHE};
 use vsa::baselines::published;
 use vsa::cli::Args;
 use vsa::config::json::{self, Json};
 use vsa::config::{models, HwConfig};
 use vsa::dse;
 use vsa::coordinator::{
-    run_load, ChipEngine, Coordinator, CoordinatorConfig, FaultEngine, FaultProfile, FaultStats,
-    GoldenEngine, InferenceEngine, LoadSpec, PjrtEngine, ServeError,
+    parse_pool, run_load, ChipEngine, Coordinator, CoordinatorConfig, EngineKind, FaultEngine,
+    FaultProfile, FaultStats, GoldenEngine, InferenceEngine, LoadSpec, ModelRegistry, ModelTraffic,
+    ServeError,
 };
 use vsa::data::synth;
 use vsa::energy::{power, report};
 use vsa::data::idx;
-use vsa::runtime::{Manifest, PjrtExecutor};
 use vsa::snn::params::DeployedModel;
 use vsa::snn::Network;
 use vsa::telemetry::{diff_snapshots, Registry, SpanCollector};
@@ -82,13 +82,13 @@ commands:
   table3      regenerate the paper's Table III comparison
   fusion      regenerate the §IV-B layer-fusion DRAM study
   dse         sweep the reconfigurable design space, emit a Pareto report
-  infer       classify synthetic samples (golden | chip | pjrt engines)
-  serve       run the serving coordinator demo
+  infer       classify synthetic samples (golden | chip engines)
+  serve       run the multi-model serving coordinator demo
   serve-bench drive the coordinator under seeded fault injection
   train       STBP-train a binary-weight SNN, export a VSAW artifact
   eval        golden-model accuracy of an artifact (optionally at --steps T)
   metrics-diff compare two vsa-metrics-v1 snapshots, gate on regressions
-  selftest    cross-check golden model, simulator and PJRT runtime
+  selftest    cross-check the golden model against the chip simulator
 
 common flags: --model tiny|mnist|cifar10  --artifacts DIR  --steps T
 
@@ -107,14 +107,20 @@ train flags:  --model tiny|mnist|micro  --dataset synth|mnist  --steps T
 eval flags:   --weights FILE.vsaw  --dataset synth|mnist  --count N
               --seed S  --steps T (override the artifact's T)
 
-serve flags:  --engine golden|chip|pjrt  --requests N  --workers N
-              --batch B  --deadline-ms D  --retries N  --restart-budget N
-              --stats-interval MS (print a registry snapshot every MS)
+serve flags:  --model NAME | NAME=FILE.vsaw (repeatable — each occurrence
+              deploys one model; presets synthesize when untrained)
+              --pool golden:3,chip-sim:1 (heterogeneous worker pool;
+              default: --engine golden|chip times --workers N)
+              --cache-cap K (per-engine packed-model LRU capacity)
+              --requests N  --batch B  --deadline-ms D  --retries N
+              --restart-budget N  --stats-interval MS
               --metrics-out FILE.json (write the final metrics snapshot)
 
-serve-bench:  --model tiny|mnist|cifar10  --steps T  --requests N
-              --workers N  --batch B  --submitters N  --fault-rate P
-              --spike-ms MS  --deadline-ms D  --submit-wait-ms W  --seed S
+serve-bench:  --model tiny|mnist|cifar10 (repeatable — two or more
+              occurrences drive an equally-weighted mixed-model load)
+              --steps T  --requests N  --workers N  --batch B
+              --submitters N  --fault-rate P  --spike-ms MS
+              --deadline-ms D  --submit-wait-ms W  --seed S
               --metrics-out FILE.json
               (weights are synthesized — no artifacts directory needed)
 
@@ -136,15 +142,46 @@ telemetry:    serve/simulate/train all export the same vsa-metrics-v1
               --metrics-out FILE.json
 ";
 
+/// Resolve one `--model` value to a named [`DeployedModel`].
+///
+/// `name=path.vsaw` loads the artifact and serves it under `name`; a
+/// bare `*.vsaw` path serves it under the file stem; a preset name
+/// (tiny|mnist|cifar10) prefers the trained artifact `vsa train` writes
+/// into the artifacts directory and synthesizes weights otherwise, so
+/// every command works without any artifacts on disk.
+fn resolve_model(
+    value: &str,
+    dir: &str,
+    steps: usize,
+    seed: u64,
+) -> anyhow::Result<(String, DeployedModel)> {
+    if let Some((name, path)) = value.split_once('=') {
+        anyhow::ensure!(!name.is_empty(), "empty model name in '{value}'");
+        return Ok((name.to_string(), DeployedModel::from_file(path)?));
+    }
+    if value.ends_with(".vsaw") {
+        let stem =
+            std::path::Path::new(value).file_stem().and_then(|s| s.to_str()).unwrap_or("model");
+        return Ok((stem.to_string(), DeployedModel::from_file(value)?));
+    }
+    let trained = format!("{dir}/{value}_t{steps}_trained.vsaw");
+    if std::path::Path::new(&trained).exists() {
+        return Ok((value.to_string(), DeployedModel::from_file(&trained)?));
+    }
+    let spec = models::by_name(value, steps).ok_or_else(|| {
+        anyhow::anyhow!("'{value}' is neither a .vsaw artifact nor a preset (tiny|mnist|cifar10)")
+    })?;
+    eprintln!("note: no trained artifact for '{value}' in {dir}/; synthesizing weights");
+    Ok((value.to_string(), DeployedModel::synthesize(&spec, seed)))
+}
+
 fn load_network(args: &Args) -> anyhow::Result<(String, Network)> {
     let model = args.get("model", "mnist");
     let dir = args.get("artifacts", "artifacts");
-    let manifest = Manifest::load(&dir)?;
-    let entry = manifest
-        .find(&model, usize::MAX)
-        .ok_or_else(|| anyhow::anyhow!("model '{model}' not in manifest"))?;
-    let net = Network::from_vsaw_file(&manifest.weights_path(entry))?;
-    Ok((model, net))
+    let steps = args.get_usize("steps", 4)?;
+    let seed = args.get_u64("seed", 7)?;
+    let (name, deployed) = resolve_model(&model, &dir, steps, seed)?;
+    Ok((name, Network::new(deployed)))
 }
 
 fn hw_from_args(args: &Args) -> anyhow::Result<HwConfig> {
@@ -176,28 +213,17 @@ fn cmd_models() -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    // Trained artifact when one exists, synthesized weights otherwise —
-    // cycle/traffic behaviour is weight-independent, so smoke runs need
-    // no artifacts directory.
-    let (model, net) = match load_network(args) {
-        Ok(ok) => ok,
-        Err(e) => {
-            let model = args.get("model", "mnist");
-            let steps = args.get_usize("steps", 4)?;
-            let spec = models::by_name(&model, steps)
-                .ok_or_else(|| anyhow::anyhow!("no artifact and no preset for '{model}': {e:#}"))?;
-            let seed = args.get_u64("seed", 7)?;
-            eprintln!("note: no artifact for '{model}' ({e:#}); synthesizing weights");
-            (model, Network::new(DeployedModel::synthesize(&spec, seed)))
-        }
-    };
+    // Trained artifact when one exists, synthesized weights otherwise
+    // (see `resolve_model`) — cycle/traffic behaviour is weight-
+    // independent, so smoke runs need no artifacts directory.
+    let (model, net) = load_network(args)?;
     let hw = hw_from_args(args)?;
     let mode = match args.get("mode", "fast").as_str() {
         "exact" => SimMode::Exact,
         _ => SimMode::Fast,
     };
     let seed = args.get_u64("seed", 7)?;
-    let sample = &synth::for_model(&model, seed, 0, 1)[0];
+    let sample = &synth::batch(seed, 0, 1, net.model.in_channels, net.model.in_size)[0];
     let tracing = args.has("trace")
         || args.get_opt("trace-out").is_some()
         || args.get_opt("trace-tsv").is_some();
@@ -274,7 +300,7 @@ fn cmd_table3(args: &Args) -> anyhow::Result<()> {
     let (model, net) = load_network(args)?;
     let hw = hw_from_args(args)?;
     let chip = Chip::new(hw.clone(), SimMode::Fast);
-    let sample = &synth::for_model(&model, 7, 0, 1)[0];
+    let sample = &synth::batch(7, 0, 1, net.model.in_channels, net.model.in_size)[0];
     let r = chip.run(&net.model, &sample.image);
 
     let rows = vec![
@@ -295,7 +321,7 @@ fn cmd_table3(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_fusion(args: &Args) -> anyhow::Result<()> {
     let (model, net) = load_network(args)?;
-    let sample = &synth::for_model(&model, 7, 0, 1)[0];
+    let sample = &synth::batch(7, 0, 1, net.model.in_channels, net.model.in_size)[0];
 
     let hw_on = HwConfig::default();
     let hw_off = HwConfig { layer_fusion: false, ..HwConfig::default() };
@@ -429,37 +455,27 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_infer(args: &Args) -> anyhow::Result<()> {
-    let engine_kind = args.get("engine", "golden");
-    let model = args.get("model", "mnist");
+    let engine_kind = EngineKind::parse(&args.get("engine", "golden"))?;
     let count = args.get_usize("count", 8)?;
+    let batch = args.get_usize("batch", 8)?;
     let dir = args.get("artifacts", "artifacts");
-    let manifest = Manifest::load(&dir)?;
-    let entry = manifest
-        .find(&model, count)
-        .ok_or_else(|| anyhow::anyhow!("model '{model}' not in manifest"))?;
-    let net = Network::from_vsaw_file(&manifest.weights_path(entry))?;
+    let steps = args.get_usize("steps", 4)?;
+    let seed = args.get_u64("seed", 7)?;
+    let (name, deployed) = resolve_model(&args.get("model", "mnist"), &dir, steps, seed)?;
+    let (channels, size) = (deployed.in_channels, deployed.in_size);
+    let (registry, mid) = ModelRegistry::single(deployed);
 
-    let mut engine: Box<dyn InferenceEngine> = match engine_kind.as_str() {
-        "pjrt" => {
-            let exe = PjrtExecutor::load(
-                &manifest.hlo_path(entry),
-                entry.batch,
-                entry.in_channels,
-                entry.in_size,
-            )?;
-            println!("PJRT platform: {}", exe.platform());
-            Box::new(PjrtEngine::new(exe))
-        }
-        "chip" => Box::new(ChipEngine::new(HwConfig::default(), net, entry.batch)),
-        _ => Box::new(GoldenEngine::new(net, entry.batch)),
+    let mut engine: Box<dyn InferenceEngine> = match engine_kind {
+        EngineKind::ChipSim => Box::new(ChipEngine::new(HwConfig::default(), registry, batch)),
+        EngineKind::Golden => Box::new(GoldenEngine::new(registry, batch)),
     };
 
-    let samples = synth::for_model(&model, 11, 0, count);
+    let samples = synth::batch(11, 0, count, channels, size);
     let mut correct = 0usize;
     let t0 = Instant::now();
     for chunk in samples.chunks(engine.batch_size()) {
         let images: Vec<Vec<u8>> = chunk.iter().map(|s| s.image.clone()).collect();
-        let logits = engine.infer(&images)?;
+        let logits = engine.infer(mid, &images)?;
         for (s, l) in chunk.iter().zip(&logits) {
             let pred = argmax(l);
             if pred == s.label {
@@ -469,7 +485,7 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
     }
     let dt = t0.elapsed();
     println!(
-        "{}: {count} samples in {:.1} ms ({:.1} inf/s), accuracy {}/{count}",
+        "{} on {name}: {count} samples in {:.1} ms ({:.1} inf/s), accuracy {}/{count}",
         engine.name(),
         dt.as_secs_f64() * 1e3,
         count as f64 / dt.as_secs_f64(),
@@ -479,20 +495,39 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let engine_kind = args.get("engine", "golden");
-    let model = args.get("model", "mnist");
     let requests = args.get_usize("requests", 64)?;
-    let workers = args.get_usize("workers", 2)?;
     let batch = args.get_usize("batch", 8)?;
     let dir = args.get("artifacts", "artifacts");
+    let steps = args.get_usize("steps", 4)?;
+    let seed = args.get_u64("seed", 7)?;
+    let cache_cap = args.get_usize("cache-cap", DEFAULT_MODEL_CACHE)?;
 
-    let manifest = Manifest::load(&dir)?;
-    let entry = manifest
-        .find(&model, batch)
-        .ok_or_else(|| anyhow::anyhow!("model '{model}' not in manifest"))?
-        .clone();
-    let weights_path = manifest.weights_path(&entry);
-    let hlo_path = manifest.hlo_path(&entry);
+    // Every `--model` occurrence deploys one model into the shared
+    // registry (default: a single mnist).
+    let mut model_flags: Vec<String> =
+        args.get_all("model").into_iter().map(String::from).collect();
+    if model_flags.is_empty() {
+        model_flags.push("mnist".to_string());
+    }
+    let mut registry = ModelRegistry::new();
+    let mut ids = Vec::with_capacity(model_flags.len());
+    for value in &model_flags {
+        let (name, deployed) = resolve_model(value, &dir, steps, seed)?;
+        ids.push(registry.register(&name, deployed)?);
+    }
+    let registry = Arc::new(registry);
+    let n_models = ids.len();
+
+    // Worker pool: an explicit heterogeneous `--pool` spec wins;
+    // otherwise `--engine` replicated `--workers` times.
+    let pool = match args.get_opt("pool") {
+        Some(spec) => parse_pool(spec)?,
+        None => {
+            let kind = EngineKind::parse(&args.get("engine", "golden"))?;
+            vec![kind; args.get_usize("workers", 2)?.max(1)]
+        }
+    };
+    let workers = pool.len();
 
     let deadline = args
         .get_opt("deadline-ms")
@@ -507,28 +542,25 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ..CoordinatorConfig::default()
     };
     let spans = args.get_opt("trace-out").map(|_| SpanCollector::new());
-    let ek = engine_kind.clone();
-    let make_engine = move |w: usize| -> Box<dyn InferenceEngine> {
-        let net = Network::from_vsaw_file(&weights_path).expect("weights load");
-        match ek.as_str() {
-            "pjrt" => {
-                let exe = PjrtExecutor::load(
-                    &hlo_path,
-                    entry.batch,
-                    entry.in_channels,
-                    entry.in_size,
-                )
-                .expect("artifact compiles");
-                if w == 0 {
-                    println!("PJRT platform: {}", exe.platform());
+    let make_engine = {
+        let pool = pool.clone();
+        let reg = Arc::clone(&registry);
+        move |w: usize| -> Box<dyn InferenceEngine> {
+            match pool[w] {
+                EngineKind::ChipSim => Box::new(ChipEngine::with_cache_capacity(
+                    HwConfig::default(),
+                    Arc::clone(&reg),
+                    batch,
+                    cache_cap,
+                )),
+                EngineKind::Golden => {
+                    Box::new(GoldenEngine::with_cache_capacity(Arc::clone(&reg), batch, cache_cap))
                 }
-                Box::new(PjrtEngine::new(exe))
             }
-            "chip" => Box::new(ChipEngine::new(HwConfig::default(), net, batch)),
-            _ => Box::new(GoldenEngine::new(net, batch)),
         }
     };
-    let coord = Coordinator::start_with_spans(cfg, spans.clone(), make_engine);
+    let mut coord =
+        Coordinator::start_with_spans(cfg, Arc::clone(&registry), spans.clone(), make_engine);
 
     // Periodic observability: a reporter thread publishes a fresh
     // registry snapshot every --stats-interval while requests drain.
@@ -540,8 +572,18 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .transpose()?
         .filter(|iv| !iv.is_zero());
 
-    let samples = synth::for_model(&model, 23, 0, requests);
-    let mut correct = 0usize;
+    // Interleave the request stream across the deployed models (request
+    // i goes to model i mod n), each model fed synthetic samples
+    // matching its own input geometry.
+    let per_model = requests.div_ceil(n_models);
+    let streams: Vec<Vec<_>> = ids
+        .iter()
+        .map(|&id| {
+            let m = registry.get(id);
+            synth::batch(23, 0, per_model, m.in_channels, m.in_size)
+        })
+        .collect();
+    let mut correct = vec![0usize; n_models];
     let mut shed = 0usize;
     let mut failed = 0usize;
     let stop = AtomicBool::new(false);
@@ -562,15 +604,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             });
         }
         let run = (|| -> anyhow::Result<()> {
-            let receivers: Vec<_> = samples
-                .iter()
-                .map(|smp| coord.submit(smp.image.clone()))
-                .collect::<Result<_, _>>()?;
-            for (rx, smp) in receivers.into_iter().zip(&samples) {
+            let mut receivers = Vec::with_capacity(requests);
+            for i in 0..requests {
+                let (m, j) = (i % n_models, i / n_models);
+                receivers.push((m, j, coord.submit(ids[m], streams[m][j].image.clone())?));
+            }
+            for (m, j, rx) in receivers {
                 match rx.recv()? {
                     Ok(res) => {
-                        if argmax(&res.logits) == smp.label {
-                            correct += 1;
+                        if argmax(&res.logits) == streams[m][j].label {
+                            correct[m] += 1;
                         }
                     }
                     Err(ServeError::Rejected(_)) => shed += 1,
@@ -582,15 +625,30 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         stop.store(true, Ordering::Relaxed);
         run
     })?;
+    // Quiesce first: per-model and model-cache rows are exact only
+    // after the workers have joined (counters mirror once per batch).
+    coord.drain();
     if let Some(path) = args.get_opt("metrics-out") {
         let reg = Registry::new();
         coord.export_into(&reg, "serve");
         std::fs::write(path, reg.snapshot().to_json() + "\n")?;
         println!("metrics written to {path}");
     }
+    let cache = coord.cache_totals();
     let stats = coord.shutdown();
+    let mut pool_desc = String::new();
+    for kind in [EngineKind::Golden, EngineKind::ChipSim] {
+        let n = pool.iter().filter(|&&k| k == kind).count();
+        if n > 0 {
+            if !pool_desc.is_empty() {
+                pool_desc.push_str(" + ");
+            }
+            pool_desc.push_str(&format!("{}x{n}", kind.name()));
+        }
+    }
     println!(
-        "served {} requests on {workers} x {engine_kind} workers (batch <= {batch})",
+        "served {} requests over {n_models} model(s) on {workers} workers [{pool_desc}] \
+         (batch <= {batch})",
         stats.completed
     );
     println!(
@@ -612,7 +670,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "  failed {failed}  shed {shed}  retries {}  worker restarts {}",
         stats.retries, stats.worker_restarts
     );
-    println!("  accuracy {correct}/{requests}");
+    for (m, &id) in ids.iter().enumerate() {
+        let sent = requests / n_models + usize::from(m < requests % n_models);
+        println!("  model {}: accuracy {}/{sent}", registry.name(id), correct[m]);
+    }
+    println!(
+        "  model cache: {} lookups, {} hits, {} misses, {} evictions",
+        cache.lookups, cache.hits, cache.misses, cache.evictions
+    );
     write_trace(args, spans.as_ref())?;
     Ok(())
 }
@@ -632,10 +697,11 @@ fn write_trace(args: &Args, spans: Option<&Arc<SpanCollector>>) -> anyhow::Resul
 /// [`FaultEngine`], driven by the shared closed-loop generator.  The
 /// same code path `benches/bench_serve.rs` records into BENCH_PR7.json.
 fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
-    let model = args.get("model", "tiny");
+    let mut names: Vec<String> = args.get_all("model").into_iter().map(String::from).collect();
+    if names.is_empty() {
+        names.push("tiny".to_string());
+    }
     let steps = args.get_usize("steps", 4)?;
-    let spec = models::by_name(&model, steps)
-        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}' (tiny|mnist|cifar10)"))?;
     let requests = args.get_usize("requests", 512)?;
     let workers = args.get_usize("workers", 2)?;
     let batch = args.get_usize("batch", 8)?;
@@ -653,6 +719,18 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         .map(|_| args.get_millis("submit-wait-ms", Duration::ZERO))
         .transpose()?;
 
+    // One synthesized model per `--model` occurrence, equally weighted
+    // in the generated traffic (distinct seeds keep the weights apart).
+    let mut registry = ModelRegistry::new();
+    let mut ids = Vec::with_capacity(names.len());
+    for (i, name) in names.iter().enumerate() {
+        let spec = models::by_name(name, steps)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' (tiny|mnist|cifar10)"))?;
+        let deployed = DeployedModel::synthesize(&spec, seed.wrapping_add(i as u64));
+        ids.push(registry.register(name, deployed)?);
+    }
+    let registry = Arc::new(registry);
+
     let profile = FaultProfile::mixed(fault_rate, spike);
     let fstats = Arc::new(FaultStats::default());
     let cfg = CoordinatorConfig {
@@ -662,23 +740,31 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         ..CoordinatorConfig::default()
     };
     let spans = args.get_opt("trace-out").map(|_| SpanCollector::new());
-    let coord = Coordinator::start_with_spans(cfg, spans.clone(), {
-        let spec = spec.clone();
+    let mut coord = Coordinator::start_with_spans(cfg, Arc::clone(&registry), spans.clone(), {
+        let reg = Arc::clone(&registry);
         let fstats = Arc::clone(&fstats);
         move |w| -> Box<dyn InferenceEngine> {
-            let net = Network::new(DeployedModel::synthesize(&spec, seed));
-            let inner = Box::new(GoldenEngine::new(net, batch));
+            let inner = Box::new(GoldenEngine::new(Arc::clone(&reg), batch));
             let seed_w = FaultEngine::seed_for(seed, w);
             Box::new(FaultEngine::with_stats(inner, profile, seed_w, Arc::clone(&fstats)))
         }
     });
 
-    let images: Vec<Vec<u8>> = synth::for_model(&model, seed, 0, 64.min(requests.max(1)))
-        .into_iter()
-        .map(|s| s.image)
+    let per = 64.min(requests.max(1));
+    let traffic: Vec<ModelTraffic> = ids
+        .iter()
+        .map(|&id| {
+            let m = registry.get(id);
+            let images = synth::batch(seed, 0, per, m.in_channels, m.in_size)
+                .into_iter()
+                .map(|s| s.image)
+                .collect();
+            ModelTraffic { model: id, weight: 1, images }
+        })
         .collect();
     let load = LoadSpec { requests, submitters, submit_wait };
-    let report = run_load(&coord, &images, &load);
+    let report = run_load(&coord, &traffic, &load);
+    coord.drain(); // exact per-model / cache rows in the export below
     if let Some(path) = args.get_opt("metrics-out") {
         let reg = Registry::new();
         coord.export_into(&reg, "serve");
@@ -688,8 +774,9 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     let stats = coord.shutdown();
 
     println!(
-        "serve-bench {model} (T={steps}): {requests} requests, {workers} workers, \
+        "serve-bench {} (T={steps}): {requests} requests, {workers} workers, \
          fault rate {:.1}%",
+        names.join("+"),
         fault_rate * 100.0
     );
     println!("  {}", report.render());
@@ -853,26 +940,27 @@ fn cmd_metrics_diff(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_selftest(args: &Args) -> anyhow::Result<()> {
     let dir = args.get("artifacts", "artifacts");
-    let manifest = Manifest::load(&dir)?;
-    for name in ["tiny", "mnist"] {
-        let Some(entry) = manifest.find(name, 1) else { continue };
-        let net = Network::from_vsaw_file(&manifest.weights_path(entry))?;
-        let sample = &synth::for_model(name, 99, 0, 1)[0];
+    let steps = args.get_usize("steps", 4)?;
+    for preset in ["tiny", "mnist"] {
+        let (name, deployed) = resolve_model(preset, &dir, steps, 99)?;
+        let sample = &synth::batch(99, 0, 1, deployed.in_channels, deployed.in_size)[0];
+
+        // Direct golden vs cycle-accurate simulator on the raw model.
+        let net = Network::new(deployed.clone());
         let golden = net.infer_u8(&sample.image);
         let sim = Chip::new(HwConfig::default(), SimMode::Fast)
             .run(&net.model, &sample.image)
             .logits;
         anyhow::ensure!(golden == sim, "{name}: sim != golden");
-        let exe = PjrtExecutor::load(
-            &manifest.hlo_path(entry),
-            entry.batch,
-            entry.in_channels,
-            entry.in_size,
-        )?;
-        let mut engine = PjrtEngine::new(exe);
-        let pjrt = engine.infer(&[sample.image.clone()])?;
-        anyhow::ensure!(golden == pjrt[0], "{name}: pjrt != golden");
-        println!("{name}: golden == chip-sim == pjrt  ({golden:?})");
+
+        // Same check through the serving engines (registry + ModelId).
+        let (registry, mid) = ModelRegistry::single(deployed);
+        let mut gold_eng = GoldenEngine::new(Arc::clone(&registry), 1);
+        let mut chip_eng = ChipEngine::new(HwConfig::default(), registry, 1);
+        let ge = gold_eng.infer(mid, std::slice::from_ref(&sample.image))?;
+        let ce = chip_eng.infer(mid, std::slice::from_ref(&sample.image))?;
+        anyhow::ensure!(ge[0] == golden && ce[0] == golden, "{name}: engine mismatch");
+        println!("{name}: golden == chip-sim (direct and via engines)  ({golden:?})");
     }
     println!("selftest OK");
     Ok(())

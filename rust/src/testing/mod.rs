@@ -1,6 +1,6 @@
 //! Miniature property-based testing harness (proptest substitute).
 //!
-//! Usage (`no_run`: doctest executables lack the libxla rpath):
+//! Usage:
 //! ```no_run
 //! use vsa::testing::{Gen, check};
 //! check("add is commutative", 100, |g: &mut Gen| {

@@ -1,11 +1,13 @@
 //! Coordinator end-to-end: concurrent submission, batching behaviour,
 //! backpressure, and engine equivalence under load.
 
+use std::sync::Arc;
 use std::time::Duration;
 use vsa::config::models;
 use vsa::config::HwConfig;
 use vsa::coordinator::{
-    ChipEngine, Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine,
+    ChipEngine, Coordinator, CoordinatorConfig, GoldenEngine, InferenceEngine, ModelId,
+    ModelRegistry,
 };
 use vsa::data::synth;
 use vsa::snn::params::DeployedModel;
@@ -15,18 +17,28 @@ use vsa::snn::Network;
 /// synthesized weights otherwise, so the suite runs from a clean
 /// checkout (`make artifacts` is optional).  A *present but unparsable*
 /// artifact still fails loudly — only a missing file falls back.
-fn tiny_net() -> Network {
+fn tiny_model() -> DeployedModel {
     const PATH: &str = "artifacts/tiny_t4.vsaw";
     if std::path::Path::new(PATH).exists() {
-        Network::from_vsaw_file(PATH).expect("artifacts/tiny_t4.vsaw exists but fails to parse")
+        DeployedModel::from_file(PATH).expect("artifacts/tiny_t4.vsaw exists but fails to parse")
     } else {
-        Network::new(DeployedModel::synthesize(&models::tiny(4), 42))
+        DeployedModel::synthesize(&models::tiny(4), 42)
     }
+}
+
+/// One-model coordinator over golden workers (the common case here).
+fn start(cfg: CoordinatorConfig, batch: usize) -> (Coordinator, ModelId) {
+    let (reg, m) = ModelRegistry::single(tiny_model());
+    let regc = Arc::clone(&reg);
+    let coord = Coordinator::start(cfg, reg, move |_| {
+        Box::new(GoldenEngine::new(Arc::clone(&regc), batch)) as Box<dyn InferenceEngine>
+    });
+    (coord, m)
 }
 
 #[test]
 fn concurrent_submitters_all_complete() {
-    let coord = std::sync::Arc::new(Coordinator::start(
+    let (coord, m) = start(
         CoordinatorConfig {
             workers: 3,
             max_batch: 4,
@@ -34,17 +46,18 @@ fn concurrent_submitters_all_complete() {
             queue_depth: 16, // small: exercises backpressure blocking
             ..CoordinatorConfig::default()
         },
-        |_| Box::new(GoldenEngine::new(tiny_net(), 4)) as Box<dyn InferenceEngine>,
-    ));
+        4,
+    );
+    let coord = Arc::new(coord);
 
     let mut handles = Vec::new();
     for t in 0..4u64 {
-        let coord = std::sync::Arc::clone(&coord);
+        let coord = Arc::clone(&coord);
         handles.push(std::thread::spawn(move || {
             let samples = synth::tiny_like(t, t * 100, 25);
             let mut ok = 0;
             for s in &samples {
-                let res = coord.infer_blocking(s.image.clone()).unwrap();
+                let res = coord.infer_blocking(m, s.image.clone()).unwrap();
                 assert_eq!(res.logits.len(), 10);
                 ok += 1;
             }
@@ -60,7 +73,7 @@ fn concurrent_submitters_all_complete() {
 
 #[test]
 fn batched_results_match_unbatched() {
-    let coord = Coordinator::start(
+    let (coord, m) = start(
         CoordinatorConfig {
             workers: 2,
             max_batch: 8,
@@ -68,13 +81,13 @@ fn batched_results_match_unbatched() {
             queue_depth: 128,
             ..CoordinatorConfig::default()
         },
-        |_| Box::new(GoldenEngine::new(tiny_net(), 8)) as Box<dyn InferenceEngine>,
+        8,
     );
-    let net = tiny_net();
+    let net = Network::new(tiny_model());
     let samples = synth::tiny_like(55, 0, 32);
     let rxs: Vec<_> = samples
         .iter()
-        .map(|s| coord.submit(s.image.clone()).unwrap())
+        .map(|s| coord.submit(m, s.image.clone()).unwrap())
         .collect();
     for (rx, s) in rxs.into_iter().zip(&samples) {
         assert_eq!(rx.recv().unwrap().unwrap().logits, net.infer_u8(&s.image));
@@ -84,20 +97,19 @@ fn batched_results_match_unbatched() {
 
 #[test]
 fn chip_engine_reports_simulated_latency() {
-    let mut engine = ChipEngine::new(HwConfig::default(), tiny_net(), 4);
+    let (reg, m) = ModelRegistry::single(tiny_model());
+    let mut engine = ChipEngine::new(HwConfig::default(), reg, 4);
     let samples = synth::tiny_like(2, 0, 3);
     let images: Vec<Vec<u8>> = samples.iter().map(|s| s.image.clone()).collect();
-    engine.infer(&images).unwrap();
+    engine.infer(m, &images).unwrap();
     assert!(engine.simulated_us > 0.0);
 }
 
 #[test]
 fn stats_percentiles_ordered() {
-    let coord = Coordinator::start(CoordinatorConfig::default(), |_| {
-        Box::new(GoldenEngine::new(tiny_net(), 8)) as Box<dyn InferenceEngine>
-    });
+    let (coord, m) = start(CoordinatorConfig::default(), 8);
     for s in synth::tiny_like(3, 0, 20) {
-        coord.infer_blocking(s.image).unwrap();
+        coord.infer_blocking(m, s.image).unwrap();
     }
     let stats = coord.shutdown();
     assert!(stats.latency_ms_p50 <= stats.latency_ms_p95);
@@ -121,7 +133,7 @@ impl InferenceEngine for GatedEngine {
     fn batch_size(&self) -> usize {
         1
     }
-    fn infer(&mut self, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+    fn infer(&mut self, _model: ModelId, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
         let (lock, cv) = &*self.gate;
         let mut st = lock.lock().unwrap();
         st.started += 1;
@@ -141,9 +153,10 @@ impl InferenceEngine for GatedEngine {
 #[test]
 fn submit_blocks_at_queue_depth() {
     use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::{Arc, Condvar, Mutex};
+    use std::sync::{Condvar, Mutex};
 
     let gate = Arc::new((Mutex::new(GateState::default()), Condvar::new()));
+    let (reg, m) = ModelRegistry::single(tiny_model());
     let coord = Arc::new(Coordinator::start(
         CoordinatorConfig {
             workers: 1,
@@ -152,6 +165,7 @@ fn submit_blocks_at_queue_depth() {
             queue_depth: 2,
             ..CoordinatorConfig::default()
         },
+        reg,
         {
             let gate = Arc::clone(&gate);
             move |_| Box::new(GatedEngine { gate: Arc::clone(&gate) }) as Box<dyn InferenceEngine>
@@ -160,7 +174,7 @@ fn submit_blocks_at_queue_depth() {
 
     // First request: wait until the worker is *inside* infer (gated), so
     // exactly queue_depth slots remain.
-    let rx0 = coord.submit(vec![0u8; 16]).unwrap();
+    let rx0 = coord.submit(m, vec![0u8; 16]).unwrap();
     {
         let (lock, cv) = &*gate;
         let mut st = lock.lock().unwrap();
@@ -171,7 +185,7 @@ fn submit_blocks_at_queue_depth() {
     // Fill the queue to its bound; these must not block.
     let mut rxs = vec![rx0];
     for _ in 0..2 {
-        rxs.push(coord.submit(vec![0u8; 16]).unwrap());
+        rxs.push(coord.submit(m, vec![0u8; 16]).unwrap());
     }
     // One more submission must block until the gate opens.
     let done = Arc::new(AtomicUsize::new(0));
@@ -179,7 +193,7 @@ fn submit_blocks_at_queue_depth() {
         let coord = Arc::clone(&coord);
         let done = Arc::clone(&done);
         std::thread::spawn(move || {
-            let rx = coord.submit(vec![0u8; 16]).unwrap();
+            let rx = coord.submit(m, vec![0u8; 16]).unwrap();
             done.store(1, Ordering::SeqCst);
             rx.recv().unwrap().unwrap()
         })
@@ -210,10 +224,8 @@ fn submit_blocks_at_queue_depth() {
 /// three quantiles collapse onto the one sample instead of reading 0.
 #[test]
 fn single_request_stats_are_sane() {
-    let coord = Coordinator::start(CoordinatorConfig::default(), |_| {
-        Box::new(GoldenEngine::new(tiny_net(), 8)) as Box<dyn InferenceEngine>
-    });
-    let res = coord.infer_blocking(synth::tiny_like(1, 0, 1)[0].image.clone()).unwrap();
+    let (coord, m) = start(CoordinatorConfig::default(), 8);
+    let res = coord.infer_blocking(m, synth::tiny_like(1, 0, 1)[0].image.clone()).unwrap();
     let stats = coord.shutdown();
     assert_eq!(stats.completed, 1);
     assert_eq!(stats.batches, 1);

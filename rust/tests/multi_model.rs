@@ -1,0 +1,130 @@
+//! PR9 acceptance: a coordinator loaded with two models on a mixed
+//! golden + chip-sim pool serves an interleaved workload under seeded
+//! fault injection with **zero cross-model contamination** — every
+//! completed request returns logits bit-identical to its own model's
+//! golden reference — while the LRU cache counters balance, per-model
+//! latency sketches land in the exported snapshot, and the accounting
+//! invariant (`completed + failed + shed == submitted`) holds with no
+//! hangs.
+
+use std::sync::Arc;
+use std::time::Duration;
+use vsa::config::models;
+use vsa::config::HwConfig;
+use vsa::coordinator::{
+    parse_pool, ChipEngine, Coordinator, CoordinatorConfig, EngineKind, FaultEngine, FaultProfile,
+    GoldenEngine, InferenceEngine, ModelRegistry, ServeError,
+};
+use vsa::data::synth;
+use vsa::snn::params::DeployedModel;
+use vsa::snn::Network;
+use vsa::telemetry::Registry;
+
+const RECV_PATIENCE: Duration = Duration::from_secs(30);
+
+#[test]
+fn mixed_pool_serves_two_models_without_contamination_under_chaos() {
+    const REQUESTS: usize = 64;
+
+    // Two same-geometry models with different weights: identical images
+    // are valid for both, so only correct (model, logits) pairing can
+    // satisfy the bit-exactness asserts below.
+    let model_a = DeployedModel::synthesize(&models::tiny(2), 0xA);
+    let model_b = DeployedModel::synthesize(&models::tiny(2), 0xB);
+    let images: Vec<Vec<u8>> = synth::tiny_like(5, 0, 8).into_iter().map(|s| s.image).collect();
+    let ref_a = Network::new(model_a.clone());
+    let ref_b = Network::new(model_b.clone());
+    let want_a: Vec<Vec<i64>> = images.iter().map(|i| ref_a.infer_u8(i)).collect();
+    let want_b: Vec<Vec<i64>> = images.iter().map(|i| ref_b.infer_u8(i)).collect();
+    assert_ne!(want_a, want_b, "models must be distinguishable or the check proves nothing");
+
+    let mut registry = ModelRegistry::new();
+    let a = registry.register("alpha", model_a).unwrap();
+    let b = registry.register("beta", model_b).unwrap();
+    let registry = Arc::new(registry);
+
+    // Heterogeneous pool from the CLI spec grammar, every engine wrapped
+    // in a seeded FaultEngine (errors + panics + latency spikes).
+    let pool = parse_pool("golden:3,chip-sim:1").unwrap();
+    assert_eq!(pool.len(), 4);
+    assert_eq!(pool.iter().filter(|&&k| k == EngineKind::Golden).count(), 3);
+    assert_eq!(pool.iter().filter(|&&k| k == EngineKind::ChipSim).count(), 1);
+    let cfg = CoordinatorConfig {
+        workers: pool.len(),
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 32,
+        max_retries: 2,
+        retry_backoff: Duration::from_micros(100),
+        restart_budget: 10_000,
+        ..CoordinatorConfig::default()
+    };
+    let regc = Arc::clone(&registry);
+    let mut coord = Coordinator::start(cfg, Arc::clone(&registry), move |w| {
+        let inner: Box<dyn InferenceEngine> = match pool[w] {
+            EngineKind::Golden => Box::new(GoldenEngine::new(Arc::clone(&regc), 4)),
+            EngineKind::ChipSim => {
+                Box::new(ChipEngine::new(HwConfig::default(), Arc::clone(&regc), 4))
+            }
+        };
+        let profile = FaultProfile::mixed(0.10, Duration::from_millis(2));
+        Box::new(FaultEngine::new(inner, profile, FaultEngine::seed_for(0xC0FFEE, w)))
+    });
+
+    // Strictly interleaved traffic: even requests hit alpha, odd hit
+    // beta, so co-arriving neighbours always name different models and
+    // any batch that ignored the partition key would cross the streams.
+    let mut rxs = Vec::new();
+    let mut submit_rejects = 0u64;
+    for i in 0..REQUESTS {
+        let model = if i % 2 == 0 { a } else { b };
+        match coord.submit(model, images[i % images.len()].clone()) {
+            Ok(rx) => rxs.push((i, rx)),
+            Err(ServeError::Rejected(_)) => submit_rejects += 1,
+            Err(e) => panic!("submit must reject typed, got {e:?}"),
+        }
+    }
+    let accepted = rxs.len() as u64;
+
+    let (mut ok, mut failed, mut shed) = (0u64, 0u64, 0u64);
+    for (i, rx) in rxs {
+        match rx.recv_timeout(RECV_PATIENCE).expect("no terminal outcome — request hung") {
+            Ok(res) => {
+                let want = if i % 2 == 0 { &want_a } else { &want_b };
+                assert_eq!(res.logits, want[i % images.len()], "request {i}: wrong model's logits");
+                ok += 1;
+            }
+            Err(ServeError::Rejected(_)) => shed += 1,
+            Err(_) => failed += 1,
+        }
+    }
+
+    // Quiesce, then check the mirrored LRU counters and the export.
+    coord.drain();
+    let cache = coord.cache_totals();
+    assert!(cache.lookups > 0, "engines ran at least one batch");
+    assert_eq!(cache.hits + cache.misses, cache.lookups, "cache counters balance");
+    assert_eq!(cache.packs, cache.misses, "every miss packs exactly once");
+
+    let treg = Registry::new();
+    coord.export_into(&treg, "serve");
+    let snap = treg.snapshot();
+    assert!(snap.sketches.contains_key("serve.model.alpha.latency"), "per-model sketch");
+    assert!(snap.sketches.contains_key("serve.model.beta.latency"), "per-model sketch");
+    assert_eq!(
+        snap.counters["serve.model.alpha.completed"] + snap.counters["serve.model.beta.completed"],
+        ok,
+        "per-model completions sum to the client-side tally"
+    );
+    assert_eq!(snap.counters["serve.backend.golden.workers"], 3);
+    assert_eq!(snap.counters["serve.backend.chip-sim.workers"], 1);
+    assert_eq!(snap.counters["serve.model_cache.lookups"], cache.lookups);
+
+    let stats = coord.shutdown();
+    assert_eq!(accepted + submit_rejects, REQUESTS as u64, "all requests accounted");
+    assert_eq!(stats.submitted, accepted);
+    assert_eq!(stats.completed, ok);
+    assert_eq!(stats.failed, failed);
+    assert_eq!(stats.shed, shed);
+    assert_eq!(stats.completed + stats.failed + stats.shed, stats.submitted, "counters balance");
+}

@@ -15,14 +15,14 @@ use std::time::{Duration, Instant};
 use vsa::config::models;
 use vsa::coordinator::{
     Coordinator, CoordinatorConfig, FaultEngine, FaultProfile, FaultStats, GoldenEngine,
-    InferenceEngine, RejectReason, ServeError,
+    InferenceEngine, ModelId, ModelRegistry, RejectReason, ServeError,
 };
 use vsa::data::synth;
 use vsa::snn::params::DeployedModel;
 use vsa::snn::Network;
 
-fn tiny_net() -> Network {
-    Network::new(DeployedModel::synthesize(&models::tiny(2), 42))
+fn tiny_model() -> DeployedModel {
+    DeployedModel::synthesize(&models::tiny(2), 42)
 }
 
 const RECV_PATIENCE: Duration = Duration::from_secs(30);
@@ -31,12 +31,14 @@ const RECV_PATIENCE: Duration = Duration::from_secs(30);
 /// bit-exactness property.
 fn chaos_run(label: &str, profile: FaultProfile, seed: u64, deadline: Option<Duration>) {
     const REQUESTS: usize = 48;
-    let reference = tiny_net();
+    let reference = Network::new(tiny_model());
     let samples = synth::tiny_like(seed, 0, 16);
     let images: Vec<Vec<u8>> = samples.into_iter().map(|s| s.image).collect();
     let expected: Vec<Vec<i64>> = images.iter().map(|i| reference.infer_u8(i)).collect();
 
     let fstats = Arc::new(FaultStats::default());
+    let (reg, m) = ModelRegistry::single(tiny_model());
+    let regc = Arc::clone(&reg);
     let coord = Coordinator::start(
         CoordinatorConfig {
             workers: 2,
@@ -48,10 +50,11 @@ fn chaos_run(label: &str, profile: FaultProfile, seed: u64, deadline: Option<Dur
             retry_backoff: Duration::from_micros(100),
             restart_budget: 10_000,
         },
+        reg,
         {
             let fstats = Arc::clone(&fstats);
             move |w| {
-                let inner = Box::new(GoldenEngine::new(tiny_net(), 4));
+                let inner = Box::new(GoldenEngine::new(Arc::clone(&regc), 4));
                 let seed_w = FaultEngine::seed_for(seed, w);
                 let fe = FaultEngine::with_stats(inner, profile, seed_w, Arc::clone(&fstats));
                 Box::new(fe) as Box<dyn InferenceEngine>
@@ -65,9 +68,9 @@ fn chaos_run(label: &str, profile: FaultProfile, seed: u64, deadline: Option<Dur
     for i in 0..REQUESTS {
         let img = images[i % images.len()].clone();
         let sub = match i % 3 {
-            0 => coord.submit(img),
-            1 => coord.submit_timeout(img, Duration::from_millis(200)),
-            _ => coord.try_submit(img),
+            0 => coord.submit(m, img),
+            1 => coord.submit_timeout(m, img, Duration::from_millis(200)),
+            _ => coord.try_submit(m, img),
         };
         match sub {
             Ok(rx) => rxs.push((i, rx)),
@@ -172,6 +175,12 @@ fn chaos_mixed_10pct_all_seeds() {
 // Deterministic edge cases (gated / scripted engines)
 // ---------------------------------------------------------------------
 
+/// One-model registry for the scripted-engine tests (the engines ignore
+/// the model — they are batching/accounting probes).
+fn single() -> (Arc<ModelRegistry>, ModelId) {
+    ModelRegistry::single(tiny_model())
+}
+
 /// Engine whose infer() blocks until the test releases a gate — the
 /// PR3 edge-case pattern for freezing a single worker deterministically.
 struct GatedEngine {
@@ -188,7 +197,7 @@ impl InferenceEngine for GatedEngine {
     fn batch_size(&self) -> usize {
         1
     }
-    fn infer(&mut self, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+    fn infer(&mut self, _model: ModelId, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
         let (lock, cv) = &*self.gate;
         let mut st = lock.lock().unwrap();
         st.started += 1;
@@ -228,6 +237,7 @@ fn release(gate: &Arc<(Mutex<GateState>, Condvar)>) {
 #[test]
 fn deadline_expiry_sheds_queued_requests() {
     let gate = new_gate();
+    let (reg, m) = single();
     let coord = Coordinator::start(
         CoordinatorConfig {
             workers: 1,
@@ -238,14 +248,15 @@ fn deadline_expiry_sheds_queued_requests() {
             max_retries: 0,
             ..CoordinatorConfig::default()
         },
+        reg,
         {
             let gate = Arc::clone(&gate);
             move |_| Box::new(GatedEngine { gate: Arc::clone(&gate) }) as Box<dyn InferenceEngine>
         },
     );
-    let rx0 = coord.submit(vec![0u8; 16]).unwrap();
+    let rx0 = coord.submit(m, vec![0u8; 16]).unwrap();
     wait_started(&gate, 1); // r0 is inside infer, holding the worker
-    let rx1 = coord.submit(vec![0u8; 16]).unwrap(); // r1 waits in queue
+    let rx1 = coord.submit(m, vec![0u8; 16]).unwrap(); // r1 waits in queue
     std::thread::sleep(Duration::from_millis(80)); // r1's deadline passes
     release(&gate);
     let r0 = rx0.recv_timeout(RECV_PATIENCE).unwrap();
@@ -266,6 +277,7 @@ fn deadline_expiry_sheds_queued_requests() {
 #[test]
 fn queue_full_shedding_fast_and_bounded() {
     let gate = new_gate();
+    let (reg, m) = single();
     let coord = Coordinator::start(
         CoordinatorConfig {
             workers: 1,
@@ -274,20 +286,21 @@ fn queue_full_shedding_fast_and_bounded() {
             queue_depth: 1,
             ..CoordinatorConfig::default()
         },
+        reg,
         {
             let gate = Arc::clone(&gate);
             move |_| Box::new(GatedEngine { gate: Arc::clone(&gate) }) as Box<dyn InferenceEngine>
         },
     );
-    let rx0 = coord.submit(vec![0u8; 16]).unwrap();
+    let rx0 = coord.submit(m, vec![0u8; 16]).unwrap();
     wait_started(&gate, 1); // worker busy; exactly one queue slot left
-    let rx1 = coord.submit(vec![0u8; 16]).unwrap(); // fills the queue
-    match coord.try_submit(vec![0u8; 16]) {
+    let rx1 = coord.submit(m, vec![0u8; 16]).unwrap(); // fills the queue
+    match coord.try_submit(m, vec![0u8; 16]) {
         Err(ServeError::Rejected(RejectReason::QueueFull)) => {}
         other => panic!("try_submit on a full queue must shed, got {other:?}"),
     }
     let t0 = Instant::now();
-    match coord.submit_timeout(vec![0u8; 16], Duration::from_millis(60)) {
+    match coord.submit_timeout(m, vec![0u8; 16], Duration::from_millis(60)) {
         Err(ServeError::Rejected(RejectReason::QueueFull)) => {}
         other => panic!("submit_timeout must shed after its wait, got {other:?}"),
     }
@@ -311,7 +324,7 @@ impl InferenceEngine for PanicOnceEngine {
     fn batch_size(&self) -> usize {
         1
     }
-    fn infer(&mut self, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+    fn infer(&mut self, _model: ModelId, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
         if self.calls.fetch_add(1, Ordering::SeqCst) == 0 {
             panic!("scripted first-call panic");
         }
@@ -325,6 +338,7 @@ impl InferenceEngine for PanicOnceEngine {
 #[test]
 fn panic_respawns_engine_and_retry_recovers() {
     let calls = Arc::new(AtomicU64::new(0));
+    let (reg, m) = single();
     let coord = Coordinator::start(
         CoordinatorConfig {
             workers: 1,
@@ -336,6 +350,7 @@ fn panic_respawns_engine_and_retry_recovers() {
             restart_budget: 4,
             ..CoordinatorConfig::default()
         },
+        reg,
         {
             let calls = Arc::clone(&calls);
             move |_| -> Box<dyn InferenceEngine> {
@@ -343,7 +358,7 @@ fn panic_respawns_engine_and_retry_recovers() {
             }
         },
     );
-    let res = coord.infer_blocking(vec![5u8; 16]).expect("retry after respawn succeeds");
+    let res = coord.infer_blocking(m, vec![5u8; 16]).expect("retry after respawn succeeds");
     assert_eq!(res.logits, vec![5i64; 10]);
     let stats = coord.shutdown();
     assert_eq!(stats.completed, 1);
@@ -363,7 +378,7 @@ impl InferenceEngine for AlwaysPanicEngine {
     fn batch_size(&self) -> usize {
         1
     }
-    fn infer(&mut self, _images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+    fn infer(&mut self, _model: ModelId, _images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
         panic!("scripted permanent panic");
     }
     fn name(&self) -> &'static str {
@@ -373,6 +388,7 @@ impl InferenceEngine for AlwaysPanicEngine {
 
 #[test]
 fn dead_pool_rejects_new_submits_and_drains() {
+    let (reg, m) = single();
     let coord = Coordinator::start(
         CoordinatorConfig {
             workers: 1,
@@ -383,15 +399,16 @@ fn dead_pool_rejects_new_submits_and_drains() {
             restart_budget: 0,
             ..CoordinatorConfig::default()
         },
+        reg,
         |_| Box::new(AlwaysPanicEngine),
     );
-    let rx0 = coord.submit(vec![0u8; 16]).unwrap();
+    let rx0 = coord.submit(m, vec![0u8; 16]).unwrap();
     // Race-tolerant: these are either queued then shed by the dark
     // worker, or rejected at submit once the pool registers dead —
     // both are Rejected(Shutdown)-shaped outcomes.
     let mut shutdown_rejects = 0;
     for _ in 0..4 {
-        match coord.submit(vec![0u8; 16]) {
+        match coord.submit(m, vec![0u8; 16]) {
             Ok(rx) => match rx.recv_timeout(RECV_PATIENCE).unwrap() {
                 Err(ServeError::Rejected(RejectReason::Shutdown)) => shutdown_rejects += 1,
                 other => panic!("queued request on a dead pool must shed, got {other:?}"),
@@ -412,11 +429,11 @@ fn dead_pool_rejects_new_submits_and_drains() {
         std::thread::sleep(Duration::from_millis(1));
     }
     assert!(matches!(
-        coord.submit(vec![0u8; 16]),
+        coord.submit(m, vec![0u8; 16]),
         Err(ServeError::Rejected(RejectReason::Shutdown))
     ));
     assert!(matches!(
-        coord.try_submit(vec![0u8; 16]),
+        coord.try_submit(m, vec![0u8; 16]),
         Err(ServeError::Rejected(RejectReason::Shutdown))
     ));
     let stats = coord.shutdown(); // must not deadlock
@@ -436,7 +453,7 @@ impl InferenceEngine for PoisonEngine {
     fn batch_size(&self) -> usize {
         8
     }
-    fn infer(&mut self, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+    fn infer(&mut self, _model: ModelId, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
         if images.iter().any(|i| i[0] == 255) {
             anyhow::bail!("poisoned image in batch");
         }
@@ -449,6 +466,7 @@ impl InferenceEngine for PoisonEngine {
 
 #[test]
 fn poisoned_image_cannot_sink_batchmates() {
+    let (reg, m) = single();
     let coord = Coordinator::start(
         CoordinatorConfig {
             workers: 1,
@@ -460,11 +478,12 @@ fn poisoned_image_cannot_sink_batchmates() {
             retry_backoff: Duration::ZERO,
             ..CoordinatorConfig::default()
         },
+        reg,
         |_| Box::new(PoisonEngine),
     );
-    let rx_bad = coord.submit(vec![255u8; 16]).unwrap();
+    let rx_bad = coord.submit(m, vec![255u8; 16]).unwrap();
     let pixels = [10u8, 20, 30];
-    let rx_good: Vec<_> = pixels.iter().map(|&p| coord.submit(vec![p; 16]).unwrap()).collect();
+    let rx_good: Vec<_> = pixels.iter().map(|&p| coord.submit(m, vec![p; 16]).unwrap()).collect();
     match rx_bad.recv_timeout(RECV_PATIENCE).unwrap() {
         Err(ServeError::EngineFailed { attempts, cause }) => {
             assert_eq!(attempts, 2, "1 shared batch attempt + 1 solo retry");

@@ -5,11 +5,22 @@
 //! documented `REL_ERROR` bound — the acceptance criterion for
 //! replacing the per-request latency vector.
 
+use std::sync::Arc;
 use std::time::Duration;
 
-use vsa::coordinator::{Coordinator, CoordinatorConfig, InferenceEngine, ServeError};
+use vsa::config::models;
+use vsa::coordinator::{
+    Coordinator, CoordinatorConfig, InferenceEngine, ModelId, ModelRegistry, ServeError,
+};
+use vsa::snn::params::DeployedModel;
 use vsa::telemetry::{Registry, Stage, REL_ERROR};
 use vsa::util::stats::quantile;
+
+/// One-model registry: the scripted engines here ignore the model, the
+/// coordinator just needs a valid [`ModelId`] per request.
+fn single() -> (Arc<ModelRegistry>, ModelId) {
+    ModelRegistry::single(DeployedModel::synthesize(&models::tiny(2), 42))
+}
 
 /// Engine with a known minimum service time: sleeps `delay` per batch,
 /// then returns deterministic logits.
@@ -22,7 +33,7 @@ impl InferenceEngine for SleepEngine {
     fn batch_size(&self) -> usize {
         self.batch
     }
-    fn infer(&mut self, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+    fn infer(&mut self, _model: ModelId, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
         std::thread::sleep(self.delay);
         Ok(images.iter().map(|img| vec![img.len() as i64, 0, 1]).collect())
     }
@@ -43,12 +54,12 @@ impl InferenceEngine for FlakyEngine {
     fn batch_size(&self) -> usize {
         self.inner.batch_size()
     }
-    fn infer(&mut self, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
+    fn infer(&mut self, model: ModelId, images: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<i64>>> {
         self.calls += 1;
         if self.calls <= self.fail_first {
             anyhow::bail!("injected transient failure #{}", self.calls);
         }
-        self.inner.infer(images)
+        self.inner.infer(model, images)
     }
     fn name(&self) -> &'static str {
         "flaky"
@@ -61,6 +72,7 @@ const IMG: usize = 32;
 fn trace_stages_sum_to_latency_and_percentiles_match_exact() {
     const REQUESTS: usize = 64;
     let delay = Duration::from_millis(2);
+    let (reg, m) = single();
     let coord = Coordinator::start(
         CoordinatorConfig {
             workers: 2,
@@ -69,11 +81,12 @@ fn trace_stages_sum_to_latency_and_percentiles_match_exact() {
             queue_depth: REQUESTS,
             ..CoordinatorConfig::default()
         },
+        reg,
         move |_| Box::new(SleepEngine { batch: 4, delay }) as Box<dyn InferenceEngine>,
     );
 
     let rxs: Vec<_> = (0..REQUESTS)
-        .map(|i| coord.submit(vec![i as u8; IMG]).expect("accepted"))
+        .map(|i| coord.submit(m, vec![i as u8; IMG]).expect("accepted"))
         .collect();
     let mut exact_ms: Vec<f64> = Vec::with_capacity(REQUESTS);
     for rx in rxs {
@@ -139,6 +152,7 @@ fn trace_stages_sum_to_latency_and_percentiles_match_exact() {
 #[test]
 fn retry_path_charges_backoff_and_still_sums_exactly() {
     let backoff = Duration::from_millis(1);
+    let (reg, m) = single();
     let coord = Coordinator::start(
         CoordinatorConfig {
             workers: 1,
@@ -149,6 +163,7 @@ fn retry_path_charges_backoff_and_still_sums_exactly() {
             retry_backoff: backoff,
             ..CoordinatorConfig::default()
         },
+        reg,
         move |_| {
             Box::new(FlakyEngine {
                 inner: SleepEngine { batch: 2, delay: Duration::from_micros(200) },
@@ -158,7 +173,7 @@ fn retry_path_charges_backoff_and_still_sums_exactly() {
         },
     );
 
-    let res = match coord.infer_blocking(vec![7u8; IMG]) {
+    let res = match coord.infer_blocking(m, vec![7u8; IMG]) {
         Ok(res) => res,
         Err(e) => panic!("one failure then success must be retried, got {e:?}"),
     };
@@ -170,7 +185,7 @@ fn retry_path_charges_backoff_and_still_sums_exactly() {
     );
 
     // A second request on the now-healthy engine completes cleanly.
-    match coord.infer_blocking(vec![8u8; IMG]) {
+    match coord.infer_blocking(m, vec![8u8; IMG]) {
         Ok(res) => assert_eq!(res.trace.backoff, Duration::ZERO, "healthy engine: no backoff"),
         Err(ServeError::Rejected(r)) => panic!("unexpected shed: {r:?}"),
         Err(e) => panic!("unexpected failure: {e:?}"),

@@ -6,14 +6,13 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use vsa::config::json::Json;
-use vsa::coordinator::{Coordinator, CoordinatorConfig, GoldenEngine};
+use vsa::coordinator::{Coordinator, CoordinatorConfig, GoldenEngine, ModelRegistry};
 use vsa::snn::params::{DeployedModel, Kind, Layer};
-use vsa::snn::Network;
 use vsa::telemetry::spans::pids;
 use vsa::telemetry::{SpanCollector, Stage, TRACE_SCHEMA};
 
-fn net() -> Network {
-    Network::new(DeployedModel {
+fn model() -> DeployedModel {
+    DeployedModel {
         name: "s".into(),
         num_steps: 2,
         in_channels: 1,
@@ -30,7 +29,7 @@ fn net() -> Network {
             },
             Layer::Readout { n_out: 10, n_in: 32, w: vec![1; 320] },
         ],
-    })
+    }
 }
 
 /// Stack-API spans recorded concurrently from several threads keep
@@ -77,6 +76,8 @@ fn concurrent_stack_spans_nest_per_thread() {
 fn serve_span_trees_reconcile_with_stage_traces() {
     const TOL_NS: u64 = 1_000_000; // 1 ms
     let spans = SpanCollector::new();
+    let (reg, m) = ModelRegistry::single(model());
+    let regc = Arc::clone(&reg);
     let coord = Coordinator::start_with_spans(
         CoordinatorConfig {
             workers: 2,
@@ -84,10 +85,12 @@ fn serve_span_trees_reconcile_with_stage_traces() {
             max_wait: Duration::from_millis(2),
             ..CoordinatorConfig::default()
         },
+        reg,
         Some(Arc::clone(&spans)),
-        |_| Box::new(GoldenEngine::new(net(), 4)),
+        move |_| Box::new(GoldenEngine::new(Arc::clone(&regc), 4)),
     );
-    let rxs: Vec<_> = (0..24).map(|i| coord.submit(vec![(i * 11) as u8; 16]).unwrap()).collect();
+    let rxs: Vec<_> =
+        (0..24).map(|i| coord.submit(m, vec![(i * 11) as u8; 16]).unwrap()).collect();
     let results: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
     coord.shutdown();
 

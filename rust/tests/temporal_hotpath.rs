@@ -11,7 +11,7 @@
 use vsa::arch::{Chip, SimMode};
 use vsa::baselines::golden_stepwise::StepwiseGolden;
 use vsa::config::models;
-use vsa::coordinator::{ChipEngine, GoldenEngine, InferenceEngine};
+use vsa::coordinator::{ChipEngine, GoldenEngine, InferenceEngine, ModelRegistry};
 use vsa::config::HwConfig;
 use vsa::data::synth;
 use vsa::snn::conv::{conv_naive, PackedConv, PackedFc};
@@ -207,11 +207,12 @@ fn golden_and_chip_engines_agree_on_synth_models() {
             .into_iter()
             .map(|s| s.image)
             .collect();
-        let mut golden = GoldenEngine::new(Network::new(model.clone()), 4);
-        let mut chip = ChipEngine::new(HwConfig::default(), Network::new(model), 4);
+        let (reg, m) = ModelRegistry::single(model);
+        let mut golden = GoldenEngine::new(std::sync::Arc::clone(&reg), 4);
+        let mut chip = ChipEngine::new(HwConfig::default(), reg, 4);
         assert_eq!(
-            golden.infer(&images).unwrap(),
-            chip.infer(&images).unwrap(),
+            golden.infer(m, &images).unwrap(),
+            chip.infer(m, &images).unwrap(),
             "{name}: golden != chip-sim"
         );
     }
