@@ -81,8 +81,10 @@ fn main() {
     let fc = PackedFc::pack(n_out, n_in, &wf);
     let spikes: Vec<u64> = (0..n_in.div_ceil(64)).map(|_| g.u64()).collect();
     let fc_iters = if quick { 20 } else { 100 };
+    let mut fc_psums = vec![0i32; n_out];
     let t_fc = bench("fc 4096->256 matvec", 10, fc_iters, || {
-        std::hint::black_box(fc.matvec(&spikes));
+        fc.matvec_into(&spikes, &mut fc_psums);
+        std::hint::black_box(fc_psums[0]);
     });
     let flat_t: Vec<u64> = (0..t_steps * n_in.div_ceil(64)).map(|_| g.u64()).collect();
     let mut fc_out = vec![0i32; t_steps * n_out];

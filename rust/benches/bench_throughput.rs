@@ -12,7 +12,11 @@
 //! to `BENCH_PR2.json`.  The PR5 section does for the chip simulator what
 //! PR1 did for the golden engine: stepwise (frozen in
 //! `baselines::chip_stepwise`) vs time-batched fast mode, reports
-//! asserted field-identical in-run, written to `BENCH_PR5.json`.
+//! asserted field-identical in-run, written to `BENCH_PR5.json`.  The
+//! PR10 section measures the forced-scalar vs runtime-dispatched
+//! AND-popcount kernel flavors and the golden engine's multi-core batch
+//! sharding in the same run (logits asserted bit-exact across all
+//! paths), written to `BENCH_PR10.json`.
 //!
 //! Run: `cargo bench --bench bench_throughput` (add `-- --quick` for the
 //! CI smoke subset).
@@ -28,6 +32,7 @@ use harness::{bench, quick_mode, section, JsonReport};
 const REPORT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR1.json");
 const REPORT2_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR2.json");
 const REPORT5_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR5.json");
+const REPORT10_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR10.json");
 use std::sync::Arc;
 use std::time::Duration;
 use vsa::arch::schedule::{LayerPlan, PlanKind};
@@ -42,6 +47,7 @@ use vsa::coordinator::{
 use vsa::data::synth;
 use vsa::dse::{self, Candidate, SearchSpace};
 use vsa::snn::params::DeployedModel;
+use vsa::snn::popcount;
 use vsa::snn::{Network, Scratch};
 
 fn conv_plan(c_in: usize, c_out: usize, hw_size: usize) -> LayerPlan {
@@ -215,6 +221,156 @@ fn chip_before_after(report: &mut JsonReport, quick: bool) {
     }
 }
 
+/// PR10: scalar vs vectorized AND-popcount kernels vs multi-core
+/// batches, all measured in the same run (BENCH_PR10.json).  The scalar
+/// rows pin the kernels to the forced-scalar flavor (exactly what
+/// `VSA_FORCE_SCALAR=1` runs); the vector rows use the runtime-dispatched
+/// flavor; the multicore rows shard the golden engine's batch over
+/// worker threads.  Bit-exactness across all three is asserted before
+/// anything is timed — integer popcount sums are order-independent, so
+/// none of these paths may move a single logit.
+fn pr10_vectorized_and_multicore(report: &mut JsonReport, quick: bool) {
+    section("scalar vs vectorized kernels vs multi-core batches (PR10 tentpole)");
+    let threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 8);
+    let cases: &[(&str, usize, usize, usize)] = if quick {
+        // (model, T, images, timing iters)
+        &[("tiny", 4, 8, 3)]
+    } else {
+        &[("tiny", 4, 32, 8), ("mnist", 8, 8, 3)]
+    };
+    for &(name, t, n_images, iters) in cases {
+        let spec = models::by_name(name, t).expect("preset exists");
+        let model = DeployedModel::synthesize(&spec, 7);
+        let images: Vec<Vec<u8>> = synth::for_model(name, 3, 0, n_images)
+            .into_iter()
+            .map(|s| s.image)
+            .collect();
+        let net = Network::new(model.clone());
+        let mut scratch = Scratch::new();
+
+        // Bit-exactness first: scalar flavor, dispatched flavor, and the
+        // threaded engine batch must agree logit for logit.
+        popcount::set_force_scalar(true);
+        let scalar_logits: Vec<Vec<i64>> =
+            images.iter().map(|i| net.infer_u8_with(i, &mut scratch)).collect();
+        popcount::set_force_scalar(false);
+        let kernel = popcount::active_kernel();
+        let vector_logits: Vec<Vec<i64>> =
+            images.iter().map(|i| net.infer_u8_with(i, &mut scratch)).collect();
+        assert_eq!(scalar_logits, vector_logits, "{name}: kernel flavors diverge");
+        let (reg, mid) = ModelRegistry::single(model.clone());
+        let mut engine = GoldenEngine::new(reg, n_images).with_threads(threads);
+        assert_eq!(
+            engine.infer(mid, &images).expect("threaded batch"),
+            vector_logits,
+            "{name}: {threads}-thread batch diverges from serial"
+        );
+
+        popcount::set_force_scalar(true);
+        let t_scalar = bench(&format!("{name}: golden 1-core scalar"), 1, iters, || {
+            for img in &images {
+                std::hint::black_box(net.infer_u8_with(img, &mut scratch));
+            }
+        });
+        popcount::set_force_scalar(false);
+        let t_vector = bench(&format!("{name}: golden 1-core {kernel}"), 1, iters, || {
+            for img in &images {
+                std::hint::black_box(net.infer_u8_with(img, &mut scratch));
+            }
+        });
+        let t_multi = bench(&format!("{name}: golden {threads}-core batch"), 1, iters, || {
+            std::hint::black_box(engine.infer(mid, &images).expect("threaded batch"));
+        });
+        let ips_scalar = n_images as f64 / (t_scalar.mean_ms / 1e3);
+        let ips_vector = n_images as f64 / (t_vector.mean_ms / 1e3);
+        let ips_multi = n_images as f64 / (t_multi.mean_ms / 1e3);
+        println!(
+            "  {name}: {ips_scalar:.1} scalar -> {ips_vector:.1} {kernel} ({:.2}x) -> \
+             {ips_multi:.1} on {threads} cores ({:.2}x vs scalar, logits bit-exact)",
+            ips_vector / ips_scalar,
+            ips_multi / ips_scalar
+        );
+        report.throughput(
+            "golden-scalar",
+            name,
+            ips_scalar,
+            "1 core, forced-scalar AND-popcount kernels (VSA_FORCE_SCALAR=1 flavor)",
+        );
+        report.throughput(
+            "golden-vector",
+            name,
+            ips_vector,
+            &format!("1 core, runtime-dispatched '{kernel}' kernels"),
+        );
+        report.throughput(
+            "golden-multicore",
+            name,
+            ips_multi,
+            &format!("{threads} cores, deterministic batch sharding + '{kernel}' kernels"),
+        );
+        report.ratio(
+            &format!("{name}_golden_vector_speedup_vs_scalar"),
+            ips_vector / ips_scalar,
+            "single-core kernel speedup, same run, logits bit-exact",
+        );
+        report.ratio(
+            &format!("{name}_golden_multicore_speedup_vs_scalar"),
+            ips_multi / ips_scalar,
+            &format!("{threads}-core batch vs 1-core scalar, same run, logits bit-exact"),
+        );
+        report.ratio(
+            &format!("{name}_golden_multicore_scaling_vs_vector"),
+            ips_multi / ips_vector,
+            &format!("{threads}-core batch vs 1-core dispatched kernels"),
+        );
+
+        // The chip simulator's fast mode inherits the same kernels
+        // through PackedConv/PackedFc — same scalar-vs-vector contract.
+        let chip = Chip::new(HwConfig::default(), SimMode::Fast);
+        popcount::set_force_scalar(true);
+        let chip_scalar = chip.run(&model, &images[0]);
+        popcount::set_force_scalar(false);
+        let chip_vector = chip.run(&model, &images[0]);
+        assert_eq!(
+            chip_scalar.logits, chip_vector.logits,
+            "{name}: chip fast-mode flavors diverge"
+        );
+        popcount::set_force_scalar(true);
+        let t_chip_scalar = bench(&format!("{name}: chip fast 1-core scalar"), 1, iters, || {
+            for img in &images {
+                std::hint::black_box(chip.run(&model, img));
+            }
+        });
+        popcount::set_force_scalar(false);
+        let t_chip_vector =
+            bench(&format!("{name}: chip fast 1-core {kernel}"), 1, iters, || {
+                for img in &images {
+                    std::hint::black_box(chip.run(&model, img));
+                }
+            });
+        let chips_scalar = n_images as f64 / (t_chip_scalar.mean_ms / 1e3);
+        let chips_vector = n_images as f64 / (t_chip_vector.mean_ms / 1e3);
+        report.throughput(
+            "chip-scalar",
+            name,
+            chips_scalar,
+            "fast mode, forced-scalar kernels (inherited through PackedConv/PackedFc)",
+        );
+        report.throughput(
+            "chip-vector",
+            name,
+            chips_vector,
+            &format!("fast mode, runtime-dispatched '{kernel}' kernels"),
+        );
+        report.ratio(
+            &format!("{name}_chip_vector_speedup_vs_scalar"),
+            chips_vector / chips_scalar,
+            "chip fast-mode kernel speedup, same run, reports bit-exact",
+        );
+    }
+}
+
 /// Chip throughput at the DSE-selected best configuration (highest-
 /// throughput Pareto point of the mnist sweep) next to the published
 /// design point — the start of the cross-PR images/sec trajectory the
@@ -291,6 +447,12 @@ fn main() {
     let mut report5 = JsonReport::new();
     chip_before_after(&mut report5, quick);
     report5.write(REPORT5_PATH);
+
+    // PR10: scalar/vector/multicore rows in their own trajectory file
+    // (runs in quick mode too — it IS the CI evidence for the kernels).
+    let mut report10 = JsonReport::new();
+    pr10_vectorized_and_multicore(&mut report10, quick);
+    report10.write(REPORT10_PATH);
 
     section("vectorwise utilization across layer geometries (Fig. 5/6 claim)");
     println!(

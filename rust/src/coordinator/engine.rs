@@ -1,11 +1,13 @@
 //! Inference engines the workers can run batches on.
 
+use std::ops::Range;
 use std::sync::Arc;
 
 use crate::arch::{CacheStats, Chip, SimMode, DEFAULT_MODEL_CACHE};
 use crate::config::HwConfig;
 use crate::coordinator::registry::{ModelId, ModelRegistry};
 use crate::snn::{Network, Scratch};
+use crate::train::par;
 use anyhow::{bail, Result};
 
 /// A batch-capable, multi-model inference backend.
@@ -128,6 +130,12 @@ pub struct GoldenEngine {
     registry: Arc<ModelRegistry>,
     batch: usize,
     scratch: Scratch,
+    /// Batch-parallelism width (1 = serial on the caller thread).
+    threads: usize,
+    /// One persistent arena per worker for threaded batches — PR1's
+    /// one-`Scratch`-per-worker ownership model, pooled so steady-state
+    /// threaded inference allocates nothing.
+    scratch_pool: Vec<Scratch>,
     /// Packed networks, most-recently-used first.
     cache: Vec<(ModelId, Network)>,
     capacity: usize,
@@ -150,10 +158,23 @@ impl GoldenEngine {
             registry,
             batch,
             scratch: Scratch::new(),
+            threads: 1,
+            scratch_pool: Vec::new(),
             cache: Vec::new(),
             capacity: capacity.max(1),
             stats: CacheStats::default(),
         }
+    }
+
+    /// Run batches across `threads` worker threads (clamped to ≥ 1).
+    ///
+    /// Determinism: batch items are independent, the shard partition is
+    /// fixed by [`par::SHARDS`] (never by the thread count), each worker
+    /// owns its own [`Scratch`], and every result lands in a pre-split
+    /// output slot — so any thread count returns byte-identical logits.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
     }
 
     /// Move `model`'s packed network to the cache front, packing it on a
@@ -186,8 +207,52 @@ impl InferenceEngine for GoldenEngine {
         check_geometry(&self.registry, model, images)?;
         self.prepare(model);
         let net = &self.cache[0].1;
-        let scratch = &mut self.scratch;
-        Ok(images.iter().map(|img| net.infer_u8_with(img, scratch)).collect())
+        let threads = self.threads.min(images.len()).max(1);
+        if threads == 1 {
+            let scratch = &mut self.scratch;
+            return Ok(images.iter().map(|img| net.infer_u8_with(img, scratch)).collect());
+        }
+        // Multi-core batch, PR4's deterministic-sharding playbook: the
+        // batch is cut into a fixed partition (par::SHARDS, independent
+        // of the thread count), shard s is striped to worker s % threads,
+        // each worker reuses its own pooled Scratch, and every logit
+        // vector is written into a pre-split disjoint slot of `out` — so
+        // the result bytes cannot depend on `threads` or the schedule.
+        while self.scratch_pool.len() < threads {
+            self.scratch_pool.push(Scratch::new());
+        }
+        let ranges = par::shard_ranges(images.len(), par::SHARDS);
+        let mut out: Vec<Vec<i64>> = Vec::new();
+        out.resize_with(images.len(), Vec::new);
+        let mut slots: Vec<(Range<usize>, &mut [Vec<i64>])> =
+            Vec::with_capacity(ranges.len());
+        {
+            let mut rest: &mut [Vec<i64>] = &mut out;
+            for r in &ranges {
+                let (head, tail) = rest.split_at_mut(r.len());
+                slots.push((r.clone(), head));
+                rest = tail;
+            }
+        }
+        let mut buckets: Vec<Vec<(Range<usize>, &mut [Vec<i64>])>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (s, slot) in slots.into_iter().enumerate() {
+            buckets[s % threads].push(slot);
+        }
+        std::thread::scope(|scope| {
+            for (bucket, scratch) in
+                buckets.into_iter().zip(self.scratch_pool.iter_mut())
+            {
+                scope.spawn(move || {
+                    for (r, slot) in bucket {
+                        for (img, dst) in images[r].iter().zip(slot) {
+                            *dst = net.infer_u8_with(img, scratch);
+                        }
+                    }
+                });
+            }
+        });
+        Ok(out)
     }
 
     fn name(&self) -> &'static str {
@@ -309,6 +374,21 @@ mod tests {
         let out = e.infer(id, &[vec![100; 16], vec![255; 16]]).unwrap();
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].len(), 10);
+    }
+
+    /// PR10: threaded batches are byte-identical to the serial path at
+    /// every thread count (fixed shard partition + per-worker Scratch),
+    /// including thread counts above the batch size.
+    #[test]
+    fn threaded_batches_match_serial() {
+        let (reg, id) = single();
+        let imgs: Vec<Vec<u8>> = (0..13).map(|i| vec![(i * 19) as u8; 16]).collect();
+        let mut serial = GoldenEngine::new(Arc::clone(&reg), 4);
+        let want = serial.infer(id, &imgs).unwrap();
+        for t in [2usize, 3, 4, 8, 32] {
+            let mut e = GoldenEngine::new(Arc::clone(&reg), 4).with_threads(t);
+            assert_eq!(e.infer(id, &imgs).unwrap(), want, "threads={t}");
+        }
     }
 
     #[test]

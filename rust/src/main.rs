@@ -106,6 +106,12 @@ train flags:  --model tiny|mnist|micro  --dataset synth|mnist  --steps T
 
 eval flags:   --weights FILE.vsaw  --dataset synth|mnist  --count N
               --seed S  --steps T (override the artifact's T)
+              --threads N (shard samples over N workers; counts are
+              identical for every N)
+
+infer flags:  --engine golden|chip-sim  --count N  --batch B  --seed S
+              --threads N (golden engine: shard each batch over N
+              workers — logits are byte-identical for every N)
 
 serve flags:  --model NAME | NAME=FILE.vsaw (repeatable — each occurrence
               deploys one model; presets synthesize when untrained)
@@ -140,6 +146,10 @@ tracing:      serve/serve-bench/train/simulate all take --trace-out
 telemetry:    serve/simulate/train all export the same vsa-metrics-v1
               JSON schema (see README OBSERVABILITY); train also takes
               --metrics-out FILE.json
+
+env:          VSA_FORCE_SCALAR=1 pins the AND-popcount kernels to the
+              scalar flavor (results are bit-identical either way; the
+              hardware flavors are only faster)
 ";
 
 /// Resolve one `--model` value to a named [`DeployedModel`].
@@ -458,6 +468,7 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
     let engine_kind = EngineKind::parse(&args.get("engine", "golden"))?;
     let count = args.get_usize("count", 8)?;
     let batch = args.get_usize("batch", 8)?;
+    let threads = args.get_usize("threads", 1)?.max(1);
     let dir = args.get("artifacts", "artifacts");
     let steps = args.get_usize("steps", 4)?;
     let seed = args.get_u64("seed", 7)?;
@@ -466,8 +477,13 @@ fn cmd_infer(args: &Args) -> anyhow::Result<()> {
     let (registry, mid) = ModelRegistry::single(deployed);
 
     let mut engine: Box<dyn InferenceEngine> = match engine_kind {
-        EngineKind::ChipSim => Box::new(ChipEngine::new(HwConfig::default(), registry, batch)),
-        EngineKind::Golden => Box::new(GoldenEngine::new(registry, batch)),
+        EngineKind::ChipSim => {
+            if threads > 1 {
+                println!("note: --threads applies to the golden engine only (chip-sim is serial)");
+            }
+            Box::new(ChipEngine::new(HwConfig::default(), registry, batch))
+        }
+        EngineKind::Golden => Box::new(GoldenEngine::new(registry, batch).with_threads(threads)),
     };
 
     let samples = synth::batch(11, 0, count, channels, size);
@@ -866,7 +882,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         train::Dataset::Mnist => idx::mnist_if_available(count)
             .ok_or_else(|| anyhow::anyhow!("t10k IDX files missing for held-out eval"))?,
     };
-    let (correct, total) = train::eval_golden(&deployed, &samples);
+    let (correct, total) = train::eval_golden_threaded(&deployed, &samples, cfg.threads);
     println!(
         "deployed golden-model accuracy: {correct}/{total} ({:.1}%) held out",
         100.0 * correct as f64 / total.max(1) as f64
@@ -882,6 +898,7 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     model.num_steps = t;
     let count = args.get_usize("count", 256)?;
     let seed = args.get_u64("seed", 7)?;
+    let threads = args.get_usize("threads", 1)?.max(1);
     let samples = match args.get("dataset", "synth").as_str() {
         // Same held-out stream as `vsa train`'s final report.
         "synth" => train::holdout_samples(model.in_channels, model.in_size, seed, count),
@@ -900,7 +917,7 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown dataset '{other}' (synth|mnist)"),
     };
     let t0 = Instant::now();
-    let (correct, total) = train::eval_golden(&model, &samples);
+    let (correct, total) = train::eval_golden_threaded(&model, &samples, threads);
     println!(
         "eval {}: accuracy {correct}/{total} ({:.1}%) at T={t} in {:.1} ms",
         model.name,

@@ -6,6 +6,7 @@
 //! the -1 weights — exactly the chip's AND-gate + sign trick (§III-B:
 //! `o = {s & w, s}`) vectorized over 64 channels per word.
 
+use crate::snn::popcount;
 use crate::snn::scratch::Scratch;
 use crate::snn::spikemap::SpikeMap;
 use crate::util::ceil_div;
@@ -70,10 +71,7 @@ impl PackedConv {
         // Per-pixel spike popcount.
         let mut ones = vec![0i32; h * w];
         for (i, one) in ones.iter_mut().enumerate() {
-            *one = words[i * wpp..(i + 1) * wpp]
-                .iter()
-                .map(|v| v.count_ones() as i32)
-                .sum();
+            *one = popcount::popcount(&words[i * wpp..(i + 1) * wpp]) as i32;
         }
         // Tap-summed popcount — identical for every output channel: for
         // each output pixel, the sum of `ones` over its valid taps.
@@ -116,15 +114,20 @@ impl PackedConv {
                         let (x0, x1) = clip_range(dx, w);
                         let row_base = ny as usize * w;
                         let row = &mut plane[y * w..(y + 1) * w];
-                        for x in x0..x1 {
-                            let p = (row_base as isize + x as isize + dx) as usize * wpp;
-                            let pix = &words[p..p + wpp];
-                            let and_pop: u32 = pix
-                                .iter()
-                                .zip(negw)
-                                .map(|(a, b)| (a & b).count_ones())
-                                .sum();
-                            row[x] -= 2 * and_pop as i32;
+                        if wpp == 1 {
+                            let n0 = negw[0];
+                            for x in x0..x1 {
+                                let p = (row_base as isize + x as isize + dx) as usize;
+                                row[x] -= 2 * (words[p] & n0).count_ones() as i32;
+                            }
+                        } else {
+                            for x in x0..x1 {
+                                let p =
+                                    (row_base as isize + x as isize + dx) as usize * wpp;
+                                let and_pop =
+                                    popcount::and_popcount(&words[p..p + wpp], negw);
+                                row[x] -= 2 * and_pop as i32;
+                            }
                         }
                     }
                 }
@@ -196,11 +199,14 @@ impl PackedConv {
         for (t, s) in spikes.iter().enumerate() {
             let words = s.raw_words();
             let ones_t = &mut ones[t * hw..(t + 1) * hw];
-            for (i, one) in ones_t.iter_mut().enumerate() {
-                *one = words[i * wpp..(i + 1) * wpp]
-                    .iter()
-                    .map(|v| v.count_ones() as i32)
-                    .sum();
+            if wpp == 1 {
+                for (i, one) in ones_t.iter_mut().enumerate() {
+                    *one = words[i].count_ones() as i32;
+                }
+            } else {
+                for (i, one) in ones_t.iter_mut().enumerate() {
+                    *one = popcount::popcount(&words[i * wpp..(i + 1) * wpp]) as i32;
+                }
             }
         }
         ones_sum[..t_steps * hw].fill(0);
@@ -265,15 +271,20 @@ impl PackedConv {
                         let (x0, x1) = clip_range(dx, w);
                         let row_base = ny as usize * w;
                         let row = &mut plane[y * w..(y + 1) * w];
-                        for x in x0..x1 {
-                            let p = (row_base as isize + x as isize + dx) as usize * wpp;
-                            let pix = &words[p..p + wpp];
-                            let and_pop: u32 = pix
-                                .iter()
-                                .zip(negw)
-                                .map(|(a, b)| (a & b).count_ones())
-                                .sum();
-                            row[x] -= 2 * and_pop as i32;
+                        if wpp == 1 {
+                            let n0 = negw[0];
+                            for x in x0..x1 {
+                                let p = (row_base as isize + x as isize + dx) as usize;
+                                row[x] -= 2 * (words[p] & n0).count_ones() as i32;
+                            }
+                        } else {
+                            for x in x0..x1 {
+                                let p =
+                                    (row_base as isize + x as isize + dx) as usize * wpp;
+                                let and_pop =
+                                    popcount::and_popcount(&words[p..p + wpp], negw);
+                                row[x] -= 2 * and_pop as i32;
+                            }
                         }
                     }
                 }
@@ -452,19 +463,22 @@ impl PackedFc {
 
     /// psums for one time step of flat spikes (packed words, C-major order).
     pub fn matvec(&self, spike_words: &[u64]) -> Vec<i32> {
+        let mut out = vec![0i32; self.n_out];
+        self.matvec_into(spike_words, &mut out);
+        out
+    }
+
+    /// [`PackedFc::matvec`] into a caller buffer — the allocation-free
+    /// variant for hot paths that run a matvec per step/request.
+    /// Bit-exact with [`PackedFc::matvec`].
+    pub fn matvec_into(&self, spike_words: &[u64], out: &mut [i32]) {
         assert_eq!(spike_words.len(), self.words);
-        let total: i32 = spike_words.iter().map(|w| w.count_ones() as i32).sum();
-        (0..self.n_out)
-            .map(|o| {
-                let neg = &self.neg[o * self.words..(o + 1) * self.words];
-                let and_pop: i32 = spike_words
-                    .iter()
-                    .zip(neg)
-                    .map(|(s, n)| (s & n).count_ones() as i32)
-                    .sum();
-                total - 2 * and_pop
-            })
-            .collect()
+        assert!(out.len() >= self.n_out, "psum buffer too small");
+        let total = popcount::popcount(spike_words) as i32;
+        for (o, slot) in out[..self.n_out].iter_mut().enumerate() {
+            let neg = &self.neg[o * self.words..(o + 1) * self.words];
+            *slot = total - 2 * popcount::and_popcount(spike_words, neg) as i32;
+        }
     }
 
     /// Time-batched matvec over T steps of flat spikes (step `t` at
@@ -476,26 +490,48 @@ impl PackedFc {
     pub fn matvec_t(&self, flat: &[u64], t_steps: usize, out: &mut [i32]) {
         assert_eq!(flat.len(), t_steps * self.words);
         assert!(out.len() >= t_steps * self.n_out, "psum buffer too small");
+        let w = self.words;
         for t in 0..t_steps {
-            let total: i32 = flat[t * self.words..(t + 1) * self.words]
-                .iter()
-                .map(|w| w.count_ones() as i32)
-                .sum();
+            let total = popcount::popcount(&flat[t * w..(t + 1) * w]) as i32;
             out[t * self.n_out..(t + 1) * self.n_out].fill(total);
         }
-        for o in 0..self.n_out {
-            let neg = &self.neg[o * self.words..(o + 1) * self.words];
-            if neg.iter().all(|&v| v == 0) {
-                continue; // all +1 weights: psum == total
+        // Channel-blocked reduction: FC_BLOCK rows of neg-masks (4 KiB at
+        // the CIFAR-scale fc's 64 words/row) stay L1-resident across all T
+        // steps, and each step's spike words are streamed once per block
+        // instead of once per output row.  i32 popcount sums are
+        // order-independent, so the blocking is bit-exact with the
+        // row-major order (and with per-step [`PackedFc::matvec`]).
+        const FC_BLOCK: usize = 8;
+        for o0 in (0..self.n_out).step_by(FC_BLOCK) {
+            let o1 = (o0 + FC_BLOCK).min(self.n_out);
+            let mut live = [false; FC_BLOCK];
+            let mut any = false;
+            for o in o0..o1 {
+                let nz = self.neg[o * w..(o + 1) * w].iter().any(|&v| v != 0);
+                live[o - o0] = nz;
+                any |= nz;
+            }
+            if !any {
+                continue; // all +1 weights in this block: psum == total
             }
             for t in 0..t_steps {
-                let sw = &flat[t * self.words..(t + 1) * self.words];
-                let and_pop: i32 = sw
-                    .iter()
-                    .zip(neg)
-                    .map(|(s, n)| (s & n).count_ones() as i32)
-                    .sum();
-                out[t * self.n_out + o] -= 2 * and_pop;
+                let sw = &flat[t * w..(t + 1) * w];
+                let row = &mut out[t * self.n_out..(t + 1) * self.n_out];
+                if w == 1 {
+                    let s0 = sw[0];
+                    for o in o0..o1 {
+                        if live[o - o0] {
+                            row[o] -= 2 * (s0 & self.neg[o]).count_ones() as i32;
+                        }
+                    }
+                } else {
+                    for o in o0..o1 {
+                        if live[o - o0] {
+                            let neg = &self.neg[o * w..(o + 1) * w];
+                            row[o] -= 2 * popcount::and_popcount(sw, neg) as i32;
+                        }
+                    }
+                }
             }
         }
     }
@@ -632,6 +668,7 @@ mod tests {
     #[test]
     fn packed_fc_matches_naive() {
         let mut rng = SplitMix64::new(13);
+        let mut fast_into = Vec::new();
         for &(n_in, n_out) in &[(10usize, 4usize), (64, 10), (100, 3), (130, 7)] {
             let spikes: Vec<u8> = (0..n_in).map(|_| rng.next_below(2) as u8).collect();
             let w: Vec<i8> = (0..n_out * n_in)
@@ -645,6 +682,11 @@ mod tests {
             }
             let packed = PackedFc::pack(n_out, n_in, &w);
             let fast = packed.matvec(&words);
+            // Caller-buffer variant reuses one (oversized) buffer across
+            // geometries, exactly like the hot paths do.
+            fast_into.resize(fast_into.len().max(n_out), 0);
+            fast_into.fill(-7);
+            packed.matvec_into(&words, &mut fast_into);
             let naive: Vec<i32> = (0..n_out)
                 .map(|o| {
                     (0..n_in)
@@ -653,6 +695,7 @@ mod tests {
                 })
                 .collect();
             assert_eq!(fast, naive);
+            assert_eq!(&fast_into[..n_out], &naive[..]);
         }
     }
 }

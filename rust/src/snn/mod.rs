@@ -21,6 +21,7 @@
 pub mod conv;
 pub mod network;
 pub mod params;
+pub mod popcount;
 pub mod scratch;
 pub mod spikemap;
 

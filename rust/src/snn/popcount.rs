@@ -1,0 +1,270 @@
+//! Wide AND-popcount primitives shared by every packed binary kernel.
+//!
+//! The paper's vectorwise datapath (§III-B) is an AND-gate array feeding a
+//! popcount tree; the software mirror is `popcnt(s & w_neg)` over packed
+//! `u64` words.  This module provides the one hot reduction the conv and fc
+//! kernels share, in three bit-identical flavors selected once at runtime:
+//!
+//! * **scalar** — lane-unrolled (4 independent accumulators) portable Rust;
+//!   always compiled, and the oracle the wide paths are pinned against.
+//! * **popcnt** — the same body compiled with the x86_64 `popcnt` feature so
+//!   `count_ones()` lowers to the hardware instruction.
+//! * **avx2** — 256-bit AND + the nibble-LUT/`vpsadbw` popcount (Mula's
+//!   method), 4 words per vector step.
+//!
+//! Integer popcount sums are associative, so every flavor returns the exact
+//! same value for the same input — dispatch can never change results, only
+//! speed.  `VSA_FORCE_SCALAR=1` (or [`set_force_scalar`] from tests/benches)
+//! pins the scalar fallback so CI can gate the oracle on every run.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+const UNINIT: u8 = 0;
+const SCALAR: u8 = 1;
+#[cfg(target_arch = "x86_64")]
+const POPCNT: u8 = 2;
+#[cfg(target_arch = "x86_64")]
+const AVX2: u8 = 3;
+
+/// Cached dispatch level; `UNINIT` until first use or a forced override.
+static LEVEL: AtomicU8 = AtomicU8::new(UNINIT);
+
+fn detect() -> u8 {
+    if std::env::var_os("VSA_FORCE_SCALAR").is_some_and(|v| !v.is_empty() && v != "0") {
+        return SCALAR;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_64_feature_detected!("avx2") {
+            return AVX2;
+        }
+        if is_x86_64_feature_detected!("popcnt") {
+            return POPCNT;
+        }
+    }
+    SCALAR
+}
+
+#[inline]
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != UNINIT {
+        return l;
+    }
+    let l = detect();
+    LEVEL.store(l, Ordering::Relaxed);
+    l
+}
+
+/// Force (or release) the always-compiled scalar fallback.  Tests and
+/// benches use this to compare the wide paths against the oracle in one
+/// process; `VSA_FORCE_SCALAR=1` does the same from the environment.
+pub fn set_force_scalar(force: bool) {
+    LEVEL.store(if force { SCALAR } else { UNINIT }, Ordering::Relaxed);
+}
+
+/// Name of the active kernel flavor (for bench rows / logs).
+pub fn active_kernel() -> &'static str {
+    match level() {
+        SCALAR => "scalar",
+        #[cfg(target_arch = "x86_64")]
+        POPCNT => "popcnt",
+        #[cfg(target_arch = "x86_64")]
+        AVX2 => "avx2",
+        _ => "scalar",
+    }
+}
+
+/// `popcnt(a & b)` over word slices (shorter slice bounds the reduction).
+#[inline]
+pub fn and_popcount(a: &[u64], b: &[u64]) -> u32 {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        AVX2 => unsafe { and_popcount_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        POPCNT => unsafe { and_popcount_popcnt(a, b) },
+        _ => and_popcount_scalar(a, b),
+    }
+}
+
+/// `popcnt(a)` over a word slice.
+#[inline]
+pub fn popcount(a: &[u64]) -> u32 {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        AVX2 => unsafe { popcount_avx2(a) },
+        #[cfg(target_arch = "x86_64")]
+        POPCNT => unsafe { popcount_popcnt(a) },
+        _ => popcount_scalar(a),
+    }
+}
+
+/// Lane-unrolled scalar reduction: 4 independent accumulators break the
+/// add chain so the portable path still issues ~4 popcounts per cycle.
+#[inline]
+pub(crate) fn and_popcount_scalar(a: &[u64], b: &[u64]) -> u32 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0u32, 0u32, 0u32, 0u32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += (a[i] & b[i]).count_ones();
+        s1 += (a[i + 1] & b[i + 1]).count_ones();
+        s2 += (a[i + 2] & b[i + 2]).count_ones();
+        s3 += (a[i + 3] & b[i + 3]).count_ones();
+    }
+    let mut total = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        total += (a[i] & b[i]).count_ones();
+    }
+    total
+}
+
+#[inline]
+pub(crate) fn popcount_scalar(a: &[u64]) -> u32 {
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0u32, 0u32, 0u32, 0u32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i].count_ones();
+        s1 += a[i + 1].count_ones();
+        s2 += a[i + 2].count_ones();
+        s3 += a[i + 3].count_ones();
+    }
+    let mut total = s0 + s1 + s2 + s3;
+    for i in chunks * 4..a.len() {
+        total += a[i].count_ones();
+    }
+    total
+}
+
+// The `popcnt` flavors reuse the scalar bodies: inlining under
+// `#[target_feature]` recompiles them with hardware popcount enabled.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "popcnt")]
+unsafe fn and_popcount_popcnt(a: &[u64], b: &[u64]) -> u32 {
+    and_popcount_scalar(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "popcnt")]
+unsafe fn popcount_popcnt(a: &[u64]) -> u32 {
+    popcount_scalar(a)
+}
+
+/// AVX2 AND-popcount: nibble lookup (`vpshufb`) + `vpsadbw` horizontal
+/// sum, 4 `u64` words per iteration, scalar tail for the remainder.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn and_popcount_avx2(a: &[u64], b: &[u64]) -> u32 {
+    use std::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    #[rustfmt::skip]
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let mut acc = _mm256_setzero_si256();
+    for c in 0..chunks {
+        let va = _mm256_loadu_si256(a.as_ptr().add(c * 4) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.as_ptr().add(c * 4) as *const __m256i);
+        let v = _mm256_and_si256(va, vb);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16(v, 4), low_mask);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, _mm256_setzero_si256()));
+    }
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut total = (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32;
+    for i in chunks * 4..n {
+        total += (a[i] & b[i]).count_ones();
+    }
+    total
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn popcount_avx2(a: &[u64]) -> u32 {
+    use std::arch::x86_64::*;
+    let chunks = a.len() / 4;
+    #[rustfmt::skip]
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let mut acc = _mm256_setzero_si256();
+    for c in 0..chunks {
+        let v = _mm256_loadu_si256(a.as_ptr().add(c * 4) as *const __m256i);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16(v, 4), low_mask);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, _mm256_setzero_si256()));
+    }
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut total = (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32;
+    for i in chunks * 4..a.len() {
+        total += a[i].count_ones();
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn ref_and_pop(a: &[u64], b: &[u64]) -> u32 {
+        a.iter().zip(b).map(|(x, y)| (x & y).count_ones()).sum()
+    }
+
+    #[test]
+    fn all_flavors_match_word_at_a_time_reference() {
+        let mut rng = SplitMix64::new(0x9d0c);
+        // Lane-boundary lengths: below/at/above the 4-word unroll, plus
+        // all-zero and all-ones words.
+        for &n in &[0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 64, 65] {
+            let a: Vec<u64> = (0..n).map(|_| rng.next()).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next()).collect();
+            let want = ref_and_pop(&a, &b);
+            let want_pop: u32 = a.iter().map(|v| v.count_ones()).sum();
+            assert_eq!(and_popcount_scalar(&a, &b), want, "scalar n={n}");
+            assert_eq!(popcount_scalar(&a), want_pop, "scalar pop n={n}");
+            assert_eq!(and_popcount(&a, &b), want, "dispatched n={n}");
+            assert_eq!(popcount(&a), want_pop, "dispatched pop n={n}");
+            set_force_scalar(true);
+            assert_eq!(and_popcount(&a, &b), want, "forced-scalar n={n}");
+            assert_eq!(popcount(&a), want_pop, "forced-scalar pop n={n}");
+            set_force_scalar(false);
+            let zeros = vec![0u64; n];
+            let ones = vec![u64::MAX; n];
+            assert_eq!(and_popcount(&ones, &zeros), 0);
+            assert_eq!(and_popcount(&ones, &ones), 64 * n as u32);
+            assert_eq!(popcount(&ones), 64 * n as u32);
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn hardware_flavors_match_scalar() {
+        let mut rng = SplitMix64::new(0xfeed);
+        for &n in &[1usize, 3, 4, 5, 8, 9, 64, 100] {
+            let a: Vec<u64> = (0..n).map(|_| rng.next()).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next()).collect();
+            let want = and_popcount_scalar(&a, &b);
+            let want_pop = popcount_scalar(&a);
+            if is_x86_64_feature_detected!("popcnt") {
+                assert_eq!(unsafe { and_popcount_popcnt(&a, &b) }, want);
+                assert_eq!(unsafe { popcount_popcnt(&a) }, want_pop);
+            }
+            if is_x86_64_feature_detected!("avx2") {
+                assert_eq!(unsafe { and_popcount_avx2(&a, &b) }, want);
+                assert_eq!(unsafe { popcount_avx2(&a) }, want_pop);
+            }
+        }
+    }
+}

@@ -37,7 +37,7 @@ pub mod stbp;
 pub mod tensor;
 
 pub use export::{deploy, deploy_with_eps, write_artifact};
-pub use stbp::{Net, SpikeMode};
+pub use stbp::{Net, SpikeMode, TrainArena};
 
 use crate::config::models::{self, ModelSpec};
 use crate::data::{idx, synth, Sample};
@@ -255,6 +255,12 @@ pub fn train_traced(
     // Clear residue another in-process run may have left in the global
     // reduce counter (observational attribution only).
     par::take_reduce_ns();
+    // Reusable activation/gradient storage (PR10): after the first step
+    // warms the pool the loop allocates nothing per step; every buffer
+    // is handed back zero-filled, so artifacts stay byte-identical to
+    // the allocating path (stbp::tests::arena_paths_are_bit_identical_
+    // to_allocating_paths).
+    let mut arena = TrainArena::new();
     let mut rec = spans.map(|sp| {
         sp.name_process(pids::TRAIN, "train");
         sp.name_track(pids::TRAIN, 0, "steps");
@@ -275,7 +281,14 @@ pub fn train_traced(
             &mut labels,
         );
         let t1 = Instant::now();
-        let fwd = net.forward(&images[..count * plane], count, SpikeMode::Hard, true, threads);
+        let fwd = net.forward_with(
+            &images[..count * plane],
+            count,
+            SpikeMode::Hard,
+            true,
+            threads,
+            &mut arena,
+        );
         let loss = tensor::softmax_ce(
             &fwd.logits,
             count,
@@ -285,12 +298,13 @@ pub fn train_traced(
             &mut dlogits[..count * classes],
         );
         let t2 = Instant::now();
-        let grads = net.backward(
+        let grads = net.backward_with(
             &fwd,
             &images[..count * plane],
             &dlogits[..count * classes],
             true,
             threads,
+            &mut arena,
         );
         let t3 = Instant::now();
         let reduce = Duration::from_nanos(par::take_reduce_ns());
@@ -349,6 +363,10 @@ pub fn train_traced(
             );
             epoch_phases = PhaseTimes::default();
         }
+        // Everything reading fwd/grads is done — hand the storage back
+        // for the next step.
+        arena.recycle_grads(grads);
+        arena.recycle_forward(fwd);
     }
     Ok(TrainOutcome { net, steps: total_steps, final_loss, final_batch_acc: final_acc, phases })
 }
@@ -410,16 +428,37 @@ pub fn holdout_synth(spec: &ModelSpec, seed: u64, count: usize) -> Vec<Sample> {
 /// Golden-model accuracy of a deployed artifact on `samples`.
 /// Returns (correct, total).
 pub fn eval_golden(model: &DeployedModel, samples: &[Sample]) -> (usize, usize) {
+    eval_golden_threaded(model, samples, 1)
+}
+
+/// [`eval_golden`] sharded over up to `threads` scoped workers (PR10).
+/// The shard partition is fixed ([`par::shard_ranges`], independent of
+/// `threads`), each worker owns a private [`Scratch`], per-sample
+/// results are independent, and the per-shard counts are summed in
+/// shard order — so the result is identical at every thread count.
+pub fn eval_golden_threaded(
+    model: &DeployedModel,
+    samples: &[Sample],
+    threads: usize,
+) -> (usize, usize) {
     let net = Network::new(model.clone());
-    let mut scratch = Scratch::new();
-    let correct = samples
-        .iter()
-        .filter(|s| {
-            let logits = net.infer_u8_with(&s.image, &mut scratch);
-            crate::util::stats::argmax(&logits) == s.label
-        })
-        .count();
-    (correct, samples.len())
+    let ranges = par::shard_ranges(samples.len(), par::SHARDS);
+    let mut counts = vec![0usize; ranges.len()];
+    let ctxs: Vec<_> = ranges
+        .into_iter()
+        .zip(counts.iter_mut())
+        .map(|(r, slot)| (r, slot, Scratch::new()))
+        .collect();
+    par::run(threads.max(1), ctxs, |_s, (r, slot, mut scratch)| {
+        *slot = samples[r]
+            .iter()
+            .filter(|s| {
+                let logits = net.infer_u8_with(&s.image, &mut scratch);
+                crate::util::stats::argmax(&logits) == s.label
+            })
+            .count();
+    });
+    (counts.iter().sum(), samples.len())
 }
 
 #[cfg(test)]
@@ -592,6 +631,23 @@ mod tests {
         let (correct, total) = eval_golden(&model, &samples);
         assert_eq!(total, 10);
         assert!(correct <= total);
+    }
+
+    #[test]
+    fn eval_golden_threaded_matches_serial_at_every_thread_count() {
+        let spec = models::micro(3);
+        let model = deploy(&Net::init(&spec, 11));
+        // 13 samples: not a multiple of any shard/thread count below.
+        let samples = holdout_synth(&spec, 11, 13);
+        let serial = eval_golden(&model, &samples);
+        for t in [2usize, 3, 4, 8, 32] {
+            assert_eq!(
+                eval_golden_threaded(&model, &samples, t),
+                serial,
+                "eval count must not depend on threads={t}"
+            );
+        }
+        assert_eq!(eval_golden_threaded(&model, &[], 4), (0, 0), "empty sample set");
     }
 
     #[test]

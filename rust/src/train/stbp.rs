@@ -37,7 +37,7 @@
 //! exported artifacts are byte-identical at any `--threads`.
 
 use crate::config::models::{LayerKind, ModelSpec};
-use crate::train::binarize::sign_vec;
+use crate::train::binarize::sign_into;
 use crate::train::ifbn::{BnCache, IfBn, V_TH};
 use crate::train::tensor;
 use crate::util::rng::SplitMix64;
@@ -123,6 +123,72 @@ pub struct LayerGrads {
     pub beta: Vec<f32>,
 }
 
+/// Reusable activation/gradient buffers for the training loop (PR10
+/// bugfix): `forward`/`backward` used to allocate a fresh
+/// `vec![0.0f32; ...]` per layer per step (activations, spike trains,
+/// membranes, gradients) and the `_mt` kernels another SHARDS×|dW| —
+/// tens of MB of churn per step at CIFAR scale.  The arena is a LIFO
+/// pool of recycled `Vec<f32>` storage plus the per-shard gradient
+/// buffer; every buffer handed out is cleared and zero-filled, so the
+/// recycled paths are byte-identical to the allocating ones (asserted
+/// by the `--threads 1/4` artifact-identity suite).
+///
+/// Ownership flow per step: [`Net::forward_with`] /
+/// [`Net::backward_with`] draw from and return transient buffers to the
+/// arena; buffers that outlive the call (the [`Forward`] caches, the
+/// returned [`LayerGrads`]) come back via [`TrainArena::recycle_forward`]
+/// / [`TrainArena::recycle_grads`] once the optimizer has consumed them.
+#[derive(Debug, Default)]
+pub struct TrainArena {
+    pool: Vec<Vec<f32>>,
+    /// Per-shard weight-gradient buffer for
+    /// `tensor::*_grads_mt_with` (the SHARDS×|dW| churn).
+    parts: Vec<f32>,
+}
+
+impl TrainArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zero-filled buffer of length `n` — contents identical to
+    /// `vec![0.0f32; n]`, storage recycled LIFO from the pool.
+    fn take_zeroed(&mut self, n: usize) -> Vec<f32> {
+        let mut v = self.pool.pop().unwrap_or_default();
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    /// Return a buffer's storage to the pool.
+    fn give(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.pool.push(v);
+        }
+    }
+
+    /// Recycle a consumed forward pass (call after `apply_bn_ema` and
+    /// anything else reading its logits/caches is done with it).
+    pub fn recycle_forward(&mut self, fwd: Forward) {
+        self.give(fwd.logits);
+        for c in fwd.caches {
+            self.give(c.spikes);
+            self.give(c.v_pre);
+            self.give(c.wb);
+        }
+    }
+
+    /// Recycle consumed per-layer gradients (call after the optimizer
+    /// step).
+    pub fn recycle_grads(&mut self, grads: Vec<LayerGrads>) {
+        for g in grads {
+            self.give(g.w);
+            self.give(g.gamma);
+            self.give(g.beta);
+        }
+    }
+}
+
 impl Net {
     /// Initialize latent weights from one seeded SplitMix64 stream:
     /// uniform in `±1/sqrt(fan_in)`, drawn in layer order, row-major —
@@ -193,7 +259,22 @@ impl Net {
         binarized: bool,
         threads: usize,
     ) -> Forward {
-        self.forward_impl(images, batch, mode, binarized, true, 0.0, threads)
+        self.forward_with(images, batch, mode, binarized, threads, &mut TrainArena::new())
+    }
+
+    /// [`Net::forward`] drawing its buffers from `arena` instead of the
+    /// allocator — the training-loop entry point.  Bit-identical to
+    /// `forward` (every arena buffer is handed out zero-filled).
+    pub fn forward_with(
+        &self,
+        images: &[f32],
+        batch: usize,
+        mode: SpikeMode,
+        binarized: bool,
+        threads: usize,
+        arena: &mut TrainArena,
+    ) -> Forward {
+        self.forward_impl(images, batch, mode, binarized, true, 0.0, threads, arena)
     }
 
     /// Eval forward: running-statistics BN, hard spikes, binarized
@@ -201,7 +282,9 @@ impl Net {
     /// epsilon ([`crate::train::ifbn::BN_EPS`] normally; the
     /// fold-exactness test passes 0).
     pub fn forward_eval(&self, images: &[f32], batch: usize, eps: f64) -> Vec<f32> {
-        self.forward_impl(images, batch, SpikeMode::Hard, true, false, eps, 1).logits
+        let mut arena = TrainArena::new();
+        self.forward_impl(images, batch, SpikeMode::Hard, true, false, eps, 1, &mut arena)
+            .logits
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -214,6 +297,7 @@ impl Net {
         train: bool,
         eps: f64,
         threads: usize,
+        arena: &mut TrainArena,
     ) -> Forward {
         let t_steps = self.spec.num_steps;
         let (mut h, mut w) = (self.spec.in_size, self.spec.in_size);
@@ -224,6 +308,18 @@ impl Net {
         );
         let mut caches: Vec<Cache> = Vec::with_capacity(self.layers.len());
         let mut logits: Option<Vec<f32>> = None;
+        // IF membrane-residue scratch, shared across layers (the strided
+        // recurrence clears and resizes it per call).
+        let mut v_res = arena.take_zeroed(0);
+        let binarize = |arena: &mut TrainArena, wts: &[f32]| -> Vec<f32> {
+            if binarized {
+                let mut b = arena.take_zeroed(wts.len());
+                sign_into(wts, &mut b);
+                b
+            } else {
+                Vec::new()
+            }
+        };
 
         for ly in &self.layers {
             // Input spike train of this layer: previous cache (or none
@@ -231,11 +327,11 @@ impl Net {
             match ly {
                 TrainLayer::Conv { enc: true, c_out, c_in, k, w: wts, bn } => {
                     let (ci, co, kk) = (*c_in, *c_out, *k);
-                    let wb = if binarized { sign_vec(wts) } else { Vec::new() };
+                    let wb = binarize(arena, wts);
                     let wref: &[f32] = if binarized { &wb } else { wts };
                     let hw = h * w;
                     let f = co * hw;
-                    let mut y = vec![0.0f32; batch * f];
+                    let mut y = arena.take_zeroed(batch * f);
                     tensor::conv2d_same_mt(images, batch, ci, h, w, wref, co, kk, &mut y, threads);
                     let bn_cache = if train {
                         bn.normalize_train(&mut y, batch, hw, threads)
@@ -246,20 +342,23 @@ impl Net {
                     // §III-F: the same psum plane drives every step —
                     // broadcast into the IF recurrence, never copied T
                     // times (O(batch·f) psum storage).
-                    let mut spikes = vec![0.0f32; t_steps * batch * f];
-                    let mut v_pre = vec![0.0f32; t_steps * batch * f];
-                    if_forward_broadcast(&y, t_steps, batch * f, mode, &mut spikes, &mut v_pre);
+                    let mut spikes = arena.take_zeroed(t_steps * batch * f);
+                    let mut v_pre = arena.take_zeroed(t_steps * batch * f);
+                    if_forward_strided(
+                        &y, 0, t_steps, batch * f, mode, &mut spikes, &mut v_pre, &mut v_res,
+                    );
+                    arena.give(y);
                     caches.push(Cache { spikes, v_pre, bn: bn_cache, wb, c: co, h, w });
                 }
                 TrainLayer::Conv { enc: false, c_out, c_in, k, w: wts, bn } => {
                     let (ci, co, kk) = (*c_in, *c_out, *k);
-                    let wb = if binarized { sign_vec(wts) } else { Vec::new() };
+                    let wb = binarize(arena, wts);
                     let wref: &[f32] = if binarized { &wb } else { wts };
                     let hw = h * w;
                     let f = co * hw;
                     let n = t_steps * batch;
+                    let mut y = arena.take_zeroed(n * f);
                     let x_in = &caches.last().expect("conv input").spikes;
-                    let mut y = vec![0.0f32; n * f];
                     tensor::conv2d_same_mt(x_in, n, ci, h, w, wref, co, kk, &mut y, threads);
                     let bn_cache = if train {
                         bn.normalize_train(&mut y, n, hw, threads)
@@ -267,16 +366,20 @@ impl Net {
                         bn.normalize_eval(&mut y, n, hw, eps);
                         BnCache::default()
                     };
-                    let mut spikes = vec![0.0f32; n * f];
-                    let mut v_pre = vec![0.0f32; n * f];
-                    if_forward(&y, t_steps, batch * f, mode, &mut spikes, &mut v_pre);
+                    let mut spikes = arena.take_zeroed(n * f);
+                    let mut v_pre = arena.take_zeroed(n * f);
+                    let m = batch * f;
+                    if_forward_strided(
+                        &y, m, t_steps, m, mode, &mut spikes, &mut v_pre, &mut v_res,
+                    );
+                    arena.give(y);
                     caches.push(Cache { spikes, v_pre, bn: bn_cache, wb, c: co, h, w });
                 }
                 TrainLayer::MaxPool => {
-                    let prev = caches.last().expect("pool input");
-                    let (c, oh, ow) = (prev.c, h / 2, w / 2);
                     let n = t_steps * batch;
-                    let mut spikes = vec![0.0f32; n * c * oh * ow];
+                    let (c, oh, ow) = (caches.last().expect("pool input").c, h / 2, w / 2);
+                    let mut spikes = arena.take_zeroed(n * c * oh * ow);
+                    let prev = caches.last().expect("pool input");
                     tensor::maxpool2(&prev.spikes, n, c, h, w, &mut spikes);
                     h = oh;
                     w = ow;
@@ -284,11 +387,11 @@ impl Net {
                 }
                 TrainLayer::Fc { n_out, n_in, w: wts, bn } => {
                     let (ni, no) = (*n_in, *n_out);
-                    let wb = if binarized { sign_vec(wts) } else { Vec::new() };
+                    let wb = binarize(arena, wts);
                     let wref: &[f32] = if binarized { &wb } else { wts };
                     let n = t_steps * batch;
+                    let mut y = arena.take_zeroed(n * no);
                     let x_in = &caches.last().expect("fc input").spikes;
-                    let mut y = vec![0.0f32; n * no];
                     tensor::matmul_nt_mt(x_in, n, ni, wref, no, &mut y, threads);
                     let bn_cache = if train {
                         bn.normalize_train(&mut y, n, 1, threads)
@@ -296,32 +399,38 @@ impl Net {
                         bn.normalize_eval(&mut y, n, 1, eps);
                         BnCache::default()
                     };
-                    let mut spikes = vec![0.0f32; n * no];
-                    let mut v_pre = vec![0.0f32; n * no];
-                    if_forward(&y, t_steps, batch * no, mode, &mut spikes, &mut v_pre);
+                    let mut spikes = arena.take_zeroed(n * no);
+                    let mut v_pre = arena.take_zeroed(n * no);
+                    let m = batch * no;
+                    if_forward_strided(
+                        &y, m, t_steps, m, mode, &mut spikes, &mut v_pre, &mut v_res,
+                    );
+                    arena.give(y);
                     h = 1;
                     w = 1;
                     caches.push(Cache { spikes, v_pre, bn: bn_cache, wb, c: no, h, w });
                 }
                 TrainLayer::Readout { n_out, n_in, w: wts } => {
-                    let wb = if binarized { sign_vec(wts) } else { Vec::new() };
+                    let wb = binarize(arena, wts);
                     let wref: &[f32] = if binarized { &wb } else { wts };
                     let n = t_steps * batch;
+                    let mut y = arena.take_zeroed(n * n_out);
                     let x_in = &caches.last().expect("readout input").spikes;
-                    let mut y = vec![0.0f32; n * n_out];
                     tensor::matmul_nt_mt(x_in, n, *n_in, wref, *n_out, &mut y, threads);
-                    let mut lg = vec![0.0f32; batch * n_out];
+                    let mut lg = arena.take_zeroed(batch * n_out);
                     for t in 0..t_steps {
                         for (l, &v) in lg.iter_mut().zip(&y[t * batch * n_out..]) {
                             *l += v;
                         }
                     }
+                    arena.give(y);
                     logits = Some(lg);
                     caches.push(Cache { wb, ..Cache::default() });
                     break;
                 }
             }
         }
+        arena.give(v_res);
         Forward {
             logits: logits.expect("network has no readout layer"),
             batch,
@@ -360,12 +469,32 @@ impl Net {
         binarized: bool,
         threads: usize,
     ) -> Vec<LayerGrads> {
+        self.backward_with(fwd, images, dlogits, binarized, threads, &mut TrainArena::new())
+    }
+
+    /// [`Net::backward`] drawing its buffers from `arena` — the
+    /// training-loop entry point.  Bit-identical to `backward`: arena
+    /// buffers come out zero-filled and the recycled per-shard `parts`
+    /// buffer feeding `tensor::*_grads_mt_with` is likewise re-zeroed
+    /// before the shards write into it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_with(
+        &self,
+        fwd: &Forward,
+        images: &[f32],
+        dlogits: &[f32],
+        binarized: bool,
+        threads: usize,
+        arena: &mut TrainArena,
+    ) -> Vec<LayerGrads> {
         let t_steps = self.spec.num_steps;
         let batch = fwd.batch;
         let mut grads: Vec<LayerGrads> =
             self.layers.iter().map(|_| LayerGrads::default()).collect();
         // Gradient flowing into the current layer's OUTPUT spike train.
         let mut d_spikes: Vec<f32> = Vec::new();
+        // Residue-gradient scratch shared by every if_backward call.
+        let mut g_vres = arena.take_zeroed(0);
 
         for li in (0..self.layers.len()).rev() {
             let cache = &fwd.caches[li];
@@ -383,46 +512,73 @@ impl Net {
                     // PR3's per-step accumulation (g*k vs k additions
                     // of g) — deterministic, NOT bit-identical to the
                     // frozen baseline (see baselines::stbp_scalar).
-                    let mut x_sum = vec![0.0f32; batch * ni];
+                    let mut x_sum = arena.take_zeroed(batch * ni);
                     for t in 0..t_steps {
                         let plane = &x_in[t * batch * ni..(t + 1) * batch * ni];
                         for (a, &v) in x_sum.iter_mut().zip(plane) {
                             *a += v;
                         }
                     }
-                    let mut dw = vec![0.0f32; wts.len()];
-                    let mut dx1 = vec![0.0f32; batch * ni];
-                    tensor::matmul_nt_grads_mt(
-                        &x_sum, batch, ni, wb, no, dlogits, &mut dx1, &mut dw, threads,
+                    let mut dw = arena.take_zeroed(wts.len());
+                    let mut dx1 = arena.take_zeroed(batch * ni);
+                    tensor::matmul_nt_grads_mt_with(
+                        &x_sum,
+                        batch,
+                        ni,
+                        wb,
+                        no,
+                        dlogits,
+                        &mut dx1,
+                        &mut dw,
+                        threads,
+                        &mut arena.parts,
                     );
-                    let mut dx = vec![0.0f32; t_steps * batch * ni];
+                    let mut dx = arena.take_zeroed(t_steps * batch * ni);
                     for plane in dx.chunks_mut(batch * ni) {
                         plane.copy_from_slice(&dx1);
                     }
+                    arena.give(x_sum);
+                    arena.give(dx1);
                     grads[li].w = dw;
-                    d_spikes = dx;
+                    arena.give(std::mem::replace(&mut d_spikes, dx));
                 }
                 TrainLayer::Fc { n_out, n_in, w: wts, bn } => {
                     let (ni, no) = (*n_in, *n_out);
                     let wb: &[f32] = if binarized { &cache.wb } else { wts };
                     let x_in = x_in_spikes.expect("fc has an input layer");
-                    if_backward(&mut d_spikes, &cache.spikes, &cache.v_pre, t_steps, batch * no);
+                    if_backward_with(
+                        &mut d_spikes,
+                        &cache.spikes,
+                        &cache.v_pre,
+                        t_steps,
+                        batch * no,
+                        &mut g_vres,
+                    );
                     let n = t_steps * batch;
-                    let mut dgamma = vec![0.0f32; no];
-                    let mut dbeta = vec![0.0f32; no];
+                    let mut dgamma = arena.take_zeroed(no);
+                    let mut dbeta = arena.take_zeroed(no);
                     bn.backward(&cache.bn, &mut d_spikes, n, 1, &mut dgamma, &mut dbeta, threads);
-                    let mut dw = vec![0.0f32; wts.len()];
-                    let mut dx = vec![0.0f32; n * ni];
-                    tensor::matmul_nt_grads_mt(
-                        x_in, n, ni, wb, no, &d_spikes, &mut dx, &mut dw, threads,
+                    let mut dw = arena.take_zeroed(wts.len());
+                    let mut dx = arena.take_zeroed(n * ni);
+                    tensor::matmul_nt_grads_mt_with(
+                        x_in,
+                        n,
+                        ni,
+                        wb,
+                        no,
+                        &d_spikes,
+                        &mut dx,
+                        &mut dw,
+                        threads,
+                        &mut arena.parts,
                     );
                     grads[li] = LayerGrads { w: dw, gamma: dgamma, beta: dbeta };
-                    d_spikes = dx;
+                    arena.give(std::mem::replace(&mut d_spikes, dx));
                 }
                 TrainLayer::MaxPool => {
                     let prev = &fwd.caches[li - 1];
                     let n = t_steps * batch;
-                    let mut dx = vec![0.0f32; n * prev.c * prev.h * prev.w];
+                    let mut dx = arena.take_zeroed(n * prev.c * prev.h * prev.w);
                     tensor::maxpool2_grads(
                         &prev.spikes,
                         n,
@@ -433,7 +589,7 @@ impl Net {
                         &d_spikes,
                         &mut dx,
                     );
-                    d_spikes = dx;
+                    arena.give(std::mem::replace(&mut d_spikes, dx));
                 }
                 TrainLayer::Conv { enc, c_out, c_in, k, w: wts, bn } => {
                     let (ci, co, kk) = (*c_in, *c_out, *k);
@@ -441,14 +597,21 @@ impl Net {
                     let (h, w) = (cache.h, cache.w);
                     let hw = h * w;
                     let m = batch * co * hw;
-                    if_backward(&mut d_spikes, &cache.spikes, &cache.v_pre, t_steps, m);
-                    let mut dgamma = vec![0.0f32; co];
-                    let mut dbeta = vec![0.0f32; co];
-                    let mut dw = vec![0.0f32; wts.len()];
+                    if_backward_with(
+                        &mut d_spikes,
+                        &cache.spikes,
+                        &cache.v_pre,
+                        t_steps,
+                        m,
+                        &mut g_vres,
+                    );
+                    let mut dgamma = arena.take_zeroed(co);
+                    let mut dbeta = arena.take_zeroed(co);
+                    let mut dw = arena.take_zeroed(wts.len());
                     if *enc {
                         // The broadcast over T sums the per-step grads.
                         let bf = batch * co * hw;
-                        let mut dy = vec![0.0f32; bf];
+                        let mut dy = arena.take_zeroed(bf);
                         for t in 0..t_steps {
                             for (d, &g) in dy.iter_mut().zip(&d_spikes[t * bf..(t + 1) * bf]) {
                                 *d += g;
@@ -457,27 +620,56 @@ impl Net {
                         bn.backward(
                             &cache.bn, &mut dy, batch, hw, &mut dgamma, &mut dbeta, threads,
                         );
-                        let mut dx = vec![0.0f32; batch * ci * hw];
-                        tensor::conv2d_same_grads_mt(
-                            images, batch, ci, h, w, wb, co, kk, &dy, &mut dx, &mut dw, threads,
+                        let mut dx = arena.take_zeroed(batch * ci * hw);
+                        tensor::conv2d_same_grads_mt_with(
+                            images,
+                            batch,
+                            ci,
+                            h,
+                            w,
+                            wb,
+                            co,
+                            kk,
+                            &dy,
+                            &mut dx,
+                            &mut dw,
+                            threads,
+                            &mut arena.parts,
                         );
-                        d_spikes = Vec::new(); // input image needs no gradient
+                        arena.give(dy);
+                        arena.give(dx);
+                        // input image needs no gradient
+                        arena.give(std::mem::take(&mut d_spikes));
                     } else {
                         let n = t_steps * batch;
                         let x_in = x_in_spikes.expect("conv has an input layer");
                         bn.backward(
                             &cache.bn, &mut d_spikes, n, hw, &mut dgamma, &mut dbeta, threads,
                         );
-                        let mut dx = vec![0.0f32; n * ci * hw];
-                        tensor::conv2d_same_grads_mt(
-                            x_in, n, ci, h, w, wb, co, kk, &d_spikes, &mut dx, &mut dw, threads,
+                        let mut dx = arena.take_zeroed(n * ci * hw);
+                        tensor::conv2d_same_grads_mt_with(
+                            x_in,
+                            n,
+                            ci,
+                            h,
+                            w,
+                            wb,
+                            co,
+                            kk,
+                            &d_spikes,
+                            &mut dx,
+                            &mut dw,
+                            threads,
+                            &mut arena.parts,
                         );
-                        d_spikes = dx;
+                        arena.give(std::mem::replace(&mut d_spikes, dx));
                     }
                     grads[li] = LayerGrads { w: dw, gamma: dgamma, beta: dbeta };
                 }
             }
         }
+        arena.give(g_vres);
+        arena.give(d_spikes);
         grads
     }
 }
@@ -494,7 +686,7 @@ pub fn if_forward(
     v_pre_out: &mut [f32],
 ) {
     assert_eq!(psums.len(), t_steps * m, "psum geometry");
-    if_forward_strided(psums, m, t_steps, m, mode, spikes, v_pre_out);
+    if_forward_strided(psums, m, t_steps, m, mode, spikes, v_pre_out, &mut Vec::new());
 }
 
 /// [`if_forward`] for the encoding layer's constant drive (§III-F, the
@@ -512,11 +704,14 @@ pub fn if_forward_broadcast(
     v_pre_out: &mut [f32],
 ) {
     assert_eq!(psum.len(), m, "broadcast psum geometry");
-    if_forward_strided(psum, 0, t_steps, m, mode, spikes, v_pre_out);
+    if_forward_strided(psum, 0, t_steps, m, mode, spikes, v_pre_out, &mut Vec::new());
 }
 
 /// Shared IF recurrence: step `t` reads its psums at `psums[t * stride
-/// ..][..m]` (`stride = m` per-step, `stride = 0` broadcast).
+/// ..][..m]` (`stride = m` per-step, `stride = 0` broadcast).  `v_res`
+/// is caller-owned membrane-residue scratch (cleared and re-zeroed here,
+/// so reuse across calls is bit-identical to a fresh buffer).
+#[allow(clippy::too_many_arguments)]
 fn if_forward_strided(
     psums: &[f32],
     stride: usize,
@@ -525,10 +720,12 @@ fn if_forward_strided(
     mode: SpikeMode,
     spikes: &mut [f32],
     v_pre_out: &mut [f32],
+    v_res: &mut Vec<f32>,
 ) {
     assert_eq!(spikes.len(), t_steps * m, "spike geometry");
     assert_eq!(v_pre_out.len(), t_steps * m, "membrane geometry");
-    let mut v_res = vec![0.0f32; m];
+    v_res.clear();
+    v_res.resize(m, 0.0);
     for t in 0..t_steps {
         let ps = &psums[t * stride..t * stride + m];
         let sp = &mut spikes[t * m..(t + 1) * m];
@@ -556,8 +753,22 @@ fn if_forward_strided(
 /// the psum gradient).  Rectangular surrogate `do/dv = 1(|v_pre - v_th|
 /// < 1/2)`; the reset is differentiated through both `v_pre` and `o`.
 pub fn if_backward(d_spikes: &mut [f32], spikes: &[f32], v_pre: &[f32], t_steps: usize, m: usize) {
+    if_backward_with(d_spikes, spikes, v_pre, t_steps, m, &mut Vec::new());
+}
+
+/// [`if_backward`] with caller-owned residue-gradient scratch (cleared
+/// and re-zeroed here — reuse is bit-identical to a fresh buffer).
+pub fn if_backward_with(
+    d_spikes: &mut [f32],
+    spikes: &[f32],
+    v_pre: &[f32],
+    t_steps: usize,
+    m: usize,
+    g_vres: &mut Vec<f32>,
+) {
     assert_eq!(d_spikes.len(), t_steps * m, "spike-grad geometry");
-    let mut g_vres = vec![0.0f32; m];
+    g_vres.clear();
+    g_vres.resize(m, 0.0);
     for t in (0..t_steps).rev() {
         let base = t * m;
         for j in 0..m {
@@ -666,6 +877,40 @@ mod tests {
                 TrainLayer::Readout { w, .. } => assert_eq!(g.w.len(), w.len()),
                 TrainLayer::MaxPool => assert!(g.w.is_empty()),
             }
+        }
+    }
+
+    #[test]
+    fn arena_paths_are_bit_identical_to_allocating_paths() {
+        // `tiny` exercises every layer kind (enc conv, pool, spiking
+        // conv, fc, readout).  Run three steps through ONE arena so the
+        // later steps consume recycled (previously dirty) buffers — the
+        // logits, every cached train, and every gradient must still
+        // match the fresh-allocation path byte for byte.
+        let spec = models::tiny(3);
+        let net = Net::init(&spec, 23);
+        let b = 3;
+        let plane = spec.in_channels * spec.in_size * spec.in_size;
+        let nc = net.classes();
+        let images: Vec<f32> = (0..b * plane).map(|v| (v % 97) as f32 / 96.0).collect();
+        let dlogits: Vec<f32> = (0..b * nc).map(|v| (v as f32 - 3.0) * 0.01).collect();
+        let fwd = net.forward(&images, b, SpikeMode::Hard, true, 2);
+        let grads = net.backward(&fwd, &images, &dlogits, true, 2);
+        let mut arena = TrainArena::new();
+        for step in 0..3 {
+            let f2 = net.forward_with(&images, b, SpikeMode::Hard, true, 2, &mut arena);
+            assert_eq!(fwd.logits, f2.logits, "logits drifted at arena step {step}");
+            for li in 0..net.layers.len() {
+                assert_eq!(
+                    fwd.layer_cache(li),
+                    f2.layer_cache(li),
+                    "layer {li} cache drifted at arena step {step}"
+                );
+            }
+            let g2 = net.backward_with(&f2, &images, &dlogits, true, 2, &mut arena);
+            assert_eq!(grads, g2, "grads drifted at arena step {step}");
+            arena.recycle_grads(g2);
+            arena.recycle_forward(f2);
         }
     }
 

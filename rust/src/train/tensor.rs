@@ -182,6 +182,10 @@ pub fn conv2d_same_grads(
 /// rows); the weight gradient is reduced from per-shard buffers in
 /// fixed shard order, so every thread count produces identical bytes.
 /// Like the scalar kernel, `dx` and `dw` are (re)computed from zero.
+///
+/// Allocates the per-shard buffer internally; the training loop uses
+/// [`conv2d_same_grads_mt_with`] to recycle one across steps (the
+/// SHARDS×|dW| churn was tens of MB per step at CIFAR scale).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_same_grads_mt(
     x: &[f32],
@@ -197,6 +201,29 @@ pub fn conv2d_same_grads_mt(
     dw: &mut [f32],
     threads: usize,
 ) {
+    let mut parts = Vec::new();
+    conv2d_same_grads_mt_with(x, n, c_in, h, w, wts, c_out, k, dy, dx, dw, threads, &mut parts);
+}
+
+/// [`conv2d_same_grads_mt`] with a caller-owned per-shard gradient
+/// buffer (cleared and zero-filled here — contents identical to the
+/// allocating variant, bit for bit).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_grads_mt_with(
+    x: &[f32],
+    n: usize,
+    c_in: usize,
+    h: usize,
+    w: usize,
+    wts: &[f32],
+    c_out: usize,
+    k: usize,
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    threads: usize,
+    parts: &mut Vec<f32>,
+) {
     let (in_row, out_row) = (c_in * h * w, c_out * h * w);
     assert_eq!(x.len(), n * in_row, "conv-grad input geometry");
     assert_eq!(dy.len(), n * out_row, "conv-grad dy geometry");
@@ -204,7 +231,8 @@ pub fn conv2d_same_grads_mt(
     assert_eq!(dw.len(), c_out * c_in * k * k, "conv-grad dw geometry");
     let threads = par::threads_for(2 * n * out_row * c_in * k * k, threads);
     let ranges = par::shard_ranges(n, par::SHARDS);
-    let mut parts = vec![0.0f32; ranges.len() * dw.len()];
+    parts.clear();
+    parts.resize(ranges.len() * dw.len(), 0.0);
     {
         let dxs = par::split_rows(dx, &ranges, in_row);
         let ctxs: Vec<_> = ranges
@@ -368,7 +396,8 @@ pub fn matmul_nt_grads(
 /// [`matmul_nt_grads`] with rows sharded over `threads` workers: `dx`
 /// rows are disjoint per shard, `dw` is reduced from per-shard buffers
 /// in fixed shard order (accumulate semantics preserved) — identical
-/// bytes for every thread count.
+/// bytes for every thread count.  Allocating variant of
+/// [`matmul_nt_grads_mt_with`].
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_nt_grads_mt(
     x: &[f32],
@@ -381,13 +410,35 @@ pub fn matmul_nt_grads_mt(
     dw: &mut [f32],
     threads: usize,
 ) {
+    let mut parts = Vec::new();
+    matmul_nt_grads_mt_with(x, n, n_in, wts, n_out, dy, dx, dw, threads, &mut parts);
+}
+
+/// [`matmul_nt_grads_mt`] with a caller-owned per-shard gradient buffer
+/// (cleared and zero-filled here, so each shard still accumulates into
+/// zeros exactly like the allocating variant — note `dw` itself keeps
+/// its accumulate semantics and is NOT zeroed).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_grads_mt_with(
+    x: &[f32],
+    n: usize,
+    n_in: usize,
+    wts: &[f32],
+    n_out: usize,
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    threads: usize,
+    parts: &mut Vec<f32>,
+) {
     assert_eq!(x.len(), n * n_in, "matmul-grad input geometry");
     assert_eq!(dy.len(), n * n_out, "matmul-grad dy geometry");
     assert_eq!(dx.len(), n * n_in, "matmul-grad dx geometry");
     assert_eq!(dw.len(), n_out * n_in, "matmul-grad dw geometry");
     let threads = par::threads_for(2 * n * n_in * n_out, threads);
     let ranges = par::shard_ranges(n, par::SHARDS);
-    let mut parts = vec![0.0f32; ranges.len() * dw.len()];
+    parts.clear();
+    parts.resize(ranges.len() * dw.len(), 0.0);
     {
         let dxs = par::split_rows(dx, &ranges, n_in);
         let ctxs: Vec<_> = ranges
@@ -736,6 +787,45 @@ mod tests {
         let mbase = runm(1);
         for t in [2, 4, 7] {
             assert_eq!(mbase, runm(t), "matmul results must not depend on threads={t}");
+        }
+    }
+
+    /// PR10 bugfix regression: the `_with` variants recycling one parts
+    /// buffer across calls (stale capacity from a LARGER previous call)
+    /// are bit-identical to the allocating `_mt` kernels.
+    #[test]
+    fn grads_mt_with_recycled_parts_is_bit_exact() {
+        let mut rng = crate::util::rng::SplitMix64::new(41);
+        let (n, ci, co, k, h, w) = (7, 2, 4, 3, 4, 4);
+        let x = draw(&mut rng, n * ci * h * w);
+        let wts = draw(&mut rng, co * ci * k * k);
+        let dy = draw(&mut rng, n * co * h * w);
+        let mut parts = vec![f32::NAN; 1 << 16]; // poisoned, oversized
+        for threads in [1usize, 3] {
+            let mut dx_a = vec![0.0f32; x.len()];
+            let mut dw_a = vec![0.0f32; wts.len()];
+            conv2d_same_grads_mt(&x, n, ci, h, w, &wts, co, k, &dy, &mut dx_a, &mut dw_a, threads);
+            let mut dx_b = vec![0.0f32; x.len()];
+            let mut dw_b = vec![0.0f32; wts.len()];
+            conv2d_same_grads_mt_with(
+                &x, n, ci, h, w, &wts, co, k, &dy, &mut dx_b, &mut dw_b, threads, &mut parts,
+            );
+            assert_eq!((dx_a, dw_a), (dx_b, dw_b), "conv threads={threads}");
+        }
+        let (mn, m_in, m_out) = (9, 6, 5);
+        let mx = draw(&mut rng, mn * m_in);
+        let mw = draw(&mut rng, m_out * m_in);
+        let mdy = draw(&mut rng, mn * m_out);
+        for threads in [1usize, 4] {
+            let mut dx_a = vec![0.0f32; mx.len()];
+            let mut dw_a = vec![0.5f32; mw.len()]; // accumulate semantics
+            matmul_nt_grads_mt(&mx, mn, m_in, &mw, m_out, &mdy, &mut dx_a, &mut dw_a, threads);
+            let mut dx_b = vec![0.0f32; mx.len()];
+            let mut dw_b = vec![0.5f32; mw.len()];
+            matmul_nt_grads_mt_with(
+                &mx, mn, m_in, &mw, m_out, &mdy, &mut dx_b, &mut dw_b, threads, &mut parts,
+            );
+            assert_eq!((dx_a, dw_a), (dx_b, dw_b), "matmul threads={threads}");
         }
     }
 

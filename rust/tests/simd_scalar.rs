@@ -1,0 +1,175 @@
+//! SIMD-vs-scalar differential suite (PR10).
+//!
+//! The AND-popcount kernels ship three flavors (scalar, POPCNT, AVX2)
+//! behind runtime dispatch, and the golden engine shards batches over
+//! worker threads.  Every one of those paths must produce the SAME
+//! bytes: i32 popcount sums are order-independent, so lane unrolling,
+//! channel blocking, SIMD reduction and batch sharding are all bit-exact
+//! by construction — and this suite holds them to it on random networks,
+//! pinned lane-boundary shapes, and degenerate spike patterns.
+
+use std::sync::Mutex;
+use vsa::coordinator::{GoldenEngine, InferenceEngine, ModelRegistry};
+use vsa::snn::conv::PackedFc;
+use vsa::snn::popcount;
+use vsa::snn::Network;
+use vsa::testing::models::random_model;
+use vsa::testing::{check, Gen};
+
+/// `set_force_scalar` flips process-global dispatch state; the
+/// differential tests hold this lock across the whole
+/// dispatched-then-scalar comparison so concurrent tests can neither
+/// interleave flips nor observe each other's forced state.
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Restores hardware dispatch even when the comparison panics.
+struct Unforce;
+impl Drop for Unforce {
+    fn drop(&mut self) {
+        popcount::set_force_scalar(false);
+    }
+}
+
+/// Run `f` once under normal dispatch and once pinned to the scalar
+/// kernels; assert the results are identical.
+fn assert_scalar_matches_dispatched<T, F>(label: &str, f: F)
+where
+    T: PartialEq + std::fmt::Debug,
+    F: Fn() -> T,
+{
+    let _lock = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    popcount::set_force_scalar(false);
+    let dispatched = f();
+    let kernel = popcount::active_kernel();
+    popcount::set_force_scalar(true);
+    let _restore = Unforce;
+    let scalar = f();
+    assert_eq!(dispatched, scalar, "{label}: '{kernel}' kernels diverged from scalar");
+}
+
+#[test]
+fn random_networks_bit_identical_scalar_vs_dispatched() {
+    // random_model spans c_in 4..33 (crossing the 64-bit word boundary
+    // at c2 = 33 via the fc's n_in), T 1..6, optional pooling — the
+    // whole inference path runs through conv, tap_ones, and matvec
+    // kernels in both flavors.
+    check("scalar == dispatched inference", 20, |g: &mut Gen| {
+        let (model, image) = random_model(g);
+        let net = Network::new(model);
+        assert_scalar_matches_dispatched("random network", || net.infer_u8(&image));
+    });
+}
+
+#[test]
+fn single_step_networks_bit_identical() {
+    // T = 1 pins the degenerate time loop (no membrane carry-over).
+    check("T=1 scalar == dispatched", 5, |g: &mut Gen| {
+        let (mut model, image) = random_model(g);
+        model.num_steps = 1;
+        let net = Network::new(model);
+        assert_scalar_matches_dispatched("T=1 network", || net.infer_u8(&image));
+    });
+}
+
+/// Word-at-a-time reference for the fc psum: `popcnt(s) − 2·popcnt(s &
+/// w_neg)` with no unrolling, blocking, or SIMD.
+fn naive_fc(w: &[i8], n_out: usize, n_in: usize, spikes: &[u8]) -> Vec<i32> {
+    (0..n_out)
+        .map(|o| {
+            (0..n_in)
+                .map(|i| w[o * n_in + i] as i32 * spikes[i] as i32)
+                .sum()
+        })
+        .collect()
+}
+
+fn pack_spike_words(spikes: &[u8]) -> Vec<u64> {
+    let mut words = vec![0u64; ((spikes.len() + 63) / 64).max(1)];
+    for (i, &s) in spikes.iter().enumerate() {
+        if s != 0 {
+            words[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    words
+}
+
+#[test]
+fn fc_lane_boundaries_pinned() {
+    // n_in values straddling the unroll width (4 words) and the AVX2
+    // width (4 words/vector): 1..9 words, plus off-by-one around the
+    // 64-bit boundary; n_out 63/65 straddles the channel-block width.
+    let n_ins = [1usize, 63, 64, 65, 127, 128, 192, 256, 320, 512, 576];
+    let n_outs = [1usize, 8, 63, 65];
+    let mut g = Gen::new(0xF00D);
+    for &n_in in &n_ins {
+        for &n_out in &n_outs {
+            let w = g.weights(n_out * n_in);
+            let fc = PackedFc::pack(n_out, n_in, &w);
+            let spike_sets: [Vec<u8>; 3] =
+                [vec![0u8; n_in], vec![1u8; n_in], g.spikes(n_in, 37)];
+            for (si, spikes) in spike_sets.iter().enumerate() {
+                let words = pack_spike_words(spikes);
+                let naive = naive_fc(&w, n_out, n_in, spikes);
+                let label = format!("fc n_in={n_in} n_out={n_out} spikes#{si}");
+                assert_scalar_matches_dispatched(&label, || fc.matvec(&words));
+                assert_eq!(fc.matvec(&words), naive, "{label}: matvec vs naive");
+                let mut into = vec![-7i32; n_out];
+                fc.matvec_into(&words, &mut into);
+                assert_eq!(into, naive, "{label}: matvec_into vs naive");
+            }
+        }
+    }
+}
+
+#[test]
+fn fc_time_batched_matches_per_step_at_boundaries() {
+    let mut g = Gen::new(0xBEEF);
+    for &(n_in, n_out, t_steps) in
+        &[(64usize, 63usize, 1usize), (65, 65, 3), (320, 8, 4), (576, 5, 2)]
+    {
+        let w = g.weights(n_out * n_in);
+        let fc = PackedFc::pack(n_out, n_in, &w);
+        let per_step: Vec<Vec<u8>> = (0..t_steps).map(|_| g.spikes(n_in, 45)).collect();
+        let flat: Vec<u64> =
+            per_step.iter().flat_map(|s| pack_spike_words(s)).collect();
+        let label = format!("matvec_t n_in={n_in} n_out={n_out} T={t_steps}");
+        assert_scalar_matches_dispatched(&label, || {
+            let mut out = vec![0i32; t_steps * n_out];
+            fc.matvec_t(&flat, t_steps, &mut out);
+            out
+        });
+        let mut out = vec![0i32; t_steps * n_out];
+        fc.matvec_t(&flat, t_steps, &mut out);
+        for (t, spikes) in per_step.iter().enumerate() {
+            assert_eq!(
+                &out[t * n_out..(t + 1) * n_out],
+                &naive_fc(&w, n_out, n_in, spikes)[..],
+                "{label}: step {t} vs naive"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_engine_batches_byte_identical_across_thread_counts() {
+    check("engine threads are invisible", 6, |g: &mut Gen| {
+        let (model, image) = random_model(g);
+        let mid_geom = image.len();
+        // 13 distinct images: prime count so no thread count divides it.
+        let images: Vec<Vec<u8>> = (0..13u8)
+            .map(|i| image.iter().map(|&p| p.wrapping_add(i.wrapping_mul(31))).collect())
+            .collect();
+        assert_eq!(images[0].len(), mid_geom);
+        let serial = {
+            let (registry, mid) = ModelRegistry::single(model.clone());
+            let mut engine = GoldenEngine::new(registry, 8);
+            engine.infer(mid, &images).expect("serial batch")
+        };
+        for threads in [2usize, 3, 4, 8] {
+            let (registry, mid) = ModelRegistry::single(model.clone());
+            let mut engine = GoldenEngine::new(registry, 8).with_threads(threads);
+            let got = engine.infer(mid, &images).expect("threaded batch");
+            assert_eq!(serial, got, "threads={threads} changed the logits");
+        }
+    });
+}
